@@ -1,0 +1,119 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. shift-adds optimizer quality — DBR vs greedy CSE vs bounded-exact
+//!    MCM, over constant bitwidth and set size (the knobs of Sec. V);
+//! 2. the quantization value q — hardware accuracy vs tnzd vs parallel
+//!    area as q sweeps past the minimum the Sec. IV-A search picks
+//!    (why "minimum quantization" is the right operating point);
+//! 3. sls tuning scope — per-neuron vs whole-ANN on the same net
+//!    (why SMAC_NEURON benefits more than SMAC_ANN, Tables III vs IV).
+//!
+//! `cargo bench --bench ablations`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use simurg::ann::dataset::Dataset;
+use simurg::ann::quant::QuantizedAnn;
+use simurg::ann::sim;
+use simurg::ann::structure::AnnStructure;
+use simurg::ann::train::{train, Trainer};
+use simurg::hw::parallel::{self, MultStyle};
+use simurg::hw::report::smallest_left_shift;
+use simurg::hw::TechLib;
+use simurg::mcm::{cse, dbr, optimize_mcm, Effort, LinearTargets};
+use simurg::num::Rng;
+use simurg::posttrain::smac::{tune_smac, SlsScope};
+use simurg::posttrain::NativeEval;
+
+fn ablation_mcm_quality() {
+    println!("== ablation 1: shift-adds optimizer quality (adders, mean of 10 sets) ==");
+    println!("{:<26}{:>8}{:>8}{:>8}", "instance", "dbr", "cse", "graph");
+    let mut rng = Rng::new(5);
+    for (nconsts, bits) in [(4usize, 6u32), (4, 10), (16, 8), (64, 8), (160, 10)] {
+        let (mut d, mut c, mut h) = (0usize, 0usize, 0usize);
+        for _ in 0..10 {
+            let lim = 1i64 << bits;
+            let consts: Vec<i64> = (0..nconsts)
+                .map(|_| rng.below(2 * lim as usize) as i64 - lim)
+                .collect();
+            let t = LinearTargets::mcm(&consts);
+            d += dbr(&t).num_ops();
+            c += cse(&t).num_ops();
+            let effort = if nconsts <= 4 {
+                Effort::Exact { node_budget: 100_000 }
+            } else {
+                Effort::Heuristic
+            };
+            h += optimize_mcm(&consts, effort).num_ops();
+        }
+        println!(
+            "{:<26}{:>8.1}{:>8.1}{:>8.1}",
+            format!("{nconsts} consts x {bits} bits"),
+            d as f64 / 10.0,
+            c as f64 / 10.0,
+            h as f64 / 10.0
+        );
+    }
+}
+
+fn ablation_q_sweep(data: &Dataset) {
+    println!("\n== ablation 2: quantization value q vs accuracy / tnzd / area ==");
+    let st = AnnStructure::parse("16-16-10").unwrap();
+    let mut cfg = Trainer::Zaal.config(1);
+    cfg.max_epochs = 30;
+    let res = train(&st, data, &cfg);
+    let hw_acts = Trainer::Zaal.hardware_activations(st.num_layers());
+    let lib = TechLib::tsmc40();
+    println!("{:>4}{:>10}{:>10}{:>14}", "q", "hta %", "tnzd", "area um^2");
+    for q in 1..=10u32 {
+        let qann = QuantizedAnn::quantize(&res.ann, q, &hw_acts);
+        let hta = sim::hardware_accuracy(&qann, &data.test);
+        let r = parallel::build(&lib, &qann, MultStyle::Behavioral);
+        println!("{q:>4}{hta:>10.2}{:>10}{:>14.0}", qann.tnzd(), r.area_um2);
+    }
+    println!("(the Sec. IV-A search stops at the accuracy-saturation knee)");
+}
+
+fn ablation_sls_scope(data: &Dataset) {
+    println!("\n== ablation 3: sls tuning scope (per-neuron vs whole-ANN) ==");
+    let st = AnnStructure::parse("16-10-10").unwrap();
+    let mut cfg = Trainer::Zaal.config(2);
+    cfg.max_epochs = 30;
+    let res = train(&st, data, &cfg);
+    let hw_acts = Trainer::Zaal.hardware_activations(st.num_layers());
+    let search = simurg::ann::quant::find_min_quantization(&res.ann, &hw_acts, data, 12);
+    let ev = NativeEval::new(&data.validation);
+    for (scope, name) in [(SlsScope::PerNeuron, "per-neuron"), (SlsScope::WholeAnn, "whole-ann")] {
+        let t = tune_smac(&search.qann, &ev, scope);
+        let mean_sls: f64 = {
+            let mut tot = 0.0;
+            let mut n = 0usize;
+            for k in 0..t.qann.structure.num_layers() {
+                for m in 0..t.qann.structure.layer_outputs(k) {
+                    tot += smallest_left_shift(t.qann.weights[k][m].iter().cloned()) as f64;
+                    n += 1;
+                }
+            }
+            tot / n as f64
+        };
+        println!(
+            "{name:<12} bha {:.2}%  tnzd {}  mean neuron sls {:.2}  ({} evals, {:.1}s)",
+            t.bha,
+            t.qann.tnzd(),
+            mean_sls,
+            t.evals,
+            t.cpu_seconds
+        );
+    }
+    println!("(per-neuron scope lifts sls much further — Tables III vs IV)");
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let data = Dataset::synthetic_with_sizes(42, 3000, 800);
+    ablation_mcm_quality();
+    ablation_q_sweep(&data);
+    ablation_sls_scope(&data);
+    println!("\nablations done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,47 @@
+#![allow(dead_code)]
+//! Minimal bench harness (criterion is not in the vendored crate set):
+//! warmup + timed iterations with mean / stddev / throughput reporting,
+//! plus the shared experiment setup every paper-table bench uses.
+
+use simurg::ann::dataset::Dataset;
+use simurg::ann::train::Trainer;
+use simurg::coordinator::flow::FlowOutcome;
+use simurg::coordinator::sweep::{sweep_all, SweepConfig};
+use std::time::Instant;
+
+/// Time `f` with `warmup` + `iters` runs; prints mean ± stddev.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    println!(
+        "bench {name:<44} {:>10.3} ms ± {:>7.3} ms  ({iters} iters)",
+        mean * 1e3,
+        var.sqrt() * 1e3
+    );
+}
+
+/// Full paper workload (synthetic pendigits at the paper's split sizes).
+pub fn paper_dataset() -> Dataset {
+    Dataset::load_or_synthesize(None, 42)
+}
+
+/// All 5 structures × 3 trainers flow outcomes (cached weights under
+/// artifacts/weights, so repeated bench runs skip retraining).
+pub fn paper_outcomes(data: &Dataset) -> Vec<FlowOutcome> {
+    let cfg = SweepConfig {
+        runs: 1,
+        seed: 1,
+        ..SweepConfig::default()
+    };
+    let _ = Trainer::all();
+    sweep_all(data, &cfg).expect("sweep")
+}

@@ -1,0 +1,29 @@
+//! Regenerates paper Figs. 10–12: area / latency / energy of the three
+//! architectures with behavioral constant multiplications and no
+//! post-training. `cargo bench --bench figs_10_12`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use simurg::coordinator::report;
+use simurg::hw::TechLib;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let data = common::paper_dataset();
+    let outcomes = common::paper_outcomes(&data);
+    let lib = TechLib::tsmc40();
+    std::fs::create_dir_all("results").ok();
+    for fig in 10..=12 {
+        let text = report::figure(&outcomes, fig, &lib);
+        println!("{text}");
+        std::fs::write(format!("results/fig_{fig}.txt"), &text).ok();
+        std::fs::write(
+            format!("results/fig_{fig}.csv"),
+            report::figure_csv(&outcomes, fig, &lib),
+        )
+        .ok();
+    }
+    println!("figs 10-12 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,45 @@
+//! Regenerates paper Figs. 13–15: the post-training impact on area /
+//! latency / energy under each architecture (behavioral constant mults).
+//! `cargo bench --bench figs_13_15`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use simurg::coordinator::report;
+use simurg::hw::TechLib;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let data = common::paper_dataset();
+    let outcomes = common::paper_outcomes(&data);
+    let lib = TechLib::tsmc40();
+    std::fs::create_dir_all("results").ok();
+    for fig in 13..=15 {
+        let text = report::figure(&outcomes, fig, &lib);
+        println!("{text}");
+        std::fs::write(format!("results/fig_{fig}.txt"), &text).ok();
+        std::fs::write(
+            format!("results/fig_{fig}.csv"),
+            report::figure_csv(&outcomes, fig, &lib),
+        )
+        .ok();
+    }
+    // the headline reductions the paper quotes (Sec. VII)
+    for (untuned, tuned, label) in [(10u32, 13u32, "parallel"), (11, 14, "smac_neuron"), (12, 15, "smac_ann")] {
+        let su = report::FigureSpec::for_fig(untuned).unwrap();
+        let st = report::FigureSpec::for_fig(tuned).unwrap();
+        let mut max_area = 0.0f64;
+        let mut max_energy = 0.0f64;
+        for o in &outcomes {
+            let a = report::hw_report_for(o, &su, &lib);
+            let b = report::hw_report_for(o, &st, &lib);
+            max_area = max_area.max(100.0 * (1.0 - b.area_um2 / a.area_um2));
+            max_energy = max_energy.max(100.0 * (1.0 - b.energy_pj / a.energy_pj));
+        }
+        println!(
+            "{label}: max post-training reduction  area {max_area:.0}%  energy {max_energy:.0}%"
+        );
+    }
+    println!("figs 13-15 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,42 @@
+//! Regenerates paper Figs. 16–18: the multiplierless designs — parallel
+//! with CAVM blocks (Fig. 16), parallel with CMVM blocks (Fig. 17) and
+//! SMAC_NEURON with MCM blocks (Fig. 18), all after post-training.
+//! `cargo bench --bench figs_16_18`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use simurg::coordinator::report;
+use simurg::hw::TechLib;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let data = common::paper_dataset();
+    let outcomes = common::paper_outcomes(&data);
+    let lib = TechLib::tsmc40();
+    std::fs::create_dir_all("results").ok();
+    for fig in 16..=18 {
+        let text = report::figure(&outcomes, fig, &lib);
+        println!("{text}");
+        std::fs::write(format!("results/fig_{fig}.txt"), &text).ok();
+        std::fs::write(
+            format!("results/fig_{fig}.csv"),
+            report::figure_csv(&outcomes, fig, &lib),
+        )
+        .ok();
+    }
+    // the paper's multiplierless area-reduction claims vs behavioral
+    for (base, ml, label) in [(13u32, 16u32, "cavm vs behavioral"), (13, 17, "cmvm vs behavioral"), (14, 18, "mcm vs behavioral")] {
+        let sb = report::FigureSpec::for_fig(base).unwrap();
+        let sm = report::FigureSpec::for_fig(ml).unwrap();
+        let mut max_area = 0.0f64;
+        for o in &outcomes {
+            let a = report::hw_report_for(o, &sb, &lib);
+            let b = report::hw_report_for(o, &sm, &lib);
+            max_area = max_area.max(100.0 * (1.0 - b.area_um2 / a.area_um2));
+        }
+        println!("{label}: max area reduction {max_area:.0}%");
+    }
+    println!("figs 16-18 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,88 @@
+//! Hot-path microbenchmarks (the §Perf targets of EXPERIMENTS.md):
+//! hardware-accuracy evaluation (native vs PJRT), the tuners' end-to-end
+//! cost, the shift-adds optimizers and the cycle-accurate simulator.
+//! `cargo bench --bench hot_paths`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::bench;
+use simurg::ann::dataset::Dataset;
+use simurg::ann::model::{Ann, Init};
+use simurg::ann::structure::{Activation, AnnStructure};
+use simurg::ann::quant::QuantizedAnn;
+use simurg::hw::netsim;
+use simurg::mcm::{cse, dbr, optimize_mcm, Effort, LinearTargets};
+use simurg::num::Rng;
+use simurg::posttrain::{AccuracyEval, NativeEval};
+use simurg::runtime::{Artifacts, PjrtEval};
+
+fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
+    let st = AnnStructure::parse(structure).unwrap();
+    let layers = st.num_layers();
+    let mut acts = vec![Activation::HTanh; layers];
+    acts[layers - 1] = Activation::HSig;
+    let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+    QuantizedAnn::quantize(&ann, 6, &acts)
+}
+
+fn main() {
+    let data = Dataset::load_or_synthesize(None, 42);
+    println!("== accuracy evaluation (validation = {} samples) ==", data.validation.len());
+    for structure in ["16-10", "16-16-10", "16-16-10-10"] {
+        let qann = qann_for(structure, 7);
+        let native = NativeEval::new(&data.validation);
+        bench(&format!("native_eval {structure}"), 2, 10, || {
+            native.accuracy(&qann)
+        });
+        let n = data.validation.len() as f64;
+        let t = std::time::Instant::now();
+        for _ in 0..5 {
+            std::hint::black_box(native.accuracy(&qann));
+        }
+        let per = t.elapsed().as_secs_f64() / 5.0;
+        println!("  -> {:.2} Msamples/s", n / per / 1e6);
+    }
+
+    if let Ok(reg) = Artifacts::open_default() {
+        for structure in ["16-10", "16-16-10-10"] {
+            let st = AnnStructure::parse(structure).unwrap();
+            let qann = qann_for(structure, 7);
+            let ev = PjrtEval::new(&reg, &st, &data.validation).unwrap();
+            bench(&format!("pjrt_eval {structure}"), 2, 10, || ev.accuracy(&qann));
+        }
+    } else {
+        println!("(pjrt_eval skipped: run `make artifacts`)");
+    }
+
+    println!("\n== shift-adds optimizers (16x16 layer matrix) ==");
+    let mut rng = Rng::new(11);
+    let rows: Vec<Vec<i64>> = (0..16)
+        .map(|_| (0..16).map(|_| rng.below(256) as i64 - 127).collect())
+        .collect();
+    let t = LinearTargets::cmvm(&rows);
+    bench("dbr 16x16", 2, 20, || dbr(&t));
+    bench("cse_cmvm 16x16", 2, 10, || cse(&t));
+    let consts: Vec<i64> = rows.iter().flatten().cloned().collect();
+    bench("mcm_heuristic 256 consts", 1, 5, || {
+        optimize_mcm(&consts, Effort::Heuristic)
+    });
+
+    println!("\n== cycle-accurate simulator ==");
+    let qann = qann_for("16-16-10", 3);
+    let x: Vec<i32> = (0..16).map(|i| (i * 7) % 128).collect();
+    bench("netsim smac_ann 16-16-10", 5, 50, || {
+        netsim::run_smac_ann(&qann, &x)
+    });
+    let net = netsim::ParallelNet::new(&qann, simurg::hw::parallel::MultStyle::Cmvm);
+    bench("netsim parallel/cmvm 16-16-10", 5, 50, || net.run(&x));
+
+    println!("\n== hardware cost model ==");
+    let lib = simurg::hw::TechLib::tsmc40();
+    bench("hw parallel/cmvm build 16-16-10", 2, 10, || {
+        simurg::hw::parallel::build(&lib, &qann, simurg::hw::parallel::MultStyle::Cmvm)
+    });
+    bench("hw smac_neuron/mcm build 16-16-10", 2, 10, || {
+        simurg::hw::smac_neuron::build(&lib, &qann, simurg::hw::smac_neuron::SmacStyle::Mcm)
+    });
+}

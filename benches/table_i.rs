@@ -1,0 +1,23 @@
+//! Regenerates paper Table I: software / hardware test accuracy and tnzd
+//! per structure × trainer, plus the wall-clock of the flow that produced
+//! it. `cargo bench --bench table_i`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use simurg::coordinator::report;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let data = common::paper_dataset();
+    let outcomes = common::paper_outcomes(&data);
+    println!("{}", report::table1(&outcomes));
+    println!(
+        "table I regenerated in {:.1}s ({} experiments)",
+        t0.elapsed().as_secs_f64(),
+        outcomes.len()
+    );
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table_1.txt", report::table1(&outcomes)).ok();
+}

@@ -1,0 +1,22 @@
+//! Regenerates paper Tables II–IV: post-training hta / tnzd / CPU time
+//! under the parallel, SMAC_NEURON and SMAC_ANN architectures.
+//! `cargo bench --bench tables_ii_iv`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use simurg::coordinator::report;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let data = common::paper_dataset();
+    let outcomes = common::paper_outcomes(&data);
+    std::fs::create_dir_all("results").ok();
+    for table in 2..=4 {
+        let text = report::table_posttrain(&outcomes, table);
+        println!("{text}");
+        std::fs::write(format!("results/table_{table}.txt"), text).ok();
+    }
+    println!("tables II-IV regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

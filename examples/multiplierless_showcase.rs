@@ -1,0 +1,62 @@
+//! Multiplierless constant multiplication walkthrough.
+//!
+//!   cargo run --release --example multiplierless_showcase
+//!
+//! Reproduces the paper's Fig. 3 worked example (y1 = 11x1 + 3x2,
+//! y2 = 5x1 + 13x2: direct = 4 mults + 2 adds, DBR = 8 ops, shared = 4–6
+//! ops) and then shows the sharing hierarchy on a real trained layer:
+//! DBR > per-neuron CAVM > whole-layer CMVM, and MCM for the
+//! time-multiplexed broadcast products.
+
+use simurg::ann::dataset::Dataset;
+use simurg::ann::structure::AnnStructure;
+use simurg::ann::train::Trainer;
+use simurg::coordinator::flow::{run_flow, FlowConfig};
+use simurg::mcm::{cse, dbr, optimize_mcm, Effort, LinearTargets};
+
+fn main() -> anyhow::Result<()> {
+    // ---- the paper's Fig. 3 example ----------------------------------
+    println!("paper Fig. 3: y1 = 11x1 + 3x2, y2 = 5x1 + 13x2");
+    let t = LinearTargets::cmvm(&[vec![11, 3], vec![5, 13]]);
+    let gd = dbr(&t);
+    gd.verify_against(&t)?;
+    println!("  DBR (CSD digits, no sharing): {} ops, depth {}", gd.num_ops(), gd.depth());
+    let gc = cse(&t);
+    gc.verify_against(&t)?;
+    println!(
+        "  greedy digit CSE:             {} ops, depth {} (exact algorithm of [18] reaches 4)",
+        gc.num_ops(),
+        gc.depth()
+    );
+    for (i, n) in gc.nodes.iter().enumerate() {
+        println!("    n{i} = ({:?} << {}) {:?} ({:?} << {})", n.a, n.sa, n.op, n.b, n.sb);
+    }
+
+    // ---- exact MCM on the same constant set --------------------------
+    let gm = optimize_mcm(&[11, 3, 5, 13], Effort::Exact { node_budget: 500_000 });
+    println!("  exact MCM {{11,3,5,13}}·x:     {} ops, depth {}", gm.num_ops(), gm.depth());
+
+    // ---- a real trained layer -----------------------------------------
+    println!("\ntrained 16-16-10 layer 1 (zaal weights, min-q quantized):");
+    let data = Dataset::load_or_synthesize(None, 42);
+    let mut cfg = FlowConfig::new(AnnStructure::parse("16-16-10")?, Trainer::Zaal);
+    cfg.runs = 1;
+    let o = run_flow(&data, &cfg, None)?;
+    let w = &o.tuned_parallel.qann.weights[0];
+
+    let full = LinearTargets::cmvm(w);
+    let g_dbr = dbr(&full);
+    let g_cmvm = cse(&full);
+    let cavm_ops: usize = w.iter().map(|row| cse(&LinearTargets::cavm(row)).num_ops()).sum();
+    let mcm_consts: Vec<i64> = w.iter().flatten().cloned().collect();
+    let g_mcm = optimize_mcm(&mcm_consts, Effort::Heuristic);
+
+    println!("  tnzd (digit count)            {}", full.tnzd());
+    println!("  DBR                            {} add/sub ops", g_dbr.num_ops());
+    println!("  CAVM per neuron (alg. of [19]) {cavm_ops} add/sub ops");
+    println!("  CMVM whole layer (alg. of [18]) {} add/sub ops", g_cmvm.num_ops());
+    println!("  MCM broadcast products ([17])  {} add/sub ops", g_mcm.num_ops());
+    assert!(g_cmvm.num_ops() <= cavm_ops && cavm_ops <= g_dbr.num_ops());
+    println!("  sharing hierarchy holds: CMVM <= CAVM <= DBR");
+    Ok(())
+}

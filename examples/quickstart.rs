@@ -1,0 +1,59 @@
+//! Quickstart: the whole SIMURG flow on one small ANN in under a minute.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Trains a 16-10 network on the pendigits workload, finds the minimum
+//! quantization value, runs the three post-training tuners and prices the
+//! resulting hardware under every architecture.
+
+use simurg::ann::dataset::Dataset;
+use simurg::ann::structure::AnnStructure;
+use simurg::ann::train::Trainer;
+use simurg::coordinator::flow::{run_flow, FlowConfig};
+use simurg::coordinator::report::{hw_report_for, FigureSpec};
+use simurg::hw::TechLib;
+
+fn main() -> anyhow::Result<()> {
+    // synthetic pendigits (7494 train / 3498 test, paper split sizes);
+    // pass a directory with pendigits.tra/.tes to use the real UCI data
+    let data = Dataset::load_or_synthesize(None, 42);
+    println!(
+        "pendigits: {} train / {} validation / {} test",
+        data.train.len(),
+        data.validation.len(),
+        data.test.len()
+    );
+
+    let mut cfg = FlowConfig::new(AnnStructure::parse("16-10")?, Trainer::Zaal);
+    cfg.runs = 1;
+    let o = run_flow(&data, &cfg, None)?;
+
+    println!("software test accuracy   {:.2}%", o.sta);
+    println!("minimum quantization     q = {}", o.quant.qann.q);
+    println!(
+        "hardware test accuracy   {:.2}% (tnzd {})",
+        o.hta,
+        o.quant.qann.tnzd()
+    );
+    println!(
+        "after parallel tuning    {:.2}% (tnzd {}, {:.1}s)",
+        o.hta_parallel,
+        o.tuned_parallel.qann.tnzd(),
+        o.tuned_parallel.cpu_seconds
+    );
+
+    let lib = TechLib::tsmc40();
+    println!("\n{:<52}{:>12}{:>12}{:>12}", "design point", "area um^2", "latency ns", "energy pJ");
+    for fig in [10, 13, 16, 17, 11, 14, 18, 12, 15] {
+        let spec = FigureSpec::for_fig(fig).unwrap();
+        let r = hw_report_for(&o, &spec, &lib);
+        println!(
+            "{:<52}{:>12.1}{:>12.2}{:>12.2}",
+            spec.description(),
+            r.area_um2,
+            r.latency_ns,
+            r.energy_pj
+        );
+    }
+    Ok(())
+}

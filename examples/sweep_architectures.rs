@@ -1,0 +1,48 @@
+//! Architecture exploration (paper Figs. 10–12): price every paper
+//! structure under the three architectures and print the area / latency /
+//! energy trade-off a designer would pick from (paper Sec. VII: "a
+//! designer can choose the one that fits best in an application").
+//!
+//!   cargo run --release --example sweep_architectures
+
+use simurg::ann::dataset::Dataset;
+use simurg::ann::structure::AnnStructure;
+use simurg::ann::train::Trainer;
+use simurg::coordinator::flow::{run_flow, FlowConfig};
+use simurg::hw::parallel::MultStyle;
+use simurg::hw::smac_neuron::SmacStyle;
+use simurg::hw::{parallel, smac_ann, smac_neuron, TechLib};
+
+fn main() -> anyhow::Result<()> {
+    let data = Dataset::load_or_synthesize(None, 42);
+    let lib = TechLib::tsmc40();
+    println!(
+        "{:<14}{:<13}{:>12}{:>10}{:>10}{:>12}{:>10}",
+        "structure", "arch", "area um^2", "clock ns", "cycles", "latency ns", "energy pJ"
+    );
+    for st in AnnStructure::paper_benchmarks() {
+        let mut cfg = FlowConfig::new(st.clone(), Trainer::Zaal);
+        cfg.runs = 1;
+        let o = run_flow(&data, &cfg, None)?;
+        let qann = &o.quant.qann;
+        let rows = [
+            parallel::build(&lib, qann, MultStyle::Behavioral),
+            smac_neuron::build(&lib, qann, SmacStyle::Behavioral),
+            smac_ann::build(&lib, qann, SmacStyle::Behavioral),
+        ];
+        for r in rows {
+            println!(
+                "{:<14}{:<13}{:>12.1}{:>10.3}{:>10}{:>12.2}{:>10.2}",
+                st.to_string(),
+                r.arch,
+                r.area_um2,
+                r.clock_ns,
+                r.cycles,
+                r.latency_ns,
+                r.energy_pj
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

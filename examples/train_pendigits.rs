@@ -1,0 +1,150 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//!   make artifacts && cargo run --release --example train_pendigits
+//!
+//! 1. TRAIN — the rust coordinator drives a few hundred gradient steps of
+//!    the AOT-lowered JAX training graph through PJRT (Adam in rust),
+//!    logging the loss curve on the full pendigits workload.
+//! 2. QUANTIZE — minimum-quantization search scores candidates through
+//!    the AOT-lowered quantized-inference graph (L2 + the L1 Pallas
+//!    kernel), cross-checked bit-for-bit against the native simulator.
+//! 3. TUNE — the Sec. IV post-training tuners run with the PJRT evaluator
+//!    on the hot path.
+//! 4. SYNTHESIZE — the tuned nets are priced under all architectures and
+//!    the Verilog + testbench + synthesis script are emitted.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use simurg::ann::dataset::Dataset;
+use simurg::ann::quant::find_min_quantization;
+use simurg::ann::sim;
+use simurg::ann::structure::AnnStructure;
+use simurg::ann::train::{software_test_accuracy, Trainer};
+use simurg::coordinator::report::{hw_report_for, FigureSpec};
+use simurg::coordinator::flow::FlowOutcome;
+use simurg::hw::{verilog, TechLib};
+use simurg::posttrain::parallel::tune_parallel;
+use simurg::posttrain::smac::{tune_smac, SlsScope};
+use simurg::posttrain::{AccuracyEval, NativeEval};
+use simurg::runtime::{Artifacts, PjrtEval, PjrtTrainer};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let data = Dataset::load_or_synthesize(None, 42);
+    let structure = AnnStructure::parse("16-16-10-10")?;
+    let trainer = Trainer::Zaal;
+    let reg = Artifacts::open_default()?;
+
+    // ---- 1. PJRT-driven training -------------------------------------
+    println!("== train {structure} via PJRT (zaal: htanh/sigmoid + MSE, Adam in rust) ==");
+    let pjrt_trainer = PjrtTrainer::new(&reg, &structure, trainer)?;
+    let (ann, log) = pjrt_trainer.train(&data, 25, 8, 0.01, 1)?;
+    for e in &log.epochs {
+        println!(
+            "  epoch {:>3}  loss {:.5}  val {:.2}%",
+            e.epoch,
+            e.mean_loss,
+            100.0 * e.validation_accuracy
+        );
+    }
+    let sta = software_test_accuracy(&ann, &data);
+    println!("  {} gradient steps, software test accuracy {:.2}%", log.steps, sta);
+
+    // ---- 2. quantization (PJRT evaluator on the hot path) -------------
+    println!("== minimum quantization ==");
+    let hw_acts = trainer.hardware_activations(structure.num_layers());
+    let quant = find_min_quantization(&ann, &hw_acts, &data, 12);
+    let hta = sim::hardware_accuracy(&quant.qann, &data.test);
+    println!(
+        "  q = {}  validation ha {:.2}%  test hta {:.2}%  tnzd {}",
+        quant.qann.q,
+        quant.ha,
+        hta,
+        quant.qann.tnzd()
+    );
+
+    // cross-check: the AOT graph and the native simulator must agree
+    let pjrt_eval = PjrtEval::new(&reg, &structure, &data.validation)?;
+    let native_eval = NativeEval::new(&data.validation);
+    let (a, b) = (pjrt_eval.accuracy(&quant.qann), native_eval.accuracy(&quant.qann));
+    anyhow::ensure!((a - b).abs() < 1e-9, "layer mismatch: pjrt {a} vs native {b}");
+    println!("  pjrt/native cross-check: {a:.4}% == {b:.4}%  OK");
+
+    // ---- 3. post-training with the PJRT evaluator ---------------------
+    println!("== post-training (PJRT evaluator) ==");
+    let tp = tune_parallel(&quant.qann, &pjrt_eval);
+    println!(
+        "  parallel:    tnzd {} -> {}  bha {:.2}%  ({} evals, {:.1}s)",
+        quant.qann.tnzd(),
+        tp.qann.tnzd(),
+        tp.bha,
+        tp.evals,
+        tp.cpu_seconds
+    );
+    let tn = tune_smac(&quant.qann, &pjrt_eval, SlsScope::PerNeuron);
+    println!(
+        "  smac_neuron: tnzd {} -> {}  bha {:.2}%  ({} evals, {:.1}s)",
+        quant.qann.tnzd(),
+        tn.qann.tnzd(),
+        tn.bha,
+        tn.evals,
+        tn.cpu_seconds
+    );
+    let ta = tune_smac(&quant.qann, &pjrt_eval, SlsScope::WholeAnn);
+    println!(
+        "  smac_ann:    tnzd {} -> {}  bha {:.2}%  ({} evals, {:.1}s)",
+        quant.qann.tnzd(),
+        ta.qann.tnzd(),
+        ta.bha,
+        ta.evals,
+        ta.cpu_seconds
+    );
+
+    // ---- 4. hardware pricing + Verilog --------------------------------
+    println!("== hardware (TSMC40-class analytic model) ==");
+    let outcome = FlowOutcome {
+        config: simurg::coordinator::flow::FlowConfig::new(structure.clone(), trainer),
+        sta,
+        hta,
+        hta_parallel: sim::hardware_accuracy(&tp.qann, &data.test),
+        hta_smac_neuron: sim::hardware_accuracy(&tn.qann, &data.test),
+        hta_smac_ann: sim::hardware_accuracy(&ta.qann, &data.test),
+        ann,
+        quant,
+        tuned_parallel: tp,
+        tuned_smac_neuron: tn,
+        tuned_smac_ann: ta,
+    };
+    let lib = TechLib::tsmc40();
+    for fig in 10..=18 {
+        let spec = FigureSpec::for_fig(fig).unwrap();
+        let r = hw_report_for(&outcome, &spec, &lib);
+        println!(
+            "  {:<52} area {:>10.1}  latency {:>8.2} ns  energy {:>9.2} pJ",
+            spec.description(),
+            r.area_um2,
+            r.latency_ns,
+            r.energy_pj
+        );
+    }
+
+    std::fs::create_dir_all("results")?;
+    let module = "ann_e2e";
+    std::fs::write(
+        format!("results/{module}.v"),
+        verilog::smac_neuron_verilog(&outcome.tuned_smac_neuron.qann, module),
+    )?;
+    std::fs::write(
+        format!("results/tb_{module}.v"),
+        verilog::testbench(
+            &outcome.tuned_smac_neuron.qann,
+            &data.test[..8],
+            module,
+            structure.smac_neuron_cycles(),
+        ),
+    )?;
+    println!("  wrote results/{module}.v + testbench");
+    println!("e2e complete in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

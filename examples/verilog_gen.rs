@@ -1,0 +1,72 @@
+//! SIMURG hardware generation: emit Verilog, a self-checking testbench
+//! with golden vectors and the synthesis script for a tuned design under
+//! every architecture/style combination.
+//!
+//!   cargo run --release --example verilog_gen
+//!
+//! Output lands in `results/verilog/`.
+
+use simurg::ann::dataset::Dataset;
+use simurg::ann::structure::AnnStructure;
+use simurg::ann::train::Trainer;
+use simurg::coordinator::flow::{run_flow, FlowConfig};
+use simurg::hw::parallel::MultStyle;
+use simurg::hw::{parallel, smac_neuron, verilog, TechLib};
+
+fn main() -> anyhow::Result<()> {
+    let data = Dataset::load_or_synthesize(None, 42);
+    let mut cfg = FlowConfig::new(AnnStructure::parse("16-10")?, Trainer::Zaal);
+    cfg.runs = 1;
+    let o = run_flow(&data, &cfg, None)?;
+    let lib = TechLib::tsmc40();
+    let dir = std::path::Path::new("results/verilog");
+    std::fs::create_dir_all(dir)?;
+
+    // parallel designs from the parallel-tuned weights
+    for style in [MultStyle::Behavioral, MultStyle::Cavm, MultStyle::Cmvm] {
+        let qann = &o.tuned_parallel.qann;
+        let module = format!("ann_par_{}", style.name());
+        let v = verilog::parallel_verilog(qann, style, &module);
+        let tb = verilog::testbench(qann, &data.test[..8], &module, 1);
+        let r = parallel::build(&lib, qann, style);
+        std::fs::write(dir.join(format!("{module}.v")), &v)?;
+        std::fs::write(dir.join(format!("tb_{module}.v")), tb)?;
+        std::fs::write(
+            dir.join(format!("{module}_synth.tcl")),
+            verilog::synthesis_script(&module, r.clock_ns),
+        )?;
+        println!(
+            "{module}: {} lines, modeled {:.0} um^2 @ {:.2} ns",
+            v.lines().count(),
+            r.area_um2,
+            r.clock_ns
+        );
+    }
+
+    // time-multiplexed design from the smac-tuned weights
+    let qann = &o.tuned_smac_neuron.qann;
+    let module = "ann_smac_neuron";
+    let v = verilog::smac_neuron_verilog(qann, module);
+    let tb = verilog::testbench(
+        qann,
+        &data.test[..8],
+        module,
+        qann.structure.smac_neuron_cycles(),
+    );
+    let r = smac_neuron::build(&lib, qann, simurg::hw::smac_neuron::SmacStyle::Behavioral);
+    std::fs::write(dir.join(format!("{module}.v")), &v)?;
+    std::fs::write(dir.join(format!("tb_{module}.v")), tb)?;
+    std::fs::write(
+        dir.join(format!("{module}_synth.tcl")),
+        verilog::synthesis_script(module, r.clock_ns),
+    )?;
+    println!(
+        "{module}: {} lines, modeled {:.0} um^2 @ {:.2} ns x {} cycles",
+        v.lines().count(),
+        r.area_um2,
+        r.clock_ns,
+        r.cycles
+    );
+    println!("wrote results/verilog/");
+    Ok(())
+}

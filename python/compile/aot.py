@@ -1,0 +1,99 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (never `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+  infer_<structure>.hlo.txt          quantized inference, B=512
+  train_<trainer>_<structure>.hlo.txt  (loss, grads) step, B=64
+  manifest.json                      shapes + argument layout for rust
+
+Run once via `make artifacts`; the rust binary is self-contained after.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_infer(inputs, neurons, batch):
+    fn = model.hw_infer(inputs, neurons, interpret=True)
+    args = model.hw_infer_example_args(inputs, neurons, batch)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_train(inputs, neurons, trainer, batch):
+    fn = model.train_step(inputs, neurons, trainer)
+    args = model.train_example_args(inputs, neurons, batch)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--eval-batch", type=int, default=model.EVAL_BATCH)
+    ap.add_argument("--train-batch", type=int, default=model.TRAIN_BATCH)
+    ap.add_argument(
+        "--structures",
+        default=None,
+        help="comma-separated subset, e.g. 16-10,16-16-10 (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wanted = None
+    if args.structures:
+        wanted = set(args.structures.split(","))
+
+    manifest = {
+        "eval_batch": args.eval_batch,
+        "train_batch": args.train_batch,
+        "classes": 10,
+        "structures": {},
+    }
+
+    for inputs, neurons in model.PAPER_STRUCTURES:
+        name = model.structure_name(inputs, neurons)
+        if wanted is not None and name not in wanted:
+            continue
+        entry = {
+            "inputs": inputs,
+            "neurons": list(neurons),
+            "infer": f"infer_{name}.hlo.txt",
+            "train": {},
+        }
+        text = lower_infer(inputs, neurons, args.eval_batch)
+        with open(os.path.join(args.out_dir, entry["infer"]), "w") as f:
+            f.write(text)
+        print(f"wrote {entry['infer']} ({len(text)} chars)")
+        for trainer in model.TRAINERS:
+            fname = f"train_{trainer}_{name}.hlo.txt"
+            text = lower_train(inputs, neurons, trainer, args.train_batch)
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            entry["train"][trainer] = fname
+            print(f"wrote {fname} ({len(text)} chars)")
+        manifest["structures"][name] = entry
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['structures'])} structures)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""L1 — Pallas kernel: the quantized dense-layer MAC datapath.
+
+One kernel realizes the hardware contract of DESIGN.md §Fixed-point:
+int32 inner product of Q1.7 activations with scale-2^q integer weights,
+bias add at scale 2^(q+7), hard activation with an arithmetic-shift
+requantize back to Q1.7. This is the compute hot-spot every architecture
+of the paper time-multiplexes or parallelizes; the AOT-lowered inference
+graph calls it once per layer.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper targets an
+ASIC MAC array, not a GPU, so there is no threadblock structure to port.
+The kernel tiles the batch dimension through VMEM (BlockSpec below) and
+keeps the full (n_out, n_in) weight panel resident — layer panels are at
+most 16x16 int32 = 1 KiB, far under VMEM. `interpret=True` everywhere:
+the CPU PJRT client cannot run Mosaic custom-calls; real-TPU performance
+is estimated analytically in DESIGN.md §Perf.
+
+Activation ids (shared with rust `ann::structure::Activation` and
+`hw::verilog`): 0 = htanh, 1 = hsig, 2 = relu, 3 = satlin, 4 = lin.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Q1.7 inter-layer signal format
+FRAC_BITS = 7
+Q7_MAX = 127
+Q7_MIN = -128
+
+ACT_HTANH, ACT_HSIG, ACT_RELU, ACT_SATLIN, ACT_LIN = range(5)
+
+# batch tile held in VMEM per grid step
+BLOCK_B = 128
+
+
+def _apply_activation(y, q, act_id):
+    """The five hard activations of the contract, selected at runtime.
+
+    `y` is the int32 accumulator at scale 2^(q+7); the result is Q1.7.
+    Arithmetic right shift == floor division by a power of two, exactly
+    what the generated hardware wires do.
+    """
+    one = jnp.left_shift(jnp.int32(1), q + FRAC_BITS)
+    htanh = jnp.clip(jnp.right_shift(y, q), Q7_MIN, Q7_MAX)
+    hsig = jnp.clip(jnp.right_shift(y + one, q + 1), 0, Q7_MAX)
+    relu = jnp.minimum(jnp.right_shift(jnp.maximum(y, 0), q), Q7_MAX)
+    satlin = jnp.clip(jnp.right_shift(y, q), 0, Q7_MAX)
+    lin = jnp.clip(jnp.right_shift(y, q), Q7_MIN, Q7_MAX)
+    out = jnp.where(act_id == ACT_HTANH, htanh, lin)
+    out = jnp.where(act_id == ACT_HSIG, hsig, out)
+    out = jnp.where(act_id == ACT_RELU, relu, out)
+    out = jnp.where(act_id == ACT_SATLIN, satlin, out)
+    return out.astype(jnp.int32)
+
+
+def _qlayer_kernel(x_ref, w_ref, b_ref, meta_ref, o_ref):
+    """MAC + bias + activation for one batch tile.
+
+    x_ref:    (BLOCK_B, n_in) int32 — Q1.7 inputs
+    w_ref:    (n_out, n_in)   int32 — integer weights, scale 2^q
+    b_ref:    (n_out,)        int32 — integer biases, scale 2^(q+7)
+    meta_ref: (2,)            int32 — [q, act_id]
+    o_ref:    (BLOCK_B, n_out) int32 — Q1.7 outputs
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    q = meta_ref[0]
+    act_id = meta_ref[1]
+    # int32 systolic contraction (int8xint8->int32 on a real MXU)
+    acc = jax.lax.dot_general(
+        x,
+        w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc + b_ref[...][None, :]
+    o_ref[...] = _apply_activation(acc, q, act_id)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qlayer(x, w, b, q, act_id, *, interpret=True):
+    """Quantized dense layer: `activate((x @ w.T + b), q, act_id)`.
+
+    Args:
+      x: (B, n_in) int32 Q1.7 activations; B must be a multiple of
+         BLOCK_B or smaller than it (the wrapper pads).
+      w: (n_out, n_in) int32 weights at scale 2^q.
+      b: (n_out,) int32 biases at scale 2^(q+7).
+      q: scalar int32 quantization value.
+      act_id: scalar int32 activation selector.
+    """
+    batch, n_in = x.shape
+    n_out = w.shape[0]
+    block_b = min(BLOCK_B, batch)
+    pad = (-batch) % block_b
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    padded = x.shape[0]
+    meta = jnp.stack([jnp.asarray(q, jnp.int32), jnp.asarray(act_id, jnp.int32)])
+    out = pl.pallas_call(
+        _qlayer_kernel,
+        grid=(padded // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n_out, n_in), lambda i: (0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, n_out), jnp.int32),
+        interpret=interpret,
+    )(x, w, b, meta)
+    return out[:batch]

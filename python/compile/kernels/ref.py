@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the qlayer Pallas kernel.
+
+Implements the DESIGN.md fixed-point contract with no Pallas machinery;
+pytest asserts exact (integer) equality between this and the kernel, and
+the rust golden model (`ann::sim`) implements the identical arithmetic.
+"""
+
+import jax.numpy as jnp
+
+FRAC_BITS = 7
+Q7_MAX = 127
+Q7_MIN = -128
+
+ACT_HTANH, ACT_HSIG, ACT_RELU, ACT_SATLIN, ACT_LIN = range(5)
+
+
+def activate_ref(y, q, act_id):
+    """Reference activation on the int32 accumulator `y` (scale 2^(q+7))."""
+    y = y.astype(jnp.int32)
+    q = jnp.asarray(q, jnp.int32)
+    one = jnp.left_shift(jnp.int32(1), q + FRAC_BITS)
+    htanh = jnp.clip(jnp.right_shift(y, q), Q7_MIN, Q7_MAX)
+    hsig = jnp.clip(jnp.right_shift(y + one, q + 1), 0, Q7_MAX)
+    relu = jnp.minimum(jnp.right_shift(jnp.maximum(y, 0), q), Q7_MAX)
+    satlin = jnp.clip(jnp.right_shift(y, q), 0, Q7_MAX)
+    lin = jnp.clip(jnp.right_shift(y, q), Q7_MIN, Q7_MAX)
+    out = jnp.where(act_id == ACT_HTANH, htanh, lin)
+    out = jnp.where(act_id == ACT_HSIG, hsig, out)
+    out = jnp.where(act_id == ACT_RELU, relu, out)
+    out = jnp.where(act_id == ACT_SATLIN, satlin, out)
+    return out.astype(jnp.int32)
+
+
+def qlayer_ref(x, w, b, q, act_id):
+    """activate((x @ w.T + b), q, act_id) in plain jnp int32."""
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32).T) + b[None, :]
+    return activate_ref(acc, q, act_id)

@@ -1,0 +1,189 @@
+"""L2 — JAX model graphs, AOT-lowered once by `aot.py`.
+
+Two graph families, both parameterized by the ANN structure:
+
+- `hw_infer(structure)`: bit-exact quantized inference over a fixed-size
+  batch, calling the L1 Pallas kernel per layer. Parameters: integer
+  weights/biases (as int32), the batch (Q1.7 int32), the quantization
+  value q and a per-layer activation-id vector — so ONE artifact per
+  structure serves every trainer, every candidate weight set and every q
+  the post-training loops probe. Returns the predicted class per sample.
+
+- `train_step(structure, trainer)`: float forward/backward of the ZAAL /
+  "PyTorch" / "MATLAB" trainer variants (DESIGN.md §Substitutions),
+  returning (loss, *gradients). The optimizer (Adam) lives in rust
+  (`runtime::trainer`), keeping the artifact stateless.
+
+Python never runs at inference/tuning time: rust loads the lowered HLO
+through PJRT and feeds candidate weights as ordinary parameters.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.qlayer import qlayer
+
+# The five benchmark structures of the paper's evaluation (Sec. VII).
+PAPER_STRUCTURES = [
+    (16, (10,)),
+    (16, (10, 10)),
+    (16, (16, 10)),
+    (16, (10, 10, 10)),
+    (16, (16, 10, 10)),
+]
+
+# fixed AOT batch sizes (rust pads the last batch)
+EVAL_BATCH = 512
+TRAIN_BATCH = 64
+
+
+def structure_name(inputs, neurons):
+    return "-".join(str(v) for v in (inputs, *neurons))
+
+
+def layer_dims(inputs, neurons):
+    """[(n_in, n_out)] per layer."""
+    dims = []
+    prev = inputs
+    for n in neurons:
+        dims.append((prev, n))
+        prev = n
+    return dims
+
+
+# --------------------------------------------------------------------------
+# hardware-accurate inference (int32, calls the Pallas kernel)
+# --------------------------------------------------------------------------
+
+def hw_infer(inputs, neurons, *, interpret=True):
+    """Build the quantized-inference function for one structure.
+
+    Signature of the returned fn:
+      (w0, b0, w1, b1, ..., x, q, act_ids) -> predictions (B,) int32
+    with wk (n_out, n_in) int32, bk (n_out,) int32, x (B, inputs) int32,
+    q scalar int32, act_ids (num_layers,) int32.
+    """
+    dims = layer_dims(inputs, neurons)
+
+    def fn(*args):
+        nl = len(dims)
+        params = args[: 2 * nl]
+        x, q, act_ids = args[2 * nl], args[2 * nl + 1], args[2 * nl + 2]
+        cur = x
+        for k in range(nl):
+            w, b = params[2 * k], params[2 * k + 1]
+            cur = qlayer(cur, w, b, q, act_ids[k], interpret=interpret)
+        # first-index argmax = the hardware comparator tie-break
+        return jnp.argmax(cur, axis=1).astype(jnp.int32)
+
+    return fn
+
+
+def hw_infer_example_args(inputs, neurons, batch=EVAL_BATCH):
+    """ShapeDtypeStructs for lowering `hw_infer`."""
+    args = []
+    for n_in, n_out in layer_dims(inputs, neurons):
+        args.append(jax.ShapeDtypeStruct((n_out, n_in), jnp.int32))
+        args.append(jax.ShapeDtypeStruct((n_out,), jnp.int32))
+    args.append(jax.ShapeDtypeStruct((batch, inputs), jnp.int32))
+    args.append(jax.ShapeDtypeStruct((), jnp.int32))
+    args.append(jax.ShapeDtypeStruct((len(neurons),), jnp.int32))
+    return args
+
+
+# --------------------------------------------------------------------------
+# float training step (fwd/bwd; optimizer lives in rust)
+# --------------------------------------------------------------------------
+
+TRAINERS = ("zaal", "pytorch", "matlab")
+
+
+def _hidden_act(trainer, x):
+    if trainer == "matlab":
+        return jnp.tanh(x)
+    return jnp.clip(x, -1.0, 1.0)  # htanh (zaal, pytorch)
+
+
+def _forward(trainer, params, x, dims):
+    cur = x
+    for k, _ in enumerate(dims):
+        w, b = params[2 * k], params[2 * k + 1]
+        pre = cur @ w.T + b[None, :]
+        if k + 1 < len(dims):
+            cur = _hidden_act(trainer, pre)
+        else:
+            cur = pre  # head handled by the loss
+    return cur
+
+
+# out-of-band logit regularization of the CE loss: softmax is
+# shift-invariant, so raw logits are uncalibrated for the hardware's
+# saturating 8-bit activations; the hinge penalizes only the part of each
+# logit outside [-1, 1], pulling the cloud into the representable band
+# without collapsing its resolution (shared with rust ann::train::LOGIT_REG)
+LOGIT_REG = 0.5
+
+
+def _loss(trainer, logits, y_onehot):
+    if trainer == "pytorch":
+        # per-class BCE on sigmoid outputs (the paper's PyTorch setup has
+        # a sigmoid output activation in training) — naturally calibrated
+        # for the hsig hardware activation, unlike shift-invariant softmax
+        p = jax.nn.sigmoid(logits)
+        eps = 1e-12
+        bce = -(y_onehot * jnp.log(p + eps) + (1 - y_onehot) * jnp.log(1 - p + eps))
+        return jnp.mean(bce)
+    if trainer == "matlab":
+        # leaky satlin (mirrors rust Activation::SatLin.grad): the exact
+        # clamp has zero gradient when saturated and kills outputs
+        clipped = jnp.clip(logits, 0.0, 1.0)
+        out = clipped + 0.01 * (logits - clipped)
+        return jnp.mean((out - y_onehot) ** 2)
+    out = jax.nn.sigmoid(logits)  # zaal: sigmoid + MSE
+    return jnp.mean((out - y_onehot) ** 2)
+
+
+def train_step(inputs, neurons, trainer):
+    """Build the (loss, *grads) function for one structure and trainer.
+
+    Signature: (w0, b0, ..., x, y_onehot) -> (loss, g_w0, g_b0, ...)
+    """
+    assert trainer in TRAINERS, trainer
+    dims = layer_dims(inputs, neurons)
+
+    def loss_fn(params, x, y_onehot):
+        logits = _forward(trainer, params, x, dims)
+        return _loss(trainer, logits, y_onehot)
+
+    def fn(*args):
+        nl = len(dims)
+        params = list(args[: 2 * nl])
+        x, y = args[2 * nl], args[2 * nl + 1]
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        return (loss, *grads)
+
+    return fn
+
+
+def train_example_args(inputs, neurons, batch=TRAIN_BATCH, classes=10):
+    args = []
+    for n_in, n_out in layer_dims(inputs, neurons):
+        args.append(jax.ShapeDtypeStruct((n_out, n_in), jnp.float32))
+        args.append(jax.ShapeDtypeStruct((n_out,), jnp.float32))
+    args.append(jax.ShapeDtypeStruct((batch, inputs), jnp.float32))
+    args.append(jax.ShapeDtypeStruct((batch, classes), jnp.float32))
+    return args
+
+
+def softmax_eval(inputs, neurons, trainer):
+    """Float inference head used for software-test-accuracy parity checks."""
+    dims = layer_dims(inputs, neurons)
+
+    def fn(*args):
+        nl = len(dims)
+        params = list(args[: 2 * nl])
+        x = args[2 * nl]
+        logits = _forward(trainer, params, x, dims)
+        return jnp.argmax(logits, axis=1).astype(jnp.int32)
+
+    return fn

@@ -1,0 +1,126 @@
+"""L2 correctness: inference graph bit-exactness, training-step gradients
+and AOT lowering round-trips."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.aot import lower_infer, lower_train
+from compile.kernels.ref import activate_ref
+
+
+def numpy_golden(params, x, q, act_ids):
+    """Independent numpy implementation of the fixed-point contract."""
+    cur = x.astype(np.int64)
+    nl = len(params) // 2
+    for k in range(nl):
+        w, b = params[2 * k].astype(np.int64), params[2 * k + 1].astype(np.int64)
+        acc = cur @ w.T + b[None, :]
+        cur = np.asarray(
+            activate_ref(jnp.asarray(acc, jnp.int32), q, int(act_ids[k]))
+        ).astype(np.int64)
+    return np.argmax(cur, axis=1)
+
+
+def rand_params(rng, inputs, neurons, q):
+    params = []
+    for n_in, n_out in model.layer_dims(inputs, neurons):
+        wmax = 1 << min(q, 8)
+        params.append(rng.integers(-wmax, wmax, size=(n_out, n_in), dtype=np.int32))
+        params.append(
+            rng.integers(-(1 << (q + 6)), 1 << (q + 6), size=(n_out,), dtype=np.int32)
+        )
+    return params
+
+
+@pytest.mark.parametrize("structure", model.PAPER_STRUCTURES)
+def test_hw_infer_matches_numpy_golden(structure):
+    inputs, neurons = structure
+    rng = np.random.default_rng(hash(structure) % (2**31))
+    q = 6
+    params = rand_params(rng, inputs, neurons, q)
+    x = rng.integers(0, 128, size=(64, inputs), dtype=np.int32)
+    act_ids = np.array([0] * (len(neurons) - 1) + [1], dtype=np.int32)  # htanh..hsig
+    fn = model.hw_infer(inputs, neurons)
+    got = np.asarray(fn(*[jnp.asarray(p) for p in params], jnp.asarray(x),
+                        jnp.int32(q), jnp.asarray(act_ids)))
+    want = numpy_golden(params, x, q, act_ids)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_hw_infer_first_index_argmax_tiebreak():
+    # two identical output neurons -> class 0 must win
+    fn = model.hw_infer(2, (2,))
+    w = jnp.asarray([[1, 1], [1, 1]], jnp.int32)
+    b = jnp.asarray([0, 0], jnp.int32)
+    x = jnp.asarray([[5, 7]], jnp.int32)
+    out = fn(w, b, x, jnp.int32(2), jnp.asarray([4], jnp.int32))
+    assert int(out[0]) == 0
+
+
+@pytest.mark.parametrize("trainer", model.TRAINERS)
+def test_train_step_gradients_match_fd(trainer):
+    inputs, neurons = 16, (5, 10)
+    fn = model.train_step(inputs, neurons, trainer)
+    rng = np.random.default_rng(3)
+    params = []
+    for n_in, n_out in model.layer_dims(inputs, neurons):
+        params.append(jnp.asarray(rng.normal(0, 0.4, size=(n_out, n_in)), jnp.float32))
+        params.append(jnp.asarray(rng.normal(0, 0.1, size=(n_out,)), jnp.float32))
+    x = jnp.asarray(rng.uniform(0, 1, size=(8, inputs)), jnp.float32)
+    y = jax.nn.one_hot(jnp.asarray(rng.integers(0, 10, size=(8,))), 10)
+
+    out = fn(*params, x, y)
+    loss, grads = float(out[0]), [np.asarray(g) for g in out[1:]]
+    assert len(grads) == len(params)
+    # finite-difference spot checks on a few coordinates
+    eps = 1e-3
+    for pi, coord in [(0, (0, 0)), (1, (2,)), (2, (3, 1)), (3, (5,))]:
+        pp = [np.asarray(p, dtype=np.float64).copy() for p in params]
+        pp[pi][coord] += eps
+        lp = float(fn(*[jnp.asarray(p, jnp.float32) for p in pp], x, y)[0])
+        pp[pi][coord] -= 2 * eps
+        lm = float(fn(*[jnp.asarray(p, jnp.float32) for p in pp], x, y)[0])
+        fd = (lp - lm) / (2 * eps)
+        assert abs(fd - grads[pi][coord]) < 5e-3 * (1 + abs(fd)), (
+            trainer, pi, coord, fd, grads[pi][coord], loss)
+
+
+@pytest.mark.parametrize("trainer", model.TRAINERS)
+def test_sgd_on_train_step_reduces_loss(trainer):
+    inputs, neurons = 16, (10,)
+    fn = jax.jit(model.train_step(inputs, neurons, trainer))
+    rng = np.random.default_rng(11)
+    params = []
+    for n_in, n_out in model.layer_dims(inputs, neurons):
+        params.append(jnp.asarray(rng.normal(0, 0.3, size=(n_out, n_in)), jnp.float32))
+        params.append(jnp.zeros((n_out,), jnp.float32))
+    x = jnp.asarray(rng.uniform(0, 1, size=(model.TRAIN_BATCH, inputs)), jnp.float32)
+    labels = rng.integers(0, 10, size=(model.TRAIN_BATCH,))
+    y = jax.nn.one_hot(jnp.asarray(labels), 10)
+    first = None
+    for step in range(60):
+        out = fn(*params, x, y)
+        loss = float(out[0])
+        if first is None:
+            first = loss
+        params = [p - 0.5 * g for p, g in zip(params, out[1:])]
+    assert loss < first, (trainer, first, loss)
+
+
+def test_lowering_produces_hlo_text():
+    text = lower_infer(16, (10,), batch=32)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    t2 = lower_train(16, (10,), "zaal", batch=8)
+    assert "HloModule" in t2
+
+
+def test_structure_names():
+    assert model.structure_name(16, (16, 10)) == "16-16-10"
+    assert [model.structure_name(i, n) for i, n in model.PAPER_STRUCTURES] == [
+        "16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10",
+    ]

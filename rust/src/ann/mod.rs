@@ -1,0 +1,15 @@
+//! Feedforward ANN substrate: topology, floating-point model + native
+//! trainer (ZAAL), the pendigits workload, quantization to integer
+//! weights, and the bit-accurate hardware golden-model simulator.
+
+pub mod dataset;
+pub mod model;
+pub mod quant;
+pub mod sim;
+pub mod structure;
+pub mod train;
+
+pub use dataset::{Dataset, Sample};
+pub use model::Ann;
+pub use quant::QuantizedAnn;
+pub use structure::{Activation, AnnStructure};

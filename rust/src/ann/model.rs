@@ -1,0 +1,307 @@
+//! Floating-point feedforward ANN: the object produced by training and
+//! consumed by the quantization / post-training flow.
+
+use super::structure::{Activation, AnnStructure};
+use crate::num::Rng;
+use anyhow::{ensure, Result};
+
+/// Weight initialization schemes offered by ZAAL (paper Sec. VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Init {
+    /// Xavier/Glorot uniform [37]
+    Xavier,
+    /// He normal [38]
+    He,
+    /// fully random uniform in [-0.5, 0.5]
+    Random,
+}
+
+/// A trained (or in-training) floating-point ANN.
+///
+/// `weights[k][m][n]` is the weight from input `n` to neuron `m` of layer
+/// `k`; `biases[k][m]` the bias of that neuron; `activations[k]` the
+/// layer's activation function.
+#[derive(Debug, Clone)]
+pub struct Ann {
+    pub structure: AnnStructure,
+    pub weights: Vec<Vec<Vec<f64>>>,
+    pub biases: Vec<Vec<f64>>,
+    pub activations: Vec<Activation>,
+}
+
+impl Ann {
+    /// Initialize with the given scheme. `activations` must have one entry
+    /// per layer.
+    pub fn init(
+        structure: AnnStructure,
+        activations: Vec<Activation>,
+        init: Init,
+        rng: &mut Rng,
+    ) -> Ann {
+        assert_eq!(activations.len(), structure.num_layers());
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for k in 0..structure.num_layers() {
+            let fan_in = structure.layer_inputs(k);
+            let fan_out = structure.layer_outputs(k);
+            let layer: Vec<Vec<f64>> = (0..fan_out)
+                .map(|_| {
+                    (0..fan_in)
+                        .map(|_| match init {
+                            Init::Xavier => {
+                                let lim = (6.0 / (fan_in + fan_out) as f64).sqrt();
+                                rng.range(-lim, lim)
+                            }
+                            Init::He => rng.normal() * (2.0 / fan_in as f64).sqrt(),
+                            Init::Random => rng.range(-0.5, 0.5),
+                        })
+                        .collect()
+                })
+                .collect();
+            weights.push(layer);
+            biases.push(vec![0.0; fan_out]);
+        }
+        Ann {
+            structure,
+            weights,
+            biases,
+            activations,
+        }
+    }
+
+    /// Forward pass returning the activations of every layer
+    /// (`out[k][m]`, k = 0 .. λ-1). Softmax is applied layer-wide.
+    pub fn forward_all(&self, input: &[f64]) -> Vec<Vec<f64>> {
+        assert_eq!(input.len(), self.structure.inputs);
+        let mut acts: Vec<Vec<f64>> = Vec::with_capacity(self.structure.num_layers());
+        let mut cur: Vec<f64> = input.to_vec();
+        for k in 0..self.structure.num_layers() {
+            let pre: Vec<f64> = self.weights[k]
+                .iter()
+                .zip(&self.biases[k])
+                .map(|(ws, b)| ws.iter().zip(&cur).map(|(w, x)| w * x).sum::<f64>() + b)
+                .collect();
+            let post = if self.activations[k] == Activation::Softmax {
+                softmax(&pre)
+            } else {
+                pre.iter().map(|&y| self.activations[k].eval(y)).collect()
+            };
+            acts.push(post.clone());
+            cur = post;
+        }
+        acts
+    }
+
+    /// Forward pass returning only the output layer.
+    pub fn forward(&self, input: &[f64]) -> Vec<f64> {
+        self.forward_all(input).pop().unwrap()
+    }
+
+    /// Predicted class = argmax of the output layer (first index on ties,
+    /// matching the hardware comparator chain).
+    pub fn predict(&self, input: &[f64]) -> usize {
+        argmax(&self.forward(input))
+    }
+
+    /// Classification accuracy (fraction in [0, 1]) over samples given as
+    /// `(features, label)` pairs.
+    pub fn accuracy<'a>(
+        &self,
+        samples: impl IntoIterator<Item = (&'a [f64], usize)>,
+    ) -> f64 {
+        let mut total = 0usize;
+        let mut correct = 0usize;
+        for (x, y) in samples {
+            total += 1;
+            if self.predict(x) == y {
+                correct += 1;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        }
+    }
+
+    /// All parameters flattened layer-major: W0 row-major, b0, W1, b1, ...
+    /// (the layout of the AOT train-grads artifacts).
+    pub fn flatten_params(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for k in 0..self.structure.num_layers() {
+            for row in &self.weights[k] {
+                out.extend_from_slice(row);
+            }
+            out.extend_from_slice(&self.biases[k]);
+        }
+        out
+    }
+
+    /// Inverse of [`Ann::flatten_params`].
+    pub fn unflatten_params(&mut self, flat: &[f64]) -> Result<()> {
+        let mut it = flat.iter();
+        for k in 0..self.structure.num_layers() {
+            for row in self.weights[k].iter_mut() {
+                for w in row.iter_mut() {
+                    *w = *it.next().ok_or_else(|| anyhow::anyhow!("short params"))?;
+                }
+            }
+            for b in self.biases[k].iter_mut() {
+                *b = *it.next().ok_or_else(|| anyhow::anyhow!("short params"))?;
+            }
+        }
+        ensure!(it.next().is_none(), "excess params");
+        Ok(())
+    }
+
+    /// Serialize to a simple line-oriented text format (structure,
+    /// activations, then parameters) — used to cache trained weights in
+    /// `artifacts/weights/`.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("structure {}\n", self.structure));
+        s.push_str("activations");
+        for a in &self.activations {
+            s.push_str(&format!(" {}", a.name()));
+        }
+        s.push('\n');
+        for p in self.flatten_params() {
+            // rust's shortest-roundtrip float formatting: parses back exactly
+            s.push_str(&format!("{p}\n"));
+        }
+        s
+    }
+
+    /// Parse the format written by [`Ann::to_text`].
+    pub fn from_text(text: &str) -> Result<Ann> {
+        let mut lines = text.lines();
+        let st_line = lines.next().ok_or_else(|| anyhow::anyhow!("empty"))?;
+        let structure = AnnStructure::parse(
+            st_line
+                .strip_prefix("structure ")
+                .ok_or_else(|| anyhow::anyhow!("missing structure line"))?,
+        )?;
+        let act_line = lines.next().ok_or_else(|| anyhow::anyhow!("missing activations"))?;
+        let acts: Vec<Activation> = act_line
+            .strip_prefix("activations")
+            .ok_or_else(|| anyhow::anyhow!("missing activations line"))?
+            .split_whitespace()
+            .map(parse_activation)
+            .collect::<Result<_>>()?;
+        let mut rng = Rng::new(0);
+        let mut ann = Ann::init(structure, acts, Init::Random, &mut rng);
+        let params: Vec<f64> = lines
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| l.trim().parse::<f64>().map_err(|e| anyhow::anyhow!("{e}")))
+            .collect::<Result<_>>()?;
+        ann.unflatten_params(&params)?;
+        Ok(ann)
+    }
+}
+
+fn parse_activation(s: &str) -> Result<Activation> {
+    Ok(match s {
+        "htanh" => Activation::HTanh,
+        "hsig" => Activation::HSig,
+        "relu" => Activation::ReLU,
+        "satlin" => Activation::SatLin,
+        "lin" => Activation::Lin,
+        "sigmoid" => Activation::Sigmoid,
+        "tanh" => Activation::Tanh,
+        "softmax" => Activation::Softmax,
+        other => anyhow::bail!("unknown activation {other:?}"),
+    })
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(xs: &[f64]) -> Vec<f64> {
+    let m = xs.iter().cloned().fold(f64::MIN, f64::max);
+    let exps: Vec<f64> = xs.iter().map(|&x| (x - m).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// First-index argmax (the tie-break the hardware comparator tree uses).
+pub fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ann() -> Ann {
+        let mut rng = Rng::new(11);
+        Ann::init(
+            AnnStructure::parse("4-3-2").unwrap(),
+            vec![Activation::HTanh, Activation::Sigmoid],
+            Init::Xavier,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let ann = tiny_ann();
+        let acts = ann.forward_all(&[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(acts.len(), 2);
+        assert_eq!(acts[0].len(), 3);
+        assert_eq!(acts[1].len(), 2);
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut ann = tiny_ann();
+        let flat = ann.flatten_params();
+        assert_eq!(flat.len(), 4 * 3 + 3 + 3 * 2 + 2);
+        let mut flat2 = flat.clone();
+        flat2[0] = 0.875;
+        ann.unflatten_params(&flat2).unwrap();
+        assert_eq!(ann.weights[0][0][0], 0.875);
+        assert!(ann.unflatten_params(&flat[..5]).is_err());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let ann = tiny_ann();
+        let text = ann.to_text();
+        let back = Ann::from_text(&text).unwrap();
+        assert_eq!(back.structure, ann.structure);
+        assert_eq!(back.activations, ann.activations);
+        let x = [0.3, -0.2, 0.9, 0.0];
+        assert_eq!(back.forward(&x), ann.forward(&x));
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn known_forward_value() {
+        // 1 input, 1 neuron, lin activation: y = w x + b
+        let mut ann = Ann::init(
+            AnnStructure::parse("1-1").unwrap(),
+            vec![Activation::Lin],
+            Init::Random,
+            &mut Rng::new(0),
+        );
+        ann.weights[0][0][0] = 2.0;
+        ann.biases[0][0] = -0.5;
+        assert_eq!(ann.forward(&[3.0]), vec![5.5]);
+    }
+}

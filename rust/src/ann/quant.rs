@@ -1,0 +1,208 @@
+//! Float→integer weight conversion and the minimum-quantization-value
+//! search (paper Sec. IV-A).
+
+use super::dataset::Dataset;
+use super::model::Ann;
+use super::sim;
+use super::structure::{Activation, AnnStructure};
+
+/// Fractional bits of the inter-layer Q1.7 signal format (DESIGN.md
+/// §Fixed-point contract; the paper fixes layer I/O bitwidths to 8).
+pub const FRAC_BITS: u32 = 7;
+
+/// An ANN with integer weights/biases, the quantization value `q`, and the
+/// hardware activation functions — the object every hardware architecture
+/// and tuner operates on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedAnn {
+    pub structure: AnnStructure,
+    /// `weights[k][m][n]`: integer weight, scale 2^q
+    pub weights: Vec<Vec<Vec<i64>>>,
+    /// `biases[k][m]`: integer bias, scale 2^(q + FRAC_BITS)
+    pub biases: Vec<Vec<i64>>,
+    /// quantization value: weights were scaled by 2^q
+    pub q: u32,
+    /// per-layer hardware activation (must be hardware-realizable)
+    pub activations: Vec<Activation>,
+}
+
+impl QuantizedAnn {
+    /// Paper Sec. IV-A step 3: convert each floating-point weight and bias
+    /// to an integer by multiplying by 2^q and taking the ceiling.
+    pub fn quantize(ann: &Ann, q: u32, hw_activations: &[Activation]) -> QuantizedAnn {
+        assert_eq!(hw_activations.len(), ann.structure.num_layers());
+        assert!(
+            hw_activations.iter().all(|a| a.hardware_realizable()),
+            "hardware activations must be realizable: {hw_activations:?}"
+        );
+        let scale_w = (1i64 << q) as f64;
+        let scale_b = (1i64 << (q + FRAC_BITS)) as f64;
+        let weights = ann
+            .weights
+            .iter()
+            .map(|layer| {
+                layer
+                    .iter()
+                    .map(|row| row.iter().map(|&w| (w * scale_w).ceil() as i64).collect())
+                    .collect()
+            })
+            .collect();
+        let biases = ann
+            .biases
+            .iter()
+            .map(|layer| layer.iter().map(|&b| (b * scale_b).ceil() as i64).collect())
+            .collect();
+        QuantizedAnn {
+            structure: ann.structure.clone(),
+            weights,
+            biases,
+            q,
+            activations: hw_activations.to_vec(),
+        }
+    }
+
+    /// Total number of nonzero CSD digits over all weights and biases —
+    /// the paper's high-level hardware cost `tnzd` (Table I).
+    pub fn tnzd(&self) -> usize {
+        let w = self
+            .weights
+            .iter()
+            .flat_map(|l| l.iter().flatten())
+            .cloned();
+        let b = self.biases.iter().flatten().cloned();
+        crate::num::csd::tnzd(w.chain(b))
+    }
+
+    /// Maximum absolute weight (sizing the MAC multiplier).
+    pub fn max_abs_weight(&self) -> i64 {
+        self.weights
+            .iter()
+            .flat_map(|l| l.iter().flatten())
+            .map(|w| w.abs())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// All weights of one layer, flattened row-major.
+    pub fn layer_weights(&self, k: usize) -> Vec<i64> {
+        self.weights[k].iter().flatten().cloned().collect()
+    }
+}
+
+/// Outcome of the minimum-quantization search.
+#[derive(Debug, Clone)]
+pub struct QuantSearch {
+    pub qann: QuantizedAnn,
+    /// hardware accuracy at the chosen q, percent on the validation set
+    pub ha: f64,
+    /// the full ha(q) trace, ha[0] = ha(1)
+    pub trace: Vec<f64>,
+}
+
+/// Paper Sec. IV-A: find the minimum quantization value. Starting from
+/// q = 1, increase q while the hardware accuracy on the validation set
+/// improves by more than 0.1 percentage points; return the first q where
+/// it stops improving (sacrificing at most 0.1% accuracy for smaller
+/// weights). `q_cap` bounds the search (the paper's loop terminates
+/// because accuracy saturates; we keep an explicit cap for safety).
+pub fn find_min_quantization(
+    ann: &Ann,
+    hw_activations: &[Activation],
+    data: &Dataset,
+    q_cap: u32,
+) -> QuantSearch {
+    let mut trace = Vec::new();
+    let mut prev: Option<(QuantizedAnn, f64)> = None;
+    for q in 1..=q_cap {
+        let qann = QuantizedAnn::quantize(ann, q, hw_activations);
+        let ha = sim::hardware_accuracy(&qann, &data.validation);
+        trace.push(ha);
+        let prev_ha = prev.as_ref().map_or(0.0, |(_, h)| *h);
+        let improved = ha > 0.0 && ha - prev_ha > 0.1;
+        if !improved && q > 1 {
+            // Step 6: stop. The paper returns q here (its accuracy is
+            // within 0.1% of q-1 when accuracy has saturated); when the
+            // last step *decreased* accuracy we keep whichever of the two
+            // candidates scores better, honoring the <=0.1% sacrifice.
+            let (pq, ph) = prev.unwrap();
+            let (qann, ha) = if ha >= ph { (qann, ha) } else { (pq, ph) };
+            return QuantSearch { qann, ha, trace };
+        }
+        prev = Some((qann, ha));
+    }
+    let (qann, ha) = prev.expect("q_cap >= 1");
+    QuantSearch { qann, ha, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::Init;
+    use crate::ann::train::{train, Trainer};
+    use crate::num::Rng;
+
+    #[test]
+    fn ceil_conversion_matches_paper_rule() {
+        let mut ann = Ann::init(
+            AnnStructure::parse("1-1").unwrap(),
+            vec![Activation::Lin],
+            Init::Random,
+            &mut Rng::new(0),
+        );
+        ann.weights[0][0][0] = 0.30;
+        ann.biases[0][0] = -0.20;
+        let q = QuantizedAnn::quantize(&ann, 3, &[Activation::Lin]);
+        // ceil(0.30 * 8) = ceil(2.4) = 3
+        assert_eq!(q.weights[0][0][0], 3);
+        // bias scale = 2^(3+7): ceil(-0.2 * 1024) = -204
+        assert_eq!(q.biases[0][0], -204);
+    }
+
+    #[test]
+    fn quantize_rejects_soft_activations() {
+        let ann = Ann::init(
+            AnnStructure::parse("2-1").unwrap(),
+            vec![Activation::Sigmoid],
+            Init::Random,
+            &mut Rng::new(0),
+        );
+        let r = std::panic::catch_unwind(|| {
+            QuantizedAnn::quantize(&ann, 4, &[Activation::Sigmoid])
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn min_quant_search_improves_then_stops() {
+        let data = Dataset::synthetic_with_sizes(21, 1500, 300);
+        let structure = AnnStructure::parse("16-10").unwrap();
+        let mut cfg = Trainer::Zaal.config(2);
+        cfg.max_epochs = 20;
+        let res = train(&structure, &data, &cfg);
+        let hw_acts = Trainer::Zaal.hardware_activations(1);
+        let search = find_min_quantization(&res.ann, &hw_acts, &data, 12);
+        assert!(search.qann.q >= 1 && search.qann.q <= 12);
+        assert!(search.ha > 60.0, "quantized accuracy collapsed: {}", search.ha);
+        // the chosen q is the point where the improvement dropped <= 0.1%
+        if search.trace.len() >= 2 {
+            let last = search.trace.len() - 1;
+            assert!(search.trace[last] - search.trace[last - 1] <= 0.1 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn tnzd_counts_weights_and_biases() {
+        let mut ann = Ann::init(
+            AnnStructure::parse("2-1").unwrap(),
+            vec![Activation::Lin],
+            Init::Random,
+            &mut Rng::new(0),
+        );
+        ann.weights[0][0][0] = 7.0 / 16.0; // -> 7 at q=4: CSD 100-1 => 2 digits
+        ann.weights[0][0][1] = 0.0;
+        ann.biases[0][0] = 0.0;
+        let q = QuantizedAnn::quantize(&ann, 4, &[Activation::Lin]);
+        assert_eq!(q.weights[0][0][0], 7);
+        assert_eq!(q.tnzd(), 2);
+    }
+}

@@ -1,0 +1,272 @@
+//! Bit-accurate integer inference — the hardware golden model.
+//!
+//! Implements exactly the fixed-point contract of DESIGN.md, which is the
+//! datapath all three architectures realize: int32 inner product of Q1.7
+//! inputs with scale-2^q integer weights, bias add at scale 2^(q+7),
+//! activation with an arithmetic-shift requantize back to Q1.7.
+//!
+//! The AOT-lowered JAX graph (`python/compile/model.py::hw_infer`) and the
+//! generated Verilog implement the same contract; cross-checked by tests
+//! and by `hw::netsim`.
+
+use super::dataset::Sample;
+use super::quant::{QuantizedAnn, FRAC_BITS};
+use super::structure::Activation;
+
+/// Saturation bounds of the signed Q1.7 inter-layer format.
+pub const Q7_MAX: i32 = 127;
+pub const Q7_MIN: i32 = -128;
+
+/// Apply a hardware activation to an accumulator value `y` at scale
+/// 2^(q+7), returning the Q1.7 result. Arithmetic right shift = floor
+/// division by a power of two, exactly what the hardware wiring does.
+#[inline]
+pub fn activate(act: Activation, y: i64, q: u32) -> i32 {
+    let one = 1i64 << (q as i64 + FRAC_BITS as i64); // +1.0 at accumulator scale
+    let v = match act {
+        // clamp(y, -1, 1) then drop q fractional bits
+        Activation::HTanh => (y >> q).clamp(Q7_MIN as i64, Q7_MAX as i64),
+        // clamp((y+1)/2, 0, 1)
+        Activation::HSig => ((y + one) >> (q + 1)).clamp(0, Q7_MAX as i64),
+        // max(y, 0), saturated to the representable [0, 1)
+        Activation::ReLU => (y.max(0) >> q).min(Q7_MAX as i64),
+        // clamp(y, 0, 1)
+        Activation::SatLin => (y >> q).clamp(0, Q7_MAX as i64),
+        // identity, saturated
+        Activation::Lin => (y >> q).clamp(Q7_MIN as i64, Q7_MAX as i64),
+        other => panic!("activation {other} is not hardware-realizable"),
+    };
+    v as i32
+}
+
+/// Forward pass over one sample (features already in Q1.7), returning the
+/// Q1.7 activations of every layer.
+pub fn forward_all(qann: &QuantizedAnn, input: &[i32]) -> Vec<Vec<i32>> {
+    assert_eq!(input.len(), qann.structure.inputs);
+    let mut outs: Vec<Vec<i32>> = Vec::with_capacity(qann.structure.num_layers());
+    let mut cur: Vec<i32> = input.to_vec();
+    for k in 0..qann.structure.num_layers() {
+        let act = qann.activations[k];
+        let next: Vec<i32> = qann.weights[k]
+            .iter()
+            .zip(&qann.biases[k])
+            .map(|(ws, &b)| {
+                let y: i64 = ws
+                    .iter()
+                    .zip(&cur)
+                    .map(|(&w, &x)| w * x as i64)
+                    .sum::<i64>()
+                    + b;
+                activate(act, y, qann.q)
+            })
+            .collect();
+        outs.push(next.clone());
+        cur = next;
+    }
+    outs
+}
+
+/// Forward pass returning only the output layer.
+pub fn forward(qann: &QuantizedAnn, input: &[i32]) -> Vec<i32> {
+    forward_all(qann, input).pop().unwrap()
+}
+
+/// Predicted class: first-index argmax over the output activations
+/// (the hardware comparator tree's tie-break).
+pub fn predict(qann: &QuantizedAnn, input: &[i32]) -> usize {
+    let mut scratch = Scratch::default();
+    predict_scratch(qann, input, &mut scratch)
+}
+
+/// Reusable buffers for the allocation-free prediction loop (§Perf: the
+/// tuners score thousands of candidates over the full validation set, so
+/// the per-sample layer vectors dominated the evaluator's profile).
+#[derive(Default)]
+pub struct Scratch {
+    a: Vec<i32>,
+    b: Vec<i32>,
+}
+
+/// [`predict`] without per-call allocations: ping-pongs layer
+/// activations between two reused buffers.
+pub fn predict_scratch(qann: &QuantizedAnn, input: &[i32], s: &mut Scratch) -> usize {
+    debug_assert_eq!(input.len(), qann.structure.inputs);
+    s.a.clear();
+    s.a.extend_from_slice(input);
+    for k in 0..qann.structure.num_layers() {
+        let act = qann.activations[k];
+        s.b.clear();
+        for (ws, &bias) in qann.weights[k].iter().zip(&qann.biases[k]) {
+            let mut y = bias;
+            for (&w, &x) in ws.iter().zip(s.a.iter()) {
+                y += w * x as i64;
+            }
+            s.b.push(activate(act, y, qann.q));
+        }
+        std::mem::swap(&mut s.a, &mut s.b);
+    }
+    let out = &s.a;
+    let mut best = 0;
+    for (i, &v) in out.iter().enumerate() {
+        if v > out[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Hardware accuracy in percent over a sample set (the paper's `ha` /
+/// `hta` metrics).
+pub fn hardware_accuracy(qann: &QuantizedAnn, samples: &[Sample]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let correct = samples
+        .iter()
+        .filter(|s| predict(qann, &s.features_q7()) == s.label as usize)
+        .count();
+    100.0 * correct as f64 / samples.len() as f64
+}
+
+/// Batched prediction (used by benches and the PJRT cross-check).
+pub fn predict_batch(qann: &QuantizedAnn, samples: &[Sample]) -> Vec<u8> {
+    samples
+        .iter()
+        .map(|s| predict(qann, &s.features_q7()) as u8)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::AnnStructure;
+    use crate::num::Rng;
+
+    fn manual_qann() -> QuantizedAnn {
+        // 2 inputs -> 1 neuron, q = 2, lin activation
+        QuantizedAnn {
+            structure: AnnStructure::parse("2-1").unwrap(),
+            weights: vec![vec![vec![3, -2]]],
+            biases: vec![vec![8]],
+            q: 2,
+            activations: vec![Activation::Lin],
+        }
+    }
+
+    #[test]
+    fn known_inner_product() {
+        let q = manual_qann();
+        // y = 3*10 + (-2)*4 + 8 = 30; lin: 30 >> 2 = 7
+        assert_eq!(forward(&q, &[10, 4]), vec![7]);
+        // negative accumulator: arithmetic shift floors toward -inf
+        // y = 3*(-10) + (-2)*0 + 8 = -22; -22 >> 2 = -6 (floor(-5.5))
+        assert_eq!(forward(&q, &[-10, 0]), vec![-6]);
+    }
+
+    #[test]
+    fn activation_semantics() {
+        let q = 3u32;
+        let one = 1i64 << (q + FRAC_BITS);
+        // htanh saturates at +-1.0
+        assert_eq!(activate(Activation::HTanh, 2 * one, q), Q7_MAX);
+        assert_eq!(activate(Activation::HTanh, -2 * one, q), Q7_MIN);
+        assert_eq!(activate(Activation::HTanh, 0, q), 0);
+        // hsig(0) = 0.5 -> 64
+        assert_eq!(activate(Activation::HSig, 0, q), 64);
+        assert_eq!(activate(Activation::HSig, one, q), Q7_MAX); // hsig(1)=1
+        assert_eq!(activate(Activation::HSig, -one, q), 0); // hsig(-1)=0
+        // relu
+        assert_eq!(activate(Activation::ReLU, -5 * one, q), 0);
+        assert_eq!(activate(Activation::ReLU, one / 2, q), 64);
+        // satlin clamps below at 0 and above at 1
+        assert_eq!(activate(Activation::SatLin, -one, q), 0);
+        assert_eq!(activate(Activation::SatLin, 2 * one, q), Q7_MAX);
+    }
+
+    #[test]
+    fn activation_monotone_nondecreasing() {
+        // property: all hardware activations are monotone in y
+        for act in [
+            Activation::HTanh,
+            Activation::HSig,
+            Activation::ReLU,
+            Activation::SatLin,
+            Activation::Lin,
+        ] {
+            let mut prev = i32::MIN;
+            for y in (-3000..3000).step_by(7) {
+                let v = activate(act, y, 4);
+                assert!(v >= prev, "{act} not monotone at y={y}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_stay_in_q7() {
+        let mut rng = Rng::new(33);
+        let ann = Ann::init(
+            AnnStructure::parse("16-10-10").unwrap(),
+            vec![Activation::HTanh, Activation::HSig],
+            Init::Xavier,
+            &mut rng,
+        );
+        let q = QuantizedAnn::quantize(&ann, 6, &[Activation::HTanh, Activation::HSig]);
+        for _ in 0..200 {
+            let x: Vec<i32> = (0..16).map(|_| rng.below(128) as i32).collect();
+            for layer in forward_all(&q, &x) {
+                for v in layer {
+                    assert!((Q7_MIN..=Q7_MAX).contains(&v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_tracks_float_model() {
+        // with a generous q, hardware predictions should mostly agree with
+        // the float model using the hard activations
+        let mut rng = Rng::new(44);
+        let acts = vec![Activation::HTanh, Activation::HSig];
+        let ann = Ann::init(
+            AnnStructure::parse("16-8-10").unwrap(),
+            acts.clone(),
+            Init::Xavier,
+            &mut rng,
+        );
+        let q = QuantizedAnn::quantize(&ann, 10, &acts);
+        let mut agree = 0;
+        let n = 300;
+        for _ in 0..n {
+            let feats: Vec<u8> = (0..16).map(|_| rng.below(101) as u8).collect();
+            let s = Sample {
+                features: feats.clone().try_into().unwrap(),
+                label: 0,
+            };
+            let xf: Vec<f64> = s.features_f64().to_vec();
+            let pf = ann.predict(&xf);
+            let ph = predict(&q, &s.features_q7());
+            if pf == ph {
+                agree += 1;
+            }
+        }
+        assert!(
+            agree as f64 / n as f64 > 0.9,
+            "float/quantized agreement only {agree}/{n}"
+        );
+    }
+
+    #[test]
+    fn sls_decomposition_is_identity() {
+        // w = c << k multiplied by x equals (c*x) << k: the SMAC tuner's
+        // premise that sls affects cost, not numerics.
+        let mut rng = Rng::new(55);
+        for _ in 0..1000 {
+            let c = rng.below(1 << 8) as i64 - 128;
+            let k = rng.below(5) as u32;
+            let x = rng.below(256) as i64 - 128;
+            assert_eq!((c << k) * x, (c * x) << k);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! ANN topology and activation functions.
+
+use std::fmt;
+
+/// Activation functions. The first five are the hardware-friendly set
+/// SIMURG generates (paper Sec. VI); `Sigmoid`/`Tanh`/`Softmax` appear
+/// only in software training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    /// hard hyperbolic tangent: clamp(x, -1, 1)
+    HTanh,
+    /// hard sigmoid: clamp((x + 1) / 2, 0, 1)
+    HSig,
+    /// rectified linear unit: max(x, 0) (saturated to 1 in hardware Q1.7)
+    ReLU,
+    /// saturating linear: clamp(x, 0, 1)
+    SatLin,
+    /// identity (saturated to the representable range in hardware)
+    Lin,
+    /// software-only logistic sigmoid
+    Sigmoid,
+    /// software-only hyperbolic tangent
+    Tanh,
+    /// software-only softmax (training losses only)
+    Softmax,
+}
+
+impl Activation {
+    /// Software (floating-point) evaluation. `Softmax` is handled at the
+    /// layer level and must not be evaluated element-wise.
+    pub fn eval(self, x: f64) -> f64 {
+        match self {
+            Activation::HTanh => x.clamp(-1.0, 1.0),
+            Activation::HSig => ((x + 1.0) / 2.0).clamp(0.0, 1.0),
+            Activation::ReLU => x.max(0.0),
+            Activation::SatLin => x.clamp(0.0, 1.0),
+            Activation::Lin => x,
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::Tanh => x.tanh(),
+            Activation::Softmax => panic!("softmax is a layer-level activation"),
+        }
+    }
+
+    /// Derivative w.r.t. the pre-activation, for backprop.
+    pub fn grad(self, x: f64) -> f64 {
+        match self {
+            Activation::HTanh => {
+                if (-1.0..=1.0).contains(&x) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::HSig => {
+                if (-1.0..=1.0).contains(&x) {
+                    0.5
+                } else {
+                    0.0
+                }
+            }
+            Activation::ReLU => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::SatLin => {
+                // leaky outside the linear region: a saturated satlin
+                // output would otherwise have exactly zero gradient and
+                // die permanently during training (the hardware clamp
+                // stays exact; only the trainer sees the leak)
+                if (0.0..=1.0).contains(&x) {
+                    1.0
+                } else {
+                    0.01
+                }
+            }
+            Activation::Lin => 1.0,
+            Activation::Sigmoid => {
+                let s = 1.0 / (1.0 + (-x).exp());
+                s * (1.0 - s)
+            }
+            Activation::Tanh => 1.0 - x.tanh().powi(2),
+            Activation::Softmax => panic!("softmax gradient handled with the loss"),
+        }
+    }
+
+    /// True for the set SIMURG can realize in hardware.
+    pub fn hardware_realizable(self) -> bool {
+        matches!(
+            self,
+            Activation::HTanh
+                | Activation::HSig
+                | Activation::ReLU
+                | Activation::SatLin
+                | Activation::Lin
+        )
+    }
+
+    /// The hardware counterpart used by SIMURG when converting a trained
+    /// net (paper Sec. VII: htanh->htanh, sigmoid->hsig, tanh->htanh,
+    /// satlin->satlin).
+    pub fn hardware_counterpart(self) -> Activation {
+        match self {
+            Activation::Sigmoid => Activation::HSig,
+            Activation::Tanh => Activation::HTanh,
+            Activation::Softmax => Activation::HSig,
+            a => a,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::HTanh => "htanh",
+            Activation::HSig => "hsig",
+            Activation::ReLU => "relu",
+            Activation::SatLin => "satlin",
+            Activation::Lin => "lin",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+            Activation::Softmax => "softmax",
+        }
+    }
+}
+
+impl fmt::Display for Activation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// ANN topology in the paper's `p_in-η1-η2-...-ηλ` notation, e.g.
+/// `16-16-10` = 16 primary inputs, one 16-neuron hidden layer, a
+/// 10-neuron output layer.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AnnStructure {
+    /// number of primary inputs (p_in)
+    pub inputs: usize,
+    /// neurons per layer, hidden layers first, output layer last (η_k)
+    pub neurons: Vec<usize>,
+}
+
+impl AnnStructure {
+    pub fn new(inputs: usize, neurons: &[usize]) -> Self {
+        assert!(!neurons.is_empty(), "need at least an output layer");
+        AnnStructure {
+            inputs,
+            neurons: neurons.to_vec(),
+        }
+    }
+
+    /// Parse the paper notation, e.g. `"16-16-10-10"`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let parts: Vec<usize> = s
+            .split('-')
+            .map(|p| p.trim().parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad structure {s:?}: {e}"))?;
+        anyhow::ensure!(parts.len() >= 2, "structure {s:?} needs inputs and >=1 layer");
+        anyhow::ensure!(parts.iter().all(|&p| p > 0), "structure {s:?} has a zero");
+        Ok(AnnStructure::new(parts[0], &parts[1..]))
+    }
+
+    /// Number of layers (λ).
+    pub fn num_layers(&self) -> usize {
+        self.neurons.len()
+    }
+
+    /// Inputs feeding layer `k` (0-based): ι_k.
+    pub fn layer_inputs(&self, k: usize) -> usize {
+        if k == 0 {
+            self.inputs
+        } else {
+            self.neurons[k - 1]
+        }
+    }
+
+    /// Outputs (neurons) of layer `k`: η_k.
+    pub fn layer_outputs(&self, k: usize) -> usize {
+        self.neurons[k]
+    }
+
+    /// Total number of neurons = Σ η_i (the MAC count of SMAC_NEURON).
+    pub fn total_neurons(&self) -> usize {
+        self.neurons.iter().sum()
+    }
+
+    /// Total number of weights (excluding biases).
+    pub fn total_weights(&self) -> usize {
+        (0..self.num_layers())
+            .map(|k| self.layer_inputs(k) * self.layer_outputs(k))
+            .sum()
+    }
+
+    /// Clock cycles of the SMAC_NEURON architecture: Σ (ι_i + 1)
+    /// (paper Sec. III-B1).
+    pub fn smac_neuron_cycles(&self) -> usize {
+        (0..self.num_layers()).map(|k| self.layer_inputs(k) + 1).sum()
+    }
+
+    /// Clock cycles of the SMAC_ANN architecture: Σ (ι_i + 2)·η_i
+    /// (paper Sec. III-B2).
+    pub fn smac_ann_cycles(&self) -> usize {
+        (0..self.num_layers())
+            .map(|k| (self.layer_inputs(k) + 2) * self.layer_outputs(k))
+            .sum()
+    }
+
+    /// The five benchmark structures of the paper's evaluation (Sec. VII).
+    pub fn paper_benchmarks() -> Vec<AnnStructure> {
+        ["16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10"]
+            .iter()
+            .map(|s| AnnStructure::parse(s).unwrap())
+            .collect()
+    }
+}
+
+impl fmt::Display for AnnStructure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inputs)?;
+        for n in &self.neurons {
+            write!(f, "-{}", n)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display() {
+        let s = AnnStructure::parse("16-16-10-10").unwrap();
+        assert_eq!(s.inputs, 16);
+        assert_eq!(s.neurons, vec![16, 10, 10]);
+        assert_eq!(s.to_string(), "16-16-10-10");
+        assert!(AnnStructure::parse("16").is_err());
+        assert!(AnnStructure::parse("16-0-10").is_err());
+        assert!(AnnStructure::parse("16-x-10").is_err());
+    }
+
+    #[test]
+    fn cycle_counts() {
+        // 16-10: layers = [(ι=16, η=10)]
+        let s = AnnStructure::parse("16-10").unwrap();
+        assert_eq!(s.smac_neuron_cycles(), 17);
+        assert_eq!(s.smac_ann_cycles(), 18 * 10);
+        // 16-16-10: (16+1) + (16+1) = 34 ; (16+2)*16 + (16+2)*10
+        let s = AnnStructure::parse("16-16-10").unwrap();
+        assert_eq!(s.smac_neuron_cycles(), 34);
+        assert_eq!(s.smac_ann_cycles(), 18 * 16 + 18 * 10);
+    }
+
+    #[test]
+    fn totals() {
+        let s = AnnStructure::parse("16-16-10").unwrap();
+        assert_eq!(s.total_neurons(), 26);
+        assert_eq!(s.total_weights(), 16 * 16 + 16 * 10);
+    }
+
+    #[test]
+    fn activation_props() {
+        assert!(Activation::HSig.hardware_realizable());
+        assert!(!Activation::Sigmoid.hardware_realizable());
+        assert_eq!(Activation::Sigmoid.hardware_counterpart(), Activation::HSig);
+        assert_eq!(Activation::Tanh.hardware_counterpart(), Activation::HTanh);
+        assert_eq!((Activation::HTanh.eval(2.0) - 1.0).abs(), 0.0);
+        assert_eq!(Activation::HSig.eval(0.0), 0.5);
+        assert_eq!(Activation::ReLU.eval(-3.0), 0.0);
+        assert_eq!(Activation::SatLin.eval(0.25), 0.25);
+    }
+}

@@ -1,0 +1,563 @@
+//! ZAAL — the paper's native training algorithm (Sec. VI), reimplemented
+//! in rust: conventional and stochastic gradient descent with momentum and
+//! the Adam optimizer, Xavier/He/random initialization, several stopping
+//! criteria, and the activation set of the paper.
+//!
+//! Three trainer presets play the roles of the paper's weight sources
+//! (ZAAL / PyTorch / MATLAB toolbox — see DESIGN.md §Substitutions); they
+//! differ in initialization, loss, output activation and optimizer, and so
+//! produce genuinely different weight statistics for the downstream
+//! hardware flow. An alternative PJRT-backed trainer (gradients from the
+//! AOT-lowered JAX graph, Adam in rust) lives in `runtime::trainer`.
+
+use super::dataset::Dataset;
+use super::model::{softmax, Ann, Init};
+use super::structure::{Activation, AnnStructure};
+use crate::num::Rng;
+
+/// Loss functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loss {
+    /// mean squared error against the one-hot target (classic ZAAL setup)
+    Mse,
+    /// softmax cross-entropy on the output pre-activations (with the
+    /// out-of-band logit regularizer — see `LOGIT_REG`)
+    CrossEntropy,
+    /// per-class binary cross-entropy on sigmoid outputs — the loss the
+    /// paper's PyTorch setup implies (sigmoid output activation in
+    /// training), naturally calibrated for the hsig hardware activation
+    Bce,
+}
+
+/// Optimizers (paper Sec. VI: GD/SGD + Adam [36]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Optimizer {
+    Sgd { lr: f64 },
+    Momentum { lr: f64, beta: f64 },
+    Adam { lr: f64, beta1: f64, beta2: f64, eps: f64 },
+}
+
+/// Full training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub hidden_activation: Activation,
+    pub output_activation: Activation,
+    pub loss: Loss,
+    pub init: Init,
+    pub optimizer: Optimizer,
+    pub batch_size: usize,
+    pub max_epochs: usize,
+    /// stop when validation accuracy has not improved for this many epochs
+    pub patience: usize,
+    /// decoupled L2 weight decay (AdamW-style), applied in the update
+    /// step; keeps logits small enough for the 8-bit hardware range —
+    /// essential for the softmax-CE ("pytorch") variant whose logits are
+    /// otherwise unbounded and saturate the quantized activations
+    pub weight_decay: f64,
+    pub seed: u64,
+}
+
+/// The three weight sources of the paper's evaluation (Sec. VII).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Trainer {
+    /// ZAAL: htanh hidden / sigmoid output, MSE, Xavier, Adam
+    Zaal,
+    /// "PyTorch"-style: htanh hidden / sigmoid output trained with
+    /// per-class BCE, He init, Adam
+    Pytorch,
+    /// "MATLAB"-style: tanh hidden / satlin output, MSE, Xavier, momentum
+    Matlab,
+}
+
+impl Trainer {
+    pub fn name(self) -> &'static str {
+        match self {
+            Trainer::Zaal => "zaal",
+            Trainer::Pytorch => "pytorch",
+            Trainer::Matlab => "matlab",
+        }
+    }
+
+    pub fn all() -> [Trainer; 3] {
+        [Trainer::Zaal, Trainer::Pytorch, Trainer::Matlab]
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Trainer> {
+        Ok(match s {
+            "zaal" => Trainer::Zaal,
+            "pytorch" => Trainer::Pytorch,
+            "matlab" => Trainer::Matlab,
+            other => anyhow::bail!("unknown trainer {other:?}"),
+        })
+    }
+
+    /// The per-trainer configuration (paper Sec. VII: hidden/output
+    /// activations in training were htanh/sigmoid for ZAAL and PyTorch,
+    /// tanh/satlin for MATLAB).
+    pub fn config(self, seed: u64) -> TrainConfig {
+        match self {
+            Trainer::Zaal => TrainConfig {
+                hidden_activation: Activation::HTanh,
+                output_activation: Activation::Sigmoid,
+                loss: Loss::Mse,
+                init: Init::Xavier,
+                optimizer: Optimizer::Adam { lr: 1e-2, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+                batch_size: 32,
+                max_epochs: 60,
+                patience: 10,
+                weight_decay: 0.0,
+                seed,
+            },
+            Trainer::Pytorch => TrainConfig {
+                hidden_activation: Activation::HTanh,
+                output_activation: Activation::Sigmoid,
+                loss: Loss::Bce,
+                init: Init::He,
+                optimizer: Optimizer::Adam { lr: 3e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+                batch_size: 64,
+                max_epochs: 60,
+                patience: 10,
+                weight_decay: 1e-3,
+                seed: seed.wrapping_add(0x9e37),
+            },
+            Trainer::Matlab => TrainConfig {
+                hidden_activation: Activation::Tanh,
+                output_activation: Activation::SatLin,
+                loss: Loss::Mse,
+                init: Init::Xavier,
+                optimizer: Optimizer::Adam { lr: 5e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+                batch_size: 32,
+                max_epochs: 80,
+                patience: 10,
+                weight_decay: 0.0,
+                seed: seed.wrapping_add(0xc2b2),
+            },
+        }
+    }
+
+    /// Hardware activations SIMURG substitutes for this trainer's software
+    /// activations (paper Table I discussion).
+    pub fn hardware_activations(self, num_layers: usize) -> Vec<Activation> {
+        let hidden = match self {
+            Trainer::Matlab => Activation::HTanh, // tanh -> htanh
+            _ => Activation::HTanh,               // htanh -> htanh
+        };
+        let output = match self {
+            Trainer::Matlab => Activation::SatLin, // satlin -> satlin
+            _ => Activation::HSig,                 // sigmoid -> hsig
+        };
+        let mut acts = vec![hidden; num_layers];
+        acts[num_layers - 1] = output;
+        acts
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub ann: Ann,
+    /// best validation accuracy seen (early-stopping criterion)
+    pub validation_accuracy: f64,
+    /// loss per epoch (training set)
+    pub loss_curve: Vec<f64>,
+    pub epochs_run: usize,
+}
+
+/// Out-of-band logit regularization weight of the softmax-CE loss (keeps
+/// CE logits inside the hardware's representable [-1, 1] band without
+/// collapsing their resolution; shared constant with
+/// `python/compile/model.py`).
+pub const LOGIT_REG: f64 = 0.5;
+
+/// Adam/momentum state sized like the flat parameter vector.
+struct OptState {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+}
+
+/// Train `structure` on `data` with the given config. Deterministic in
+/// `cfg.seed`.
+pub fn train(structure: &AnnStructure, data: &Dataset, cfg: &TrainConfig) -> TrainResult {
+    let mut rng = Rng::new(cfg.seed);
+    let layers = structure.num_layers();
+    let mut acts = vec![cfg.hidden_activation; layers];
+    acts[layers - 1] = cfg.output_activation;
+    let mut ann = Ann::init(structure.clone(), acts, cfg.init, &mut rng);
+    if cfg.output_activation == Activation::SatLin {
+        // start satlin outputs inside their linear region; the zero
+        // gradient below 0 would otherwise permanently kill any
+        // true-class output initialized negative (MATLAB-variant fix)
+        for b in ann.biases[layers - 1].iter_mut() {
+            *b = 0.5;
+        }
+    }
+
+    let nparams = ann.flatten_params().len();
+    let mut state = OptState { m: vec![0.0; nparams], v: vec![0.0; nparams], t: 0 };
+
+    let mut order: Vec<usize> = (0..data.train.len()).collect();
+    let mut best = ann.clone();
+    let mut best_val = f64::MIN;
+    let mut stall = 0usize;
+    let mut loss_curve = Vec::new();
+    let mut epochs_run = 0;
+
+    for _epoch in 0..cfg.max_epochs {
+        epochs_run += 1;
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0;
+        for chunk in order.chunks(cfg.batch_size) {
+            let (grads, loss) = batch_gradients(&ann, data, chunk, cfg.loss);
+            epoch_loss += loss * chunk.len() as f64;
+            apply_update(&mut ann, &grads, &cfg.optimizer, cfg.weight_decay, &mut state);
+        }
+        loss_curve.push(epoch_loss / data.train.len() as f64);
+
+        let val_acc = ann.accuracy(
+            data.validation
+                .iter()
+                .map(|s| (s.features_f64().to_vec(), s.label as usize))
+                .collect::<Vec<_>>()
+                .iter()
+                .map(|(x, y)| (x.as_slice(), *y)),
+        );
+        if val_acc > best_val {
+            best_val = val_acc;
+            best = ann.clone();
+            stall = 0;
+        } else {
+            stall += 1;
+            if stall >= cfg.patience {
+                break;
+            }
+        }
+    }
+
+    TrainResult {
+        ann: best,
+        validation_accuracy: best_val,
+        loss_curve,
+        epochs_run,
+    }
+}
+
+/// Run `train` `runs` times with different seeds and keep the weights with
+/// the best validation accuracy (the paper runs each trainer 30 times and
+/// keeps the best — Sec. VII; we default to fewer runs, recorded in
+/// EXPERIMENTS.md).
+pub fn train_best_of(
+    structure: &AnnStructure,
+    data: &Dataset,
+    trainer: Trainer,
+    runs: usize,
+    base_seed: u64,
+) -> TrainResult {
+    let mut best: Option<TrainResult> = None;
+    for r in 0..runs {
+        let cfg = trainer.config(base_seed.wrapping_add(1000 * r as u64));
+        let res = train(structure, data, &cfg);
+        if best.as_ref().map_or(true, |b| res.validation_accuracy > b.validation_accuracy) {
+            best = Some(res);
+        }
+    }
+    best.unwrap()
+}
+
+/// Mean gradient over a minibatch; returns (flat gradients, mean loss).
+pub fn batch_gradients(
+    ann: &Ann,
+    data: &Dataset,
+    indices: &[usize],
+    loss: Loss,
+) -> (Vec<f64>, f64) {
+    let nparams = ann.flatten_params().len();
+    let mut grads = vec![0.0; nparams];
+    let mut total_loss = 0.0;
+    for &i in indices {
+        let s = &data.train[i];
+        let x = s.features_f64();
+        total_loss += accumulate_sample_gradient(ann, &x, s.label as usize, loss, &mut grads);
+    }
+    let scale = 1.0 / indices.len().max(1) as f64;
+    for g in grads.iter_mut() {
+        *g *= scale;
+    }
+    (grads, total_loss * scale)
+}
+
+/// Backprop for one sample; adds into `grads` (flat layout of
+/// `Ann::flatten_params`) and returns the sample loss.
+fn accumulate_sample_gradient(
+    ann: &Ann,
+    x: &[f64],
+    label: usize,
+    loss: Loss,
+    grads: &mut [f64],
+) -> f64 {
+    let layers = ann.structure.num_layers();
+    // forward, keeping pre-activations
+    let mut pres: Vec<Vec<f64>> = Vec::with_capacity(layers);
+    let mut posts: Vec<Vec<f64>> = Vec::with_capacity(layers);
+    let mut cur: Vec<f64> = x.to_vec();
+    for k in 0..layers {
+        let pre: Vec<f64> = ann.weights[k]
+            .iter()
+            .zip(&ann.biases[k])
+            .map(|(ws, b)| ws.iter().zip(&cur).map(|(w, v)| w * v).sum::<f64>() + b)
+            .collect();
+        let post: Vec<f64> = match (k == layers - 1, loss) {
+            (true, Loss::CrossEntropy) => softmax(&pre),
+            _ => pre.iter().map(|&y| ann.activations[k].eval(y)).collect(),
+        };
+        pres.push(pre);
+        posts.push(post.clone());
+        cur = post;
+    }
+
+    let out = &posts[layers - 1];
+    let mut onehot = vec![0.0; out.len()];
+    if label < onehot.len() {
+        onehot[label] = 1.0;
+    }
+    // dL/d(pre) of the output layer + the sample loss value
+    let (mut delta, loss_val): (Vec<f64>, f64) = match loss {
+        Loss::CrossEntropy => {
+            // Softmax CE is shift-invariant, so raw logits are not
+            // calibrated to the hardware's saturating 8-bit range. The
+            // hinge regularizer penalizes only the part of each logit
+            // outside the representable [-1, 1] band, pulling the logit
+            // cloud into range without collapsing its resolution
+            // (mirrored in python/compile/model.py) — see DESIGN.md.
+            let z = &pres[layers - 1];
+            let n = z.len() as f64;
+            let excess = |v: f64| (v.abs() - 1.0).max(0.0);
+            let l = -out[label].max(1e-12).ln()
+                + LOGIT_REG * z.iter().map(|&v| excess(v) * excess(v)).sum::<f64>() / n;
+            (
+                out.iter()
+                    .zip(&onehot)
+                    .zip(z)
+                    .map(|((p, t), &zv)| {
+                        p - t + LOGIT_REG * 2.0 * excess(zv) * zv.signum() / n
+                    })
+                    .collect(),
+                l,
+            )
+        }
+        Loss::Bce => {
+            // out = sigmoid(pre); dL/dpre = (p - t)/n for BCE + sigmoid
+            let n = out.len() as f64;
+            let l = -out
+                .iter()
+                .zip(&onehot)
+                .map(|(p, t)| {
+                    t * p.max(1e-12).ln() + (1.0 - t) * (1.0 - p).max(1e-12).ln()
+                })
+                .sum::<f64>()
+                / n;
+            (
+                out.iter().zip(&onehot).map(|(p, t)| (p - t) / n).collect(),
+                l,
+            )
+        }
+        Loss::Mse => {
+            let l = out
+                .iter()
+                .zip(&onehot)
+                .map(|(p, t)| (p - t) * (p - t))
+                .sum::<f64>()
+                / out.len() as f64;
+            (
+                out.iter()
+                    .zip(&onehot)
+                    .zip(&pres[layers - 1])
+                    .map(|((p, t), &pre)| {
+                        2.0 * (p - t) / out.len() as f64
+                            * ann.activations[layers - 1].grad(pre)
+                    })
+                    .collect(),
+                l,
+            )
+        }
+    };
+
+    // backward through layers, writing into the flat layout
+    let mut offsets = Vec::with_capacity(layers);
+    let mut off = 0usize;
+    for k in 0..layers {
+        offsets.push(off);
+        off += ann.structure.layer_inputs(k) * ann.structure.layer_outputs(k)
+            + ann.structure.layer_outputs(k);
+    }
+
+    for k in (0..layers).rev() {
+        let inputs: &[f64] = if k == 0 { x } else { &posts[k - 1] };
+        let n_in = ann.structure.layer_inputs(k);
+        let base = offsets[k];
+        for (m, &d) in delta.iter().enumerate() {
+            for (n, &v) in inputs.iter().enumerate() {
+                grads[base + m * n_in + n] += d * v;
+            }
+            grads[base + ann.structure.layer_outputs(k) * n_in + m] += d;
+        }
+        if k > 0 {
+            let mut prev = vec![0.0; n_in];
+            for (m, &d) in delta.iter().enumerate() {
+                for (n, p) in prev.iter_mut().enumerate() {
+                    *p += d * ann.weights[k][m][n];
+                }
+            }
+            for (n, p) in prev.iter_mut().enumerate() {
+                *p *= ann.activations[k - 1].grad(pres[k - 1][n]);
+            }
+            delta = prev;
+        }
+    }
+    loss_val
+}
+
+fn apply_update(
+    ann: &mut Ann,
+    grads: &[f64],
+    opt: &Optimizer,
+    weight_decay: f64,
+    state: &mut OptState,
+) {
+    let mut params = ann.flatten_params();
+    if weight_decay > 0.0 {
+        let lr = match *opt {
+            Optimizer::Sgd { lr } | Optimizer::Momentum { lr, .. } | Optimizer::Adam { lr, .. } => lr,
+        };
+        for p in params.iter_mut() {
+            *p *= 1.0 - lr * weight_decay;
+        }
+    }
+    match *opt {
+        Optimizer::Sgd { lr } => {
+            for (p, g) in params.iter_mut().zip(grads) {
+                *p -= lr * g;
+            }
+        }
+        Optimizer::Momentum { lr, beta } => {
+            for ((p, g), m) in params.iter_mut().zip(grads).zip(state.m.iter_mut()) {
+                *m = beta * *m + *g;
+                *p -= lr * *m;
+            }
+        }
+        Optimizer::Adam { lr, beta1, beta2, eps } => {
+            state.t += 1;
+            let t = state.t as f64;
+            let bc1 = 1.0 - beta1.powf(t);
+            let bc2 = 1.0 - beta2.powf(t);
+            for (((p, g), m), v) in params
+                .iter_mut()
+                .zip(grads)
+                .zip(state.m.iter_mut())
+                .zip(state.v.iter_mut())
+            {
+                *m = beta1 * *m + (1.0 - beta1) * g;
+                *v = beta2 * *v + (1.0 - beta2) * g * g;
+                *p -= lr * (*m / bc1) / ((*v / bc2).sqrt() + eps);
+            }
+        }
+    }
+    ann.unflatten_params(&params).expect("param size mismatch");
+}
+
+/// Software test accuracy (the paper's `sta`, in percent).
+pub fn software_test_accuracy(ann: &Ann, data: &Dataset) -> f64 {
+    let mut correct = 0usize;
+    for s in &data.test {
+        if ann.predict(&s.features_f64()) == s.label as usize {
+            correct += 1;
+        }
+    }
+    100.0 * correct as f64 / data.test.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let data = Dataset::synthetic_with_sizes(7, 40, 10);
+        let structure = AnnStructure::parse("16-5-10").unwrap();
+        for loss in [Loss::Mse, Loss::CrossEntropy] {
+            let cfg = Trainer::Zaal.config(3);
+            let mut acts = vec![cfg.hidden_activation; 2];
+            acts[1] = cfg.output_activation;
+            // use smooth activations so finite differences are valid
+            let mut rng = Rng::new(5);
+            let ann = Ann::init(
+                structure.clone(),
+                vec![Activation::Tanh, Activation::Sigmoid],
+                Init::Xavier,
+                &mut rng,
+            );
+            let idx: Vec<usize> = (0..8).collect();
+            let (grads, _) = batch_gradients(&ann, &data, &idx, loss);
+            let params = ann.flatten_params();
+            let eps = 1e-6;
+            for &pi in &[0usize, 7, params.len() / 2, params.len() - 1] {
+                let mut plus = ann.clone();
+                let mut pp = params.clone();
+                pp[pi] += eps;
+                plus.unflatten_params(&pp).unwrap();
+                let mut minus = ann.clone();
+                let mut pm = params.clone();
+                pm[pi] -= eps;
+                minus.unflatten_params(&pm).unwrap();
+                let (_, lp) = batch_gradients(&plus, &data, &idx, loss);
+                let (_, lm) = batch_gradients(&minus, &data, &idx, loss);
+                let fd = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (fd - grads[pi]).abs() < 1e-4 * (1.0 + fd.abs()),
+                    "loss {loss:?} param {pi}: fd {fd} vs analytic {}",
+                    grads[pi]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_learns() {
+        let data = Dataset::synthetic_with_sizes(11, 1500, 300);
+        let structure = AnnStructure::parse("16-10").unwrap();
+        let mut cfg = Trainer::Zaal.config(1);
+        cfg.max_epochs = 25;
+        let res = train(&structure, &data, &cfg);
+        assert!(res.loss_curve.first().unwrap() > res.loss_curve.last().unwrap());
+        assert!(
+            res.validation_accuracy > 0.7,
+            "validation accuracy {}",
+            res.validation_accuracy
+        );
+    }
+
+    #[test]
+    fn trainers_produce_different_weights() {
+        let data = Dataset::synthetic_with_sizes(13, 300, 100);
+        let structure = AnnStructure::parse("16-10").unwrap();
+        let mut w = Vec::new();
+        for t in Trainer::all() {
+            let mut cfg = t.config(1);
+            cfg.max_epochs = 3;
+            w.push(train(&structure, &data, &cfg).ann.flatten_params());
+        }
+        assert_ne!(w[0], w[1]);
+        assert_ne!(w[1], w[2]);
+    }
+
+    #[test]
+    fn early_stopping_respects_patience() {
+        let data = Dataset::synthetic_with_sizes(17, 100, 30);
+        let structure = AnnStructure::parse("16-10").unwrap();
+        let mut cfg = Trainer::Zaal.config(1);
+        cfg.max_epochs = 500;
+        cfg.patience = 2;
+        let res = train(&structure, &data, &cfg);
+        assert!(res.epochs_run < 500);
+    }
+}

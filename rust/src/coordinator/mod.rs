@@ -1,0 +1,11 @@
+//! SIMURG flow coordination (paper Sec. VI): train (or load cached
+//! weights) → find the minimum quantization → post-train per architecture
+//! → price every design point → emit the paper's tables and figures →
+//! generate Verilog.
+
+pub mod flow;
+pub mod report;
+pub mod sweep;
+
+pub use flow::{run_flow, FlowConfig, FlowOutcome};
+pub use sweep::{sweep_all, SweepConfig};

@@ -1,0 +1,311 @@
+//! Table and figure emitters: regenerate every evaluation artifact of the
+//! paper (Table I–IV, Figs. 10–18) from a set of [`FlowOutcome`]s, as
+//! aligned text plus CSV for plotting.
+
+use super::flow::FlowOutcome;
+use crate::ann::structure::AnnStructure;
+use crate::ann::train::Trainer;
+use crate::hw::parallel::MultStyle;
+use crate::hw::smac_neuron::SmacStyle;
+use crate::hw::{parallel, smac_ann, smac_neuron, HwReport, TechLib};
+use crate::posttrain::TuneResult;
+use std::fmt::Write as _;
+
+/// Which post-training result (if any) a figure prices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tuning {
+    None,
+    Parallel,
+    SmacNeuron,
+    SmacAnn,
+}
+
+/// Architecture + style + tuning of one figure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FigureSpec {
+    pub fig: u32,
+    pub arch: &'static str,
+    pub style: &'static str,
+    pub tuning: Tuning,
+}
+
+impl FigureSpec {
+    /// The paper's Figs. 10–18 (Sec. VII).
+    pub fn for_fig(fig: u32) -> Option<FigureSpec> {
+        let (arch, style, tuning) = match fig {
+            10 => ("parallel", "behavioral", Tuning::None),
+            11 => ("smac_neuron", "behavioral", Tuning::None),
+            12 => ("smac_ann", "behavioral", Tuning::None),
+            13 => ("parallel", "behavioral", Tuning::Parallel),
+            14 => ("smac_neuron", "behavioral", Tuning::SmacNeuron),
+            15 => ("smac_ann", "behavioral", Tuning::SmacAnn),
+            16 => ("parallel", "cavm", Tuning::Parallel),
+            17 => ("parallel", "cmvm", Tuning::Parallel),
+            18 => ("smac_neuron", "mcm", Tuning::SmacNeuron),
+            _ => return None,
+        };
+        Some(FigureSpec { fig, arch, style, tuning })
+    }
+
+    pub fn description(&self) -> String {
+        format!(
+            "Fig. {}: {} / {} constant mults{}",
+            self.fig,
+            self.arch,
+            self.style,
+            match self.tuning {
+                Tuning::None => ", no post-training",
+                _ => ", after post-training",
+            }
+        )
+    }
+}
+
+/// Price one outcome under a figure's design point.
+pub fn hw_report_for(outcome: &FlowOutcome, spec: &FigureSpec, lib: &TechLib) -> HwReport {
+    let qann = match spec.tuning {
+        Tuning::None => &outcome.quant.qann,
+        Tuning::Parallel => &outcome.tuned_parallel.qann,
+        Tuning::SmacNeuron => &outcome.tuned_smac_neuron.qann,
+        Tuning::SmacAnn => &outcome.tuned_smac_ann.qann,
+    };
+    match (spec.arch, spec.style) {
+        ("parallel", "behavioral") => parallel::build(lib, qann, MultStyle::Behavioral),
+        ("parallel", "cavm") => parallel::build(lib, qann, MultStyle::Cavm),
+        ("parallel", "cmvm") => parallel::build(lib, qann, MultStyle::Cmvm),
+        ("smac_neuron", "behavioral") => smac_neuron::build(lib, qann, SmacStyle::Behavioral),
+        ("smac_neuron", "mcm") => smac_neuron::build(lib, qann, SmacStyle::Mcm),
+        ("smac_ann", "behavioral") => smac_ann::build(lib, qann, SmacStyle::Behavioral),
+        ("smac_ann", "mcm") => smac_ann::build(lib, qann, SmacStyle::Mcm),
+        other => panic!("unknown design point {other:?}"),
+    }
+}
+
+fn find<'a>(
+    outcomes: &'a [FlowOutcome],
+    structure: &AnnStructure,
+    trainer: Trainer,
+) -> Option<&'a FlowOutcome> {
+    outcomes
+        .iter()
+        .find(|o| &o.config.structure == structure && o.config.trainer == trainer)
+}
+
+fn structures(outcomes: &[FlowOutcome]) -> Vec<AnnStructure> {
+    let mut seen = Vec::new();
+    for o in outcomes {
+        if !seen.contains(&o.config.structure) {
+            seen.push(o.config.structure.clone());
+        }
+    }
+    seen
+}
+
+/// Table I: software test accuracy, hardware test accuracy and tnzd per
+/// structure × trainer, with the column averages of the paper.
+pub fn table1(outcomes: &[FlowOutcome]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "TABLE I — details of ANNs on training and hardware design");
+    let _ = writeln!(
+        s,
+        "{:<14}|{:^23}|{:^23}|{:^23}",
+        "", "ZAAL", "PYTORCH", "MATLAB"
+    );
+    let _ = writeln!(
+        s,
+        "{:<14}|{:>7}{:>7}{:>8} |{:>7}{:>7}{:>8} |{:>7}{:>7}{:>8}",
+        "Structure", "sta", "hta", "tnzd", "sta", "hta", "tnzd", "sta", "hta", "tnzd"
+    );
+    let mut sums = [[0.0f64; 3]; 3];
+    let mut counts = 0usize;
+    for st in structures(outcomes) {
+        let _ = write!(s, "{:<14}", st.to_string());
+        for (ti, t) in Trainer::all().iter().enumerate() {
+            if let Some(o) = find(outcomes, &st, *t) {
+                let tnzd = o.quant.qann.tnzd();
+                let _ = write!(s, "|{:>7.1}{:>7.1}{:>8} ", o.sta, o.hta, tnzd);
+                sums[ti][0] += o.sta;
+                sums[ti][1] += o.hta;
+                sums[ti][2] += tnzd as f64;
+            } else {
+                let _ = write!(s, "|{:>23}", "-");
+            }
+        }
+        counts += 1;
+        s.push('\n');
+    }
+    let _ = write!(s, "{:<14}", "Average");
+    for t in sums.iter() {
+        let n = counts.max(1) as f64;
+        let _ = write!(s, "|{:>7.1}{:>7.1}{:>8.0} ", t[0] / n, t[1] / n, t[2] / n);
+    }
+    s.push('\n');
+    s
+}
+
+/// Tables II–IV: post-training details per architecture (hta / tnzd / CPU
+/// seconds).
+pub fn table_posttrain(outcomes: &[FlowOutcome], table: u32) -> String {
+    let (title, pick): (&str, fn(&FlowOutcome) -> (&TuneResult, f64)) = match table {
+        2 => ("TABLE II — post-training, parallel architecture", |o| {
+            (&o.tuned_parallel, o.hta_parallel)
+        }),
+        3 => ("TABLE III — post-training, SMAC_NEURON architecture", |o| {
+            (&o.tuned_smac_neuron, o.hta_smac_neuron)
+        }),
+        4 => ("TABLE IV — post-training, SMAC_ANN architecture", |o| {
+            (&o.tuned_smac_ann, o.hta_smac_ann)
+        }),
+        _ => panic!("post-training tables are 2..=4"),
+    };
+    let mut s = String::new();
+    let _ = writeln!(s, "{title}");
+    let _ = writeln!(s, "{:<14}|{:^24}|{:^24}|{:^24}", "", "ZAAL", "PYTORCH", "MATLAB");
+    let _ = writeln!(
+        s,
+        "{:<14}|{:>7}{:>8}{:>8} |{:>7}{:>8}{:>8} |{:>7}{:>8}{:>8}",
+        "Structure", "hta", "tnzd", "CPU", "hta", "tnzd", "CPU", "hta", "tnzd", "CPU"
+    );
+    let mut sums = [[0.0f64; 3]; 3];
+    let mut counts = 0usize;
+    for st in structures(outcomes) {
+        let _ = write!(s, "{:<14}", st.to_string());
+        for (ti, t) in Trainer::all().iter().enumerate() {
+            if let Some(o) = find(outcomes, &st, *t) {
+                let (tr, hta) = pick(o);
+                let tnzd = tr.qann.tnzd();
+                let _ = write!(s, "|{:>7.1}{:>8}{:>8.1} ", hta, tnzd, tr.cpu_seconds);
+                sums[ti][0] += hta;
+                sums[ti][1] += tnzd as f64;
+                sums[ti][2] += tr.cpu_seconds;
+            } else {
+                let _ = write!(s, "|{:>24}", "-");
+            }
+        }
+        counts += 1;
+        s.push('\n');
+    }
+    let _ = write!(s, "{:<14}", "Average");
+    for t in sums.iter() {
+        let n = counts.max(1) as f64;
+        let _ = write!(s, "|{:>7.1}{:>8.0}{:>8.1} ", t[0] / n, t[1] / n, t[2] / n);
+    }
+    s.push('\n');
+    s
+}
+
+/// A figure: area (µm²), latency (ns) and energy (pJ) per structure ×
+/// trainer for one design point.
+pub fn figure(outcomes: &[FlowOutcome], fig: u32, lib: &TechLib) -> String {
+    let spec = FigureSpec::for_fig(fig).expect("figures are 10..=18");
+    let mut s = String::new();
+    let _ = writeln!(s, "{}", spec.description());
+    for (metric, unit) in [("area", "um^2"), ("latency", "ns"), ("energy", "pJ")] {
+        let _ = writeln!(s, "  {metric} ({unit}):");
+        let _ = writeln!(
+            s,
+            "  {:<14}{:>12}{:>12}{:>12}",
+            "Structure", "ZAAL", "PYTORCH", "MATLAB"
+        );
+        for st in structures(outcomes) {
+            let _ = write!(s, "  {:<14}", st.to_string());
+            for t in Trainer::all() {
+                if let Some(o) = find(outcomes, &st, t) {
+                    let r = hw_report_for(o, &spec, lib);
+                    let v = match metric {
+                        "area" => r.area_um2,
+                        "latency" => r.latency_ns,
+                        _ => r.energy_pj,
+                    };
+                    let _ = write!(s, "{v:>12.1}");
+                } else {
+                    let _ = write!(s, "{:>12}", "-");
+                }
+            }
+            s.push('\n');
+        }
+    }
+    s
+}
+
+/// CSV row dump of every design point of a figure (for external plotting).
+pub fn figure_csv(outcomes: &[FlowOutcome], fig: u32, lib: &TechLib) -> String {
+    let spec = FigureSpec::for_fig(fig).expect("figures are 10..=18");
+    let mut s = String::from(
+        "fig,arch,style,structure,trainer,area_um2,clock_ns,cycles,latency_ns,energy_pj,power_mw,adders\n",
+    );
+    for st in structures(outcomes) {
+        for t in Trainer::all() {
+            if let Some(o) = find(outcomes, &st, t) {
+                let r = hw_report_for(o, &spec, lib);
+                let _ = writeln!(
+                    s,
+                    "{},{},{},{},{},{:.2},{:.4},{},{:.4},{:.3},{:.4},{}",
+                    fig, r.arch, r.style, st, t.name(), r.area_um2, r.clock_ns, r.cycles,
+                    r.latency_ns, r.energy_pj, r.power_mw, r.adders
+                );
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::dataset::Dataset;
+    use crate::coordinator::flow::{run_flow, FlowConfig};
+
+    fn tiny_outcomes() -> Vec<FlowOutcome> {
+        let data = Dataset::synthetic_with_sizes(51, 800, 150);
+        Trainer::all()
+            .iter()
+            .map(|&t| {
+                let mut cfg = FlowConfig::new(AnnStructure::parse("16-10").unwrap(), t);
+                cfg.runs = 1;
+                cfg.weights_dir = None;
+                run_flow(&data, &cfg, None).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn figure_specs_cover_10_to_18() {
+        for f in 10..=18 {
+            let spec = FigureSpec::for_fig(f).unwrap();
+            assert_eq!(spec.fig, f);
+        }
+        assert!(FigureSpec::for_fig(9).is_none());
+        assert!(FigureSpec::for_fig(19).is_none());
+        assert_eq!(FigureSpec::for_fig(17).unwrap().style, "cmvm");
+        assert_eq!(FigureSpec::for_fig(18).unwrap().arch, "smac_neuron");
+    }
+
+    #[test]
+    fn tables_and_figures_render() {
+        let outcomes = tiny_outcomes();
+        let lib = TechLib::tsmc40();
+        let t1 = table1(&outcomes);
+        assert!(t1.contains("TABLE I"));
+        assert!(t1.contains("16-10"));
+        assert!(t1.contains("Average"));
+        for t in 2..=4 {
+            let tt = table_posttrain(&outcomes, t);
+            assert!(tt.contains("CPU"));
+        }
+        for f in [10, 13, 16, 17, 18] {
+            let fg = figure(&outcomes, f, &lib);
+            assert!(fg.contains("area"), "fig {f}: {fg}");
+            let csv = figure_csv(&outcomes, f, &lib);
+            assert_eq!(csv.lines().count(), 1 + 3, "one row per trainer");
+        }
+    }
+
+    #[test]
+    fn post_training_reduces_tnzd_in_tables() {
+        let outcomes = tiny_outcomes();
+        for o in &outcomes {
+            assert!(o.tuned_parallel.qann.tnzd() <= o.quant.qann.tnzd());
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Threaded experiment sweep: all (structure × trainer) flow runs of the
+//! paper's evaluation, fanned out over worker threads with the native
+//! accuracy backend (PJRT handles are thread-local; the CLI's
+//! `--eval pjrt` path runs experiments sequentially instead).
+
+use super::flow::{run_flow, FlowConfig, FlowOutcome};
+use crate::ann::dataset::Dataset;
+use crate::ann::structure::AnnStructure;
+use crate::ann::train::Trainer;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub structures: Vec<AnnStructure>,
+    pub trainers: Vec<Trainer>,
+    pub runs: usize,
+    pub seed: u64,
+    pub threads: usize,
+    pub weights_dir: Option<PathBuf>,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            structures: AnnStructure::paper_benchmarks(),
+            trainers: Trainer::all().to_vec(),
+            runs: 3,
+            seed: 1,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            weights_dir: Some(super::flow::default_weights_dir()),
+        }
+    }
+}
+
+/// Run every experiment of the sweep; results come back ordered by
+/// (structure, trainer) regardless of scheduling.
+pub fn sweep_all(data: &Dataset, cfg: &SweepConfig) -> Result<Vec<FlowOutcome>> {
+    let jobs: Vec<FlowConfig> = cfg
+        .structures
+        .iter()
+        .flat_map(|st| {
+            cfg.trainers.iter().map(move |&t| {
+                let mut f = FlowConfig::new(st.clone(), t);
+                f.runs = cfg.runs;
+                f.seed = cfg.seed;
+                f.weights_dir = cfg.weights_dir.clone();
+                f
+            })
+        })
+        .collect();
+
+    let next = Mutex::new(0usize);
+    let results: Mutex<Vec<Option<FlowOutcome>>> = Mutex::new(vec![None; jobs.len()]);
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for _ in 0..cfg.threads.max(1).min(jobs.len().max(1)) {
+            scope.spawn(|| loop {
+                let idx = {
+                    let mut n = next.lock().unwrap();
+                    if *n >= jobs.len() {
+                        break;
+                    }
+                    let i = *n;
+                    *n += 1;
+                    i
+                };
+                match run_flow(data, &jobs[idx], None) {
+                    Ok(outcome) => results.lock().unwrap()[idx] = Some(outcome),
+                    Err(e) => errors.lock().unwrap().push(format!("{}: {e}", jobs[idx].structure)),
+                }
+            });
+        }
+    });
+
+    let errors = errors.into_inner().unwrap();
+    anyhow::ensure!(errors.is_empty(), "sweep failures: {errors:?}");
+    Ok(results.into_inner().unwrap().into_iter().map(Option::unwrap).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_all_jobs_in_order() {
+        let data = Dataset::synthetic_with_sizes(61, 700, 100);
+        let cfg = SweepConfig {
+            structures: vec![
+                AnnStructure::parse("16-10").unwrap(),
+                AnnStructure::parse("16-10-10").unwrap(),
+            ],
+            trainers: vec![Trainer::Zaal, Trainer::Matlab],
+            runs: 1,
+            seed: 3,
+            threads: 4,
+            weights_dir: None,
+        };
+        let outcomes = sweep_all(&data, &cfg).unwrap();
+        assert_eq!(outcomes.len(), 4);
+        // deterministic ordering: structure-major, trainer-minor
+        assert_eq!(outcomes[0].config.structure.to_string(), "16-10");
+        assert_eq!(outcomes[0].config.trainer, Trainer::Zaal);
+        assert_eq!(outcomes[1].config.trainer, Trainer::Matlab);
+        assert_eq!(outcomes[2].config.structure.to_string(), "16-10-10");
+    }
+}

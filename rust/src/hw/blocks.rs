@@ -1,0 +1,214 @@
+//! Gate-level cost builders for the datapath blocks every architecture is
+//! assembled from: adders, constant and generic multipliers, mux trees,
+//! registers, counters and the hard activation units.
+//!
+//! Each builder returns a [`BlockCost`] (area, worst-case delay, per-
+//! activation energy). Delay models assume the synthesis tool implements
+//! carry-lookahead-class adders (log depth), which is what retiming-driven
+//! synthesis produces (paper Sec. VII: "the clock period was reduced using
+//! the retiming technique iteratively").
+
+use super::gates::TechLib;
+
+/// Cost of one hardware block.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BlockCost {
+    /// area in µm²
+    pub area: f64,
+    /// worst-case propagation delay in ns
+    pub delay: f64,
+    /// dynamic energy per activation in fJ
+    pub energy: f64,
+}
+
+impl BlockCost {
+    pub const ZERO: BlockCost = BlockCost { area: 0.0, delay: 0.0, energy: 0.0 };
+
+    /// Series composition: delays add, area/energy add.
+    pub fn then(self, next: BlockCost) -> BlockCost {
+        BlockCost {
+            area: self.area + next.area,
+            delay: self.delay + next.delay,
+            energy: self.energy + next.energy,
+        }
+    }
+
+    /// Parallel composition: worst delay, area/energy add.
+    pub fn beside(self, other: BlockCost) -> BlockCost {
+        BlockCost {
+            area: self.area + other.area,
+            delay: self.delay.max(other.delay),
+            energy: self.energy + other.energy,
+        }
+    }
+
+    /// Sum areas/energies of `n` copies, keeping one copy's delay.
+    pub fn times(self, n: usize) -> BlockCost {
+        BlockCost {
+            area: self.area * n as f64,
+            delay: self.delay,
+            energy: self.energy * n as f64,
+        }
+    }
+}
+
+fn log2_ceil(n: usize) -> u32 {
+    (usize::BITS - n.saturating_sub(1).leading_zeros()).max(1)
+}
+
+/// Carry-lookahead-class adder/subtractor of width `bits`.
+pub fn adder(lib: &TechLib, bits: u32) -> BlockCost {
+    let bits = bits.max(1) as f64;
+    BlockCost {
+        // CLA overhead over ripple: ~1.3x FA area
+        area: 1.3 * bits * lib.fa.area,
+        // log-depth carry network
+        delay: lib.fa.delay * (2.0 + (bits).log2().max(0.0)),
+        energy: lib.activity * 1.3 * bits * lib.fa.energy,
+    }
+}
+
+/// Generic two's-complement array multiplier, `w_bits` × `x_bits`.
+pub fn multiplier(lib: &TechLib, w_bits: u32, x_bits: u32) -> BlockCost {
+    let (w, x) = (w_bits.max(1) as f64, x_bits.max(1) as f64);
+    BlockCost {
+        // signed (Baugh-Wooley-class) partial-product array with Wallace
+        // reduction: FA + AND per cell plus ~30% sign/reduction overhead
+        area: 1.3 * w * x * (lib.fa.area + 0.5 * lib.nand2.area),
+        // tree reduction + final CPA
+        delay: lib.fa.delay * (2.0 + 1.5 * x.log2().max(1.0)) + adder(lib, (w + x) as u32).delay,
+        energy: 1.3 * lib.activity * w * x * (lib.fa.energy + 0.5 * lib.nand2.energy),
+    }
+}
+
+/// `n`-to-1 multiplexer of `bits`-wide words.
+pub fn mux(lib: &TechLib, n: usize, bits: u32) -> BlockCost {
+    if n <= 1 {
+        return BlockCost::ZERO;
+    }
+    let levels = log2_ceil(n) as f64;
+    BlockCost {
+        area: (n - 1) as f64 * bits as f64 * lib.mux2.area,
+        delay: levels * lib.mux2.delay,
+        energy: lib.activity * (n - 1) as f64 * bits as f64 * lib.mux2.energy,
+    }
+}
+
+/// `bits`-wide register.
+pub fn register(lib: &TechLib, bits: u32) -> BlockCost {
+    BlockCost {
+        area: bits as f64 * lib.dff.area,
+        delay: lib.dff.delay,
+        // registers toggle every cycle regardless of data activity
+        energy: 0.5 * bits as f64 * lib.dff.energy,
+    }
+}
+
+/// Modulo-`n` counter (the control blocks of the MAC architectures).
+pub fn counter(lib: &TechLib, n: usize) -> BlockCost {
+    if n <= 1 {
+        return BlockCost::ZERO;
+    }
+    let bits = log2_ceil(n);
+    register(lib, bits).beside(adder(lib, bits)).beside(BlockCost {
+        // comparator for the wrap
+        area: bits as f64 * lib.xor2.area,
+        delay: lib.xor2.delay * 2.0,
+        energy: lib.activity * bits as f64 * lib.xor2.energy,
+    })
+}
+
+/// Constant-coefficient ROM realized as a mux of hardwired values: the
+/// weight/bias storage of the time-multiplexed architectures. Hardwired
+/// zero/one bits cost nothing; model half the mux fabric of a generic mux.
+pub fn constant_mux(lib: &TechLib, n: usize, bits: u32) -> BlockCost {
+    let m = mux(lib, n, bits);
+    BlockCost {
+        area: 0.5 * m.area,
+        delay: m.delay,
+        energy: 0.5 * m.energy,
+    }
+}
+
+/// Hard activation unit (htanh / hsig / relu / satlin / lin on a
+/// `bits`-wide accumulator): two comparisons against saturation bounds +
+/// a 3:1 mux on the 8-bit output; the shift is wiring.
+pub fn activation_unit(lib: &TechLib, acc_bits: u32) -> BlockCost {
+    let cmp = BlockCost {
+        area: acc_bits as f64 * lib.xor2.area * 0.75,
+        delay: lib.xor2.delay * (2.0 + (acc_bits as f64).log2() * 0.5),
+        energy: lib.activity * acc_bits as f64 * lib.xor2.energy * 0.75,
+    };
+    cmp.times(2).beside(mux(lib, 3, 8))
+}
+
+/// Fixed-shift add/sub node of a shift-adds network (the only paid
+/// element of a multiplierless block): an adder of the node's result
+/// width; the shifts are wires.
+pub fn shift_add_node(lib: &TechLib, result_bits: u32) -> BlockCost {
+    adder(lib, result_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lib() -> TechLib {
+        TechLib::tsmc40()
+    }
+
+    #[test]
+    fn adder_scales_with_width() {
+        let a8 = adder(&lib(), 8);
+        let a16 = adder(&lib(), 16);
+        assert!(a16.area > a8.area * 1.9);
+        assert!(a16.delay > a8.delay);
+        assert!(a16.delay < a8.delay * 2.0, "CLA delay must be sub-linear");
+    }
+
+    #[test]
+    fn multiplier_dwarfs_adder() {
+        let m = multiplier(&lib(), 8, 8);
+        let a = adder(&lib(), 16);
+        assert!(m.area > 3.0 * a.area);
+        assert!(m.delay > a.delay);
+    }
+
+    #[test]
+    fn mux_edge_cases() {
+        assert_eq!(mux(&lib(), 1, 8), BlockCost::ZERO);
+        assert_eq!(mux(&lib(), 0, 8), BlockCost::ZERO);
+        let m2 = mux(&lib(), 2, 8);
+        let m16 = mux(&lib(), 16, 8);
+        assert!(m16.area > m2.area * 10.0);
+        assert!(m16.delay > m2.delay);
+    }
+
+    #[test]
+    fn constant_mux_cheaper_than_generic() {
+        let c = constant_mux(&lib(), 10, 8);
+        let g = mux(&lib(), 10, 8);
+        assert!(c.area < g.area);
+    }
+
+    #[test]
+    fn composition_laws() {
+        let a = adder(&lib(), 8);
+        let r = register(&lib(), 8);
+        let s = a.then(r);
+        assert!((s.area - (a.area + r.area)).abs() < 1e-9);
+        assert!((s.delay - (a.delay + r.delay)).abs() < 1e-12);
+        let p = a.beside(r);
+        assert!((p.delay - a.delay.max(r.delay)).abs() < 1e-12);
+        let t = a.times(3);
+        assert!((t.area - 3.0 * a.area).abs() < 1e-9);
+        assert!((t.delay - a.delay).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counter_is_small() {
+        let c = counter(&lib(), 17);
+        assert!(c.area < adder(&lib(), 16).area + register(&lib(), 16).area);
+        assert_eq!(counter(&lib(), 1), BlockCost::ZERO);
+    }
+}

@@ -1,0 +1,82 @@
+//! Technology library — analytic stand-in for the paper's Cadence RTL
+//! Compiler + TSMC 40nm flow (see DESIGN.md §Substitutions).
+//!
+//! Unit cells carry area (µm²), delay (ns) and switching energy (fJ per
+//! activation). Absolute values are calibrated to public TSMC 40nm-class
+//! figures (NAND2 ≈ 0.71 µm², FO4 ≈ 20 ps, ~1 fJ/gate/toggle); what the
+//! reproduction relies on is that *relative* costs (multiplier vs adder
+//! vs mux vs register) match a real standard-cell flow, so the paper's
+//! architecture orderings and reduction percentages carry over.
+
+/// One unit cell.
+#[derive(Debug, Clone, Copy)]
+pub struct Cell {
+    /// area in µm²
+    pub area: f64,
+    /// propagation delay in ns
+    pub delay: f64,
+    /// dynamic energy per switching event in fJ
+    pub energy: f64,
+}
+
+/// The technology library used by all block cost builders.
+#[derive(Debug, Clone)]
+pub struct TechLib {
+    pub name: &'static str,
+    /// 2-input NAND (1 gate equivalent)
+    pub nand2: Cell,
+    pub inv: Cell,
+    pub xor2: Cell,
+    /// full adder cell
+    pub fa: Cell,
+    /// half adder cell
+    pub ha: Cell,
+    /// 2:1 mux
+    pub mux2: Cell,
+    /// D flip-flop (area includes clock pin loading)
+    pub dff: Cell,
+    /// average switching-activity factor used for energy estimates
+    pub activity: f64,
+    /// clock-tree + margin multiplier applied to the raw critical path
+    pub clock_margin: f64,
+}
+
+impl TechLib {
+    /// TSMC 40nm-class library (the paper's target node).
+    pub fn tsmc40() -> TechLib {
+        TechLib {
+            name: "tsmc40-class",
+            nand2: Cell { area: 0.71, delay: 0.020, energy: 1.0 },
+            inv: Cell { area: 0.42, delay: 0.012, energy: 0.6 },
+            xor2: Cell { area: 1.41, delay: 0.032, energy: 1.8 },
+            fa: Cell { area: 4.23, delay: 0.045, energy: 4.5 },
+            ha: Cell { area: 2.12, delay: 0.030, energy: 2.4 },
+            mux2: Cell { area: 0.88, delay: 0.025, energy: 0.9 },
+            dff: Cell { area: 4.94, delay: 0.090, energy: 5.0 },
+            activity: 0.15,
+            clock_margin: 1.10,
+        }
+    }
+}
+
+impl Default for TechLib {
+    fn default() -> Self {
+        TechLib::tsmc40()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_costs_are_sane() {
+        let lib = TechLib::tsmc40();
+        // a full adder is several gate equivalents
+        assert!(lib.fa.area > 4.0 * lib.nand2.area / 0.8);
+        // registers are more expensive than muxes
+        assert!(lib.dff.area > lib.mux2.area);
+        // activity is a fraction
+        assert!(lib.activity > 0.0 && lib.activity < 1.0);
+    }
+}

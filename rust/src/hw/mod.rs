@@ -1,0 +1,82 @@
+//! Gate-level hardware models of the paper's three design architectures,
+//! the Verilog generator and the cycle-accurate architectural simulator.
+//!
+//! Stand-in for the Cadence RTL Compiler + TSMC 40nm synthesis flow of
+//! the paper's evaluation (DESIGN.md §Substitutions): every builder takes
+//! a [`crate::ann::QuantizedAnn`] and returns an [`HwReport`] with area,
+//! clock, cycle count, latency and per-inference energy.
+
+pub mod blocks;
+pub mod gates;
+pub mod netsim;
+pub mod parallel;
+pub mod report;
+pub mod smac_ann;
+pub mod smac_neuron;
+pub mod verilog;
+
+pub use gates::TechLib;
+pub use report::HwReport;
+
+use crate::mcm::{AdderGraph, Operand};
+use blocks::BlockCost;
+
+/// Aggregate gate cost of a shift-adds network: every node is an adder
+/// sized by its exact value range; the delay is the true longest path
+/// (per-node delays accumulated through the graph), which is what drives
+/// the latency increase of multiplierless designs (paper Sec. VII).
+pub fn graph_cost(lib: &TechLib, g: &AdderGraph, input_ranges: &[(i64, i64)]) -> BlockCost {
+    let ranges = g.node_range(input_ranges);
+    let mut total = BlockCost::ZERO;
+    let mut arrival: Vec<f64> = Vec::with_capacity(g.nodes.len());
+    for (i, n) in g.nodes.iter().enumerate() {
+        let bits = report::range_bits(ranges[i].0, ranges[i].1);
+        let cell = blocks::shift_add_node(lib, bits);
+        total.area += cell.area;
+        total.energy += cell.energy;
+        let ta = match n.a {
+            Operand::Input(_) => 0.0,
+            Operand::Node(j) => arrival[j],
+        };
+        let tb = match n.b {
+            Operand::Input(_) => 0.0,
+            Operand::Node(j) => arrival[j],
+        };
+        arrival.push(ta.max(tb) + cell.delay);
+    }
+    let out_delay = g
+        .outputs
+        .iter()
+        .filter(|o| !o.is_zero)
+        .map(|o| match o.src {
+            Operand::Input(_) => 0.0,
+            Operand::Node(j) => arrival[j],
+        })
+        .fold(0.0f64, f64::max);
+    total.delay = out_delay;
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcm::{cse, dbr, LinearTargets};
+
+    #[test]
+    fn graph_cost_tracks_ops_and_depth() {
+        let lib = TechLib::tsmc40();
+        let t = LinearTargets::cmvm(&[vec![11, 3], vec![5, 13]]);
+        let gd = dbr(&t);
+        let gc = cse(&t);
+        let ranges = vec![(0i64, 127i64); 2];
+        let cd = graph_cost(&lib, &gd, &ranges);
+        let cc = graph_cost(&lib, &gc, &ranges);
+        assert!(cc.area < cd.area, "shared graph must be smaller");
+        assert!(cd.delay > 0.0 && cc.delay > 0.0);
+        // zero-op graph costs nothing
+        let z = dbr(&LinearTargets::mcm(&[8]));
+        let cz = graph_cost(&lib, &z, &[(0, 127)]);
+        assert_eq!(cz.area, 0.0);
+        assert_eq!(cz.delay, 0.0);
+    }
+}

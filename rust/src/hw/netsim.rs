@@ -1,0 +1,209 @@
+//! Cycle-accurate architectural simulator.
+//!
+//! Executes the three designs the way the generated hardware does —
+//! register transfers per clock edge for the MAC architectures, adder-
+//! graph evaluation for the multiplierless datapaths — and is the
+//! mechanical check that (a) the cycle-count formulas of Sec. III hold
+//! and (b) every architecture is bit-exact against the golden model
+//! (`ann::sim`), which in turn matches the AOT JAX graph. This plays the
+//! role of the paper's testbench simulation (SIMURG "generates a
+//! test-bench and necessary files to verify the ANN design").
+
+use crate::ann::quant::QuantizedAnn;
+use crate::ann::sim::activate;
+use crate::hw::parallel::MultStyle;
+use crate::mcm::{cse, dbr, LinearTargets};
+
+/// Result of a cycle-accurate run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimRun {
+    pub outputs: Vec<i32>,
+    pub cycles: usize,
+}
+
+/// Parallel design with its constant-multiplication networks elaborated:
+/// build once, evaluate many inputs (the graphs are fixed hardware).
+pub struct ParallelNet {
+    qann: QuantizedAnn,
+    /// one graph per layer (CAVM keeps per-row graphs)
+    layer_graphs: Vec<Vec<crate::mcm::AdderGraph>>,
+}
+
+impl ParallelNet {
+    pub fn new(qann: &QuantizedAnn, style: MultStyle) -> ParallelNet {
+        let st = &qann.structure;
+        let layer_graphs = (0..st.num_layers())
+            .map(|k| match style {
+                MultStyle::Behavioral => vec![dbr(&LinearTargets::cmvm(&qann.weights[k]))],
+                MultStyle::Cavm => qann.weights[k]
+                    .iter()
+                    .map(|row| cse(&LinearTargets::cavm(row)))
+                    .collect(),
+                MultStyle::Cmvm => vec![cse(&LinearTargets::cmvm(&qann.weights[k]))],
+            })
+            .collect();
+        ParallelNet {
+            qann: qann.clone(),
+            layer_graphs,
+        }
+    }
+
+    /// Combinational evaluation through the elaborated datapath: the
+    /// constant multiplications run through the same adder graphs the
+    /// hardware instantiates (a CSE bug shows up here, not just in the op
+    /// count), then bias and activation are applied.
+    pub fn run(&self, input: &[i32]) -> SimRun {
+        let qann = &self.qann;
+        let st = &qann.structure;
+        let mut cur: Vec<i64> = input.iter().map(|&x| x as i64).collect();
+        for k in 0..st.num_layers() {
+            let xs: Vec<i128> = cur.iter().map(|&x| x as i128).collect();
+            let graphs = &self.layer_graphs[k];
+            let inner: Vec<i64> = if graphs.len() == 1 {
+                graphs[0].eval(&xs).iter().map(|&v| v as i64).collect()
+            } else {
+                graphs.iter().map(|g| g.eval(&xs)[0] as i64).collect()
+            };
+            cur = inner
+                .iter()
+                .zip(&qann.biases[k])
+                .map(|(&y, &b)| activate(qann.activations[k], y + b, qann.q) as i64)
+                .collect();
+        }
+        SimRun {
+            outputs: cur.iter().map(|&v| v as i32).collect(),
+            cycles: 1,
+        }
+    }
+}
+
+/// Convenience one-shot wrapper around [`ParallelNet`].
+pub fn run_parallel(qann: &QuantizedAnn, style: MultStyle, input: &[i32]) -> SimRun {
+    ParallelNet::new(qann, style).run(input)
+}
+
+/// SMAC_NEURON: one MAC per neuron, layers in sequence, ι_k + 1 cycles
+/// per layer (ι_k multiply-accumulate steps + 1 bias/activate step) —
+/// total Σ(ι_i + 1), paper Sec. III-B1.
+pub fn run_smac_neuron(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
+    let st = &qann.structure;
+    let mut cycles = 0usize;
+    let mut cur: Vec<i64> = input.iter().map(|&x| x as i64).collect();
+    for k in 0..st.num_layers() {
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let mut acc = vec![0i64; n_out];
+        // ι_k MAC cycles: the control block broadcasts input i to every MAC
+        for i in 0..n_in {
+            for (m, a) in acc.iter_mut().enumerate() {
+                *a += qann.weights[k][m][i] * cur[i];
+            }
+            cycles += 1;
+        }
+        // +1 cycle: bias add, activation, output-register write
+        cur = (0..n_out)
+            .map(|m| activate(qann.activations[k], acc[m] + qann.biases[k][m], qann.q) as i64)
+            .collect();
+        cycles += 1;
+    }
+    SimRun {
+        outputs: cur.iter().map(|&v| v as i32).collect(),
+        cycles,
+    }
+}
+
+/// SMAC_ANN: a single MAC computes every neuron serially; each neuron
+/// takes ι_k + 2 cycles (ι_k MACs + bias add + activate/writeback) —
+/// total Σ(ι_i + 2)·η_i, paper Sec. III-B2.
+pub fn run_smac_ann(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
+    let st = &qann.structure;
+    let mut cycles = 0usize;
+    let mut layer_regs: Vec<i64> = input.iter().map(|&x| x as i64).collect();
+    for k in 0..st.num_layers() {
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let mut next = vec![0i64; n_out];
+        for (m, slot) in next.iter_mut().enumerate() {
+            let mut acc = 0i64;
+            for (i, &x) in layer_regs.iter().take(n_in).enumerate() {
+                acc += qann.weights[k][m][i] * x; // one MAC per cycle
+                cycles += 1;
+            }
+            acc += qann.biases[k][m]; // bias cycle
+            cycles += 1;
+            *slot = activate(qann.activations[k], acc, qann.q) as i64; // activate cycle
+            cycles += 1;
+        }
+        layer_regs = next;
+    }
+    SimRun {
+        outputs: layer_regs.iter().map(|&v| v as i32).collect(),
+        cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::dataset::Dataset;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::sim;
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn all_architectures_bit_exact_vs_golden_model() {
+        let ds = Dataset::synthetic_with_sizes(5, 80, 40);
+        for structure in ["16-10", "16-10-10", "16-16-10-10"] {
+            let q = qann(structure, 6, 11);
+            let nets: Vec<ParallelNet> = [MultStyle::Behavioral, MultStyle::Cavm, MultStyle::Cmvm]
+                .iter()
+                .map(|&s| ParallelNet::new(&q, s))
+                .collect();
+            for s in ds.test.iter() {
+                let x = s.features_q7();
+                let golden = sim::forward(&q, &x);
+                for (net, style) in nets.iter().zip(["behavioral", "cavm", "cmvm"]) {
+                    assert_eq!(net.run(&x).outputs, golden, "{structure} {style}");
+                }
+                assert_eq!(run_smac_neuron(&q, &x).outputs, golden, "{structure} smac_neuron");
+                assert_eq!(run_smac_ann(&q, &x).outputs, golden, "{structure} smac_ann");
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_counts_match_section_iii_formulas() {
+        for structure in ["16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10"] {
+            let q = qann(structure, 6, 3);
+            let x = vec![64i32; 16];
+            let sn = run_smac_neuron(&q, &x);
+            assert_eq!(sn.cycles, q.structure.smac_neuron_cycles(), "{structure}");
+            let sa = run_smac_ann(&q, &x);
+            assert_eq!(sa.cycles, q.structure.smac_ann_cycles(), "{structure}");
+        }
+    }
+
+    #[test]
+    fn random_inputs_property() {
+        let mut rng = Rng::new(17);
+        let q = qann("16-16-10", 7, 29);
+        let net = ParallelNet::new(&q, MultStyle::Cmvm);
+        for _ in 0..100 {
+            let x: Vec<i32> = (0..16).map(|_| rng.below(128) as i32).collect();
+            let golden = sim::forward(&q, &x);
+            assert_eq!(net.run(&x).outputs, golden);
+            assert_eq!(run_smac_neuron(&q, &x).outputs, golden);
+            assert_eq!(run_smac_ann(&q, &x).outputs, golden);
+        }
+    }
+}

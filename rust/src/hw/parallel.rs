@@ -1,0 +1,165 @@
+//! Parallel architecture (paper Sec. III-A, Figs. 4 and 8): every neuron
+//! of every layer is realized in combinational hardware; after the inputs
+//! are applied, all layer computations ripple through concurrently and
+//! the ANN outputs are registered (paper Sec. VII adds output flip-flops
+//! for a fair comparison with the time-multiplexed designs).
+//!
+//! Constant-multiplication styles (paper Sec. V-A):
+//! - `Behavioral`: `w * x` left to the synthesis tool — modeled as the
+//!   per-constant CSD (DBR) expansion, no sharing across constants;
+//! - `Cavm`: each inner product optimized as one CAVM block (alg. of [19]);
+//! - `Cmvm`: each layer optimized as one CMVM block (alg. of [18]), the
+//!   maximum sharing and smallest area of the three.
+
+use super::blocks::{self, BlockCost};
+use super::report::{self, HwReport};
+use super::TechLib;
+use crate::ann::quant::QuantizedAnn;
+use crate::mcm::{cse, dbr, LinearTargets};
+
+/// Constant-multiplication style of the parallel architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MultStyle {
+    Behavioral,
+    Cavm,
+    Cmvm,
+}
+
+impl MultStyle {
+    pub fn name(self) -> &'static str {
+        match self {
+            MultStyle::Behavioral => "behavioral",
+            MultStyle::Cavm => "cavm",
+            MultStyle::Cmvm => "cmvm",
+        }
+    }
+}
+
+/// Build the gate-level model of the parallel design.
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: MultStyle) -> HwReport {
+    let st = &qann.structure;
+    let mut area = 0.0f64;
+    let mut energy = 0.0f64; // fJ per inference (every block fires once)
+    let mut path = 0.0f64; // accumulated combinational critical path
+    let mut adders = 0usize;
+
+    for k in 0..st.num_layers() {
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let in_range = report::layer_input_range(qann, k);
+        let ranges = vec![in_range; n_in];
+        let acc_bits = report::layer_acc_bits(qann, k);
+
+        // --- constant-multiplication network + inner-product summation ---
+        let (net, sum): (BlockCost, BlockCost) = match style {
+            MultStyle::Behavioral => {
+                // per-row DBR trees realize product terms and their sum in
+                // one expansion (the synthesis view of `sum(w[i]*x[i])`)
+                let t = LinearTargets::cmvm(&qann.weights[k]);
+                let g = dbr(&t);
+                adders += g.num_ops();
+                (super::graph_cost(lib, &g, &ranges), BlockCost::ZERO)
+            }
+            MultStyle::Cavm => {
+                // one optimized CAVM block per neuron
+                let mut total = BlockCost::ZERO;
+                for row in &qann.weights[k] {
+                    let t = LinearTargets::cavm(row);
+                    let g = cse(&t);
+                    adders += g.num_ops();
+                    let c = super::graph_cost(lib, &g, &ranges);
+                    total = total.beside(c);
+                }
+                (total, BlockCost::ZERO)
+            }
+            MultStyle::Cmvm => {
+                // one optimized CMVM block for the whole layer
+                let t = LinearTargets::cmvm(&qann.weights[k]);
+                let g = cse(&t);
+                adders += g.num_ops();
+                (super::graph_cost(lib, &g, &ranges), BlockCost::ZERO)
+            }
+        };
+
+        // --- bias adder + activation per neuron ---
+        let bias = blocks::adder(lib, acc_bits).times(n_out);
+        let act = blocks::activation_unit(lib, acc_bits).times(n_out);
+
+        area += net.area + sum.area + bias.area + act.area;
+        energy += net.energy + sum.energy + bias.energy + act.energy;
+        path += net.delay + sum.delay + bias.delay + act.delay;
+    }
+
+    // output registers (paper Sec. VII)
+    let out_reg = blocks::register(lib, 8).times(st.layer_outputs(st.num_layers() - 1));
+    area += out_reg.area;
+    energy += out_reg.energy;
+
+    let clock = (path + lib.dff.delay) * lib.clock_margin;
+    HwReport::from_parts("parallel", style.name(), area, clock, 1, energy, adders)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn single_cycle_latency() {
+        let r = build(&TechLib::tsmc40(), &qann("16-10", 6, 1), MultStyle::Behavioral);
+        assert_eq!(r.cycles, 1);
+        assert!((r.latency_ns - r.clock_ns).abs() < 1e-12);
+        assert!(r.area_um2 > 0.0 && r.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn cmvm_smallest_behavioral_largest() {
+        // the paper's Figs. 13 vs 16 vs 17 area ordering
+        let q = qann("16-16-10", 6, 2);
+        let lib = TechLib::tsmc40();
+        let b = build(&lib, &q, MultStyle::Behavioral);
+        let cavm = build(&lib, &q, MultStyle::Cavm);
+        let cmvm = build(&lib, &q, MultStyle::Cmvm);
+        assert!(cavm.area_um2 < b.area_um2, "cavm {} !< behavioral {}", cavm.area_um2, b.area_um2);
+        assert!(cmvm.area_um2 < cavm.area_um2, "cmvm {} !< cavm {}", cmvm.area_um2, cavm.area_um2);
+        assert!(cmvm.adders < cavm.adders);
+    }
+
+    #[test]
+    fn bigger_structures_cost_more() {
+        let lib = TechLib::tsmc40();
+        let small = build(&lib, &qann("16-10", 6, 3), MultStyle::Behavioral);
+        let big = build(&lib, &qann("16-16-10-10", 6, 3), MultStyle::Behavioral);
+        assert!(big.area_um2 > small.area_um2);
+        assert!(big.latency_ns > small.latency_ns);
+        assert!(big.energy_pj > small.energy_pj);
+    }
+
+    #[test]
+    fn fewer_nonzero_digits_means_less_area() {
+        // zeroing weights (what the Sec. IV-B tuner does) must reduce the
+        // modeled area — the cost model must reward the tuner
+        let lib = TechLib::tsmc40();
+        let q = qann("16-10", 6, 4);
+        let mut trimmed = q.clone();
+        for row in trimmed.weights[0].iter_mut() {
+            for w in row.iter_mut().skip(8) {
+                *w = 0;
+            }
+        }
+        let full = build(&lib, &q, MultStyle::Behavioral);
+        let trim = build(&lib, &trimmed, MultStyle::Behavioral);
+        assert!(trim.area_um2 < full.area_um2);
+    }
+}

@@ -1,0 +1,198 @@
+//! Shared sizing helpers and the gate-level result record every
+//! architecture builder produces.
+
+use crate::ann::quant::QuantizedAnn;
+#[cfg(test)]
+use crate::ann::quant::FRAC_BITS;
+use crate::ann::structure::Activation;
+use crate::num::signed_bitwidth;
+
+/// Gate-level result for one ANN design point — the unit of every figure
+/// in the paper's evaluation (area / latency / energy per architecture,
+/// training algorithm and structure).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwReport {
+    /// architecture: "parallel" | "smac_neuron" | "smac_ann"
+    pub arch: &'static str,
+    /// constant-multiplication style: "behavioral" | "cavm" | "cmvm" | "mcm"
+    pub style: &'static str,
+    pub area_um2: f64,
+    pub clock_ns: f64,
+    pub cycles: usize,
+    /// latency = clock period × cycle count (paper Sec. VII)
+    pub latency_ns: f64,
+    /// energy per inference = latency × power (paper Sec. VII)
+    pub energy_pj: f64,
+    /// average power in mW implied by the energy model
+    pub power_mw: f64,
+    /// number of addition/subtraction operations in the constant-
+    /// multiplication network (0 for behavioral styles)
+    pub adders: usize,
+}
+
+impl HwReport {
+    pub fn from_parts(
+        arch: &'static str,
+        style: &'static str,
+        area_um2: f64,
+        clock_ns: f64,
+        cycles: usize,
+        energy_fj: f64,
+        adders: usize,
+    ) -> HwReport {
+        let latency_ns = clock_ns * cycles as f64;
+        let energy_pj = energy_fj / 1000.0;
+        HwReport {
+            arch,
+            style,
+            area_um2,
+            clock_ns,
+            cycles,
+            latency_ns,
+            energy_pj,
+            power_mw: if latency_ns > 0.0 { energy_pj / latency_ns } else { 0.0 },
+            adders,
+        }
+    }
+}
+
+/// Value range of the signals feeding layer `k` (Q1.7 integers): primary
+/// inputs and the unsigned-style activations live in [0, 127]; signed
+/// activations in [-128, 127].
+pub fn layer_input_range(qann: &QuantizedAnn, k: usize) -> (i64, i64) {
+    if k == 0 {
+        (0, 127) // pendigits features are non-negative
+    } else {
+        match qann.activations[k - 1] {
+            Activation::HSig | Activation::ReLU | Activation::SatLin => (0, 127),
+            _ => (-128, 127),
+        }
+    }
+}
+
+/// Exact (min, max) of neuron `m`'s accumulator at layer `k` (inner
+/// product + bias), by interval propagation over the integer weights.
+pub fn accumulator_range(qann: &QuantizedAnn, k: usize, m: usize) -> (i64, i64) {
+    let (xlo, xhi) = layer_input_range(qann, k);
+    let mut lo = qann.biases[k][m];
+    let mut hi = qann.biases[k][m];
+    for &w in &qann.weights[k][m] {
+        if w >= 0 {
+            lo += w * xlo;
+            hi += w * xhi;
+        } else {
+            lo += w * xhi;
+            hi += w * xlo;
+        }
+    }
+    (lo, hi)
+}
+
+/// Two's-complement bitwidth holding both bounds.
+pub fn range_bits(lo: i64, hi: i64) -> u32 {
+    signed_bitwidth(lo).max(signed_bitwidth(hi))
+}
+
+/// Accumulator bitwidth of layer `k` (max over its neurons).
+pub fn layer_acc_bits(qann: &QuantizedAnn, k: usize) -> u32 {
+    (0..qann.structure.layer_outputs(k))
+        .map(|m| {
+            let (lo, hi) = accumulator_range(qann, k, m);
+            range_bits(lo, hi)
+        })
+        .max()
+        .unwrap_or(1)
+}
+
+/// Smallest-left-shift of a weight set (paper Sec. IV-C): the number of
+/// trailing zeros shared by all nonzero weights. All-zero sets get 0.
+pub fn smallest_left_shift(weights: impl IntoIterator<Item = i64>) -> u32 {
+    weights
+        .into_iter()
+        .filter(|&w| w != 0)
+        .map(|w| w.trailing_zeros())
+        .min()
+        .unwrap_or(0)
+}
+
+/// Per-neuron stored-weight bitwidth under sls factoring: the MAC
+/// multiplies `c = w >> sls`, so the multiplier/adder/register shrink as
+/// the tuner increases sls (the whole point of Sec. IV-C).
+pub fn neuron_stored_bits(qann: &QuantizedAnn, k: usize, m: usize) -> (u32, u32) {
+    let sls = smallest_left_shift(qann.weights[k][m].iter().cloned());
+    let bits = qann.weights[k][m]
+        .iter()
+        .map(|&w| signed_bitwidth(w >> sls))
+        .max()
+        .unwrap_or(1);
+    (sls, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::structure::AnnStructure;
+
+    fn qann() -> QuantizedAnn {
+        QuantizedAnn {
+            structure: AnnStructure::parse("2-2-1").unwrap(),
+            weights: vec![vec![vec![20, 24], vec![-26, 0]], vec![vec![3, -5]]],
+            biases: vec![vec![10, -10], vec![0]],
+            q: 4,
+            activations: vec![Activation::HSig, Activation::HTanh],
+        }
+    }
+
+    #[test]
+    fn input_ranges_follow_activations() {
+        let q = qann();
+        assert_eq!(layer_input_range(&q, 0), (0, 127));
+        // layer 0 output activation is hsig -> non-negative
+        assert_eq!(layer_input_range(&q, 1), (0, 127));
+    }
+
+    #[test]
+    fn accumulator_interval_is_exact() {
+        let q = qann();
+        // neuron 0 of layer 0: w = [20, 24], b = 10, x in [0,127]
+        let (lo, hi) = accumulator_range(&q, 0, 0);
+        assert_eq!(lo, 10);
+        assert_eq!(hi, 20 * 127 + 24 * 127 + 10);
+        // neuron 1: w = [-26, 0], b = -10
+        let (lo1, hi1) = accumulator_range(&q, 0, 1);
+        assert_eq!(lo1, -26 * 127 - 10);
+        assert_eq!(hi1, -10);
+    }
+
+    #[test]
+    fn sls_matches_paper_example() {
+        // {20, 24, 26} -> sls = 1 (paper Sec. IV-C)
+        assert_eq!(smallest_left_shift([20, 24, 26]), 1);
+        assert_eq!(smallest_left_shift([20, 24]), 2);
+        assert_eq!(smallest_left_shift([0, 0]), 0);
+        assert_eq!(smallest_left_shift([0, 8]), 3);
+    }
+
+    #[test]
+    fn stored_bits_shrink_with_sls() {
+        let q = qann();
+        // neuron 0 layer 0: {20, 24} -> sls 2, stored {5, 6} -> 4 bits signed
+        let (sls, bits) = neuron_stored_bits(&q, 0, 0);
+        assert_eq!(sls, 2);
+        assert_eq!(bits, signed_bitwidth(6));
+    }
+
+    #[test]
+    fn report_derives_latency_and_power() {
+        let r = HwReport::from_parts("parallel", "behavioral", 100.0, 2.0, 5, 3000.0, 0);
+        assert!((r.latency_ns - 10.0).abs() < 1e-12);
+        assert!((r.energy_pj - 3.0).abs() < 1e-12);
+        assert!((r.power_mw - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bias_scale_consistency() {
+        // FRAC_BITS is part of the contract the ranges assume
+        assert_eq!(FRAC_BITS, 7);
+    }
+}

@@ -1,0 +1,178 @@
+//! SMAC_ANN architecture (paper Sec. III-B2, Fig. 7): the entire ANN is
+//! computed by a single MAC block. The control block holds three counters
+//! (layer, input, neuron); multiplexers select the input variable (primary
+//! inputs or the previous layer's registered outputs), the weight and the
+//! bias; one multiplier, one accumulator and one activation unit are
+//! shared by every neuron computation. Smallest area, highest cycle count
+//! and (in the paper's results) the highest energy.
+
+use super::blocks;
+use super::report::{self, HwReport};
+use super::smac_neuron::SmacStyle;
+use super::TechLib;
+use crate::ann::quant::QuantizedAnn;
+use crate::mcm::{optimize_mcm, Effort};
+use crate::num::signed_bitwidth;
+
+/// Build the gate-level model of the SMAC_ANN design.
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: SmacStyle) -> HwReport {
+    let st = &qann.structure;
+    let layers = st.num_layers();
+
+    // global sls over ALL weights (the Sec. IV-C whole-ANN variant): the
+    // single multiplier operates on stored weights c = w >> sls
+    let all_weights = || {
+        (0..layers).flat_map(|k| qann.weights[k].iter().flatten().cloned().collect::<Vec<_>>())
+    };
+    let sls = report::smallest_left_shift(all_weights());
+    let stored_bits = all_weights()
+        .map(|w| signed_bitwidth(w >> sls))
+        .max()
+        .unwrap_or(1);
+
+    // accumulator sized by the worst layer
+    let acc_bits = (0..layers).map(|k| report::layer_acc_bits(qann, k)).max().unwrap_or(1);
+
+    let max_inputs = (0..layers).map(|k| st.layer_inputs(k)).max().unwrap();
+    let max_outputs = (0..layers).map(|k| st.layer_outputs(k)).max().unwrap();
+    let total_weights = st.total_weights();
+    let total_biases = st.total_neurons();
+
+    // control: three counters (paper Fig. 7)
+    let control = blocks::counter(lib, layers.max(2))
+        .beside(blocks::counter(lib, max_inputs + 2))
+        .beside(blocks::counter(lib, max_outputs));
+
+    // input mux over primary inputs and the layer-output feedback registers
+    let in_mux = blocks::mux(lib, st.inputs + max_outputs, 8);
+    // weight and bias storage as hardwired-constant muxes
+    let w_mux = blocks::constant_mux(lib, total_weights, stored_bits);
+    let b_mux = blocks::constant_mux(lib, total_biases, acc_bits);
+
+    let acc = blocks::adder(lib, acc_bits);
+    let reg = blocks::register(lib, acc_bits);
+    let act = blocks::activation_unit(lib, acc_bits);
+    // layer-output holding registers (max η words of 8 bits)
+    let out_regs = blocks::register(lib, 8).times(max_outputs);
+
+    let (mult_area_energy, mult_delay, adders) = match style {
+        SmacStyle::Behavioral => {
+            let m = blocks::multiplier(lib, stored_bits, 8);
+            ((m.area, m.energy), m.delay, 0)
+        }
+        SmacStyle::Mcm => {
+            // one MCM block over every stored weight of the ANN (paper
+            // Sec. V-B notes this replaces one multiplier with a large
+            // adder network and usually *increases* complexity)
+            let consts: Vec<i64> = all_weights().map(|w| w >> sls).collect();
+            let g = optimize_mcm(&consts, Effort::Heuristic);
+            let n_ops = g.num_ops();
+            let c = super::graph_cost(lib, &g, &[(-128, 127)]);
+            // product mux selecting among all distinct products
+            let p_mux = blocks::mux(lib, total_weights, stored_bits + 8);
+            ((c.area + p_mux.area, c.energy + p_mux.energy), c.delay + p_mux.delay, n_ops)
+        }
+    };
+
+    let area = control.area
+        + in_mux.area
+        + w_mux.area
+        + b_mux.area
+        + mult_area_energy.0
+        + acc.area
+        + reg.area
+        + act.area
+        + out_regs.area;
+
+    let cycles = st.smac_ann_cycles();
+    // everything is active every cycle — the energy disadvantage the
+    // paper reports for SMAC_ANN
+    let per_cycle_energy = control.energy
+        + in_mux.energy
+        + w_mux.energy
+        + b_mux.energy
+        + mult_area_energy.1
+        + acc.energy
+        + reg.energy
+        + act.energy / (max_inputs as f64) // activation fires once per neuron
+        + out_regs.energy / (max_inputs as f64);
+    let energy = per_cycle_energy * cycles as f64;
+
+    let path = in_mux.delay.max(w_mux.delay) + mult_delay + acc.delay + lib.dff.delay;
+    let clock = path * lib.clock_margin;
+
+    HwReport::from_parts("smac_ann", style.name(), area, clock, cycles, energy, adders)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::hw::parallel::{self, MultStyle};
+    use crate::hw::smac_neuron;
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn cycle_count_matches_formula() {
+        let q = qann("16-10", 6, 1);
+        let r = build(&TechLib::tsmc40(), &q, SmacStyle::Behavioral);
+        assert_eq!(r.cycles, 18 * 10);
+    }
+
+    #[test]
+    fn paper_architecture_ordering() {
+        // Figs. 10–12: area parallel > smac_neuron > smac_ann;
+        // latency parallel < smac_neuron < smac_ann;
+        // energy: smac_ann highest, parallel lowest.
+        let lib = TechLib::tsmc40();
+        for structure in ["16-10-10", "16-16-10", "16-16-10-10"] {
+            let q = qann(structure, 6, 7);
+            let par = parallel::build(&lib, &q, MultStyle::Behavioral);
+            let sn = smac_neuron::build(&lib, &q, SmacStyle::Behavioral);
+            let sa = build(&lib, &q, SmacStyle::Behavioral);
+            assert!(par.area_um2 > sn.area_um2 && sn.area_um2 > sa.area_um2,
+                "{structure} area: par {} sn {} sa {}", par.area_um2, sn.area_um2, sa.area_um2);
+            assert!(par.latency_ns < sn.latency_ns && sn.latency_ns < sa.latency_ns,
+                "{structure} latency: par {} sn {} sa {}", par.latency_ns, sn.latency_ns, sa.latency_ns);
+            assert!(sa.energy_pj > sn.energy_pj && sa.energy_pj > par.energy_pj,
+                "{structure} energy: par {} sn {} sa {}", par.energy_pj, sn.energy_pj, sa.energy_pj);
+        }
+    }
+
+    #[test]
+    fn mcm_style_blows_up_smac_ann() {
+        // paper Sec. V-B: multiplierless SMAC_ANN increases complexity
+        let lib = TechLib::tsmc40();
+        let q = qann("16-16-10", 6, 9);
+        let b = build(&lib, &q, SmacStyle::Behavioral);
+        let m = build(&lib, &q, SmacStyle::Mcm);
+        assert!(m.area_um2 > b.area_um2, "mcm {} should exceed behavioral {}", m.area_um2, b.area_um2);
+    }
+
+    #[test]
+    fn global_sls_reduces_cost() {
+        let lib = TechLib::tsmc40();
+        let q = qann("16-10", 6, 5);
+        let mut tuned = q.clone();
+        for layer in tuned.weights.iter_mut() {
+            for row in layer.iter_mut() {
+                for w in row.iter_mut() {
+                    *w &= !3; // force global sls >= 2
+                }
+            }
+        }
+        let before = build(&lib, &q, SmacStyle::Behavioral);
+        let after = build(&lib, &tuned, SmacStyle::Behavioral);
+        assert!(after.area_um2 < before.area_um2);
+    }
+}

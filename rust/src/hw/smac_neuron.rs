@@ -1,0 +1,201 @@
+//! SMAC_NEURON architecture (paper Sec. III-B1, Fig. 6): one MAC block
+//! per neuron, a common control block per layer; layers execute in
+//! sequence, each for ι_k + 1 cycles, with finished layers clock-gated
+//! (the paper's "disable the hardware" note).
+//!
+//! Styles:
+//! - `Behavioral`: each MAC owns a generic multiplier sized by the
+//!   neuron's stored-weight bitwidth (weights are stored factored by
+//!   their smallest left shift — exactly what the Sec. IV-C tuner
+//!   enlarges) and a hardwired-constant weight mux;
+//! - `Mcm`: per layer, a single MCM block computes all weight×input
+//!   products of the broadcast input (paper Sec. V-B, Fig. 9) and each
+//!   neuron muxes its product into the accumulator.
+
+use super::blocks;
+use super::report::{self, HwReport};
+use super::TechLib;
+use crate::ann::quant::QuantizedAnn;
+use crate::mcm::{optimize_mcm, Effort};
+use crate::num::signed_bitwidth;
+
+/// Constant-multiplication style of the time-multiplexed architectures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SmacStyle {
+    Behavioral,
+    Mcm,
+}
+
+impl SmacStyle {
+    pub fn name(self) -> &'static str {
+        match self {
+            SmacStyle::Behavioral => "behavioral",
+            SmacStyle::Mcm => "mcm",
+        }
+    }
+}
+
+/// Build the gate-level model of the SMAC_NEURON design.
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: SmacStyle) -> HwReport {
+    let st = &qann.structure;
+    let mut area = 0.0f64;
+    let mut energy = 0.0f64; // fJ per inference
+    let mut clock = 0.0f64; // max register-to-register path over layers
+    let mut adders = 0usize;
+
+    for k in 0..st.num_layers() {
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let in_range = report::layer_input_range(qann, k);
+        let acc_bits = report::layer_acc_bits(qann, k);
+        let layer_cycles = (n_in + 1) as f64;
+
+        // shared per-layer control: input counter + broadcast input mux
+        let control = blocks::counter(lib, n_in + 1);
+        let in_mux = blocks::mux(lib, n_in, 8);
+        let mut layer = control.beside(in_mux);
+        let mut mac_path = control.delay.max(in_mux.delay);
+
+        match style {
+            SmacStyle::Behavioral => {
+                for m in 0..n_out {
+                    let (_sls, w_bits) = report::neuron_stored_bits(qann, k, m);
+                    let w_mux = blocks::constant_mux(lib, n_in, w_bits);
+                    let mult = blocks::multiplier(lib, w_bits, 8);
+                    let acc = blocks::adder(lib, acc_bits);
+                    let reg = blocks::register(lib, acc_bits);
+                    let bias = blocks::adder(lib, acc_bits);
+                    let act = blocks::activation_unit(lib, acc_bits);
+                    let out_reg = blocks::register(lib, 8);
+                    let mac = w_mux
+                        .beside(mult)
+                        .beside(acc)
+                        .beside(reg)
+                        .beside(bias)
+                        .beside(act)
+                        .beside(out_reg);
+                    layer = layer.beside(mac);
+                    mac_path = mac_path
+                        .max(w_mux.delay.max(0.0) + mult.delay + acc.delay + lib.dff.delay);
+                }
+            }
+            SmacStyle::Mcm => {
+                // single MCM block over all stored weights of the layer
+                // (factored by each neuron's sls — the shifts are wiring)
+                let mut consts: Vec<i64> = Vec::new();
+                let mut stored: Vec<Vec<i64>> = Vec::new();
+                for m in 0..n_out {
+                    let (sls, _) = report::neuron_stored_bits(qann, k, m);
+                    let row: Vec<i64> =
+                        qann.weights[k][m].iter().map(|&w| w >> sls).collect();
+                    consts.extend(row.iter().cloned());
+                    stored.push(row);
+                }
+                let g = optimize_mcm(&consts, Effort::Heuristic);
+                adders += g.num_ops();
+                let mcm = super::graph_cost(lib, &g, &[in_range]);
+                layer = layer.beside(mcm);
+
+                for (m, row) in stored.iter().enumerate() {
+                    // product width of this neuron's largest stored weight
+                    let p_bits = row
+                        .iter()
+                        .map(|&c| signed_bitwidth(c))
+                        .max()
+                        .unwrap_or(1)
+                        + 8;
+                    let p_mux = blocks::mux(lib, n_in, p_bits);
+                    let acc = blocks::adder(lib, acc_bits);
+                    let reg = blocks::register(lib, acc_bits);
+                    let bias = blocks::adder(lib, acc_bits);
+                    let act = blocks::activation_unit(lib, acc_bits);
+                    let out_reg = blocks::register(lib, 8);
+                    let mac = p_mux
+                        .beside(acc)
+                        .beside(reg)
+                        .beside(bias)
+                        .beside(act)
+                        .beside(out_reg);
+                    layer = layer.beside(mac);
+                    mac_path = mac_path
+                        .max(mcm.delay + p_mux.delay + acc.delay + lib.dff.delay);
+                    let _ = m;
+                }
+            }
+        }
+
+        area += layer.area;
+        // the layer is active only during its own ι_k + 1 cycles
+        energy += layer.energy * layer_cycles;
+        clock = clock.max(mac_path);
+    }
+
+    let cycles = st.smac_neuron_cycles();
+    let clock = clock * lib.clock_margin;
+    HwReport::from_parts("smac_neuron", style.name(), area, clock, cycles, energy, adders)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::hw::parallel::{self, MultStyle};
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn cycle_count_matches_formula() {
+        let q = qann("16-16-10", 6, 1);
+        let r = build(&TechLib::tsmc40(), &q, SmacStyle::Behavioral);
+        assert_eq!(r.cycles, 17 + 17);
+        assert!((r.latency_ns - r.clock_ns * 34.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smaller_than_parallel_but_slower() {
+        // the paper's Fig. 10 vs 11 ordering
+        let q = qann("16-16-10", 6, 2);
+        let lib = TechLib::tsmc40();
+        let par = parallel::build(&lib, &q, MultStyle::Behavioral);
+        let sn = build(&lib, &q, SmacStyle::Behavioral);
+        assert!(sn.area_um2 < par.area_um2, "smac_neuron {} !< parallel {}", sn.area_um2, par.area_um2);
+        assert!(sn.latency_ns > par.latency_ns);
+    }
+
+    #[test]
+    fn mcm_style_reduces_area() {
+        // paper Fig. 14 vs 18: multiplierless SMAC_NEURON saves area
+        let q = qann("16-16-10", 6, 3);
+        let lib = TechLib::tsmc40();
+        let b = build(&lib, &q, SmacStyle::Behavioral);
+        let m = build(&lib, &q, SmacStyle::Mcm);
+        assert!(m.area_um2 < b.area_um2, "mcm {} !< behavioral {}", m.area_um2, b.area_um2);
+        assert!(m.adders > 0);
+    }
+
+    #[test]
+    fn sls_tuning_reduces_cost() {
+        // making every weight of a neuron even (sls >= 1) must shrink the
+        // modeled MAC — the reward signal of the Sec. IV-C tuner
+        let q = qann("16-10", 6, 4);
+        let mut tuned = q.clone();
+        for row in tuned.weights[0].iter_mut() {
+            for w in row.iter_mut() {
+                *w &= !1; // clear the LSB -> sls >= 1
+            }
+        }
+        let lib = TechLib::tsmc40();
+        let before = build(&lib, &q, SmacStyle::Behavioral);
+        let after = build(&lib, &tuned, SmacStyle::Behavioral);
+        assert!(after.area_um2 < before.area_um2);
+    }
+}

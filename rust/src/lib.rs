@@ -1,0 +1,25 @@
+//! # SIMURG-RS
+//!
+//! Reproduction of *"Efficient Hardware Realizations of Feedforward
+//! Artificial Neural Networks"* (Nojehdeh, Parvin, Altun, 2021): a CAD
+//! flow that takes a trained feedforward ANN and produces optimized
+//! hardware realizations under three design architectures — **parallel**,
+//! **SMAC_NEURON** (one multiply–accumulate block per neuron) and
+//! **SMAC_ANN** (a single MAC block for the whole network) — with
+//! hardware-aware post-training (minimum quantization + weight tuning)
+//! and multiplierless shift-adds realizations of the constant
+//! multiplications (MCM / CAVM / CMVM).
+//!
+//! Layering (see DESIGN.md):
+//! - this crate is **L3**: the coordinator / CAD tool;
+//! - `python/compile` is **L2/L1** (JAX model + Pallas kernel), AOT-lowered
+//!   to HLO-text artifacts that [`runtime`] loads via PJRT;
+//! - python never runs on the request path.
+
+pub mod ann;
+pub mod coordinator;
+pub mod hw;
+pub mod mcm;
+pub mod num;
+pub mod posttrain;
+pub mod runtime;

@@ -1,0 +1,357 @@
+//! SIMURG-RS command-line interface — the paper's CAD tool (Sec. VI).
+//!
+//!   simurg table <1|2|3|4>            regenerate a paper table
+//!   simurg figure <10..18|all>        regenerate a paper figure (+CSV)
+//!   simurg flow    --structure 16-16-10 --trainer zaal [--eval pjrt]
+//!   simurg train   --structure 16-10 --trainer zaal --backend pjrt
+//!   simurg verilog --structure 16-10 --trainer zaal --arch parallel --style cmvm --out out/
+//!   simurg mcm     --constants 11,3,5,13 [--alg dbr|cse|exact]
+//!
+//! Common flags: --runs N --seed N --threads N --data-dir DIR --out DIR
+
+use anyhow::{bail, Context, Result};
+use simurg::ann::dataset::Dataset;
+use simurg::ann::structure::AnnStructure;
+use simurg::ann::train::Trainer;
+use simurg::coordinator::flow::{run_flow, FlowConfig};
+use simurg::coordinator::report;
+use simurg::coordinator::sweep::{sweep_all, SweepConfig};
+use simurg::hw::parallel::MultStyle;
+use simurg::hw::{verilog, TechLib};
+use simurg::mcm::{cse, dbr, optimize_mcm, Effort, LinearTargets};
+use simurg::posttrain::AccuracyEval;
+use simurg::runtime::{Artifacts, PjrtEval, PjrtTrainer};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Minimal `--flag value` argument map (no external CLI dependency — the
+/// build environment vendors only the xla closure).
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(name) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} {v:?}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn dataset(args: &Args) -> Dataset {
+    let seed = args.get("data-seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    Dataset::load_or_synthesize(args.get("data-dir").map(std::path::Path::new), seed)
+}
+
+fn sweep_config(args: &Args) -> Result<SweepConfig> {
+    let mut cfg = SweepConfig::default();
+    cfg.runs = args.get_usize("runs", 3)?;
+    cfg.seed = args.get_usize("seed", 1)? as u64;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if let Some(s) = args.get("structures") {
+        cfg.structures = s
+            .split(',')
+            .map(AnnStructure::parse)
+            .collect::<Result<_>>()?;
+    }
+    Ok(cfg)
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("out").unwrap_or("results"))
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let n: u32 = args
+        .positional
+        .first()
+        .context("usage: simurg table <1|2|3|4>")?
+        .parse()?;
+    let data = dataset(args);
+    let outcomes = sweep_all(&data, &sweep_config(args)?)?;
+    let text = match n {
+        1 => report::table1(&outcomes),
+        2..=4 => report::table_posttrain(&outcomes, n),
+        _ => bail!("tables are 1..=4"),
+    };
+    println!("{text}");
+    let dir = out_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("table_{n}.txt")), &text)?;
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .context("usage: simurg figure <10..18|all>")?;
+    let figs: Vec<u32> = if which == "all" {
+        (10..=18).collect()
+    } else {
+        vec![which.parse()?]
+    };
+    let data = dataset(args);
+    let outcomes = sweep_all(&data, &sweep_config(args)?)?;
+    let lib = TechLib::tsmc40();
+    let dir = out_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    for f in figs {
+        let text = report::figure(&outcomes, f, &lib);
+        println!("{text}");
+        std::fs::write(dir.join(format!("fig_{f}.txt")), &text)?;
+        std::fs::write(
+            dir.join(format!("fig_{f}.csv")),
+            report::figure_csv(&outcomes, f, &lib),
+        )?;
+    }
+    Ok(())
+}
+
+fn parse_structure(args: &Args) -> Result<AnnStructure> {
+    AnnStructure::parse(args.get("structure").unwrap_or("16-16-10"))
+}
+
+fn parse_trainer(args: &Args) -> Result<Trainer> {
+    Trainer::parse(args.get("trainer").unwrap_or("zaal"))
+}
+
+fn cmd_flow(args: &Args) -> Result<()> {
+    let data = dataset(args);
+    let mut cfg = FlowConfig::new(parse_structure(args)?, parse_trainer(args)?);
+    cfg.runs = args.get_usize("runs", 3)?;
+    cfg.seed = args.get_usize("seed", 1)? as u64;
+
+    let use_pjrt = args.get("eval") == Some("pjrt");
+    let reg;
+    let pjrt_eval;
+    let ev: Option<&dyn AccuracyEval> = if use_pjrt {
+        reg = Artifacts::open_default()?;
+        pjrt_eval = PjrtEval::new(&reg, &cfg.structure, &data.validation)?;
+        Some(&pjrt_eval)
+    } else {
+        None
+    };
+
+    let o = run_flow(&data, &cfg, ev)?;
+    println!("structure {} / trainer {}", cfg.structure, cfg.trainer.name());
+    println!("  sta               {:.2}%", o.sta);
+    println!("  min quantization  q = {}", o.quant.qann.q);
+    println!("  hta (untuned)     {:.2}%   tnzd {}", o.hta, o.quant.qann.tnzd());
+    println!(
+        "  parallel tuned    {:.2}%   tnzd {}   ({} evals, {:.1}s)",
+        o.hta_parallel,
+        o.tuned_parallel.qann.tnzd(),
+        o.tuned_parallel.evals,
+        o.tuned_parallel.cpu_seconds
+    );
+    println!(
+        "  smac_neuron tuned {:.2}%   tnzd {}   ({} evals, {:.1}s)",
+        o.hta_smac_neuron,
+        o.tuned_smac_neuron.qann.tnzd(),
+        o.tuned_smac_neuron.evals,
+        o.tuned_smac_neuron.cpu_seconds
+    );
+    println!(
+        "  smac_ann tuned    {:.2}%   tnzd {}   ({} evals, {:.1}s)",
+        o.hta_smac_ann,
+        o.tuned_smac_ann.qann.tnzd(),
+        o.tuned_smac_ann.evals,
+        o.tuned_smac_ann.cpu_seconds
+    );
+    let lib = TechLib::tsmc40();
+    for f in [10, 13, 16, 17, 11, 14, 18, 12, 15] {
+        let spec = report::FigureSpec::for_fig(f).unwrap();
+        let r = report::hw_report_for(&o, &spec, &lib);
+        println!(
+            "  {:<52} area {:>10.1} um^2  latency {:>8.2} ns  energy {:>9.2} pJ",
+            spec.description(),
+            r.area_um2,
+            r.latency_ns,
+            r.energy_pj
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let data = dataset(args);
+    let structure = parse_structure(args)?;
+    let trainer = parse_trainer(args)?;
+    let backend = args.get("backend").unwrap_or("pjrt");
+    match backend {
+        "pjrt" => {
+            let reg = Artifacts::open_default()?;
+            let t = PjrtTrainer::new(&reg, &structure, trainer)?;
+            let epochs = args.get_usize("epochs", 30)?;
+            let (ann, log) = t.train(&data, epochs, 10, 0.01, args.get_usize("seed", 1)? as u64)?;
+            for e in &log.epochs {
+                println!(
+                    "epoch {:>3}  loss {:.5}  val {:.2}%",
+                    e.epoch,
+                    e.mean_loss,
+                    100.0 * e.validation_accuracy
+                );
+            }
+            let sta = simurg::ann::train::software_test_accuracy(&ann, &data);
+            println!("steps {}  test accuracy {:.2}%", log.steps, sta);
+        }
+        "native" => {
+            let cfg = trainer.config(args.get_usize("seed", 1)? as u64);
+            let res = simurg::ann::train::train(&structure, &data, &cfg);
+            for (i, l) in res.loss_curve.iter().enumerate() {
+                println!("epoch {i:>3}  loss {l:.5}");
+            }
+            let sta = simurg::ann::train::software_test_accuracy(&res.ann, &data);
+            println!("epochs {}  test accuracy {sta:.2}%", res.epochs_run);
+        }
+        other => bail!("unknown backend {other:?} (pjrt|native)"),
+    }
+    Ok(())
+}
+
+fn cmd_verilog(args: &Args) -> Result<()> {
+    let data = dataset(args);
+    let mut cfg = FlowConfig::new(parse_structure(args)?, parse_trainer(args)?);
+    cfg.runs = args.get_usize("runs", 1)?;
+    let o = run_flow(&data, &cfg, None)?;
+    let arch = args.get("arch").unwrap_or("parallel");
+    let style = args.get("style").unwrap_or("behavioral");
+    let module = format!("ann_{}", cfg.structure.to_string().replace('-', "_"));
+    let (qann, text, cycles) = match arch {
+        "parallel" => {
+            let style = match style {
+                "behavioral" => MultStyle::Behavioral,
+                "cavm" => MultStyle::Cavm,
+                "cmvm" => MultStyle::Cmvm,
+                other => bail!("parallel styles: behavioral|cavm|cmvm (got {other})"),
+            };
+            let q = &o.tuned_parallel.qann;
+            (q.clone(), verilog::parallel_verilog(q, style, &module), 1)
+        }
+        "smac_neuron" => {
+            let q = &o.tuned_smac_neuron.qann;
+            (
+                q.clone(),
+                verilog::smac_neuron_verilog(q, &module),
+                q.structure.smac_neuron_cycles(),
+            )
+        }
+        "smac_ann" => {
+            let q = &o.tuned_smac_ann.qann;
+            (
+                q.clone(),
+                verilog::smac_ann_verilog(q, &module),
+                q.structure.smac_ann_cycles(),
+            )
+        }
+        other => bail!("verilog generation: parallel|smac_neuron|smac_ann (got {other})"),
+    };
+    let dir = out_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    let (v_name, tb_name, tcl_name) = verilog::artifact_names(&module);
+    std::fs::write(dir.join(&v_name), &text)?;
+    let tb = verilog::testbench(&qann, &data.test[..8.min(data.test.len())], &module, cycles);
+    std::fs::write(dir.join(&tb_name), tb)?;
+    let lib = TechLib::tsmc40();
+    let r = match arch {
+        "parallel" => simurg::hw::parallel::build(&lib, &qann, MultStyle::Behavioral),
+        _ => simurg::hw::smac_neuron::build(
+            &lib,
+            &qann,
+            simurg::hw::smac_neuron::SmacStyle::Behavioral,
+        ),
+    };
+    std::fs::write(dir.join(&tcl_name), verilog::synthesis_script(&module, r.clock_ns))?;
+    println!("wrote {} / {} / {} to {}", v_name, tb_name, tcl_name, dir.display());
+    Ok(())
+}
+
+fn cmd_mcm(args: &Args) -> Result<()> {
+    let consts: Vec<i64> = args
+        .get("constants")
+        .context("--constants 11,3,5,13")?
+        .split(',')
+        .map(|s| s.trim().parse::<i64>().context("bad constant"))
+        .collect::<Result<_>>()?;
+    let alg = args.get("alg").unwrap_or("cse");
+    let t = LinearTargets::mcm(&consts);
+    let g = match alg {
+        "dbr" => dbr(&t),
+        "cse" => cse(&t),
+        "exact" => optimize_mcm(&consts, Effort::Exact { node_budget: 500_000 }),
+        other => bail!("algorithms: dbr|cse|exact (got {other})"),
+    };
+    g.verify_against(&t)?;
+    println!(
+        "constants {consts:?}: {} add/sub ops, depth {} ({alg})",
+        g.num_ops(),
+        g.depth()
+    );
+    for (i, n) in g.nodes.iter().enumerate() {
+        println!("  n{i} = ({:?} << {}) {:?} ({:?} << {})", n.a, n.sa, n.op, n.b, n.sb);
+    }
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "SIMURG-RS — efficient hardware realizations of feedforward ANNs
+usage: simurg <table|figure|flow|train|verilog|mcm> [flags]
+  table <1|2|3|4>           regenerate a paper table
+  figure <10..18|all>       regenerate a paper figure (+ CSV in --out)
+  flow                      full flow for one --structure/--trainer
+  train                     train via --backend pjrt|native
+  verilog                   emit Verilog + testbench + synthesis script
+  mcm                       optimize --constants with --alg dbr|cse|exact
+flags: --structure 16-16-10 --trainer zaal|pytorch|matlab --runs N --seed N
+       --threads N --data-dir DIR --data-seed N --out DIR --eval native|pjrt"
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "flow" => cmd_flow(&args),
+        "train" => cmd_train(&args),
+        "verilog" => cmd_verilog(&args),
+        "mcm" => cmd_mcm(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}

@@ -1,0 +1,333 @@
+//! Greedy common-subexpression elimination over CSD digit terms — the
+//! role of the algorithms of Aksoy et al. [17]–[19] in the paper's flow
+//! (MCM, CAVM and CMVM all reduce to the same term-rewriting problem).
+//!
+//! Every output row starts as its CSD digit expansion (signed shifted
+//! inputs). The optimizer repeatedly finds the two-term pattern that
+//! occurs most often across all rows (up to shift and global sign),
+//! materializes it as a new element (one adder/subtractor), and rewrites
+//! the occurrences. Identical rows (common in layer weight matrices) are
+//! realized once. Remaining rows reduce with a chain of adds/subs.
+//!
+//! This greedy heuristic does not always match the exact algorithms the
+//! paper plugs in (e.g. it finds 6 ops for the Fig. 3 example where [18]
+//! finds 4 — see EXPERIMENTS.md), but it preserves the sharing trend:
+//! CMVM-level sharing beats CAVM-level sharing beats DBR.
+
+use super::dbr::{csd_terms, reduce_terms, Term};
+use super::graph::{AdderGraph, Op, Operand, OutputSpec};
+use super::LinearTargets;
+use crate::num::FxHashMap;
+
+/// A term over the *element* space (inputs + extracted subexpressions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ETerm {
+    elem: usize,
+    shift: u32,
+    sign: i8,
+}
+
+/// Canonical two-term pattern: first element at shift 0 with sign +1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+struct Pattern {
+    e1: usize,
+    e2: usize,
+    /// shift of e1 relative to the pattern base (one of s1, s2 is 0)
+    s1: u32,
+    s2: u32,
+    /// sign of e2 relative to e1 (+1 or -1)
+    rel_sign: i8,
+}
+
+
+/// How a new element was built: `value = (e1 << s1) + rel_sign*(e2 << s2)`.
+#[derive(Debug, Clone, Copy)]
+struct ElemDef {
+    e1: usize,
+    e2: usize,
+    s1: u32,
+    s2: u32,
+    rel_sign: i8,
+}
+
+fn canonicalize(a: ETerm, b: ETerm) -> (Pattern, u32, i8) {
+    // order by (elem, shift) so the same pair always keys identically
+    let (ta, tb) = if (a.elem, a.shift) <= (b.elem, b.shift) {
+        (a, b)
+    } else {
+        (b, a)
+    };
+    let base = ta.shift.min(tb.shift);
+    let pat = Pattern {
+        e1: ta.elem,
+        e2: tb.elem,
+        s1: ta.shift - base,
+        s2: tb.shift - base,
+        rel_sign: ta.sign * tb.sign,
+    };
+    // occurrence sign = sign of the leading (canonical-first) term
+    (pat, base, ta.sign)
+}
+
+/// Greedy CSE over [`LinearTargets`]. The returned graph is verified by
+/// construction helpers in tests; `verify_against` is cheap and callers
+/// in the hardware flow re-check it defensively.
+pub fn cse(targets: &LinearTargets) -> AdderGraph {
+    // rows over the element space; elements 0..n-1 are the inputs
+    let mut rows: Vec<Vec<ETerm>> = targets
+        .rows
+        .iter()
+        .map(|row| {
+            let mut terms = Vec::new();
+            for (k, &c) in row.iter().enumerate() {
+                for t in csd_terms(c, Operand::Input(k)) {
+                    terms.push(ETerm {
+                        elem: k,
+                        shift: t.shift,
+                        sign: t.sign,
+                    });
+                }
+            }
+            terms
+        })
+        .collect();
+
+    let num_inputs = targets.num_inputs;
+    let mut defs: Vec<ElemDef> = Vec::new(); // defs[i] defines element num_inputs + i
+
+    // iterated most-frequent-pattern extraction
+    loop {
+        let mut counts: FxHashMap<Pattern, usize> = FxHashMap::default();
+        for row in &rows {
+            for i in 0..row.len() {
+                for j in (i + 1)..row.len() {
+                    let (pat, _, _) = canonicalize(row[i], row[j]);
+                    *counts.entry(pat).or_insert(0) += 1;
+                }
+            }
+        }
+        // most frequent pattern; deterministic tie-break on the key
+        let best = counts
+            .iter()
+            .filter(|(_, &c)| c >= 2)
+            .max_by_key(|(pat, &c)| (c, std::cmp::Reverse(**pat)))
+            .map(|(p, _)| *p);
+        let Some(pat) = best else { break };
+
+        let new_elem = num_inputs + defs.len();
+        defs.push(ElemDef {
+            e1: pat.e1,
+            e2: pat.e2,
+            s1: pat.s1,
+            s2: pat.s2,
+            rel_sign: pat.rel_sign,
+        });
+
+        // rewrite non-overlapping occurrences in every row
+        for row in rows.iter_mut() {
+            let mut used = vec![false; row.len()];
+            let mut replacements: Vec<ETerm> = Vec::new();
+            for i in 0..row.len() {
+                if used[i] {
+                    continue;
+                }
+                for j in (i + 1)..row.len() {
+                    if used[j] {
+                        continue;
+                    }
+                    let (p, base, lead_sign) = canonicalize(row[i], row[j]);
+                    if p == pat {
+                        used[i] = true;
+                        used[j] = true;
+                        replacements.push(ETerm {
+                            elem: new_elem,
+                            shift: base,
+                            sign: lead_sign,
+                        });
+                        break;
+                    }
+                }
+            }
+            if !replacements.is_empty() {
+                let mut next: Vec<ETerm> = row
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !used[*i])
+                    .map(|(_, t)| *t)
+                    .collect();
+                next.extend(replacements);
+                *row = next;
+            }
+        }
+    }
+
+    // build the graph: elements first, in definition order
+    let mut g = AdderGraph::new(num_inputs);
+    let mut elem_ops: Vec<Operand> = (0..num_inputs).map(Operand::Input).collect();
+    for d in &defs {
+        let op = if d.rel_sign > 0 { Op::Add } else { Op::Sub };
+        let o = g.push(elem_ops[d.e1], d.s1, op, elem_ops[d.e2], d.s2);
+        elem_ops.push(o);
+    }
+
+    // realize rows; identical (up to shift and sign) rows share hardware
+    let mut memo: FxHashMap<Vec<(usize, u32, i8)>, (Operand, u32, bool)> = FxHashMap::default();
+    for row in &rows {
+        if row.is_empty() {
+            g.outputs.push(OutputSpec {
+                src: Operand::Input(0),
+                shift: 0,
+                negate: false,
+                is_zero: true,
+            });
+            continue;
+        }
+        // canonical signature: sorted, base shift removed, leading sign +
+        let base = row.iter().map(|t| t.shift).min().unwrap();
+        let mut sig: Vec<(usize, u32, i8)> =
+            row.iter().map(|t| (t.elem, t.shift - base, t.sign)).collect();
+        sig.sort();
+        let lead = sig[0].2;
+        if lead < 0 {
+            for s in sig.iter_mut() {
+                s.2 = -s.2;
+            }
+        }
+        let (src, extra_shift, mut negate) = if let Some(&(src, sh, neg)) = memo.get(&sig) {
+            (src, sh, neg)
+        } else {
+            let terms: Vec<Term> = sig
+                .iter()
+                .map(|&(e, sh, sg)| Term {
+                    operand: elem_ops[e],
+                    shift: sh,
+                    sign: sg,
+                })
+                .collect();
+            let r = reduce_terms(&mut g, &terms);
+            memo.insert(sig, r);
+            r
+        };
+        if lead < 0 {
+            negate = !negate;
+        }
+        g.outputs.push(OutputSpec {
+            src,
+            shift: extra_shift + base,
+            negate,
+            is_zero: false,
+        });
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcm::dbr::dbr;
+    use crate::num::Rng;
+
+    #[test]
+    fn paper_fig3_cse_beats_dbr() {
+        // paper Fig. 3: DBR = 8 ops; the exact algorithm of [18] = 4 ops.
+        // Our greedy digit CSE lands in between but must beat DBR.
+        let t = LinearTargets::cmvm(&[vec![11, 3], vec![5, 13]]);
+        let g = cse(&t);
+        g.verify_against(&t).unwrap();
+        assert!(
+            g.num_ops() < 8,
+            "cse found {} ops, expected < 8 (dbr)",
+            g.num_ops()
+        );
+        assert!(g.num_ops() >= 4, "cannot beat the exact optimum of 4");
+    }
+
+    #[test]
+    fn shares_repeated_constants() {
+        // MCM {5, 5, 10, -5}: one 5x node serves all four outputs
+        // (10x = 5x << 1, -5x = negate)
+        let t = LinearTargets::mcm(&[5, 5, 10, -5]);
+        let g = cse(&t);
+        g.verify_against(&t).unwrap();
+        assert_eq!(g.num_ops(), 1, "graph: {g:?}");
+    }
+
+    #[test]
+    fn classic_mcm_sharing() {
+        // {3, 7, 21}: DBR needs 1+1+2 = 4 ops (21 = 16+4+1 = CSD 3 digits
+        // -> 2 ops); sharing can do 3 (3x, 7x=8x-x, 21=3*7 via 3<<... ).
+        let t = LinearTargets::mcm(&[3, 7, 21]);
+        let gd = dbr(&t);
+        let gc = cse(&t);
+        gc.verify_against(&t).unwrap();
+        assert!(gc.num_ops() <= gd.num_ops());
+    }
+
+    #[test]
+    fn zero_and_power_of_two_rows() {
+        let t = LinearTargets::cmvm(&[vec![0, 0], vec![4, 0], vec![0, -2]]);
+        let g = cse(&t);
+        g.verify_against(&t).unwrap();
+        assert_eq!(g.num_ops(), 0);
+        assert!(g.outputs[0].is_zero);
+        assert_eq!(g.outputs[1].shift, 2);
+        assert!(g.outputs[2].negate);
+    }
+
+    #[test]
+    fn cse_never_worse_than_dbr_property() {
+        let mut rng = Rng::new(2024);
+        for iter in 0..150 {
+            let m = 1 + rng.below(5);
+            let n = 1 + rng.below(5);
+            let rows: Vec<Vec<i64>> = (0..m)
+                .map(|_| (0..n).map(|_| rng.below(1024) as i64 - 511).collect())
+                .collect();
+            let t = LinearTargets::cmvm(&rows);
+            let gd = dbr(&t);
+            let gc = cse(&t);
+            gc.verify_against(&t)
+                .unwrap_or_else(|e| panic!("iter {iter}: verify failed for {rows:?}: {e}"));
+            assert!(
+                gc.num_ops() <= gd.num_ops(),
+                "iter {iter}: cse {} > dbr {} for {rows:?}",
+                gc.num_ops(),
+                gd.num_ops()
+            );
+        }
+    }
+
+    #[test]
+    fn cmvm_sharing_beats_per_row_cavm_on_layer_matrices() {
+        // the paper's Fig. 16 vs 17 claim: optimizing the whole matrix
+        // exposes more sharing than optimizing each row separately
+        let mut rng = Rng::new(7);
+        let mut cmvm_total = 0usize;
+        let mut cavm_total = 0usize;
+        for _ in 0..20 {
+            let rows: Vec<Vec<i64>> = (0..8)
+                .map(|_| (0..8).map(|_| rng.below(256) as i64 - 127).collect())
+                .collect();
+            let t = LinearTargets::cmvm(&rows);
+            cmvm_total += cse(&t).num_ops();
+            for r in &rows {
+                cavm_total += cse(&LinearTargets::cavm(r)).num_ops();
+            }
+        }
+        assert!(
+            cmvm_total < cavm_total,
+            "cmvm {cmvm_total} !< cavm {cavm_total}"
+        );
+    }
+
+    #[test]
+    fn large_mcm_instance_verifies() {
+        // layer-scale MCM (SMAC_NEURON Fig. 18 sizes): 160 constants
+        let mut rng = Rng::new(9);
+        let consts: Vec<i64> = (0..160).map(|_| rng.below(512) as i64 - 255).collect();
+        let t = LinearTargets::mcm(&consts);
+        let g = cse(&t);
+        g.verify_against(&t).unwrap();
+        assert!(g.num_ops() < dbr(&t).num_ops());
+    }
+}

@@ -1,0 +1,174 @@
+//! Digit-based recoding [23] — the straightforward shift-adds baseline
+//! (paper Fig. 3(b)): write every coefficient in CSD, shift the input by
+//! each nonzero digit position, and add/subtract the shifted terms with a
+//! balanced tree. No sharing across coefficients or rows.
+
+use super::graph::{AdderGraph, Op, Operand, OutputSpec};
+use super::LinearTargets;
+use crate::num::Csd;
+
+/// One signed shifted term `sign * (operand << shift)`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Term {
+    pub operand: Operand,
+    pub shift: u32,
+    pub sign: i8,
+}
+
+/// Reduce a list of signed shifted terms to a single operand with a
+/// *balanced* tree of adds/subs — what retiming-driven synthesis builds
+/// for a multi-operand sum, and the reason behavioral designs have
+/// shorter combinational paths than subexpression-shared ones (paper
+/// Sec. VII: multiplierless designs trade latency for area). Returns
+/// `(operand, shift, negate)`; pushes `terms.len() - 1` nodes.
+pub(crate) fn reduce_terms(g: &mut AdderGraph, terms: &[Term]) -> (Operand, u32, bool) {
+    assert!(!terms.is_empty());
+    let mut level: Vec<Term> = terms.to_vec();
+    while level.len() > 1 {
+        let mut next: Vec<Term> = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.chunks(2);
+        for pair in &mut it {
+            if pair.len() == 1 {
+                next.push(pair[0]);
+                continue;
+            }
+            // order so the leading operand is positive when possible;
+            // two negatives build the positive mirror, negated downstream
+            let (a, b, sign) = if pair[0].sign > 0 {
+                (pair[0], pair[1], 1i8)
+            } else if pair[1].sign > 0 {
+                (pair[1], pair[0], 1i8)
+            } else {
+                (pair[0], pair[1], -1i8)
+            };
+            // factor out the common low shift so node widths stay tight
+            let common = a.shift.min(b.shift);
+            let op = if a.sign * b.sign > 0 { Op::Add } else { Op::Sub };
+            let node = g.push(a.operand, a.shift - common, op, b.operand, b.shift - common);
+            next.push(Term { operand: node, shift: common, sign });
+        }
+        level = next;
+    }
+    let t = level[0];
+    (t.operand, t.shift, t.sign < 0)
+}
+
+/// Expand coefficient `c` of input `k` into CSD terms over `Input(k)`.
+pub(crate) fn csd_terms(c: i64, operand: Operand) -> Vec<Term> {
+    Csd::from_int(c)
+        .terms()
+        .map(|(shift, sign)| Term {
+            operand,
+            shift: shift as u32,
+            sign,
+        })
+        .collect()
+}
+
+/// Digit-based recoding of a full [`LinearTargets`]: every output is an
+/// independent adder tree over the CSD digits of its coefficients.
+pub fn dbr(targets: &LinearTargets) -> AdderGraph {
+    let mut g = AdderGraph::new(targets.num_inputs);
+    for row in &targets.rows {
+        let mut terms: Vec<Term> = Vec::new();
+        for (k, &c) in row.iter().enumerate() {
+            terms.extend(csd_terms(c, Operand::Input(k)));
+        }
+        if terms.is_empty() {
+            g.outputs.push(OutputSpec {
+                src: Operand::Input(0),
+                shift: 0,
+                negate: false,
+                is_zero: true,
+            });
+            continue;
+        }
+        let (src, shift, negate) = reduce_terms(&mut g, &terms);
+        g.outputs.push(OutputSpec {
+            src,
+            shift,
+            negate,
+            is_zero: false,
+        });
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::Rng;
+
+    #[test]
+    fn paper_fig3_dbr_costs_8_ops() {
+        // y1 = 11x1 + 3x2, y2 = 5x1 + 13x2 — the DBR method finds a
+        // solution with a total of 8 operations (paper Fig. 3(b)).
+        let t = LinearTargets::cmvm(&[vec![11, 3], vec![5, 13]]);
+        let g = dbr(&t);
+        g.verify_against(&t).unwrap();
+        assert_eq!(g.num_ops(), 8);
+    }
+
+    #[test]
+    fn single_power_of_two_is_free() {
+        // y = 8x: pure wire shift, zero adders
+        let t = LinearTargets::mcm(&[8]);
+        let g = dbr(&t);
+        g.verify_against(&t).unwrap();
+        assert_eq!(g.num_ops(), 0);
+        assert_eq!(g.outputs[0].shift, 3);
+    }
+
+    #[test]
+    fn negative_constant() {
+        let t = LinearTargets::mcm(&[-6]);
+        let g = dbr(&t);
+        g.verify_against(&t).unwrap();
+        // -6 = -(2+4): CSD of -6 has 2 digits -> 1 op + negate flag
+        assert_eq!(g.num_ops(), 1);
+    }
+
+    #[test]
+    fn zero_row() {
+        let t = LinearTargets::cmvm(&[vec![0, 0]]);
+        let g = dbr(&t);
+        g.verify_against(&t).unwrap();
+        assert_eq!(g.num_ops(), 0);
+        assert!(g.outputs[0].is_zero);
+    }
+
+    #[test]
+    fn op_count_equals_tnzd_minus_rows_property() {
+        // DBR invariant: ops = tnzd - (number of nonzero rows)
+        let mut rng = Rng::new(123);
+        for _ in 0..200 {
+            let m = 1 + rng.below(4);
+            let n = 1 + rng.below(4);
+            let rows: Vec<Vec<i64>> = (0..m)
+                .map(|_| (0..n).map(|_| rng.below(512) as i64 - 255).collect())
+                .collect();
+            let t = LinearTargets::cmvm(&rows);
+            let g = dbr(&t);
+            g.verify_against(&t)
+                .unwrap_or_else(|e| panic!("verify failed for {rows:?}: {e}"));
+            let nonzero_rows = rows.iter().filter(|r| r.iter().any(|&c| c != 0)).count();
+            assert_eq!(g.num_ops(), t.tnzd().saturating_sub(nonzero_rows));
+        }
+    }
+
+    #[test]
+    fn random_verification_property() {
+        let mut rng = Rng::new(321);
+        for _ in 0..100 {
+            let n = 1 + rng.below(5);
+            let coeffs: Vec<i64> = (0..n).map(|_| rng.below(2048) as i64 - 1023).collect();
+            let t = LinearTargets::cavm(&coeffs);
+            let g = dbr(&t);
+            g.verify_against(&t).unwrap();
+            // concrete spot check
+            let xs: Vec<i128> = (0..n).map(|_| rng.below(255) as i128 - 127).collect();
+            let want: i128 = coeffs.iter().zip(&xs).map(|(&c, &x)| c as i128 * x).sum();
+            assert_eq!(g.eval(&xs)[0], want);
+        }
+    }
+}

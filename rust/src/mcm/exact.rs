@@ -1,0 +1,452 @@
+//! MCM optimization over fundamentals — the role of the exact algorithm
+//! of [17] in the paper's SMAC_NEURON multiplierless flow (Sec. V-B).
+//!
+//! Constants are normalized to positive odd *fundamentals*; the search
+//! builds a set of fundamentals reachable from 1 with A-operations
+//! `f = (a << s) ± b` (s >= 1, keeping every node odd so the adder graph
+//! needs only left shifts). Two engines:
+//!
+//! - [`exact_mcm`]: iterative-deepening exhaustive search with a node
+//!   budget — exact for the small instances where the paper's [17] is
+//!   practical, returns `None` when the budget trips;
+//! - [`heuristic_mcm`]: RAG-n/Hcub-style greedy: synthesize every target
+//!   reachable in one A-op, otherwise insert the intermediate fundamental
+//!   that unlocks the most targets, with a CSD-split fallback that
+//!   guarantees progress.
+//!
+//! [`optimize_mcm`] picks the exact engine when the instance is small and
+//! falls back to the heuristic (documented substitution — DESIGN.md).
+
+use super::graph::{AdderGraph, Op, Operand, OutputSpec};
+use super::LinearTargets;
+use crate::num::Csd;
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+/// Normalize to the positive odd fundamental: `(fundamental, shift, negate)`
+/// with `c = ±(fundamental << shift)`. Zero maps to `(0, 0, false)`.
+pub fn odd_normalize(c: i64) -> (u64, u32, bool) {
+    if c == 0 {
+        return (0, 0, false);
+    }
+    let negate = c < 0;
+    let mag = c.unsigned_abs();
+    let shift = mag.trailing_zeros();
+    (mag >> shift, shift, negate)
+}
+
+/// How one fundamental is synthesized from earlier ones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Synth {
+    /// f = (a << s) + sign * b, with a, b already-available fundamentals
+    a: u64,
+    s: u32,
+    b: u64,
+    /// +1: add, -1: subtract b, 0 means "b - (a<<s)" (reverse subtract)
+    mode: i8,
+}
+
+fn synth_value(sy: &Synth) -> u64 {
+    let av = (sy.a as i64) << sy.s;
+    let bv = sy.b as i64;
+    let v = match sy.mode {
+        1 => av + bv,
+        -1 => av - bv,
+        0 => bv - av,
+        _ => unreachable!(),
+    };
+    v as u64
+}
+
+/// All A-op results over `set`, bounded by `limit`.
+fn a_ops(set: &BTreeSet<u64>, limit: u64, max_shift: u32) -> HashMap<u64, Synth> {
+    let mut out: HashMap<u64, Synth> = HashMap::new();
+    for &a in set {
+        for &b in set {
+            for s in 1..=max_shift {
+                let shifted = (a as u128) << s;
+                if shifted > limit as u128 * 2 {
+                    break;
+                }
+                let shifted = shifted as i64;
+                for (mode, v) in [
+                    (1i8, shifted + b as i64),
+                    (-1i8, shifted - b as i64),
+                    (0i8, b as i64 - shifted),
+                ] {
+                    if v > 0 && (v as u64) <= limit && v % 2 == 1 {
+                        let v = v as u64;
+                        if !set.contains(&v) {
+                            out.entry(v).or_insert(Synth { a, s, b, mode });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Exhaustive IDDFS over fundamental sets. Returns the synthesis order
+/// (each entry: fundamental + its A-op) or `None` if `node_budget`
+/// expansions were not enough at the optimal depth.
+pub fn exact_mcm(targets: &BTreeSet<u64>, max_bits: u32, node_budget: usize) -> Option<Vec<(u64, Synth)>> {
+    let limit = 1u64 << (max_bits + 1);
+    let max_shift = max_bits + 1;
+    let pending: BTreeSet<u64> = targets.iter().cloned().filter(|&t| t != 1).collect();
+    if pending.is_empty() {
+        return Some(Vec::new());
+    }
+    let lower = pending.len();
+    // a generous upper bound comes from the heuristic
+    let upper = heuristic_mcm(targets, max_bits).len();
+    let mut budget = node_budget;
+
+    for depth in lower..=upper {
+        let mut base: BTreeSet<u64> = BTreeSet::new();
+        base.insert(1);
+        let mut seen: HashSet<Vec<u64>> = HashSet::new();
+        let mut order: Vec<(u64, Synth)> = Vec::new();
+        if dfs(&mut base, &pending, depth, &mut order, &mut budget, limit, max_shift, &mut seen) {
+            return Some(order);
+        }
+        if budget == 0 {
+            return None;
+        }
+    }
+    None
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dfs(
+    set: &mut BTreeSet<u64>,
+    targets: &BTreeSet<u64>,
+    depth: usize,
+    order: &mut Vec<(u64, Synth)>,
+    budget: &mut usize,
+    limit: u64,
+    max_shift: u32,
+    seen: &mut HashSet<Vec<u64>>,
+) -> bool {
+    let missing: Vec<u64> = targets.iter().filter(|t| !set.contains(t)).cloned().collect();
+    if missing.is_empty() {
+        return true;
+    }
+    if missing.len() > depth || *budget == 0 {
+        return false;
+    }
+    *budget = budget.saturating_sub(1);
+    // canonical visited-set memo (per remaining depth via key suffix)
+    let mut key: Vec<u64> = set.iter().cloned().collect();
+    key.push(depth as u64 | (1 << 63));
+    if !seen.insert(key) {
+        return false;
+    }
+
+    let cands = a_ops(set, limit, max_shift);
+    // targets first, then intermediates ascending
+    let mut ordered: Vec<(u64, Synth)> = cands.into_iter().collect();
+    ordered.sort_by_key(|(v, _)| (!targets.contains(v), *v));
+    for (v, sy) in ordered {
+        set.insert(v);
+        order.push((v, sy));
+        if dfs(set, targets, depth - 1, order, budget, limit, max_shift, seen) {
+            return true;
+        }
+        order.pop();
+        set.remove(&v);
+    }
+    false
+}
+
+/// RAG-n/Hcub-style greedy synthesis. Always succeeds; the CSD-split
+/// fallback strictly reduces the remaining digit count each round.
+pub fn heuristic_mcm(targets: &BTreeSet<u64>, max_bits: u32) -> Vec<(u64, Synth)> {
+    let limit = 1u64 << (max_bits + 2);
+    let max_shift = max_bits + 2;
+    let mut set: BTreeSet<u64> = BTreeSet::new();
+    set.insert(1);
+    let mut pending: BTreeSet<u64> = targets.iter().cloned().filter(|&t| t != 1).collect();
+    let mut order: Vec<(u64, Synth)> = Vec::new();
+
+    while !pending.is_empty() {
+        // phase 1: pull in every target one A-op away (the synths in
+        // `cands` only reference pre-existing set members, so a batch
+        // insert stays valid without recomputing)
+        loop {
+            let cands = a_ops(&set, limit, max_shift);
+            let hit: Vec<u64> = pending.iter().filter(|t| cands.contains_key(t)).cloned().collect();
+            if hit.is_empty() {
+                break;
+            }
+            for t in hit {
+                let sy = cands[&t];
+                set.insert(t);
+                order.push((t, sy));
+                pending.remove(&t);
+            }
+        }
+        if pending.is_empty() {
+            break;
+        }
+        // phase 2: best intermediate = candidate unlocking most targets.
+        // Only A-ops *involving the new candidate c* can unlock a target,
+        // so the benefit test pairs c against R ∪ {c} directly instead of
+        // recomputing the full closure (O(|R|·smax) per candidate).
+        let cands = a_ops(&set, limit, max_shift);
+        let mut best: Option<(usize, u64, Synth)> = None;
+        for (&c, &sy) in cands.iter() {
+            let mut unlocked = 0usize;
+            for &t in pending.iter() {
+                if reachable_with(c, t, &set, max_shift) {
+                    unlocked += 1;
+                }
+            }
+            if unlocked > 0 {
+                let better = match best {
+                    None => true,
+                    Some((u, v, _)) => (unlocked, std::cmp::Reverse(c)) > (u, std::cmp::Reverse(v)),
+                };
+                if better {
+                    best = Some((unlocked, c, sy));
+                }
+            }
+        }
+        if let Some((_, c, sy)) = best {
+            set.insert(c);
+            order.push((c, sy));
+            continue;
+        }
+        // phase 3 (fallback): split the cheapest pending target via CSD —
+        // add the partial sum of its two lowest digits as a fundamental
+        let t = *pending.iter().next().unwrap();
+        let csd = Csd::from_int(t as i64);
+        let terms: Vec<(usize, i8)> = csd.terms().collect();
+        debug_assert!(terms.len() >= 2, "1-digit targets are never pending");
+        let (s0, g0) = terms[0];
+        let (s1, g1) = terms[1];
+        // partial = g0*2^s0 + g1*2^s1, odd-normalized (s0 < s1, so the
+        // partial is 2^s0 * (g0 + g1*2^(s1-s0)) with odd second factor)
+        let raw = (g0 as i64) * (1 << s0) + (g1 as i64) * (1 << s1);
+        let (f, _, _) = odd_normalize(raw);
+        if f != 1 && !set.contains(&f) {
+            // f = |g0 + g1*2^(s1-s0)| = (1 << (s1-s0)) ± 1
+            let s = (s1 - s0) as u32;
+            let mode = if g0 == g1 { 1 } else { -1 };
+            let sy = Synth { a: 1, s, b: 1, mode };
+            debug_assert_eq!(synth_value(&sy), f);
+            set.insert(f);
+            order.push((f, sy));
+        } else {
+            // degenerate: give up on sharing for t, synthesize via DBR
+            // chain of its digits (guaranteed representable)
+            let mut acc = (g0 as i64) * (1 << s0);
+            for &(s, g) in &terms[1..] {
+                acc += (g as i64) * (1 << s);
+                let (f, _, _) = odd_normalize(acc);
+                if f > 1 && !set.contains(&f) {
+                    // realized below by generic a_ops next round; force
+                    // insertion via direct two-term synth when possible
+                    if let Some(sy) = cands_for(&set, f, limit, max_shift) {
+                        set.insert(f);
+                        order.push((f, sy));
+                    }
+                }
+            }
+            // if even that failed, ensure progress by inserting the
+            // two-digit partial of the *highest* digits
+            if !set.contains(&t) && a_ops(&set, limit, max_shift).get(&t).is_none() {
+                let (sa, ga) = terms[terms.len() - 2];
+                let (sb, gb) = terms[terms.len() - 1];
+                let raw = (ga as i64) * (1 << sa) + (gb as i64) * (1 << sb);
+                let (f, _, _) = odd_normalize(raw);
+                if f > 1 && !set.contains(&f) {
+                    let s = (sb - sa) as u32;
+                    let mode = if ga == gb { 1 } else { -1 };
+                    set.insert(f);
+                    order.push((f, Synth { a: 1, s, b: 1, mode }));
+                }
+            }
+        }
+    }
+    order
+}
+
+fn cands_for(set: &BTreeSet<u64>, f: u64, limit: u64, max_shift: u32) -> Option<Synth> {
+    a_ops(set, limit, max_shift).get(&f).copied()
+}
+
+/// Can target `t` be formed by one A-op that involves `c` (with the other
+/// operand in `set` ∪ {c})? Equivalent to `t ∈ A-ops(set ∪ {c}) \ A-ops(set)`
+/// for the unlock test, but O(|set|·max_shift) instead of O(|set|²·max_shift).
+fn reachable_with(c: u64, t: u64, set: &BTreeSet<u64>, max_shift: u32) -> bool {
+    let t = t as i64;
+    let check = |a: u64, b: u64| -> bool {
+        for s in 1..=max_shift {
+            let av = (a as i128) << s;
+            if av > (1i128 << 40) {
+                break;
+            }
+            let av = av as i64;
+            let bv = b as i64;
+            if av + bv == t || av - bv == t || bv - av == t {
+                return true;
+            }
+        }
+        false
+    };
+    if check(c, c) {
+        return true;
+    }
+    for &b in set {
+        if check(c, b) || check(b, c) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Effort knob for [`optimize_mcm`].
+#[derive(Debug, Clone, Copy)]
+pub enum Effort {
+    /// bounded-exact with this expansion budget, heuristic fallback
+    Exact { node_budget: usize },
+    Heuristic,
+    /// exact for <= 5 fundamentals of <= 10 bits, heuristic otherwise
+    Auto,
+}
+
+/// Build the multiplierless MCM block `y_j = c_j · x` as an adder graph.
+pub fn optimize_mcm(constants: &[i64], effort: Effort) -> AdderGraph {
+    let mut fundamentals: BTreeSet<u64> = BTreeSet::new();
+    let mut max_bits = 1u32;
+    for &c in constants {
+        let (f, _, _) = odd_normalize(c);
+        if f > 1 {
+            fundamentals.insert(f);
+        }
+        max_bits = max_bits.max(64 - (c.unsigned_abs()).leading_zeros());
+    }
+
+    let order = match effort {
+        Effort::Heuristic => heuristic_mcm(&fundamentals, max_bits),
+        Effort::Exact { node_budget } => exact_mcm(&fundamentals, max_bits, node_budget)
+            .unwrap_or_else(|| heuristic_mcm(&fundamentals, max_bits)),
+        Effort::Auto => {
+            if fundamentals.len() <= 5 && max_bits <= 10 {
+                exact_mcm(&fundamentals, max_bits, 150_000)
+                    .unwrap_or_else(|| heuristic_mcm(&fundamentals, max_bits))
+            } else {
+                heuristic_mcm(&fundamentals, max_bits)
+            }
+        }
+    };
+
+    // assemble the graph
+    let mut g = AdderGraph::new(1);
+    let mut where_is: HashMap<u64, Operand> = HashMap::new();
+    where_is.insert(1, Operand::Input(0));
+    for (f, sy) in &order {
+        let a = where_is[&sy.a];
+        let b = where_is[&sy.b];
+        let o = match sy.mode {
+            1 => g.push(a, sy.s, Op::Add, b, 0),
+            -1 => g.push(a, sy.s, Op::Sub, b, 0),
+            0 => g.push(b, 0, Op::Sub, a, sy.s),
+            _ => unreachable!(),
+        };
+        where_is.insert(*f, o);
+    }
+    for &c in constants {
+        let (f, shift, negate) = odd_normalize(c);
+        if f == 0 {
+            g.outputs.push(OutputSpec {
+                src: Operand::Input(0),
+                shift: 0,
+                negate: false,
+                is_zero: true,
+            });
+        } else {
+            g.outputs.push(OutputSpec {
+                src: where_is[&f],
+                shift,
+                negate,
+                is_zero: false,
+            });
+        }
+    }
+    debug_assert!(g.verify_against(&LinearTargets::mcm(constants)).is_ok());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcm::dbr::dbr;
+    use crate::num::Rng;
+
+    #[test]
+    fn odd_normalization() {
+        assert_eq!(odd_normalize(20), (5, 2, false));
+        assert_eq!(odd_normalize(-24), (3, 3, true));
+        assert_eq!(odd_normalize(1), (1, 0, false));
+        assert_eq!(odd_normalize(0), (0, 0, false));
+    }
+
+    #[test]
+    fn exact_known_optima() {
+        // 45 = (1<<5) + 13? classic: 45x needs 2 adders (45 = 5*9,
+        // 5 = 4+1, 9 = 8+1 => (x<<2+x) etc.)
+        let g = optimize_mcm(&[45], Effort::Exact { node_budget: 100_000 });
+        g.verify_against(&LinearTargets::mcm(&[45])).unwrap();
+        assert_eq!(g.num_ops(), 2);
+        // 3, 5, 7 each 1 adder from x
+        let g = optimize_mcm(&[3, 5, 7], Effort::Exact { node_budget: 100_000 });
+        assert_eq!(g.num_ops(), 3);
+        // {3, 6, 12}: one fundamental (3), shifts for the rest
+        let g = optimize_mcm(&[3, 6, 12], Effort::Auto);
+        assert_eq!(g.num_ops(), 1);
+    }
+
+    #[test]
+    fn exact_beats_csd_when_sharing_helps() {
+        // 105 = 3*5*7: CSD(105) = 128-16-8+1 (4 digits -> 3 ops);
+        // via fundamentals: 105 = 7*15: 7=8-1, 15*7 = (7<<4)-7 -> 2 ops
+        let g = optimize_mcm(&[105], Effort::Exact { node_budget: 200_000 });
+        g.verify_against(&LinearTargets::mcm(&[105])).unwrap();
+        assert_eq!(g.num_ops(), 2);
+    }
+
+    #[test]
+    fn heuristic_handles_layer_scale() {
+        let mut rng = Rng::new(31);
+        let consts: Vec<i64> = (0..120).map(|_| rng.below(1024) as i64 - 511).collect();
+        let t = LinearTargets::mcm(&consts);
+        let g = optimize_mcm(&consts, Effort::Heuristic);
+        g.verify_against(&t).unwrap();
+        assert!(
+            g.num_ops() <= dbr(&t).num_ops(),
+            "heuristic {} worse than dbr {}",
+            g.num_ops(),
+            dbr(&t).num_ops()
+        );
+    }
+
+    #[test]
+    fn heuristic_correct_on_random_sets_property() {
+        let mut rng = Rng::new(63);
+        for _ in 0..60 {
+            let k = 1 + rng.below(10);
+            let consts: Vec<i64> = (0..k).map(|_| rng.below(4096) as i64 - 2047).collect();
+            let g = optimize_mcm(&consts, Effort::Heuristic);
+            g.verify_against(&LinearTargets::mcm(&consts))
+                .unwrap_or_else(|e| panic!("{consts:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn zero_and_one_constants() {
+        let g = optimize_mcm(&[0, 1, -1, 2, -4], Effort::Auto);
+        g.verify_against(&LinearTargets::mcm(&[0, 1, -1, 2, -4])).unwrap();
+        assert_eq!(g.num_ops(), 0);
+    }
+}

@@ -1,0 +1,378 @@
+//! Adder-graph intermediate representation for shift-adds networks.
+//!
+//! Every node computes `(a << sa) op (b << sb)` over earlier nodes or
+//! primary inputs; shifts are wires (zero hardware cost — paper Sec. II-B),
+//! adds/subs are the counted operations. The graph carries, per node, the
+//! exact linear coefficient vector over the inputs, which makes
+//! verification (`verify_against`) and bit-width sizing (`node_range`)
+//! exact rather than sampled.
+
+use super::LinearTargets;
+
+/// Reference to a value in the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operand {
+    /// primary input `x_k`
+    Input(usize),
+    /// intermediate node by index
+    Node(usize),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    Add,
+    Sub,
+}
+
+/// One addition/subtraction: `value = (a << sa) op (b << sb)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Node {
+    pub a: Operand,
+    pub sa: u32,
+    pub op: Op,
+    pub b: Operand,
+    pub sb: u32,
+}
+
+/// How an output is tapped from the graph: `y = (src << shift)`, negated
+/// if `negate` (sign absorption by the consumer — e.g. the accumulating
+/// adder subtracts instead of adding — is free; see module docs of
+/// `mcm`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutputSpec {
+    pub src: Operand,
+    pub shift: u32,
+    pub negate: bool,
+    /// output of constant zero (a row with all-zero coefficients)
+    pub is_zero: bool,
+}
+
+/// A shift-adds network realizing a [`LinearTargets`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdderGraph {
+    pub num_inputs: usize,
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<OutputSpec>,
+}
+
+impl AdderGraph {
+    pub fn new(num_inputs: usize) -> Self {
+        AdderGraph {
+            num_inputs,
+            nodes: Vec::new(),
+            outputs: Vec::new(),
+        }
+    }
+
+    /// Number of addition/subtraction operations (the paper's cost metric).
+    pub fn num_ops(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Push a node, returning its operand handle.
+    pub fn push(&mut self, a: Operand, sa: u32, op: Op, b: Operand, sb: u32) -> Operand {
+        self.nodes.push(Node { a, sa, op, b, sb });
+        Operand::Node(self.nodes.len() - 1)
+    }
+
+    /// Evaluate all nodes for concrete input values (i128 to keep the
+    /// verification headroom for large shifts).
+    pub fn eval_nodes(&self, inputs: &[i128]) -> Vec<i128> {
+        assert_eq!(inputs.len(), self.num_inputs);
+        let mut vals: Vec<i128> = Vec::with_capacity(self.nodes.len());
+        let get = |o: Operand, vals: &Vec<i128>| -> i128 {
+            match o {
+                Operand::Input(i) => inputs[i],
+                Operand::Node(i) => vals[i],
+            }
+        };
+        for n in &self.nodes {
+            let a = get(n.a, &vals) << n.sa;
+            let b = get(n.b, &vals) << n.sb;
+            vals.push(match n.op {
+                Op::Add => a + b,
+                Op::Sub => a - b,
+            });
+        }
+        vals
+    }
+
+    /// Evaluate the outputs for concrete input values.
+    pub fn eval(&self, inputs: &[i128]) -> Vec<i128> {
+        let vals = self.eval_nodes(inputs);
+        self.outputs
+            .iter()
+            .map(|o| {
+                if o.is_zero {
+                    return 0;
+                }
+                let v = match o.src {
+                    Operand::Input(i) => inputs[i],
+                    Operand::Node(i) => vals[i],
+                } << o.shift;
+                if o.negate {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    /// Exact linear coefficient vector (over the primary inputs) of every
+    /// node, computed symbolically.
+    pub fn node_coefficients(&self) -> Vec<Vec<i64>> {
+        let mut coeffs: Vec<Vec<i64>> = Vec::with_capacity(self.nodes.len());
+        let get = |o: Operand, coeffs: &Vec<Vec<i64>>| -> Vec<i64> {
+            match o {
+                Operand::Input(i) => {
+                    let mut v = vec![0i64; self.num_inputs];
+                    v[i] = 1;
+                    v
+                }
+                Operand::Node(i) => coeffs[i].clone(),
+            }
+        };
+        for n in &self.nodes {
+            let ca = get(n.a, &coeffs);
+            let cb = get(n.b, &coeffs);
+            let mut c = vec![0i64; self.num_inputs];
+            for k in 0..self.num_inputs {
+                let a = ca[k] << n.sa;
+                let b = cb[k] << n.sb;
+                c[k] = match n.op {
+                    Op::Add => a + b,
+                    Op::Sub => a - b,
+                };
+            }
+            coeffs.push(c);
+        }
+        coeffs
+    }
+
+    /// Coefficient vector of each output.
+    pub fn output_coefficients(&self) -> Vec<Vec<i64>> {
+        let coeffs = self.node_coefficients();
+        self.outputs
+            .iter()
+            .map(|o| {
+                if o.is_zero {
+                    return vec![0i64; self.num_inputs];
+                }
+                let base = match o.src {
+                    Operand::Input(i) => {
+                        let mut v = vec![0i64; self.num_inputs];
+                        v[i] = 1;
+                        v
+                    }
+                    Operand::Node(i) => coeffs[i].clone(),
+                };
+                base.iter()
+                    .map(|&c| {
+                        let v = c << o.shift;
+                        if o.negate {
+                            -v
+                        } else {
+                            v
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Verify the graph realizes `targets` exactly (symbolically).
+    pub fn verify_against(&self, targets: &LinearTargets) -> anyhow::Result<()> {
+        anyhow::ensure!(self.num_inputs == targets.num_inputs, "input arity mismatch");
+        let got = self.output_coefficients();
+        anyhow::ensure!(
+            got.len() == targets.rows.len(),
+            "output arity mismatch: {} vs {}",
+            got.len(),
+            targets.rows.len()
+        );
+        for (j, (g, t)) in got.iter().zip(&targets.rows).enumerate() {
+            anyhow::ensure!(g == t, "output {j}: graph computes {g:?}, target {t:?}");
+        }
+        Ok(())
+    }
+
+    /// Adder-step depth of each node (inputs have depth 0). The maximum is
+    /// the combinational depth of the shift-adds network, which drives the
+    /// latency increase the paper reports for multiplierless designs.
+    pub fn node_depths(&self) -> Vec<u32> {
+        let mut depths: Vec<u32> = Vec::with_capacity(self.nodes.len());
+        let get = |o: Operand, d: &Vec<u32>| -> u32 {
+            match o {
+                Operand::Input(_) => 0,
+                Operand::Node(i) => d[i],
+            }
+        };
+        for n in &self.nodes {
+            let d = get(n.a, &depths).max(get(n.b, &depths)) + 1;
+            depths.push(d);
+        }
+        depths
+    }
+
+    /// Maximum adder depth over all outputs.
+    pub fn depth(&self) -> u32 {
+        let depths = self.node_depths();
+        self.outputs
+            .iter()
+            .filter(|o| !o.is_zero)
+            .map(|o| match o.src {
+                Operand::Input(_) => 0,
+                Operand::Node(i) => depths[i],
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// (min, max) value of every node given per-input ranges — exact
+    /// interval propagation through the linear coefficients, used by the
+    /// hardware model to size each adder.
+    pub fn node_range(&self, input_ranges: &[(i64, i64)]) -> Vec<(i64, i64)> {
+        assert_eq!(input_ranges.len(), self.num_inputs);
+        self.node_coefficients()
+            .iter()
+            .map(|c| {
+                let (mut lo, mut hi) = (0i64, 0i64);
+                for (k, &ck) in c.iter().enumerate() {
+                    let (ilo, ihi) = input_ranges[k];
+                    if ck >= 0 {
+                        lo += ck * ilo;
+                        hi += ck * ihi;
+                    } else {
+                        lo += ck * ihi;
+                        hi += ck * ilo;
+                    }
+                }
+                (lo, hi)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::Rng;
+
+    /// Build by hand: y0 = 5*x0 (= x0 + x0<<2), y1 = 3*x0 (= x0<<2 - x0).
+    fn hand_graph() -> AdderGraph {
+        let mut g = AdderGraph::new(1);
+        let n5 = g.push(Operand::Input(0), 0, Op::Add, Operand::Input(0), 2);
+        let n3 = g.push(Operand::Input(0), 2, Op::Sub, Operand::Input(0), 0);
+        g.outputs.push(OutputSpec { src: n5, shift: 0, negate: false, is_zero: false });
+        g.outputs.push(OutputSpec { src: n3, shift: 0, negate: false, is_zero: false });
+        g
+    }
+
+    #[test]
+    fn eval_and_coefficients() {
+        let g = hand_graph();
+        assert_eq!(g.eval(&[7]), vec![35, 21]);
+        assert_eq!(g.output_coefficients(), vec![vec![5], vec![3]]);
+        assert_eq!(g.num_ops(), 2);
+        assert_eq!(g.depth(), 1);
+    }
+
+    #[test]
+    fn verify_catches_mismatch() {
+        let g = hand_graph();
+        let good = LinearTargets::mcm(&[5, 3]);
+        let bad = LinearTargets::mcm(&[5, 7]);
+        assert!(g.verify_against(&good).is_ok());
+        assert!(g.verify_against(&bad).is_err());
+    }
+
+    #[test]
+    fn output_modifiers() {
+        let mut g = hand_graph();
+        g.outputs[0].shift = 3; // 5 << 3 = 40
+        g.outputs[1].negate = true; // -3
+        assert_eq!(g.output_coefficients(), vec![vec![40], vec![-3]]);
+        g.outputs.push(OutputSpec {
+            src: Operand::Input(0),
+            shift: 0,
+            negate: false,
+            is_zero: true,
+        });
+        assert_eq!(g.eval(&[9])[2], 0);
+    }
+
+    #[test]
+    fn symbolic_matches_concrete_eval_property() {
+        // property: for random graphs, symbolic coefficients agree with
+        // concrete evaluation on random inputs
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let num_inputs = 1 + rng.below(4);
+            let mut g = AdderGraph::new(num_inputs);
+            let nops = 1 + rng.below(6);
+            for _ in 0..nops {
+                let pick = |rng: &mut Rng, g: &AdderGraph| -> Operand {
+                    let total = g.num_inputs + g.nodes.len();
+                    let i = rng.below(total);
+                    if i < g.num_inputs {
+                        Operand::Input(i)
+                    } else {
+                        Operand::Node(i - g.num_inputs)
+                    }
+                };
+                let a = pick(&mut rng, &g);
+                let b = pick(&mut rng, &g);
+                let op = if rng.uniform() < 0.5 { Op::Add } else { Op::Sub };
+                let sa = rng.below(5) as u32;
+                let sb = rng.below(5) as u32;
+                g.push(a, sa, op, b, sb);
+            }
+            g.outputs.push(OutputSpec {
+                src: Operand::Node(g.nodes.len() - 1),
+                shift: rng.below(3) as u32,
+                negate: rng.uniform() < 0.5,
+                is_zero: false,
+            });
+            let coeffs = g.output_coefficients();
+            let xs: Vec<i128> = (0..num_inputs).map(|_| rng.below(255) as i128 - 127).collect();
+            let got = g.eval(&xs)[0];
+            let want: i128 = coeffs[0]
+                .iter()
+                .zip(&xs)
+                .map(|(&c, &x)| c as i128 * x)
+                .sum();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn interval_propagation_is_sound_property() {
+        let mut rng = Rng::new(99);
+        for _ in 0..100 {
+            let mut g = AdderGraph::new(2);
+            for _ in 0..4 {
+                let total = 2 + g.nodes.len();
+                let ai = rng.below(total);
+                let bi = rng.below(total);
+                let a = if ai < 2 { Operand::Input(ai) } else { Operand::Node(ai - 2) };
+                let b = if bi < 2 { Operand::Input(bi) } else { Operand::Node(bi - 2) };
+                let op = if rng.uniform() < 0.5 { Op::Add } else { Op::Sub };
+                g.push(a, rng.below(4) as u32, op, b, rng.below(4) as u32);
+            }
+            let ranges = vec![(-128i64, 127i64), (0i64, 127i64)];
+            let bounds = g.node_range(&ranges);
+            for _ in 0..50 {
+                let x0 = rng.below(256) as i128 - 128;
+                let x1 = rng.below(128) as i128;
+                let vals = g.eval_nodes(&[x0, x1]);
+                for (v, &(lo, hi)) in vals.iter().zip(&bounds) {
+                    assert!(
+                        *v >= lo as i128 && *v <= hi as i128,
+                        "value {v} outside [{lo}, {hi}]"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Multiplierless constant multiplication (paper Sec. II-B and V).
+//!
+//! Everything here optimizes one problem: realize a set of linear forms
+//! `y_j = Σ_k c_jk · x_k` (constant integer matrix × input vector) using
+//! only additions, subtractions and wire shifts. The four classes of the
+//! paper are special cases of [`LinearTargets`]:
+//!
+//! - SCM:  m = 1, n = 1
+//! - MCM:  m > 1, n = 1 (a constant set times one variable)
+//! - CAVM: m = 1, n > 1 (one inner product)
+//! - CMVM: m > 1, n > 1 (a layer's worth of inner products)
+//!
+//! Optimizers:
+//! - [`dbr`]: digit-based recoding baseline [23] (CSD digits, no sharing)
+//! - [`cse`]: greedy common-subexpression elimination in the spirit of
+//!   Aksoy et al. [17]–[19] (digit-pattern sharing + single-op row reuse)
+//! - [`optimize_mcm`]: exact MCM search for small instances (the role of
+//!   [17]) with a graph-heuristic fallback
+
+pub mod cse;
+pub mod dbr;
+pub mod exact;
+pub mod graph;
+
+pub use graph::{AdderGraph, Node, Op, Operand, OutputSpec};
+
+/// A constant matrix–vector multiplication target: `rows[j][k]` is the
+/// integer coefficient of input `k` in output `j`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinearTargets {
+    pub num_inputs: usize,
+    pub rows: Vec<Vec<i64>>,
+}
+
+impl LinearTargets {
+    pub fn new(num_inputs: usize, rows: Vec<Vec<i64>>) -> Self {
+        assert!(rows.iter().all(|r| r.len() == num_inputs));
+        LinearTargets { num_inputs, rows }
+    }
+
+    /// MCM: multiply one variable by each constant in `constants`.
+    pub fn mcm(constants: &[i64]) -> Self {
+        LinearTargets {
+            num_inputs: 1,
+            rows: constants.iter().map(|&c| vec![c]).collect(),
+        }
+    }
+
+    /// CAVM: a single inner product with coefficient array `coeffs`.
+    pub fn cavm(coeffs: &[i64]) -> Self {
+        LinearTargets {
+            num_inputs: coeffs.len(),
+            rows: vec![coeffs.to_vec()],
+        }
+    }
+
+    /// CMVM: the general matrix case.
+    pub fn cmvm(matrix: &[Vec<i64>]) -> Self {
+        let n = matrix.first().map_or(0, |r| r.len());
+        LinearTargets::new(n, matrix.to_vec())
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// tnzd of the coefficient matrix (the DBR op-count upper bound).
+    pub fn tnzd(&self) -> usize {
+        crate::num::csd::tnzd(self.rows.iter().flatten().cloned())
+    }
+}
+
+pub use cse::cse;
+pub use dbr::dbr;
+pub use exact::{optimize_mcm, Effort};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_constructors() {
+        let m = LinearTargets::mcm(&[3, 5, 7]);
+        assert_eq!(m.num_inputs, 1);
+        assert_eq!(m.num_outputs(), 3);
+        let a = LinearTargets::cavm(&[1, -2, 4]);
+        assert_eq!(a.num_inputs, 3);
+        assert_eq!(a.num_outputs(), 1);
+        let c = LinearTargets::cmvm(&[vec![11, 3], vec![5, 13]]);
+        assert_eq!(c.num_inputs, 2);
+        assert_eq!(c.num_outputs(), 2);
+        // paper Fig. 3: tnzd of {11,3,5,13} under CSD = 3+2+2+3 = 10
+        assert_eq!(c.tnzd(), 10);
+    }
+}

@@ -1,0 +1,156 @@
+//! Canonical signed digit (CSD) representation.
+//!
+//! A CSD form writes an integer as `sum_i d_i 2^i` with `d_i in {-1,0,1}`
+//! and no two adjacent nonzero digits. It is the minimal-nonzero-digit
+//! signed-digit representation, which is why the paper uses the total
+//! number of nonzero digits (`tnzd`) as its high-level hardware cost and
+//! why the parallel-architecture tuner (Sec. IV-B) removes the least
+//! significant nonzero CSD digit of a weight.
+
+/// CSD representation of a (possibly negative) integer.
+///
+/// `digits[i]` is the digit of weight `2^i`; only `-1`, `0`, `1` appear and
+/// the canonical non-adjacency property holds for values produced by
+/// [`Csd::from_int`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csd {
+    pub digits: Vec<i8>,
+}
+
+impl Csd {
+    /// Encode `v` in CSD. Standard algorithm: scan from LSB; a run of ones
+    /// `...0111` is rewritten as `...100-1`.
+    pub fn from_int(v: i64) -> Self {
+        let mut digits = Vec::new();
+        let mut x = v as i128; // avoid overflow at i64::MIN boundaries
+        while x != 0 {
+            if x & 1 == 1 {
+                // remainder in {-1, +1} chosen so that (x - d) is divisible by 4
+                let d: i8 = if x & 2 == 2 { -1 } else { 1 };
+                digits.push(d);
+                x -= d as i128;
+            } else {
+                digits.push(0);
+            }
+            x >>= 1;
+        }
+        Csd { digits }
+    }
+
+    /// Decode back to the integer value.
+    pub fn value(&self) -> i64 {
+        self.digits
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| (d as i64) << i)
+            .sum()
+    }
+
+    /// Number of nonzero digits (the paper's per-constant `nzd` cost).
+    pub fn nonzero_digits(&self) -> usize {
+        self.digits.iter().filter(|&&d| d != 0).count()
+    }
+
+    /// Position of the least significant nonzero digit, if any.
+    pub fn least_significant_nonzero(&self) -> Option<usize> {
+        self.digits.iter().position(|&d| d != 0)
+    }
+
+    /// The paper's Sec. IV-B move: the alternative weight obtained by
+    /// removing (zeroing) the least significant nonzero digit. Returns
+    /// `None` when the value is 0.
+    ///
+    /// The result always has strictly fewer nonzero digits than the input
+    /// (Sec. IV-B note), because CSD digit removal cannot create adjacency
+    /// violations that re-add digits.
+    pub fn remove_least_significant_digit(v: i64) -> Option<i64> {
+        let csd = Csd::from_int(v);
+        let pos = csd.least_significant_nonzero()?;
+        let d = csd.digits[pos] as i64;
+        Some(v - (d << pos))
+    }
+
+    /// Iterator over `(shift, sign)` pairs of the nonzero digits,
+    /// LSB-first; `sign` is `+1` or `-1`.
+    pub fn terms(&self) -> impl Iterator<Item = (usize, i8)> + '_ {
+        self.digits
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d != 0)
+            .map(|(i, &d)| (i, d))
+    }
+}
+
+/// Total number of nonzero digits in the CSD representations of a set of
+/// integers — the paper's `tnzd` metric (Table I).
+pub fn tnzd(values: impl IntoIterator<Item = i64>) -> usize {
+    values
+        .into_iter()
+        .map(|v| Csd::from_int(v).nonzero_digits())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_small() {
+        for v in -1025i64..=1025 {
+            let c = Csd::from_int(v);
+            assert_eq!(c.value(), v, "roundtrip failed for {v}");
+        }
+    }
+
+    #[test]
+    fn canonical_nonadjacent() {
+        for v in -4096i64..=4096 {
+            let c = Csd::from_int(v);
+            for w in c.digits.windows(2) {
+                assert!(
+                    w[0] == 0 || w[1] == 0,
+                    "adjacent nonzero CSD digits for {v}: {:?}",
+                    c.digits
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn known_encodings() {
+        // 7 = 8 - 1 -> digits [-1, 0, 0, 1]
+        let c = Csd::from_int(7);
+        assert_eq!(c.digits, vec![-1, 0, 0, 1]);
+        assert_eq!(c.nonzero_digits(), 2);
+        // 11 = 8 + 4 - 1 -> [-1, 0, 1, 1]? adjacency forbids; 11 = 16 - 4 - 1
+        let c11 = Csd::from_int(11);
+        assert_eq!(c11.value(), 11);
+        assert_eq!(c11.nonzero_digits(), 3);
+    }
+
+    #[test]
+    fn minimality_vs_binary() {
+        // CSD never has more nonzero digits than the binary representation.
+        for v in 1i64..=4096 {
+            let bin = (v as u64).count_ones() as usize;
+            assert!(Csd::from_int(v).nonzero_digits() <= bin);
+        }
+    }
+
+    #[test]
+    fn lsd_removal_reduces_digit_count() {
+        for v in 1i64..=2048 {
+            let removed = Csd::remove_least_significant_digit(v).unwrap();
+            assert!(
+                Csd::from_int(removed).nonzero_digits() < Csd::from_int(v).nonzero_digits(),
+                "removing LSD of {v} -> {removed} did not reduce nzd"
+            );
+        }
+    }
+
+    #[test]
+    fn tnzd_sums() {
+        assert_eq!(tnzd([7, 11]), 5);
+        assert_eq!(tnzd([0]), 0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Numeric substrates: canonical signed digit (CSD) arithmetic, bit-width
+//! utilities and a deterministic RNG (no external dependency so that all
+//! experiments are reproducible bit-for-bit across machines).
+
+pub mod csd;
+pub mod fxhash;
+pub mod rng;
+
+pub use csd::Csd;
+pub use fxhash::{FxHashMap, FxHashSet};
+pub use rng::Rng;
+
+/// Number of bits needed to represent `v` in two's complement (including
+/// the sign bit for negative values, excluding it for non-negative ones,
+/// matching how synthesis tools size signed operands).
+pub fn bitwidth(v: i64) -> u32 {
+    if v >= 0 {
+        64 - (v as u64).leading_zeros()
+    } else {
+        // e.g. -1 -> 1 bit of magnitude + sign handled by the consumer
+        64 - ((-v - 1) as u64).leading_zeros() + 1
+    }
+}
+
+/// Bit-width of a signed two's-complement representation able to hold `v`
+/// (always >= 1; includes the sign bit).
+pub fn signed_bitwidth(v: i64) -> u32 {
+    if v >= 0 {
+        bitwidth(v) + 1
+    } else {
+        bitwidth(v)
+    }
+}
+
+/// Largest left-shift value: number of trailing zero bits of `v`
+/// (`lls(20) == 2` since 20 = 5 << 2). Zero has no defined shift; returns 0.
+pub fn largest_left_shift(v: i64) -> u32 {
+    if v == 0 {
+        0
+    } else {
+        v.trailing_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitwidths() {
+        assert_eq!(bitwidth(0), 0);
+        assert_eq!(bitwidth(1), 1);
+        assert_eq!(bitwidth(255), 8);
+        assert_eq!(bitwidth(256), 9);
+        assert_eq!(bitwidth(-1), 1);
+        assert_eq!(bitwidth(-128), 8);
+        assert_eq!(signed_bitwidth(127), 8);
+        assert_eq!(signed_bitwidth(-128), 8);
+    }
+
+    #[test]
+    fn lls_matches_paper_example() {
+        // paper Sec. IV-C: sls of {20, 24, 26} = min(2, 3, 1) = 1
+        assert_eq!(largest_left_shift(20), 2);
+        assert_eq!(largest_left_shift(24), 3);
+        assert_eq!(largest_left_shift(26), 1);
+    }
+}

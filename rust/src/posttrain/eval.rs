@@ -1,0 +1,106 @@
+//! Hardware-accuracy evaluation — the inner loop of every tuner.
+//!
+//! The paper recomputes the validation-set hardware accuracy for every
+//! candidate weight replacement, so this is the flow's hot path. Two
+//! interchangeable backends:
+//! - [`NativeEval`]: the bit-accurate rust simulator with pre-quantized
+//!   features (this module);
+//! - `runtime::PjrtEval`: the AOT-lowered JAX graph executed through the
+//!   PJRT CPU client (bit-identical by the fixed-point contract; cross-
+//!   checked in `rust/tests/pjrt_roundtrip.rs`).
+
+use crate::ann::dataset::Sample;
+use crate::ann::quant::QuantizedAnn;
+use crate::ann::sim;
+
+/// Scores a candidate quantized ANN, in percent on a fixed sample set.
+pub trait AccuracyEval {
+    fn accuracy(&self, qann: &QuantizedAnn) -> f64;
+
+    /// Number of samples scored per call (for throughput reporting).
+    fn num_samples(&self) -> usize;
+}
+
+/// Bit-accurate native evaluator with features pre-quantized to Q1.7.
+pub struct NativeEval {
+    features: Vec<[i32; 16]>,
+    labels: Vec<u8>,
+}
+
+impl NativeEval {
+    pub fn new(samples: &[Sample]) -> NativeEval {
+        NativeEval {
+            features: samples.iter().map(|s| s.features_q7()).collect(),
+            labels: samples.iter().map(|s| s.label).collect(),
+        }
+    }
+}
+
+impl NativeEval {
+    fn correct_in(&self, qann: &QuantizedAnn, lo: usize, hi: usize) -> usize {
+        let mut scratch = sim::Scratch::default();
+        self.features[lo..hi]
+            .iter()
+            .zip(&self.labels[lo..hi])
+            .filter(|(x, &y)| sim::predict_scratch(qann, &x[..], &mut scratch) == y as usize)
+            .count()
+    }
+}
+
+impl AccuracyEval for NativeEval {
+    fn accuracy(&self, qann: &QuantizedAnn) -> f64 {
+        let n = self.features.len();
+        if n == 0 {
+            return 0.0;
+        }
+        // fan the batch out over threads when the per-call work is large
+        // enough to amortize spawning (§Perf: the tuners call this once
+        // per candidate, thousands of times per experiment)
+        let work = n * qann.structure.total_weights();
+        let threads = if work >= 64_000 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+        } else {
+            1
+        };
+        let correct = if threads <= 1 {
+            self.correct_in(qann, 0, n)
+        } else {
+            let chunk = n.div_ceil(threads);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|t| {
+                        let lo = (t * chunk).min(n);
+                        let hi = ((t + 1) * chunk).min(n);
+                        scope.spawn(move || self.correct_in(qann, lo, hi))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            })
+        };
+        100.0 * correct as f64 / n as f64
+    }
+
+    fn num_samples(&self) -> usize {
+        self.features.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::dataset::Dataset;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::num::Rng;
+
+    #[test]
+    fn native_eval_matches_direct_sim() {
+        let ds = Dataset::synthetic_with_sizes(1, 60, 30);
+        let st = AnnStructure::parse("16-10").unwrap();
+        let ann = Ann::init(st, vec![Activation::HSig], Init::Xavier, &mut Rng::new(2));
+        let q = QuantizedAnn::quantize(&ann, 6, &[Activation::HSig]);
+        let ev = NativeEval::new(&ds.validation);
+        assert_eq!(ev.num_samples(), ds.validation.len());
+        assert!((ev.accuracy(&q) - sim::hardware_accuracy(&q, &ds.validation)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,30 @@
+//! Hardware-aware post-training (paper Sec. IV): weight/bias tuning that
+//! reduces hardware complexity without losing hardware accuracy on the
+//! validation set.
+//!
+//! - [`eval`]: the `AccuracyEval` abstraction every tuner scores
+//!   candidates through — native bit-accurate simulation or the
+//!   PJRT-executed AOT graph (`runtime::PjrtEval`);
+//! - [`parallel`]: CSD least-significant-digit removal (Sec. IV-B);
+//! - [`smac`]: smallest-left-shift maximization with bias repair
+//!   (Sec. IV-C), per-neuron (SMAC_NEURON) and whole-ANN (SMAC_ANN).
+
+pub mod eval;
+pub mod parallel;
+pub mod smac;
+
+pub use eval::{AccuracyEval, NativeEval};
+
+/// Outcome of a tuning run.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub qann: crate::ann::QuantizedAnn,
+    /// best hardware accuracy on the validation set, percent
+    pub bha: f64,
+    /// number of candidate evaluations performed (the CPU-time driver)
+    pub evals: usize,
+    /// number of full sweeps until the fixed point
+    pub sweeps: usize,
+    /// wall-clock seconds (the paper's per-table `CPU` column)
+    pub cpu_seconds: f64,
+}

@@ -1,0 +1,126 @@
+//! Post-training under the parallel architecture (paper Sec. IV-B):
+//! weights with fewer nonzero CSD digits mean cheaper constant
+//! multiplications, so repeatedly try to drop the least significant
+//! nonzero CSD digit of every weight, keeping a replacement whenever the
+//! validation hardware accuracy does not fall below the best seen.
+
+use super::eval::AccuracyEval;
+use super::TuneResult;
+use crate::ann::quant::QuantizedAnn;
+use crate::num::Csd;
+use std::time::Instant;
+
+/// Run the Sec. IV-B tuning procedure to its fixed point.
+///
+/// Step 2 note of the paper holds by construction: a replacement always
+/// has strictly fewer nonzero digits than the original, so the total
+/// digit count is a strictly decreasing bound and the loop terminates.
+pub fn tune_parallel(qann: &QuantizedAnn, ev: &dyn AccuracyEval) -> TuneResult {
+    let start = Instant::now();
+    let mut best = qann.clone();
+    let mut bha = ev.accuracy(&best);
+    let mut evals = 1usize;
+    let mut sweeps = 0usize;
+
+    loop {
+        sweeps += 1;
+        let mut replaced_any = false;
+        for k in 0..best.structure.num_layers() {
+            for m in 0..best.structure.layer_outputs(k) {
+                for n in 0..best.structure.layer_inputs(k) {
+                    let w = best.weights[k][m][n];
+                    if w == 0 {
+                        continue;
+                    }
+                    let Some(w2) = Csd::remove_least_significant_digit(w) else {
+                        continue;
+                    };
+                    best.weights[k][m][n] = w2;
+                    let ha = ev.accuracy(&best);
+                    evals += 1;
+                    if ha >= bha {
+                        bha = ha;
+                        replaced_any = true;
+                    } else {
+                        best.weights[k][m][n] = w; // revert
+                    }
+                }
+            }
+        }
+        if !replaced_any {
+            break;
+        }
+    }
+
+    TuneResult {
+        qann: best,
+        bha,
+        evals,
+        sweeps,
+        cpu_seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::dataset::Dataset;
+    use crate::ann::quant::find_min_quantization;
+    use crate::ann::train::{train, Trainer};
+    use crate::ann::structure::AnnStructure;
+    use crate::posttrain::NativeEval;
+
+    fn tuned_setup() -> (QuantizedAnn, f64, Dataset) {
+        let data = Dataset::synthetic_with_sizes(31, 1200, 300);
+        let st = AnnStructure::parse("16-10").unwrap();
+        let mut cfg = Trainer::Zaal.config(5);
+        cfg.max_epochs = 20;
+        let res = train(&st, &data, &cfg);
+        let hw_acts = Trainer::Zaal.hardware_activations(1);
+        let search = find_min_quantization(&res.ann, &hw_acts, &data, 10);
+        (search.qann, search.ha, data)
+    }
+
+    #[test]
+    fn reduces_tnzd_without_accuracy_loss() {
+        let (qann, ha0, data) = tuned_setup();
+        let ev = NativeEval::new(&data.validation);
+        let res = tune_parallel(&qann, &ev);
+        assert!(
+            res.qann.tnzd() < qann.tnzd(),
+            "tnzd {} -> {} did not drop",
+            qann.tnzd(),
+            res.qann.tnzd()
+        );
+        // bha never drops below the starting hardware accuracy
+        assert!(res.bha >= ha0 - 1e-9, "bha {} < ha0 {ha0}", res.bha);
+        assert!(res.sweeps >= 1 && res.evals > 1);
+    }
+
+    #[test]
+    fn fixed_point_is_stable() {
+        let (qann, _, data) = tuned_setup();
+        let ev = NativeEval::new(&data.validation);
+        let first = tune_parallel(&qann, &ev);
+        let second = tune_parallel(&first.qann, &ev);
+        // already at the fixed point: one sweep, nothing replaced
+        assert_eq!(second.qann.weights, first.qann.weights);
+        assert_eq!(second.sweeps, 1);
+    }
+
+    #[test]
+    fn replacement_count_is_bounded_by_digits() {
+        // termination argument: evals per sweep <= number of nonzero
+        // weights; accepted replacements strictly reduce tnzd
+        let (qann, _, data) = tuned_setup();
+        let ev = NativeEval::new(&data.validation);
+        let res = tune_parallel(&qann, &ev);
+        let nonzero: usize = qann
+            .weights
+            .iter()
+            .flat_map(|l| l.iter().flatten())
+            .filter(|&&w| w != 0)
+            .count();
+        assert!(res.evals <= 1 + res.sweeps * nonzero);
+    }
+}

@@ -1,0 +1,282 @@
+//! Post-training under the time-multiplexed architectures (paper
+//! Sec. IV-C): if all weights of a MAC share a factor 2^k, the MAC can
+//! multiply the smaller `c = w >> k` and left-shift once at the end, so
+//! the multiplier, adder and register shrink. The tuner maximizes the
+//! smallest left shift (sls) — per neuron for SMAC_NEURON, over the whole
+//! ANN for SMAC_ANN — by nudging each sls-limiting weight to the nearest
+//! multiples of 2^(lls+1), with a ±4 bias-repair search when neither
+//! nudge alone preserves the best hardware accuracy.
+
+use super::eval::AccuracyEval;
+use super::TuneResult;
+use crate::ann::quant::QuantizedAnn;
+use crate::hw::report::smallest_left_shift;
+use crate::num::signed_bitwidth;
+use std::time::Instant;
+
+/// Scope of the sls maximization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlsScope {
+    /// per-neuron MAC blocks (SMAC_NEURON, paper Sec. IV-C procedure)
+    PerNeuron,
+    /// one MAC for the whole ANN (SMAC_ANN: "a similar procedure where
+    /// the increment of the smallest left shift of all ANN weights is
+    /// aimed")
+    WholeAnn,
+}
+
+/// Run the Sec. IV-C tuning procedure to its fixed point.
+pub fn tune_smac(qann: &QuantizedAnn, ev: &dyn AccuracyEval, scope: SlsScope) -> TuneResult {
+    let start = Instant::now();
+    let mut best = qann.clone();
+    let mut bha = ev.accuracy(&best);
+    let mut evals = 1usize;
+    let mut sweeps = 0usize;
+
+    loop {
+        sweeps += 1;
+        let mut improved_any = false;
+        match scope {
+            SlsScope::PerNeuron => {
+                for k in 0..best.structure.num_layers() {
+                    for m in 0..best.structure.layer_outputs(k) {
+                        improved_any |= tune_group(&mut best, ev, k, m, &mut bha, &mut evals);
+                    }
+                }
+            }
+            SlsScope::WholeAnn => {
+                improved_any |= tune_whole(&mut best, ev, &mut bha, &mut evals);
+            }
+        }
+        if !improved_any {
+            break;
+        }
+    }
+
+    TuneResult {
+        qann: best,
+        bha,
+        evals,
+        sweeps,
+        cpu_seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+/// One pass over neuron (k, m): try to lift every sls-limiting weight.
+/// Returns true if the neuron's sls improved.
+fn tune_group(
+    qann: &mut QuantizedAnn,
+    ev: &dyn AccuracyEval,
+    k: usize,
+    m: usize,
+    bha: &mut f64,
+    evals: &mut usize,
+) -> bool {
+    let sls_before = smallest_left_shift(qann.weights[k][m].iter().cloned());
+    let max_bits = qann.weights[k][m]
+        .iter()
+        .map(|&w| signed_bitwidth(w))
+        .max()
+        .unwrap_or(1);
+    let n_in = qann.structure.layer_inputs(k);
+    for n in 0..n_in {
+        let w = qann.weights[k][m][n];
+        if w == 0 {
+            continue;
+        }
+        let lls = w.trailing_zeros();
+        if lls != smallest_left_shift(qann.weights[k][m].iter().cloned()) {
+            continue; // only sls-limiting weights (step 2b)
+        }
+        try_lift_weight(qann, ev, k, m, n, lls, max_bits, bha, evals);
+    }
+    smallest_left_shift(qann.weights[k][m].iter().cloned()) > sls_before
+}
+
+/// The whole-ANN variant: lift weights whose lls equals the global sls.
+fn tune_whole(
+    qann: &mut QuantizedAnn,
+    ev: &dyn AccuracyEval,
+    bha: &mut f64,
+    evals: &mut usize,
+) -> bool {
+    let all = |q: &QuantizedAnn| {
+        q.weights
+            .iter()
+            .flat_map(|l| l.iter().flatten().cloned().collect::<Vec<_>>())
+            .collect::<Vec<_>>()
+    };
+    let sls_before = smallest_left_shift(all(qann));
+    let max_bits = all(qann).iter().map(|&w| signed_bitwidth(w)).max().unwrap_or(1);
+    for k in 0..qann.structure.num_layers() {
+        for m in 0..qann.structure.layer_outputs(k) {
+            for n in 0..qann.structure.layer_inputs(k) {
+                let w = qann.weights[k][m][n];
+                if w == 0 {
+                    continue;
+                }
+                let lls = w.trailing_zeros();
+                if lls != smallest_left_shift(all(qann)) {
+                    continue;
+                }
+                try_lift_weight(qann, ev, k, m, n, lls, max_bits, bha, evals);
+            }
+        }
+    }
+    smallest_left_shift(all(qann)) > sls_before
+}
+
+/// Paper steps 2b–2d for a single weight: the two nearest multiples of
+/// 2^(lls+1) are the candidates; accept the better one outright if it
+/// preserves `bha`, otherwise search the ±4 bias window around the
+/// neuron's bias with the better candidate in place.
+#[allow(clippy::too_many_arguments)]
+fn try_lift_weight(
+    qann: &mut QuantizedAnn,
+    ev: &dyn AccuracyEval,
+    k: usize,
+    m: usize,
+    n: usize,
+    lls: u32,
+    max_bits: u32,
+    bha: &mut f64,
+    evals: &mut usize,
+) {
+    let w = qann.weights[k][m][n];
+    let step = 1i64 << (lls + 1);
+    // pw1 = w - (w mod 2^(lls+1)) with a mathematical (floor) modulus
+    let pw1 = w - w.rem_euclid(step);
+    let pw2 = pw1 + step;
+
+    let mut scored: Vec<(i64, f64)> = Vec::with_capacity(2);
+    for pw in [pw1, pw2] {
+        // step 2b's bitwidth guard: the replacement must not widen the
+        // neuron's stored weights
+        if signed_bitwidth(pw) > max_bits {
+            continue;
+        }
+        qann.weights[k][m][n] = pw;
+        let ha = ev.accuracy(qann);
+        *evals += 1;
+        scored.push((pw, ha));
+    }
+    qann.weights[k][m][n] = w;
+    let Some(&(pw_best, ha_best)) = scored
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    else {
+        return;
+    };
+
+    if ha_best >= *bha {
+        // step 2c: accept the better candidate
+        qann.weights[k][m][n] = pw_best;
+        *bha = ha_best;
+        return;
+    }
+
+    // step 2d: bias repair in [b-4, b+4] with the better candidate held
+    let b0 = qann.biases[k][m];
+    qann.weights[k][m][n] = pw_best;
+    for db in [-4i64, -3, -2, -1, 1, 2, 3, 4] {
+        qann.biases[k][m] = b0 + db;
+        let ha = ev.accuracy(qann);
+        *evals += 1;
+        if ha >= *bha {
+            *bha = ha;
+            return; // keep the weight + bias update
+        }
+    }
+    // no repair worked: revert both
+    qann.biases[k][m] = b0;
+    qann.weights[k][m][n] = w;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::dataset::Dataset;
+    use crate::ann::quant::find_min_quantization;
+    use crate::ann::structure::AnnStructure;
+    use crate::ann::train::{train, Trainer};
+    use crate::posttrain::NativeEval;
+
+    fn setup() -> (QuantizedAnn, f64, Dataset) {
+        let data = Dataset::synthetic_with_sizes(37, 1200, 300);
+        let st = AnnStructure::parse("16-10").unwrap();
+        let mut cfg = Trainer::Zaal.config(9);
+        cfg.max_epochs = 20;
+        let res = train(&st, &data, &cfg);
+        let hw_acts = Trainer::Zaal.hardware_activations(1);
+        let s = find_min_quantization(&res.ann, &hw_acts, &data, 10);
+        (s.qann, s.ha, data)
+    }
+
+    fn mean_neuron_sls(q: &QuantizedAnn) -> f64 {
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for k in 0..q.structure.num_layers() {
+            for m in 0..q.structure.layer_outputs(k) {
+                total += smallest_left_shift(q.weights[k][m].iter().cloned()) as f64;
+                count += 1;
+            }
+        }
+        total / count as f64
+    }
+
+    #[test]
+    fn per_neuron_tuning_raises_sls_keeps_accuracy() {
+        let (qann, ha0, data) = setup();
+        let ev = NativeEval::new(&data.validation);
+        let res = tune_smac(&qann, &ev, SlsScope::PerNeuron);
+        assert!(
+            mean_neuron_sls(&res.qann) > mean_neuron_sls(&qann),
+            "mean sls {} -> {} did not rise",
+            mean_neuron_sls(&qann),
+            mean_neuron_sls(&res.qann)
+        );
+        assert!(res.bha >= ha0 - 1e-9);
+    }
+
+    #[test]
+    fn whole_ann_tuning_raises_global_sls_or_stops() {
+        let (qann, ha0, data) = setup();
+        let ev = NativeEval::new(&data.validation);
+        let res = tune_smac(&qann, &ev, SlsScope::WholeAnn);
+        let all = |q: &QuantizedAnn| -> Vec<i64> {
+            q.weights.iter().flat_map(|l| l.iter().flatten().cloned().collect::<Vec<_>>()).collect()
+        };
+        assert!(smallest_left_shift(all(&res.qann)) >= smallest_left_shift(all(&qann)));
+        assert!(res.bha >= ha0 - 1e-9);
+    }
+
+    #[test]
+    fn tuned_weights_shrink_the_hardware_model() {
+        // end-to-end reward check: the SMAC_NEURON cost model must get
+        // cheaper after sls tuning (paper Fig. 11 vs 14)
+        use crate::hw::{smac_neuron, TechLib};
+        use crate::hw::smac_neuron::SmacStyle;
+        let (qann, _, data) = setup();
+        let ev = NativeEval::new(&data.validation);
+        let res = tune_smac(&qann, &ev, SlsScope::PerNeuron);
+        let lib = TechLib::tsmc40();
+        let before = smac_neuron::build(&lib, &qann, SmacStyle::Behavioral);
+        let after = smac_neuron::build(&lib, &res.qann, SmacStyle::Behavioral);
+        assert!(
+            after.area_um2 <= before.area_um2,
+            "area {} -> {} grew",
+            before.area_um2,
+            after.area_um2
+        );
+    }
+
+    #[test]
+    fn fixed_point_is_stable() {
+        let (qann, _, data) = setup();
+        let ev = NativeEval::new(&data.validation);
+        let first = tune_smac(&qann, &ev, SlsScope::PerNeuron);
+        let second = tune_smac(&first.qann, &ev, SlsScope::PerNeuron);
+        assert_eq!(second.sweeps, 1);
+        assert_eq!(second.qann.weights, first.qann.weights);
+    }
+}

@@ -1,0 +1,97 @@
+//! Artifact registry: locates and caches compiled executables per
+//! (kind, structure, trainer) so each HLO module is compiled exactly once
+//! per process.
+
+use crate::ann::structure::AnnStructure;
+use crate::ann::train::Trainer;
+use anyhow::{ensure, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Registry over an `artifacts/` directory. Owns its PJRT client (the
+/// xla crate's handles are `Rc`-based, so one registry per thread).
+pub struct Artifacts {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Artifacts {
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Artifacts> {
+        let dir = dir.into();
+        ensure!(
+            dir.join("manifest.json").exists(),
+            "artifacts manifest missing in {} — run `make artifacts`",
+            dir.display()
+        );
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Artifacts {
+            dir,
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default location: `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Open the default registry (run `make artifacts` first).
+    pub fn open_default() -> Result<Artifacts> {
+        Artifacts::new(Self::default_dir())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn get_or_compile(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(super::load_executable(&self.client, &self.dir.join(name))?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// The quantized-inference executable of a structure.
+    pub fn infer(&self, structure: &AnnStructure) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        self.get_or_compile(&format!("infer_{structure}.hlo.txt"))
+    }
+
+    /// The (loss, grads) training-step executable of a structure/trainer.
+    pub fn train(
+        &self,
+        structure: &AnnStructure,
+        trainer: Trainer,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        self.get_or_compile(&format!("train_{}_{structure}.hlo.txt", trainer.name()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_compiles_once_and_caches() {
+        let Ok(reg) = Artifacts::open_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let st = AnnStructure::parse("16-10").unwrap();
+        let a = reg.infer(&st).unwrap();
+        let b = reg.infer(&st).unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        assert!(reg.train(&st, Trainer::Zaal).is_ok());
+    }
+
+    #[test]
+    fn missing_dir_is_a_clear_error() {
+        let err = Artifacts::new("/nonexistent/artifacts").err().unwrap();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

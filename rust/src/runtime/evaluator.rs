@@ -1,0 +1,169 @@
+//! PJRT-backed hardware-accuracy evaluation: the AOT-lowered quantized
+//! inference graph (L2 + the L1 Pallas kernel) executed from the tuning
+//! hot path. Bit-identical to `posttrain::NativeEval` by the fixed-point
+//! contract — cross-checked in `rust/tests/pjrt_roundtrip.rs`.
+
+use super::{Artifacts, EVAL_BATCH};
+use crate::ann::dataset::Sample;
+use crate::ann::quant::QuantizedAnn;
+use crate::ann::structure::{Activation, AnnStructure};
+use crate::posttrain::AccuracyEval;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// Evaluator holding the compiled graph and the pre-quantized batches.
+pub struct PjrtEval {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    structure: AnnStructure,
+    /// per batch: the (EVAL_BATCH × inputs) input literal, pre-built once
+    batches: Vec<xla::Literal>,
+    /// per batch: labels (padded tail is masked by `valid`)
+    labels: Vec<Vec<u8>>,
+    valid: Vec<usize>,
+    total: usize,
+}
+
+/// Map the hardware activation to the kernel's activation id (shared
+/// contract with python/compile/kernels/qlayer.py).
+pub fn act_id(a: Activation) -> i32 {
+    match a {
+        Activation::HTanh => 0,
+        Activation::HSig => 1,
+        Activation::ReLU => 2,
+        Activation::SatLin => 3,
+        Activation::Lin => 4,
+        other => panic!("activation {other} is not hardware-realizable"),
+    }
+}
+
+impl PjrtEval {
+    pub fn new(reg: &Artifacts, structure: &AnnStructure, samples: &[Sample]) -> Result<PjrtEval> {
+        let exe = reg.infer(structure)?;
+        let inputs = structure.inputs;
+        let mut batches = Vec::new();
+        let mut labels = Vec::new();
+        let mut valid = Vec::new();
+        for chunk in samples.chunks(EVAL_BATCH) {
+            let mut flat = vec![0i32; EVAL_BATCH * inputs];
+            let mut lab = Vec::with_capacity(chunk.len());
+            for (i, s) in chunk.iter().enumerate() {
+                let q7 = s.features_q7();
+                flat[i * inputs..(i + 1) * inputs].copy_from_slice(&q7[..inputs]);
+                lab.push(s.label);
+            }
+            batches.push(
+                xla::Literal::vec1(&flat)
+                    .reshape(&[EVAL_BATCH as i64, inputs as i64])?,
+            );
+            labels.push(lab);
+            valid.push(chunk.len());
+        }
+        Ok(PjrtEval {
+            exe,
+            structure: structure.clone(),
+            batches,
+            labels,
+            valid,
+            total: samples.len(),
+        })
+    }
+
+    /// Build the parameter literals for a candidate weight set.
+    fn param_literals(&self, qann: &QuantizedAnn) -> Vec<xla::Literal> {
+        let mut lits = Vec::new();
+        for k in 0..self.structure.num_layers() {
+            let n_in = self.structure.layer_inputs(k) as i64;
+            let n_out = self.structure.layer_outputs(k) as i64;
+            let w: Vec<i32> = qann.weights[k]
+                .iter()
+                .flat_map(|row| row.iter().map(|&v| v as i32))
+                .collect();
+            lits.push(xla::Literal::vec1(&w).reshape(&[n_out, n_in]).unwrap());
+            let b: Vec<i32> = qann.biases[k].iter().map(|&v| v as i32).collect();
+            lits.push(xla::Literal::vec1(&b));
+        }
+        lits
+    }
+
+    /// Predictions for every pre-loaded batch (padded tails included).
+    pub fn predict_all(&self, qann: &QuantizedAnn) -> Result<Vec<Vec<i32>>> {
+        assert_eq!(qann.structure, self.structure, "structure mismatch");
+        let acts: Vec<i32> = qann.activations.iter().map(|&a| act_id(a)).collect();
+        // parameters are built once per call; the (large) input batches
+        // are passed by reference so no literal is deep-copied per batch
+        // (§Perf iteration 7)
+        let params = self.param_literals(qann);
+        let q_lit = xla::Literal::scalar(qann.q as i32);
+        let acts_lit = xla::Literal::vec1(&acts);
+        let mut out = Vec::with_capacity(self.batches.len());
+        for batch in &self.batches {
+            let args: Vec<&xla::Literal> = params
+                .iter()
+                .chain(std::iter::once(batch))
+                .chain([&q_lit, &acts_lit])
+                .collect();
+            let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            out.push(result.to_tuple1()?.to_vec::<i32>()?);
+        }
+        Ok(out)
+    }
+}
+
+impl AccuracyEval for PjrtEval {
+    fn accuracy(&self, qann: &QuantizedAnn) -> f64 {
+        let preds = self.predict_all(qann).expect("pjrt execution");
+        let mut correct = 0usize;
+        for ((p, lab), &n) in preds.iter().zip(&self.labels).zip(&self.valid) {
+            for i in 0..n {
+                if p[i] == lab[i] as i32 {
+                    correct += 1;
+                }
+            }
+        }
+        if self.total == 0 {
+            0.0
+        } else {
+            100.0 * correct as f64 / self.total as f64
+        }
+    }
+
+    fn num_samples(&self) -> usize {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::dataset::Dataset;
+    use crate::ann::model::{Ann, Init};
+    use crate::num::Rng;
+    use crate::posttrain::NativeEval;
+
+    #[test]
+    fn pjrt_eval_matches_native_bit_for_bit() {
+        let Ok(reg) = Artifacts::open_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let ds = Dataset::synthetic_with_sizes(9, 600, 100);
+        for structure in ["16-10", "16-16-10"] {
+            let st = AnnStructure::parse(structure).unwrap();
+            let acts = {
+                let mut a = vec![Activation::HTanh; st.num_layers()];
+                *a.last_mut().unwrap() = Activation::HSig;
+                a
+            };
+            let ann = Ann::init(st.clone(), acts.clone(), Init::Xavier, &mut Rng::new(8));
+            for q in [4u32, 6, 8] {
+                let qann = QuantizedAnn::quantize(&ann, q, &acts);
+                let native = NativeEval::new(&ds.validation).accuracy(&qann);
+                let pjrt = PjrtEval::new(&reg, &st, &ds.validation).unwrap().accuracy(&qann);
+                assert!(
+                    (native - pjrt).abs() < 1e-9,
+                    "{structure} q={q}: native {native} != pjrt {pjrt}"
+                );
+            }
+        }
+    }
+}

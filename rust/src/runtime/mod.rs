@@ -1,0 +1,79 @@
+//! PJRT runtime: loads the AOT-lowered HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot paths.
+//! Python never runs at request time — artifacts are compiled once per
+//! process by the PJRT CPU client and re-executed with candidate
+//! parameters as ordinary inputs.
+
+pub mod artifacts;
+pub mod evaluator;
+pub mod trainer;
+
+pub use artifacts::Artifacts;
+pub use evaluator::PjrtEval;
+pub use trainer::{PjrtTrainer, TrainLog};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Batch sizes baked into the artifacts (must mirror python/compile/model.py).
+pub const EVAL_BATCH: usize = 512;
+pub const TRAIN_BATCH: usize = 64;
+/// Output classes of the pendigits task.
+pub const CLASSES: usize = 10;
+
+/// Load one HLO-text artifact and compile it on a PJRT client.
+///
+/// The xla crate's client handle is `Rc`-based (neither `Send` nor
+/// `Sync`), so each thread that talks to PJRT owns its own client —
+/// [`Artifacts`] bundles a client with its executable cache, and the
+/// experiment sweep runner creates one registry per worker thread.
+pub fn load_executable(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn client_is_cpu() {
+        let c = xla::PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().to_lowercase().contains("cpu") || c.device_count() > 0);
+    }
+
+    #[test]
+    fn load_and_execute_infer_artifact() {
+        let path = artifacts_dir().join("infer_16-10.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let client = xla::PjRtClient::cpu().unwrap();
+        let exe = load_executable(&client, &path).unwrap();
+        // zero weights -> all accumulators equal -> prediction 0 everywhere
+        let w = xla::Literal::vec1(&vec![0i32; 160]).reshape(&[10, 16]).unwrap();
+        let b = xla::Literal::vec1(&vec![0i32; 10]);
+        let x = xla::Literal::vec1(&vec![1i32; EVAL_BATCH * 16])
+            .reshape(&[EVAL_BATCH as i64, 16])
+            .unwrap();
+        let q = xla::Literal::scalar(6i32);
+        let acts = xla::Literal::vec1(&[1i32]);
+        let result = exe.execute::<xla::Literal>(&[w, b, x, q, acts]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let preds = result.to_tuple1().unwrap().to_vec::<i32>().unwrap();
+        assert_eq!(preds.len(), EVAL_BATCH);
+        assert!(preds.iter().all(|&p| p == 0));
+    }
+}

@@ -1,0 +1,251 @@
+//! Rust-driven training: the AOT-lowered (loss, grads) graph supplies
+//! gradients through PJRT; the optimizer (Adam), batching, shuffling and
+//! early stopping live here in rust. This is the ZAAL training algorithm
+//! of the paper run with the L2 JAX forward/backward — the end-to-end
+//! proof that all three layers compose (examples/train_pendigits.rs).
+
+use super::{Artifacts, CLASSES, TRAIN_BATCH};
+use crate::ann::dataset::Dataset;
+use crate::ann::model::{Ann, Init};
+use crate::ann::structure::AnnStructure;
+use crate::ann::train::Trainer;
+use crate::num::Rng;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// One epoch record of the training log.
+#[derive(Debug, Clone)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub validation_accuracy: f64,
+}
+
+/// Full log of a PJRT-driven run (the loss curve EXPERIMENTS.md records).
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub epochs: Vec<EpochLog>,
+    pub steps: usize,
+}
+
+/// Adam state over the flat parameter vector.
+struct Adam {
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+}
+
+impl Adam {
+    fn new(n: usize, lr: f64) -> Adam {
+        Adam { m: vec![0.0; n], v: vec![0.0; n], t: 0, lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for ((p, &g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+            *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+            *p -= self.lr * (*m / bc1) / ((*v / bc2).sqrt() + self.eps);
+        }
+    }
+}
+
+/// PJRT-backed trainer for one structure/trainer pair.
+pub struct PjrtTrainer {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    structure: AnnStructure,
+    trainer: Trainer,
+}
+
+impl PjrtTrainer {
+    pub fn new(reg: &Artifacts, structure: &AnnStructure, trainer: Trainer) -> Result<PjrtTrainer> {
+        Ok(PjrtTrainer {
+            exe: reg.train(structure, trainer)?,
+            structure: structure.clone(),
+            trainer,
+        })
+    }
+
+    /// Execute one gradient step; returns (loss, grads) for the batch.
+    pub fn grads(&self, ann: &Ann, x: &[f32], y_onehot: &[f32]) -> Result<(f64, Vec<f64>)> {
+        let mut args: Vec<xla::Literal> = Vec::new();
+        for k in 0..self.structure.num_layers() {
+            let n_in = self.structure.layer_inputs(k) as i64;
+            let n_out = self.structure.layer_outputs(k) as i64;
+            let w: Vec<f32> = ann.weights[k]
+                .iter()
+                .flat_map(|row| row.iter().map(|&v| v as f32))
+                .collect();
+            args.push(xla::Literal::vec1(&w).reshape(&[n_out, n_in])?);
+            let b: Vec<f32> = ann.biases[k].iter().map(|&v| v as f32).collect();
+            args.push(xla::Literal::vec1(&b));
+        }
+        args.push(
+            xla::Literal::vec1(x).reshape(&[TRAIN_BATCH as i64, self.structure.inputs as i64])?,
+        );
+        args.push(xla::Literal::vec1(y_onehot).reshape(&[TRAIN_BATCH as i64, CLASSES as i64])?);
+
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let loss = parts[0].to_vec::<f32>()?[0] as f64;
+        let mut grads = Vec::new();
+        for p in &parts[1..] {
+            grads.extend(p.to_vec::<f32>()?.iter().map(|&g| g as f64));
+        }
+        Ok((loss, grads))
+    }
+
+    /// Full training run: rust owns batching, shuffling, Adam and early
+    /// stopping; PJRT supplies fwd/bwd. Deterministic in `seed`.
+    pub fn train(
+        &self,
+        data: &Dataset,
+        epochs: usize,
+        patience: usize,
+        lr: f64,
+        seed: u64,
+    ) -> Result<(Ann, TrainLog)> {
+        let cfg = self.trainer.config(seed);
+        let mut rng = Rng::new(seed);
+        let layers = self.structure.num_layers();
+        let mut acts = vec![cfg.hidden_activation; layers];
+        acts[layers - 1] = cfg.output_activation;
+        let mut ann = Ann::init(self.structure.clone(), acts, Init::Xavier, &mut rng);
+        if cfg.output_activation == crate::ann::structure::Activation::SatLin {
+            // same satlin dead-output fix as the native trainer
+            for b in ann.biases[layers - 1].iter_mut() {
+                *b = 0.5;
+            }
+        }
+
+        let nparams = ann.flatten_params().len();
+        let mut adam = Adam::new(nparams, lr);
+        let mut log = TrainLog::default();
+        let mut order: Vec<usize> = (0..data.train.len()).collect();
+        let mut best = ann.clone();
+        let mut best_val = f64::MIN;
+        let mut stall = 0usize;
+
+        let inputs = self.structure.inputs;
+        for epoch in 0..epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0;
+            let mut batches = 0usize;
+            for chunk in order.chunks(TRAIN_BATCH) {
+                // fixed-size batches: wrap the tail with leading samples
+                let mut x = vec![0f32; TRAIN_BATCH * inputs];
+                let mut y = vec![0f32; TRAIN_BATCH * CLASSES];
+                for slot in 0..TRAIN_BATCH {
+                    let idx = chunk[slot % chunk.len()];
+                    let s = &data.train[idx];
+                    let f = s.features_f64();
+                    for (j, &v) in f.iter().enumerate().take(inputs) {
+                        x[slot * inputs + j] = v as f32;
+                    }
+                    y[slot * CLASSES + s.label as usize] = 1.0;
+                }
+                let (loss, grads) = self.grads(&ann, &x, &y)?;
+                let mut params = ann.flatten_params();
+                adam.step(&mut params, &grads);
+                ann.unflatten_params(&params)?;
+                epoch_loss += loss;
+                batches += 1;
+                log.steps += 1;
+            }
+
+            let val: Vec<(Vec<f64>, usize)> = data
+                .validation
+                .iter()
+                .map(|s| (s.features_f64().to_vec(), s.label as usize))
+                .collect();
+            let val_acc = ann.accuracy(val.iter().map(|(x, y)| (x.as_slice(), *y)));
+            log.epochs.push(EpochLog {
+                epoch,
+                mean_loss: epoch_loss / batches.max(1) as f64,
+                validation_accuracy: val_acc,
+            });
+            if val_acc > best_val {
+                best_val = val_acc;
+                best = ann.clone();
+                stall = 0;
+            } else {
+                stall += 1;
+                if stall >= patience {
+                    break;
+                }
+            }
+        }
+        Ok((best, log))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pjrt_training_learns() {
+        let Ok(reg) = Artifacts::open_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let data = Dataset::synthetic_with_sizes(19, 2000, 200);
+        let st = AnnStructure::parse("16-10").unwrap();
+        let t = PjrtTrainer::new(&reg, &st, Trainer::Zaal).unwrap();
+        let (_ann, log) = t.train(&data, 15, 15, 0.01, 1).unwrap();
+        let first = log.epochs.first().unwrap();
+        let last = log.epochs.last().unwrap();
+        assert!(last.mean_loss < first.mean_loss, "{log:?}");
+        assert!(last.validation_accuracy > 0.5, "{log:?}");
+    }
+
+    #[test]
+    fn pjrt_grads_match_native_backprop() {
+        let Ok(reg) = Artifacts::open_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        use crate::ann::train::{batch_gradients, Loss};
+        let data = Dataset::synthetic_with_sizes(23, 120, 10);
+        let st = AnnStructure::parse("16-10").unwrap();
+        let t = PjrtTrainer::new(&reg, &st, Trainer::Zaal).unwrap();
+        let cfg = Trainer::Zaal.config(3);
+        let mut rng = Rng::new(4);
+        let ann = Ann::init(
+            st.clone(),
+            vec![cfg.output_activation],
+            Init::Xavier,
+            &mut rng,
+        );
+        // one full fixed batch, no tail wrapping
+        let idx: Vec<usize> = (0..TRAIN_BATCH).collect();
+        let (g_native, _) = batch_gradients(&ann, &data, &idx, Loss::Mse);
+        let mut x = vec![0f32; TRAIN_BATCH * 16];
+        let mut y = vec![0f32; TRAIN_BATCH * CLASSES];
+        for (slot, &i) in idx.iter().enumerate() {
+            let s = &data.train[i];
+            for (j, &v) in s.features_f64().iter().enumerate() {
+                x[slot * 16 + j] = v as f32;
+            }
+            y[slot * CLASSES + s.label as usize] = 1.0;
+        }
+        let (_, g_pjrt) = t.grads(&ann, &x, &y).unwrap();
+        assert_eq!(g_native.len(), g_pjrt.len());
+        for (i, (a, b)) in g_native.iter().zip(&g_pjrt).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                "grad {i}: native {a} vs pjrt {b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Cross-layer integration: the AOT-lowered JAX graph (L2 + L1 Pallas
+//! kernel) executed through PJRT must agree bit-for-bit with the native
+//! golden model across structures, quantization values and tuned weight
+//! sets — the property the whole tuning flow rests on.
+
+use simurg::ann::dataset::Dataset;
+use simurg::ann::model::{Ann, Init};
+use simurg::ann::quant::{find_min_quantization, QuantizedAnn};
+use simurg::ann::structure::{Activation, AnnStructure};
+use simurg::ann::train::{train, Trainer};
+use simurg::num::Rng;
+use simurg::posttrain::parallel::tune_parallel;
+use simurg::posttrain::{AccuracyEval, NativeEval};
+use simurg::runtime::{Artifacts, PjrtEval};
+
+fn open_reg() -> Option<Artifacts> {
+    match Artifacts::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping pjrt tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn random_nets_agree_across_all_structures_and_q() {
+    let Some(reg) = open_reg() else { return };
+    let ds = Dataset::synthetic_with_sizes(71, 900, 100);
+    for structure in ["16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10"] {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        for (seed, out_act) in [(1u64, Activation::HSig), (2, Activation::SatLin)] {
+            let mut acts = vec![Activation::HTanh; layers];
+            acts[layers - 1] = out_act;
+            let ann = Ann::init(st.clone(), acts.clone(), Init::Xavier, &mut Rng::new(seed));
+            let pjrt = PjrtEval::new(&reg, &st, &ds.validation).unwrap();
+            let native = NativeEval::new(&ds.validation);
+            for q in [3u32, 6, 9] {
+                let qann = QuantizedAnn::quantize(&ann, q, &acts);
+                let (a, b) = (pjrt.accuracy(&qann), native.accuracy(&qann));
+                assert!(
+                    (a - b).abs() < 1e-9,
+                    "{structure} q={q} {out_act:?}: pjrt {a} != native {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tuning_with_pjrt_equals_tuning_with_native() {
+    let Some(reg) = open_reg() else { return };
+    let data = Dataset::synthetic_with_sizes(73, 1000, 150);
+    let st = AnnStructure::parse("16-10").unwrap();
+    let mut cfg = Trainer::Zaal.config(5);
+    cfg.max_epochs = 15;
+    let res = train(&st, &data, &cfg);
+    let hw_acts = Trainer::Zaal.hardware_activations(1);
+    let search = find_min_quantization(&res.ann, &hw_acts, &data, 10);
+
+    let native = NativeEval::new(&data.validation);
+    let pjrt = PjrtEval::new(&reg, &st, &data.validation).unwrap();
+    // identical evaluators => identical greedy trajectories => identical
+    // tuned weights (full determinism across the language boundary)
+    let tn = tune_parallel(&search.qann, &native);
+    let tp = tune_parallel(&search.qann, &pjrt);
+    assert_eq!(tn.qann.weights, tp.qann.weights);
+    assert_eq!(tn.qann.biases, tp.qann.biases);
+    assert!((tn.bha - tp.bha).abs() < 1e-9);
+    assert_eq!(tn.evals, tp.evals);
+}
