@@ -1,0 +1,138 @@
+//! Engine-on vs engine-off constant-multiplication solve time over the
+//! paper-benchmark pricing workload, plus the cache's hit/miss report.
+//! `cargo bench --bench mcm_cache`
+//!
+//! The workload replays exactly the per-layer solves the report emitters
+//! trigger: every paper structure, three pricing passes (the area /
+//! latency / energy columns of a figure), each pass solving the layer's
+//! DBR, CSE and MCM instances. Engine-off calls the solvers directly;
+//! engine-on routes through a fresh [`McmEngine`] so the numbers are not
+//! polluted by whatever else warmed the process-wide cache.
+//!
+//! Emits `BENCH_mcm_cache.json` so future PRs can track the trajectory.
+
+use simurg::ann::model::{Ann, Init};
+use simurg::ann::quant::QuantizedAnn;
+use simurg::ann::structure::{Activation, AnnStructure};
+use simurg::mcm::{cse, dbr, optimize_mcm, Effort, LinearTargets, McmEngine, Tier};
+use simurg::num::Rng;
+use std::time::Instant;
+
+fn qann(structure: &AnnStructure, seed: u64) -> QuantizedAnn {
+    let layers = structure.num_layers();
+    let mut acts = vec![Activation::HTanh; layers];
+    acts[layers - 1] = Activation::HSig;
+    let ann = Ann::init(structure.clone(), acts.clone(), Init::Xavier, &mut Rng::new(seed));
+    QuantizedAnn::quantize(&ann, 6, &acts)
+}
+
+/// The per-layer instances one pricing pass solves.
+fn layer_instances(q: &QuantizedAnn) -> Vec<(LinearTargets, Tier)> {
+    let mut out = Vec::new();
+    for k in 0..q.structure.num_layers() {
+        let t = LinearTargets::cmvm(&q.weights[k]);
+        out.push((t.clone(), Tier::Dbr));
+        out.push((t, Tier::Cse));
+        let consts: Vec<i64> = q.weights[k].iter().flatten().cloned().collect();
+        out.push((LinearTargets::mcm(&consts), Tier::McmHeuristic));
+    }
+    out
+}
+
+fn main() {
+    // 5 structures × 3 independent nets (the trainer axis of a figure),
+    // priced 3 times each (the metric axis of `report::figure`)
+    const SEEDS: u64 = 3;
+    const PASSES: usize = 3;
+    let mut workload: Vec<(LinearTargets, Tier)> = Vec::new();
+    for (i, st) in AnnStructure::paper_benchmarks().iter().enumerate() {
+        for s in 0..SEEDS {
+            let q = qann(st, 1000 + 10 * i as u64 + s);
+            for _ in 0..PASSES {
+                workload.extend(layer_instances(&q));
+            }
+        }
+    }
+    println!("workload: {} solves", workload.len());
+
+    // --- engine-off: every solve from scratch -------------------------
+    let t0 = Instant::now();
+    let mut ops_off = 0usize;
+    for (t, tier) in &workload {
+        ops_off += match tier {
+            Tier::Dbr => dbr(t).num_ops(),
+            Tier::Cse => cse(t).num_ops(),
+            _ => {
+                let consts: Vec<i64> = t.rows.iter().map(|r| r[0]).collect();
+                optimize_mcm(&consts, Effort::Heuristic).num_ops()
+            }
+        };
+    }
+    let engine_off_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // --- engine-on: one shared cache over the whole sweep --------------
+    let eng = McmEngine::new();
+    let t1 = Instant::now();
+    let mut ops_on = 0usize;
+    for (t, tier) in &workload {
+        ops_on += eng.solve(t, *tier).num_ops();
+    }
+    let engine_on_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    // --- a fully-warm pass (steady-state sweep repricing) --------------
+    let t2 = Instant::now();
+    for (t, tier) in &workload {
+        std::hint::black_box(eng.solve(t, *tier));
+    }
+    let warm_ms = t2.elapsed().as_secs_f64() * 1e3;
+
+    let stats = eng.stats();
+    assert_eq!(ops_on, ops_off, "engine must be bit-identical in op counts");
+    assert!(
+        stats.hit_rate() > 0.5,
+        "acceptance: paper-benchmark sweep must be majority cache hits: {stats:?}"
+    );
+
+    println!("engine-off      {engine_off_ms:>10.2} ms  ({ops_off} total ops)");
+    println!(
+        "engine-on cold  {engine_on_ms:>10.2} ms  ({:.2}x)",
+        engine_off_ms / engine_on_ms.max(1e-9)
+    );
+    println!(
+        "engine-on warm  {warm_ms:>10.2} ms  ({:.2}x)",
+        engine_off_ms / warm_ms.max(1e-9)
+    );
+    println!(
+        "cache: {} lookups, {} hits ({:.1}%), {} entries, {} ops solved, {} ops reused",
+        stats.lookups(),
+        stats.hits,
+        100.0 * stats.hit_rate(),
+        stats.entries,
+        stats.ops_solved,
+        stats.ops_reused
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"mcm_cache\",\n  \"workload_solves\": {},\n  \
+         \"engine_off_ms\": {:.3},\n  \"engine_on_cold_ms\": {:.3},\n  \
+         \"engine_on_warm_ms\": {:.3},\n  \"speedup_cold\": {:.3},\n  \
+         \"speedup_warm\": {:.3},\n  \"hits\": {},\n  \"misses\": {},\n  \
+         \"hit_rate\": {:.4},\n  \"entries\": {},\n  \"ops_solved\": {},\n  \
+         \"ops_reused\": {},\n  \"total_ops\": {}\n}}\n",
+        workload.len(),
+        engine_off_ms,
+        engine_on_ms,
+        warm_ms,
+        engine_off_ms / engine_on_ms.max(1e-9),
+        engine_off_ms / warm_ms.max(1e-9),
+        stats.hits,
+        stats.misses,
+        stats.hit_rate(),
+        stats.entries,
+        stats.ops_solved,
+        stats.ops_reused,
+        ops_off,
+    );
+    std::fs::write("BENCH_mcm_cache.json", &json).expect("write BENCH_mcm_cache.json");
+    println!("wrote BENCH_mcm_cache.json");
+}

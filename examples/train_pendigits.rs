@@ -107,6 +107,7 @@ fn main() -> anyhow::Result<()> {
         config: simurg::coordinator::flow::FlowConfig::new(structure.clone(), trainer),
         sta,
         hta,
+        ops_untuned: simurg::posttrain::realized_adder_ops(&quant.qann),
         hta_parallel: sim::hardware_accuracy(&tp.qann, &data.test),
         hta_smac_neuron: sim::hardware_accuracy(&tn.qann, &data.test),
         hta_smac_ann: sim::hardware_accuracy(&ta.qann, &data.test),

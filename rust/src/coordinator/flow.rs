@@ -9,7 +9,7 @@ use crate::ann::train::{software_test_accuracy, train_best_of, Trainer};
 use crate::ann::Ann;
 use crate::posttrain::parallel::tune_parallel;
 use crate::posttrain::smac::{tune_smac, SlsScope};
-use crate::posttrain::{AccuracyEval, NativeEval, TuneResult};
+use crate::posttrain::{realized_adder_ops, AccuracyEval, NativeEval, TuneResult};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -57,6 +57,9 @@ pub struct FlowOutcome {
     pub quant: QuantSearch,
     /// hardware test accuracy of the untuned quantized net, percent
     pub hta: f64,
+    /// CMVM add/sub ops of the *untuned* quantized net (engine-priced) —
+    /// the baseline the tuned `TuneResult::adder_ops` are read against
+    pub ops_untuned: usize,
     /// per-architecture tuning results (Tables II–IV)
     pub tuned_parallel: TuneResult,
     pub tuned_smac_neuron: TuneResult,
@@ -102,6 +105,9 @@ pub fn run_flow(data: &Dataset, cfg: &FlowConfig, ev: Option<&dyn AccuracyEval>)
     let hw_acts = cfg.trainer.hardware_activations(cfg.structure.num_layers());
     let quant = find_min_quantization(&ann, &hw_acts, data, cfg.q_cap);
     let hta = sim::hardware_accuracy(&quant.qann, &data.test);
+    // priced through the shared engine: across sweep jobs the same
+    // (structure × trainer) quantized layers recur and become lookups
+    let ops_untuned = realized_adder_ops(&quant.qann);
 
     let native;
     let ev: &dyn AccuracyEval = match ev {
@@ -125,6 +131,7 @@ pub fn run_flow(data: &Dataset, cfg: &FlowConfig, ev: Option<&dyn AccuracyEval>)
         sta,
         quant,
         hta,
+        ops_untuned,
         tuned_parallel,
         tuned_smac_neuron,
         tuned_smac_ann,

@@ -8,8 +8,26 @@ use crate::ann::train::Trainer;
 use crate::hw::parallel::MultStyle;
 use crate::hw::smac_neuron::SmacStyle;
 use crate::hw::{parallel, smac_ann, smac_neuron, HwReport, TechLib};
+use crate::mcm::EngineStats;
 use crate::posttrain::TuneResult;
 use std::fmt::Write as _;
+
+/// One-line MCM-engine cache report: how much of a sweep's constant-
+/// multiplication solve cost was answered from the shared cache. Emitted
+/// after every table/figure regeneration so sweep logs record the
+/// trajectory of the hot path.
+pub fn engine_summary(stats: &EngineStats) -> String {
+    format!(
+        "MCM engine: {} lookups, {} hits ({:.1}% hit rate), {} cached instances; \
+         {} ops solved fresh, {} ops served from cache\n",
+        stats.lookups(),
+        stats.hits,
+        100.0 * stats.hit_rate(),
+        stats.entries,
+        stats.ops_solved,
+        stats.ops_reused,
+    )
+}
 
 /// Which post-training result (if any) a figure prices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -299,6 +317,13 @@ mod tests {
             let csv = figure_csv(&outcomes, f, &lib);
             assert_eq!(csv.lines().count(), 1 + 3, "one row per trainer");
         }
+    }
+
+    #[test]
+    fn engine_summary_renders() {
+        let s = engine_summary(&crate::mcm::engine::stats());
+        assert!(s.contains("MCM engine"));
+        assert!(s.contains("hit rate"));
     }
 
     #[test]

@@ -2,11 +2,19 @@
 //! paper's evaluation, fanned out over worker threads with the native
 //! accuracy backend (PJRT handles are thread-local; the CLI's
 //! `--eval pjrt` path runs experiments sequentially instead).
+//!
+//! Every worker prices hardware through the process-wide
+//! [`crate::mcm::engine`], so the redundant constant-multiplication
+//! solves of sibling jobs (identical layers recur across trainers, runs
+//! and tuner trajectories) collapse into cache hits;
+//! [`sweep_all_with_stats`] reports how much of the solve cost the cache
+//! amortized.
 
 use super::flow::{run_flow, FlowConfig, FlowOutcome};
 use crate::ann::dataset::Dataset;
 use crate::ann::structure::AnnStructure;
 use crate::ann::train::Trainer;
+use crate::mcm::{engine, EngineStats};
 use anyhow::Result;
 use std::path::PathBuf;
 use std::sync::Mutex;
@@ -38,6 +46,17 @@ impl Default for SweepConfig {
 /// Run every experiment of the sweep; results come back ordered by
 /// (structure, trainer) regardless of scheduling.
 pub fn sweep_all(data: &Dataset, cfg: &SweepConfig) -> Result<Vec<FlowOutcome>> {
+    sweep_all_with_stats(data, cfg).map(|(outcomes, _)| outcomes)
+}
+
+/// [`sweep_all`] plus the MCM-engine counter delta for this sweep — all
+/// worker threads share the process-wide cache, so cross-job sharing
+/// shows up directly in the hit rate.
+pub fn sweep_all_with_stats(
+    data: &Dataset,
+    cfg: &SweepConfig,
+) -> Result<(Vec<FlowOutcome>, EngineStats)> {
+    let before = engine::stats();
     let jobs: Vec<FlowConfig> = cfg
         .structures
         .iter()
@@ -78,7 +97,9 @@ pub fn sweep_all(data: &Dataset, cfg: &SweepConfig) -> Result<Vec<FlowOutcome>> 
 
     let errors = errors.into_inner().unwrap();
     anyhow::ensure!(errors.is_empty(), "sweep failures: {errors:?}");
-    Ok(results.into_inner().unwrap().into_iter().map(Option::unwrap).collect())
+    let outcomes: Vec<FlowOutcome> =
+        results.into_inner().unwrap().into_iter().map(Option::unwrap).collect();
+    Ok((outcomes, engine::stats().since(&before)))
 }
 
 #[cfg(test)]
@@ -99,8 +120,10 @@ mod tests {
             threads: 4,
             weights_dir: None,
         };
-        let outcomes = sweep_all(&data, &cfg).unwrap();
+        let (outcomes, stats) = sweep_all_with_stats(&data, &cfg).unwrap();
         assert_eq!(outcomes.len(), 4);
+        // every job priced its nets through the shared engine
+        assert!(stats.lookups() >= outcomes.len() as u64, "{stats:?}");
         // deterministic ordering: structure-major, trainer-minor
         assert_eq!(outcomes[0].config.structure.to_string(), "16-10");
         assert_eq!(outcomes[0].config.trainer, Trainer::Zaal);

@@ -9,6 +9,7 @@
 //! the retiming technique iteratively").
 
 use super::gates::TechLib;
+use crate::mcm::{engine, LinearTargets, Tier};
 
 /// Cost of one hardware block.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -147,6 +148,17 @@ pub fn activation_unit(lib: &TechLib, acc_bits: u32) -> BlockCost {
 /// width; the shifts are wires.
 pub fn shift_add_node(lib: &TechLib, result_bits: u32) -> BlockCost {
     adder(lib, result_bits)
+}
+
+/// Multiplierless constant-multiplication block computing `c_j · x` for
+/// every constant of the broadcast input (the SMAC MCM style, paper
+/// Sec. V-B). Solved through the process-wide memoized
+/// [`crate::mcm::engine`], so re-pricing a layer the sweep has already
+/// seen is a cache lookup. Returns the block cost and its add/sub count.
+pub fn mcm_block(lib: &TechLib, constants: &[i64], input_range: (i64, i64)) -> (BlockCost, usize) {
+    let g = engine::solve(&LinearTargets::mcm(constants), Tier::McmHeuristic);
+    let n_ops = g.num_ops();
+    (super::graph_cost(lib, &g, &[input_range]), n_ops)
 }
 
 #[cfg(test)]

@@ -12,7 +12,7 @@
 use crate::ann::quant::QuantizedAnn;
 use crate::ann::sim::activate;
 use crate::hw::parallel::MultStyle;
-use crate::mcm::{cse, dbr, LinearTargets};
+use crate::mcm::{engine, LinearTargets, Tier};
 
 /// Result of a cycle-accurate run.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -34,12 +34,16 @@ impl ParallelNet {
         let st = &qann.structure;
         let layer_graphs = (0..st.num_layers())
             .map(|k| match style {
-                MultStyle::Behavioral => vec![dbr(&LinearTargets::cmvm(&qann.weights[k]))],
+                MultStyle::Behavioral => {
+                    vec![engine::solve(&LinearTargets::cmvm(&qann.weights[k]), Tier::Dbr)]
+                }
                 MultStyle::Cavm => qann.weights[k]
                     .iter()
-                    .map(|row| cse(&LinearTargets::cavm(row)))
+                    .map(|row| engine::solve(&LinearTargets::cavm(row), Tier::Cse))
                     .collect(),
-                MultStyle::Cmvm => vec![cse(&LinearTargets::cmvm(&qann.weights[k]))],
+                MultStyle::Cmvm => {
+                    vec![engine::solve(&LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)]
+                }
             })
             .collect();
         ParallelNet {

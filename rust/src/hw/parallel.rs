@@ -15,7 +15,7 @@ use super::blocks::{self, BlockCost};
 use super::report::{self, HwReport};
 use super::TechLib;
 use crate::ann::quant::QuantizedAnn;
-use crate::mcm::{cse, dbr, LinearTargets};
+use crate::mcm::{engine, LinearTargets, Tier};
 
 /// Constant-multiplication style of the parallel architecture.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,7 +56,7 @@ pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: MultStyle) -> HwReport {
                 // per-row DBR trees realize product terms and their sum in
                 // one expansion (the synthesis view of `sum(w[i]*x[i])`)
                 let t = LinearTargets::cmvm(&qann.weights[k]);
-                let g = dbr(&t);
+                let g = engine::solve(&t, Tier::Dbr);
                 adders += g.num_ops();
                 (super::graph_cost(lib, &g, &ranges), BlockCost::ZERO)
             }
@@ -65,7 +65,7 @@ pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: MultStyle) -> HwReport {
                 let mut total = BlockCost::ZERO;
                 for row in &qann.weights[k] {
                     let t = LinearTargets::cavm(row);
-                    let g = cse(&t);
+                    let g = engine::solve(&t, Tier::Cse);
                     adders += g.num_ops();
                     let c = super::graph_cost(lib, &g, &ranges);
                     total = total.beside(c);
@@ -75,7 +75,7 @@ pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: MultStyle) -> HwReport {
             MultStyle::Cmvm => {
                 // one optimized CMVM block for the whole layer
                 let t = LinearTargets::cmvm(&qann.weights[k]);
-                let g = cse(&t);
+                let g = engine::solve(&t, Tier::Cse);
                 adders += g.num_ops();
                 (super::graph_cost(lib, &g, &ranges), BlockCost::ZERO)
             }

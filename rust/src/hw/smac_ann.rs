@@ -11,7 +11,6 @@ use super::report::{self, HwReport};
 use super::smac_neuron::SmacStyle;
 use super::TechLib;
 use crate::ann::quant::QuantizedAnn;
-use crate::mcm::{optimize_mcm, Effort};
 use crate::num::signed_bitwidth;
 
 /// Build the gate-level model of the SMAC_ANN design.
@@ -65,9 +64,7 @@ pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: SmacStyle) -> HwReport {
             // Sec. V-B notes this replaces one multiplier with a large
             // adder network and usually *increases* complexity)
             let consts: Vec<i64> = all_weights().map(|w| w >> sls).collect();
-            let g = optimize_mcm(&consts, Effort::Heuristic);
-            let n_ops = g.num_ops();
-            let c = super::graph_cost(lib, &g, &[(-128, 127)]);
+            let (c, n_ops) = blocks::mcm_block(lib, &consts, (-128, 127));
             // product mux selecting among all distinct products
             let p_mux = blocks::mux(lib, total_weights, stored_bits + 8);
             ((c.area + p_mux.area, c.energy + p_mux.energy), c.delay + p_mux.delay, n_ops)

@@ -16,7 +16,6 @@ use super::blocks;
 use super::report::{self, HwReport};
 use super::TechLib;
 use crate::ann::quant::QuantizedAnn;
-use crate::mcm::{optimize_mcm, Effort};
 use crate::num::signed_bitwidth;
 
 /// Constant-multiplication style of the time-multiplexed architectures.
@@ -91,9 +90,8 @@ pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: SmacStyle) -> HwReport {
                     consts.extend(row.iter().cloned());
                     stored.push(row);
                 }
-                let g = optimize_mcm(&consts, Effort::Heuristic);
-                adders += g.num_ops();
-                let mcm = super::graph_cost(lib, &g, &[in_range]);
+                let (mcm, n_ops) = blocks::mcm_block(lib, &consts, in_range);
+                adders += n_ops;
                 layer = layer.beside(mcm);
 
                 for (m, row) in stored.iter().enumerate() {

@@ -15,6 +15,19 @@
 //! - `python/compile` is **L2/L1** (JAX model + Pallas kernel), AOT-lowered
 //!   to HLO-text artifacts that [`runtime`] loads via PJRT;
 //! - python never runs on the request path.
+//!
+//! Hot-path architecture:
+//! - every constant-multiplication solve (hardware cost models, tuner
+//!   metrics, netlist simulation, Verilog generation, reports) goes
+//!   through [`mcm::engine`] — a process-wide, sharded, content-addressed
+//!   cache over canonicalized instances. The coordinator sweep's worker
+//!   threads therefore share one solution store, and re-pricing a layer
+//!   the sweep has already seen (across figures, metrics, trainers and
+//!   tuner iterations) is a lookup instead of a fresh search;
+//! - the PJRT [`runtime`] compiles only with the off-by-default `pjrt`
+//!   cargo feature; the default build substitutes an API-compatible stub
+//!   so builds and tests stay hermetic on machines without XLA (README
+//!   §PJRT).
 
 pub mod ann;
 pub mod coordinator;

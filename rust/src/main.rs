@@ -5,7 +5,7 @@
 //!   simurg flow    --structure 16-16-10 --trainer zaal [--eval pjrt]
 //!   simurg train   --structure 16-10 --trainer zaal --backend pjrt
 //!   simurg verilog --structure 16-10 --trainer zaal --arch parallel --style cmvm --out out/
-//!   simurg mcm     --constants 11,3,5,13 [--alg dbr|cse|exact]
+//!   simurg mcm     --constants 11,3,5,13 [--alg dbr|cse|exact|engine]
 //!
 //! Common flags: --runs N --seed N --threads N --data-dir DIR --out DIR
 
@@ -15,10 +15,10 @@ use simurg::ann::structure::AnnStructure;
 use simurg::ann::train::Trainer;
 use simurg::coordinator::flow::{run_flow, FlowConfig};
 use simurg::coordinator::report;
-use simurg::coordinator::sweep::{sweep_all, SweepConfig};
+use simurg::coordinator::sweep::{sweep_all_with_stats, SweepConfig};
 use simurg::hw::parallel::MultStyle;
 use simurg::hw::{verilog, TechLib};
-use simurg::mcm::{cse, dbr, optimize_mcm, Effort, LinearTargets};
+use simurg::mcm::{cse, dbr, engine, optimize_mcm, Effort, LinearTargets, Tier};
 use simurg::posttrain::AccuracyEval;
 use simurg::runtime::{Artifacts, PjrtEval, PjrtTrainer};
 use std::collections::HashMap;
@@ -95,13 +95,14 @@ fn cmd_table(args: &Args) -> Result<()> {
         .context("usage: simurg table <1|2|3|4>")?
         .parse()?;
     let data = dataset(args);
-    let outcomes = sweep_all(&data, &sweep_config(args)?)?;
+    let (outcomes, stats) = sweep_all_with_stats(&data, &sweep_config(args)?)?;
     let text = match n {
         1 => report::table1(&outcomes),
         2..=4 => report::table_posttrain(&outcomes, n),
         _ => bail!("tables are 1..=4"),
     };
     println!("{text}");
+    print!("{}", report::engine_summary(&stats));
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
     std::fs::write(dir.join(format!("table_{n}.txt")), &text)?;
@@ -119,7 +120,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
         vec![which.parse()?]
     };
     let data = dataset(args);
-    let outcomes = sweep_all(&data, &sweep_config(args)?)?;
+    let (outcomes, _) = sweep_all_with_stats(&data, &sweep_config(args)?)?;
     let lib = TechLib::tsmc40();
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
@@ -132,6 +133,8 @@ fn cmd_figure(args: &Args) -> Result<()> {
             report::figure_csv(&outcomes, f, &lib),
         )?;
     }
+    // figure pricing itself re-solves heavily; report the process totals
+    print!("{}", report::engine_summary(&engine::stats()));
     Ok(())
 }
 
@@ -198,6 +201,14 @@ fn cmd_flow(args: &Args) -> Result<()> {
             r.energy_pj
         );
     }
+    println!(
+        "  untuned CMVM ops {}  tuned parallel/smac_neuron/smac_ann ops {}/{}/{}",
+        o.ops_untuned,
+        o.tuned_parallel.adder_ops,
+        o.tuned_smac_neuron.adder_ops,
+        o.tuned_smac_ann.adder_ops
+    );
+    print!("  {}", report::engine_summary(&engine::stats()));
     Ok(())
 }
 
@@ -307,7 +318,9 @@ fn cmd_mcm(args: &Args) -> Result<()> {
         "dbr" => dbr(&t),
         "cse" => cse(&t),
         "exact" => optimize_mcm(&consts, Effort::Exact { node_budget: 500_000 }),
-        other => bail!("algorithms: dbr|cse|exact (got {other})"),
+        // the memoized engine's escalating tier: dbr → cse → exact MCM
+        "engine" => engine::solve(&t, Tier::Best),
+        other => bail!("algorithms: dbr|cse|exact|engine (got {other})"),
     };
     g.verify_against(&t)?;
     println!(
@@ -329,7 +342,7 @@ usage: simurg <table|figure|flow|train|verilog|mcm> [flags]
   flow                      full flow for one --structure/--trainer
   train                     train via --backend pjrt|native
   verilog                   emit Verilog + testbench + synthesis script
-  mcm                       optimize --constants with --alg dbr|cse|exact
+  mcm                       optimize --constants with --alg dbr|cse|exact|engine
 flags: --structure 16-16-10 --trainer zaal|pytorch|matlab --runs N --seed N
        --threads N --data-dir DIR --data-seed N --out DIR --eval native|pjrt"
 }

@@ -1,0 +1,582 @@
+//! Process-wide memoized MCM/CAVM/CMVM solve engine — the sweep hot path.
+//!
+//! Every hardware pricing call (and every tuner trajectory behind it)
+//! reduces a layer's constant matrix to a shift-adds network. The
+//! coordinator sweep re-solves near-identical instances constantly:
+//! weight tuning explores neighborhoods of the same constant sets, the
+//! report emitters price one outcome once per figure × metric, and every
+//! worker thread of [`crate::coordinator::sweep::sweep_all`] repeats its
+//! siblings' work. This module turns those repeated solves into lookups:
+//!
+//! - instances are **canonicalized** before keying. Single-variable (MCM)
+//!   instances reduce every coefficient to its positive odd fundamental
+//!   (deduped, sorted, with the per-output sign/shift recorded so the
+//!   original [`OutputSpec`]s are reconstructed on a hit); matrix
+//!   (CAVM/CMVM) instances factor each row's global sign and power-of-two
+//!   shift. Both maps are chosen so the canonical solve has *bit-identical
+//!   op counts* to the direct solve it replaces — see the property tests;
+//! - the cache is **sharded** behind short critical sections so the
+//!   worker threads of `sweep_all` share one cache without serializing on
+//!   a single lock; misses solve outside any lock;
+//! - the solver is **effort-tiered** ([`Tier`]). DBR, CSE and the
+//!   fundamental MCM engines stay separately keyed (their op counts are
+//!   the paper's comparison axes, so a hit must never substitute one for
+//!   another), while [`Tier::Best`] escalates dbr → cse → exact/heuristic
+//!   MCM and keeps the cheapest graph.
+
+use super::exact::{self, odd_normalize, Effort};
+use super::graph::{AdderGraph, Operand, OutputSpec};
+use super::{cse, dbr, LinearTargets};
+use crate::num::FxHashMap;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::BTreeSet;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Which solver a cached solution came from. Part of the cache key: the
+/// paper compares DBR vs CSE vs MCM op counts, so tiers never alias.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// per-row digit-based recoding — no sharing (the behavioral models)
+    Dbr,
+    /// greedy digit CSE — the CAVM/CMVM blocks
+    Cse,
+    /// fundamental-based greedy MCM synthesis (layer-scale SMAC blocks)
+    McmHeuristic,
+    /// escalate DBR → CSE → (single-variable) exact-when-small MCM and
+    /// keep the graph with the fewest add/sub operations
+    Best,
+}
+
+/// Content address of a canonical instance.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Key {
+    tier: Tier,
+    num_inputs: usize,
+    /// bit-width bound of the MCM search (0 for the matrix tiers); two
+    /// constant sets with equal fundamentals but different magnitudes
+    /// search different spaces, so this must discriminate the key
+    max_bits: u32,
+    rows: Vec<Vec<i64>>,
+}
+
+/// How one original output is recovered from the canonical solution.
+#[derive(Debug, Clone, Copy)]
+enum RowMap {
+    /// an all-zero row: constant-zero output, no hardware
+    Zero,
+    /// `y = ±(canonical_output[index] << shift)`
+    Mapped { index: usize, shift: u32, negate: bool },
+}
+
+/// A canonicalized instance: the cache key plus the per-output recovery
+/// data. Kept crate-visible for the canonicalization unit tests.
+pub(crate) struct Canonical {
+    key: Key,
+    maps: Vec<RowMap>,
+}
+
+/// Factor a row's global sign and power-of-two shift:
+/// `row = ±(canonical << shift)` with the canonical row's first nonzero
+/// coefficient positive and the coefficient gcd odd. `None` for all-zero
+/// rows.
+fn canonical_row(row: &[i64]) -> Option<(Vec<i64>, u32, bool)> {
+    let mut shift = u32::MAX;
+    let mut first_nonzero = 0i64;
+    for &c in row {
+        if c != 0 {
+            shift = shift.min(c.trailing_zeros());
+            if first_nonzero == 0 {
+                first_nonzero = c;
+            }
+        }
+    }
+    if first_nonzero == 0 {
+        return None;
+    }
+    let negate = first_nonzero < 0;
+    let canon = row
+        .iter()
+        .map(|&c| {
+            let v = c >> shift; // exact: the low `shift` bits are zero
+            if negate {
+                -v
+            } else {
+                v
+            }
+        })
+        .collect();
+    Some((canon, shift, negate))
+}
+
+/// Reduce `targets` to its canonical cached form under `tier`.
+pub(crate) fn canonicalize(targets: &LinearTargets, tier: Tier) -> Canonical {
+    let mcm_style =
+        tier == Tier::McmHeuristic || (tier == Tier::Best && targets.num_inputs == 1);
+    if mcm_style {
+        assert_eq!(
+            targets.num_inputs, 1,
+            "MCM tiers require single-variable targets"
+        );
+        let constants: Vec<i64> = targets.rows.iter().map(|r| r[0]).collect();
+        let (funds, max_bits) = exact::mcm_problem(&constants);
+        let sorted: Vec<u64> = funds.iter().cloned().collect();
+        let maps = constants
+            .iter()
+            .map(|&c| {
+                let (f, shift, negate) = odd_normalize(c);
+                if f == 0 {
+                    RowMap::Zero
+                } else {
+                    let index = sorted.binary_search(&f).expect("fundamental indexed");
+                    RowMap::Mapped { index, shift, negate }
+                }
+            })
+            .collect();
+        Canonical {
+            key: Key {
+                tier,
+                num_inputs: 1,
+                max_bits,
+                rows: sorted.iter().map(|&f| vec![f as i64]).collect(),
+            },
+            maps,
+        }
+    } else {
+        // order-preserving, duplicate-preserving per-row normalization:
+        // DBR must keep pricing duplicate rows twice (no sharing is the
+        // point of the behavioral baseline) and CSE's pattern frequencies
+        // count duplicates, so dedup here would change op counts
+        let mut rows: Vec<Vec<i64>> = Vec::new();
+        let mut maps: Vec<RowMap> = Vec::with_capacity(targets.rows.len());
+        for row in &targets.rows {
+            match canonical_row(row) {
+                None => maps.push(RowMap::Zero),
+                Some((canon, shift, negate)) => {
+                    rows.push(canon);
+                    maps.push(RowMap::Mapped { index: rows.len() - 1, shift, negate });
+                }
+            }
+        }
+        Canonical {
+            key: Key { tier, num_inputs: targets.num_inputs, max_bits: 0, rows },
+            maps,
+        }
+    }
+}
+
+/// Solve a canonical instance with its tier's algorithm.
+fn solve_canonical(key: &Key) -> AdderGraph {
+    let rebuild = || LinearTargets::new(key.num_inputs, key.rows.clone());
+    let fundamentals = || -> BTreeSet<u64> {
+        key.rows.iter().map(|r| r[0] as u64).collect()
+    };
+    match key.tier {
+        Tier::Dbr => dbr(&rebuild()),
+        Tier::Cse => cse(&rebuild()),
+        Tier::McmHeuristic => {
+            exact::optimize_fundamental_set(&fundamentals(), key.max_bits, Effort::Heuristic)
+        }
+        Tier::Best => {
+            let t = rebuild();
+            let baseline = dbr(&t);
+            if baseline.num_ops() <= 1 {
+                return baseline; // nothing left to share away
+            }
+            let shared = cse(&t);
+            let mut best = if shared.num_ops() < baseline.num_ops() {
+                shared
+            } else {
+                baseline
+            };
+            if key.num_inputs == 1 {
+                let g = exact::optimize_fundamental_set(
+                    &fundamentals(),
+                    key.max_bits,
+                    Effort::Auto,
+                );
+                if g.num_ops() < best.num_ops() {
+                    best = g;
+                }
+            }
+            best
+        }
+    }
+}
+
+/// Rebuild the requested instance's graph from a cached canonical
+/// solution: shared nodes, per-output sign/shift reapplied.
+fn reconstruct(canon: &AdderGraph, maps: &[RowMap]) -> AdderGraph {
+    let mut g = AdderGraph {
+        num_inputs: canon.num_inputs,
+        nodes: canon.nodes.clone(),
+        outputs: Vec::with_capacity(maps.len()),
+    };
+    for m in maps {
+        match *m {
+            RowMap::Zero => g.outputs.push(OutputSpec {
+                src: Operand::Input(0),
+                shift: 0,
+                negate: false,
+                is_zero: true,
+            }),
+            RowMap::Mapped { index, shift, negate } => {
+                let o = canon.outputs[index];
+                g.outputs.push(OutputSpec {
+                    src: o.src,
+                    shift: o.shift + shift,
+                    negate: o.negate != negate,
+                    is_zero: o.is_zero,
+                });
+            }
+        }
+    }
+    g
+}
+
+/// Cumulative cache counters (monotonic; snapshot with [`McmEngine::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// distinct canonical instances currently cached
+    pub entries: usize,
+    /// add/sub ops synthesized fresh on misses
+    pub ops_solved: u64,
+    /// add/sub ops served from cache on hits
+    pub ops_reused: u64,
+}
+
+impl EngineStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups answered from cache, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// Counter delta against an earlier snapshot (entries stay absolute).
+    pub fn since(&self, earlier: &EngineStats) -> EngineStats {
+        EngineStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            entries: self.entries,
+            ops_solved: self.ops_solved.saturating_sub(earlier.ops_solved),
+            ops_reused: self.ops_reused.saturating_sub(earlier.ops_reused),
+        }
+    }
+}
+
+const SHARD_COUNT: usize = 16;
+
+/// Thread-safe content-addressed solution cache fronting the tiered
+/// solvers. One process-wide instance ([`McmEngine::global`]) serves all
+/// sweep worker threads; fresh instances are for isolation in tests and
+/// engine-off baselines.
+pub struct McmEngine {
+    shards: Vec<Mutex<FxHashMap<Key, Arc<AdderGraph>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    ops_solved: AtomicU64,
+    ops_reused: AtomicU64,
+}
+
+impl Default for McmEngine {
+    fn default() -> Self {
+        McmEngine::new()
+    }
+}
+
+impl McmEngine {
+    pub fn new() -> McmEngine {
+        McmEngine {
+            shards: (0..SHARD_COUNT).map(|_| Mutex::new(FxHashMap::default())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            ops_solved: AtomicU64::new(0),
+            ops_reused: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide engine every rewired solve site goes through.
+    pub fn global() -> &'static McmEngine {
+        static GLOBAL: OnceLock<McmEngine> = OnceLock::new();
+        GLOBAL.get_or_init(McmEngine::new)
+    }
+
+    fn shard(&self, key: &Key) -> &Mutex<FxHashMap<Key, Arc<AdderGraph>>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARD_COUNT]
+    }
+
+    /// Solve `targets` under `tier`, answering from the cache when the
+    /// canonical instance has been solved before (by any thread).
+    pub fn solve(&self, targets: &LinearTargets, tier: Tier) -> AdderGraph {
+        let canon = canonicalize(targets, tier);
+        if canon.key.rows.is_empty() {
+            // every output is constant zero: no hardware, nothing to cache
+            let mut g = AdderGraph::new(targets.num_inputs);
+            g.outputs = vec![
+                OutputSpec {
+                    src: Operand::Input(0),
+                    shift: 0,
+                    negate: false,
+                    is_zero: true,
+                };
+                canon.maps.len()
+            ];
+            return g;
+        }
+
+        if let Some(cached) = self.shard(&canon.key).lock().unwrap().get(&canon.key).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.ops_reused.fetch_add(cached.num_ops() as u64, Ordering::Relaxed);
+            return reconstruct(&cached, &canon.maps);
+        }
+
+        // miss: solve outside any lock so concurrent distinct instances
+        // overlap; a racing duplicate solve is harmless (deterministic
+        // result, first insert wins)
+        let solved = Arc::new(solve_canonical(&canon.key));
+        debug_assert!(solved
+            .verify_against(&LinearTargets::new(canon.key.num_inputs, canon.key.rows.clone()))
+            .is_ok());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.ops_solved.fetch_add(solved.num_ops() as u64, Ordering::Relaxed);
+        let entry = self
+            .shard(&canon.key)
+            .lock()
+            .unwrap()
+            .entry(canon.key.clone())
+            .or_insert(solved)
+            .clone();
+        reconstruct(&entry, &canon.maps)
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.shards.iter().map(|s| s.lock().unwrap().len()).sum(),
+            ops_solved: self.ops_solved.load(Ordering::Relaxed),
+            ops_reused: self.ops_reused.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every cached solution and zero the counters (benches).
+    pub fn reset(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.ops_solved.store(0, Ordering::Relaxed);
+        self.ops_reused.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Solve through the process-wide engine.
+pub fn solve(targets: &LinearTargets, tier: Tier) -> AdderGraph {
+    McmEngine::global().solve(targets, tier)
+}
+
+/// Counters of the process-wide engine.
+pub fn stats() -> EngineStats {
+    McmEngine::global().stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcm::optimize_mcm;
+    use crate::num::Rng;
+
+    #[test]
+    fn canonicalization_reduces_to_the_single_fundamental() {
+        // {3, -6, 12} share the fundamental 3: one cached row, three
+        // sign/shift reconstructions
+        let t = LinearTargets::mcm(&[3, -6, 12]);
+        let c = canonicalize(&t, Tier::McmHeuristic);
+        assert_eq!(c.key.rows, vec![vec![3]]);
+        let want = [(0u32, false), (1, true), (2, false)];
+        assert_eq!(c.maps.len(), want.len());
+        for (m, &(want_shift, want_negate)) in c.maps.iter().zip(&want) {
+            match *m {
+                RowMap::Mapped { index, shift, negate } => {
+                    assert_eq!((index, shift, negate), (0, want_shift, want_negate));
+                }
+                other => panic!("unexpected map {other:?}"),
+            }
+        }
+        let eng = McmEngine::new();
+        let g = eng.solve(&t, Tier::McmHeuristic);
+        g.verify_against(&t).unwrap();
+        assert_eq!(g.num_ops(), 1, "one adder realizes all three constants");
+        assert_eq!(g.eval(&[5]), vec![15, -30, 60]);
+    }
+
+    #[test]
+    fn sign_shift_variants_hit_the_same_entry() {
+        let eng = McmEngine::new();
+        eng.solve(&LinearTargets::mcm(&[11, 13]), Tier::McmHeuristic);
+        // same fundamentals, same magnitude bound: pure hits
+        eng.solve(&LinearTargets::mcm(&[-11, 13]), Tier::McmHeuristic);
+        eng.solve(&LinearTargets::mcm(&[13, 11, 0]), Tier::McmHeuristic);
+        let s = eng.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 1, 1), "{s:?}");
+        assert!(s.ops_reused >= s.ops_solved);
+    }
+
+    #[test]
+    fn dbr_tier_keeps_pricing_duplicates() {
+        // behavioral semantics: no sharing, a duplicated row costs twice
+        let eng = McmEngine::new();
+        let t = LinearTargets::mcm(&[7, 7]);
+        let g = eng.solve(&t, Tier::Dbr);
+        g.verify_against(&t).unwrap();
+        assert_eq!(g.num_ops(), dbr(&t).num_ops());
+        assert_eq!(g.num_ops(), 2);
+        // while the CSE tier shares it
+        assert_eq!(eng.solve(&t, Tier::Cse).num_ops(), 1);
+    }
+
+    #[test]
+    fn tiers_never_alias() {
+        let eng = McmEngine::new();
+        let t = LinearTargets::cmvm(&[vec![11, 3], vec![5, 13]]);
+        let gd = eng.solve(&t, Tier::Dbr);
+        let gc = eng.solve(&t, Tier::Cse);
+        assert_eq!(gd.num_ops(), dbr(&t).num_ops());
+        assert_eq!(gc.num_ops(), cse(&t).num_ops());
+        assert!(gc.num_ops() < gd.num_ops());
+        assert_eq!(eng.stats().entries, 2);
+    }
+
+    #[test]
+    fn all_zero_instances_cost_nothing_and_skip_the_cache() {
+        let eng = McmEngine::new();
+        let t = LinearTargets::cmvm(&[vec![0, 0], vec![0, 0]]);
+        let g = eng.solve(&t, Tier::Cse);
+        g.verify_against(&t).unwrap();
+        assert_eq!(g.num_ops(), 0);
+        assert!(g.outputs.iter().all(|o| o.is_zero));
+        assert_eq!(eng.stats().lookups(), 0);
+    }
+
+    #[test]
+    fn best_tier_escalates_past_dbr() {
+        // 105: DBR needs 3 ops (4 CSD digits), the exact MCM engine 2
+        let eng = McmEngine::new();
+        let t = LinearTargets::mcm(&[105]);
+        let g = eng.solve(&t, Tier::Best);
+        g.verify_against(&t).unwrap();
+        assert_eq!(g.num_ops(), 2);
+    }
+
+    #[test]
+    fn cached_and_uncached_solves_agree_property() {
+        // the acceptance property: for randomized MCM/CAVM/CMVM targets,
+        // the engine (cold and warm) matches the direct solver in op
+        // count and in simulated outputs
+        let mut rng = Rng::new(4242);
+        let eng = McmEngine::new();
+        for iter in 0..60 {
+            let (t, tier, reference) = match iter % 4 {
+                0 => {
+                    let k = 1 + rng.below(8);
+                    let consts: Vec<i64> =
+                        (0..k).map(|_| rng.below(2048) as i64 - 1023).collect();
+                    let t = LinearTargets::mcm(&consts);
+                    let r = optimize_mcm(&consts, Effort::Heuristic);
+                    (t, Tier::McmHeuristic, r)
+                }
+                1 => {
+                    let n = 1 + rng.below(6);
+                    let coeffs: Vec<i64> =
+                        (0..n).map(|_| rng.below(512) as i64 - 255).collect();
+                    let t = LinearTargets::cavm(&coeffs);
+                    let r = cse(&t);
+                    (t, Tier::Cse, r)
+                }
+                _ => {
+                    let m = 1 + rng.below(4);
+                    let n = 1 + rng.below(4);
+                    let rows: Vec<Vec<i64>> = (0..m)
+                        .map(|_| (0..n).map(|_| rng.below(512) as i64 - 255).collect())
+                        .collect();
+                    let t = LinearTargets::cmvm(&rows);
+                    if iter % 4 == 2 {
+                        let r = dbr(&t);
+                        (t, Tier::Dbr, r)
+                    } else {
+                        let r = cse(&t);
+                        (t, Tier::Cse, r)
+                    }
+                }
+            };
+            for round in 0..2 {
+                // round 0 may miss; round 1 must reconstruct from cache
+                let g = eng.solve(&t, tier);
+                g.verify_against(&t)
+                    .unwrap_or_else(|e| panic!("iter {iter} round {round}: {e}"));
+                assert_eq!(
+                    g.num_ops(),
+                    reference.num_ops(),
+                    "iter {iter} round {round} ({tier:?}): op count drifted"
+                );
+                let xs: Vec<i128> =
+                    (0..t.num_inputs).map(|_| rng.below(255) as i128 - 127).collect();
+                assert_eq!(g.eval(&xs), reference.eval(&xs), "iter {iter} round {round}");
+            }
+        }
+        let s = eng.stats();
+        assert!(s.hits >= s.misses, "every instance re-solved warm: {s:?}");
+    }
+
+    #[test]
+    fn concurrent_solves_share_one_cache() {
+        let eng = McmEngine::new();
+        let instances: Vec<LinearTargets> = (0..8i64)
+            .map(|i| LinearTargets::mcm(&[3 + 2 * i, 45, 105, -6 * (i + 1)]))
+            .collect();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for t in &instances {
+                        let g = eng.solve(t, Tier::McmHeuristic);
+                        g.verify_against(t).unwrap();
+                    }
+                });
+            }
+        });
+        let s = eng.stats();
+        assert_eq!(s.lookups(), 32);
+        // racing threads may duplicate solves (every thread can miss the
+        // same cold instance), but the cache converges to one entry per
+        // canonical instance and each was solved at least once
+        assert!(s.entries <= 8, "{s:?}");
+        assert!(s.misses >= 8, "{s:?}");
+    }
+
+    #[test]
+    fn reset_clears_cache_and_counters() {
+        let eng = McmEngine::new();
+        let t = LinearTargets::mcm(&[45, 105]);
+        eng.solve(&t, Tier::McmHeuristic);
+        eng.solve(&t, Tier::McmHeuristic);
+        assert_eq!((eng.stats().hits, eng.stats().misses), (1, 1));
+        eng.reset();
+        assert_eq!(eng.stats(), EngineStats::default());
+        eng.solve(&t, Tier::McmHeuristic);
+        assert_eq!((eng.stats().hits, eng.stats().misses), (0, 1));
+    }
+}

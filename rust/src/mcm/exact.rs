@@ -315,37 +315,50 @@ pub enum Effort {
     Auto,
 }
 
-/// Build the multiplierless MCM block `y_j = c_j · x` as an adder graph.
-pub fn optimize_mcm(constants: &[i64], effort: Effort) -> AdderGraph {
-    let mut fundamentals: BTreeSet<u64> = BTreeSet::new();
+/// The canonical MCM problem of a constant set: the positive odd
+/// fundamentals (deduped, ascending, zeros dropped, the trivial
+/// fundamental 1 kept so the output arity is part of the problem) plus
+/// the bit-width bound the search engines operate under. Two constant
+/// sets with equal problems synthesize identically — the soundness
+/// argument of the [`crate::mcm::engine`] cache key.
+pub fn mcm_problem(constants: &[i64]) -> (BTreeSet<u64>, u32) {
+    let mut funds: BTreeSet<u64> = BTreeSet::new();
     let mut max_bits = 1u32;
     for &c in constants {
         let (f, _, _) = odd_normalize(c);
-        if f > 1 {
-            fundamentals.insert(f);
+        if f > 0 {
+            funds.insert(f);
         }
         max_bits = max_bits.max(64 - (c.unsigned_abs()).leading_zeros());
     }
+    (funds, max_bits)
+}
 
-    let order = match effort {
-        Effort::Heuristic => heuristic_mcm(&fundamentals, max_bits),
-        Effort::Exact { node_budget } => exact_mcm(&fundamentals, max_bits, node_budget)
-            .unwrap_or_else(|| heuristic_mcm(&fundamentals, max_bits)),
+/// Run the effort-selected search for every nontrivial fundamental.
+fn synthesize(funds: &BTreeSet<u64>, max_bits: u32, effort: Effort) -> Vec<(u64, Synth)> {
+    let targets: BTreeSet<u64> = funds.iter().cloned().filter(|&f| f > 1).collect();
+    match effort {
+        Effort::Heuristic => heuristic_mcm(&targets, max_bits),
+        Effort::Exact { node_budget } => exact_mcm(&targets, max_bits, node_budget)
+            .unwrap_or_else(|| heuristic_mcm(&targets, max_bits)),
         Effort::Auto => {
-            if fundamentals.len() <= 5 && max_bits <= 10 {
-                exact_mcm(&fundamentals, max_bits, 150_000)
-                    .unwrap_or_else(|| heuristic_mcm(&fundamentals, max_bits))
+            if targets.len() <= 5 && max_bits <= 10 {
+                exact_mcm(&targets, max_bits, 150_000)
+                    .unwrap_or_else(|| heuristic_mcm(&targets, max_bits))
             } else {
-                heuristic_mcm(&fundamentals, max_bits)
+                heuristic_mcm(&targets, max_bits)
             }
         }
-    };
+    }
+}
 
-    // assemble the graph
+/// Turn a synthesis order into graph nodes; outputs are left to the
+/// caller. Returns the operand realizing each fundamental.
+fn assemble(order: &[(u64, Synth)]) -> (AdderGraph, HashMap<u64, Operand>) {
     let mut g = AdderGraph::new(1);
     let mut where_is: HashMap<u64, Operand> = HashMap::new();
     where_is.insert(1, Operand::Input(0));
-    for (f, sy) in &order {
+    for (f, sy) in order {
         let a = where_is[&sy.a];
         let b = where_is[&sy.b];
         let o = match sy.mode {
@@ -356,6 +369,14 @@ pub fn optimize_mcm(constants: &[i64], effort: Effort) -> AdderGraph {
         };
         where_is.insert(*f, o);
     }
+    (g, where_is)
+}
+
+/// Build the multiplierless MCM block `y_j = c_j · x` as an adder graph.
+pub fn optimize_mcm(constants: &[i64], effort: Effort) -> AdderGraph {
+    let (funds, max_bits) = mcm_problem(constants);
+    let order = synthesize(&funds, max_bits, effort);
+    let (mut g, where_is) = assemble(&order);
     for &c in constants {
         let (f, shift, negate) = odd_normalize(c);
         if f == 0 {
@@ -375,6 +396,24 @@ pub fn optimize_mcm(constants: &[i64], effort: Effort) -> AdderGraph {
         }
     }
     debug_assert!(g.verify_against(&LinearTargets::mcm(constants)).is_ok());
+    g
+}
+
+/// Solve a canonical fundamental instance directly — the miss path of
+/// [`crate::mcm::engine`]. The graph taps one output per fundamental,
+/// ascending, unshifted and positive; callers reconstruct arbitrary
+/// sign/shift variants from those taps.
+pub fn optimize_fundamental_set(funds: &BTreeSet<u64>, max_bits: u32, effort: Effort) -> AdderGraph {
+    let order = synthesize(funds, max_bits, effort);
+    let (mut g, where_is) = assemble(&order);
+    for f in funds {
+        g.outputs.push(OutputSpec {
+            src: where_is[f],
+            shift: 0,
+            negate: false,
+            is_zero: false,
+        });
+    }
     g
 }
 

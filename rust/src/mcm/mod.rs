@@ -16,9 +16,16 @@
 //!   Aksoy et al. [17]–[19] (digit-pattern sharing + single-op row reuse)
 //! - [`optimize_mcm`]: exact MCM search for small instances (the role of
 //!   [17]) with a graph-heuristic fallback
+//!
+//! All production call sites (hardware cost models, tuners, reports,
+//! netlist generators) go through [`engine`]: a process-wide, sharded,
+//! content-addressed solution cache over canonicalized instances, so the
+//! coordinator sweep solves each distinct constant set once per process
+//! instead of once per (job × figure × metric × tuner iteration).
 
 pub mod cse;
 pub mod dbr;
+pub mod engine;
 pub mod exact;
 pub mod graph;
 
@@ -72,6 +79,7 @@ impl LinearTargets {
 
 pub use cse::cse;
 pub use dbr::dbr;
+pub use engine::{EngineStats, McmEngine, Tier};
 pub use exact::{optimize_mcm, Effort};
 
 #[cfg(test)]

@@ -15,6 +15,9 @@ pub mod smac;
 
 pub use eval::{AccuracyEval, NativeEval};
 
+use crate::ann::QuantizedAnn;
+use crate::mcm::{engine, LinearTargets, Tier};
+
 /// Outcome of a tuning run.
 #[derive(Debug, Clone)]
 pub struct TuneResult {
@@ -27,4 +30,27 @@ pub struct TuneResult {
     pub sweeps: usize,
     /// wall-clock seconds (the paper's per-table `CPU` column)
     pub cpu_seconds: f64,
+    /// add/sub operations of the tuned weights' multiplierless
+    /// realization, priced through the memoized [`crate::mcm::engine`]
+    /// with the same constant sets the architecture's hardware model
+    /// solves (CMVM per layer for the parallel tuner; the sls-shifted
+    /// per-layer / whole-net MCM instances for the SMAC tuners) — the
+    /// hardware quantity the tnzd/sls proxies stand in for
+    pub adder_ops: usize,
+}
+
+/// Total add/sub operations of the per-layer CMVM realization of `qann`
+/// (the parallel architecture's multiplierless view), solved through the
+/// process-wide MCM engine. Tuner trajectories visit neighborhoods of
+/// near-identical constant sets (one weight nudged per step), so after
+/// the first sweep these solves are predominantly cache hits. The SMAC
+/// tuners price their own architecture-matched instances instead
+/// (`posttrain::smac`), mirroring the hardware models' constant sets.
+pub fn realized_adder_ops(qann: &QuantizedAnn) -> usize {
+    let mut total = 0usize;
+    for k in 0..qann.structure.num_layers() {
+        let t = LinearTargets::cmvm(&qann.weights[k]);
+        total += engine::solve(&t, Tier::Cse).num_ops();
+    }
+    total
 }

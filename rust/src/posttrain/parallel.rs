@@ -52,12 +52,15 @@ pub fn tune_parallel(qann: &QuantizedAnn, ev: &dyn AccuracyEval) -> TuneResult {
         }
     }
 
+    // the parallel architecture realizes each layer as one CMVM block
+    let adder_ops = super::realized_adder_ops(&best);
     TuneResult {
         qann: best,
         bha,
         evals,
         sweeps,
         cpu_seconds: start.elapsed().as_secs_f64(),
+        adder_ops,
     }
 }
 

@@ -53,12 +53,49 @@ pub fn tune_smac(qann: &QuantizedAnn, ev: &dyn AccuracyEval, scope: SlsScope) ->
         }
     }
 
+    let adder_ops = smac_adder_ops(&best, scope);
     TuneResult {
         qann: best,
         bha,
         evals,
         sweeps,
         cpu_seconds: start.elapsed().as_secs_f64(),
+        adder_ops,
+    }
+}
+
+/// Adder ops of the tuned net's own MCM realization, mirroring the
+/// constant sets the hardware models solve — per layer over per-neuron
+/// sls-shifted stored weights for SMAC_NEURON (`hw::smac_neuron::build`),
+/// one whole-net block over globally sls-shifted weights for SMAC_ANN
+/// (`hw::smac_ann::build`) — so the metric and the figures agree, and
+/// the engine cache is already warm when the reports price the design.
+fn smac_adder_ops(qann: &QuantizedAnn, scope: SlsScope) -> usize {
+    use crate::hw::report::neuron_stored_bits;
+    use crate::mcm::{engine, LinearTargets, Tier};
+    match scope {
+        SlsScope::PerNeuron => {
+            let mut total = 0usize;
+            for k in 0..qann.structure.num_layers() {
+                let mut consts: Vec<i64> = Vec::new();
+                for m in 0..qann.structure.layer_outputs(k) {
+                    let (sls, _) = neuron_stored_bits(qann, k, m);
+                    consts.extend(qann.weights[k][m].iter().map(|&w| w >> sls));
+                }
+                total += engine::solve(&LinearTargets::mcm(&consts), Tier::McmHeuristic).num_ops();
+            }
+            total
+        }
+        SlsScope::WholeAnn => {
+            let all: Vec<i64> = qann
+                .weights
+                .iter()
+                .flat_map(|l| l.iter().flatten().cloned().collect::<Vec<_>>())
+                .collect();
+            let sls = smallest_left_shift(all.iter().cloned());
+            let consts: Vec<i64> = all.iter().map(|&w| w >> sls).collect();
+            engine::solve(&LinearTargets::mcm(&consts), Tier::McmHeuristic).num_ops()
+        }
     }
 }
 

@@ -3,16 +3,36 @@
 //! Python never runs at request time — artifacts are compiled once per
 //! process by the PJRT CPU client and re-executed with candidate
 //! parameters as ordinary inputs.
+//!
+//! The real implementation (and its `xla` dependency) is compiled only
+//! with the off-by-default **`pjrt`** cargo feature, so the default build
+//! and test suite are hermetic on machines without an XLA toolchain. The
+//! default build ships an API-compatible stub whose constructors return a
+//! clear error — see README §PJRT for enabling the real backend.
 
+#[cfg(feature = "pjrt")]
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod evaluator;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
-pub use artifacts::Artifacts;
-pub use evaluator::PjrtEval;
-pub use trainer::{PjrtTrainer, TrainLog};
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
+#[cfg(feature = "pjrt")]
+pub use artifacts::Artifacts;
+#[cfg(feature = "pjrt")]
+pub use evaluator::PjrtEval;
+#[cfg(feature = "pjrt")]
+pub use trainer::PjrtTrainer;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Artifacts, PjrtEval, PjrtTrainer};
+
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 /// Batch sizes baked into the artifacts (must mirror python/compile/model.py).
@@ -21,12 +41,28 @@ pub const TRAIN_BATCH: usize = 64;
 /// Output classes of the pendigits task.
 pub const CLASSES: usize = 10;
 
+/// One epoch record of the training log.
+#[derive(Debug, Clone)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub validation_accuracy: f64,
+}
+
+/// Full log of a PJRT-driven run (the loss curve EXPERIMENTS.md records).
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub epochs: Vec<EpochLog>,
+    pub steps: usize,
+}
+
 /// Load one HLO-text artifact and compile it on a PJRT client.
 ///
 /// The xla crate's client handle is `Rc`-based (neither `Send` nor
 /// `Sync`), so each thread that talks to PJRT owns its own client —
 /// [`Artifacts`] bundles a client with its executable cache, and the
 /// experiment sweep runner creates one registry per worker thread.
+#[cfg(feature = "pjrt")]
 pub fn load_executable(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
     let proto = xla::HloModuleProto::from_text_file(
         path.to_str().context("non-utf8 artifact path")?,
@@ -38,7 +74,7 @@ pub fn load_executable(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjR
         .with_context(|| format!("compiling {}", path.display()))
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

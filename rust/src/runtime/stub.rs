@@ -1,0 +1,112 @@
+//! API-compatible stand-in for the PJRT runtime when the crate is built
+//! without the `pjrt` feature (the default, hermetic configuration).
+//!
+//! Constructors fail with a clear error pointing at the feature flag; the
+//! types carry an uninhabited field, so every method body past
+//! construction is statically unreachable and the stub can never produce
+//! wrong results — callers that handle the `Result` (the CLI's
+//! `--eval pjrt` path, the benches' `if let Ok(..)` guards) degrade
+//! gracefully to the native backends.
+
+use super::TrainLog;
+use crate::ann::dataset::{Dataset, Sample};
+use crate::ann::model::Ann;
+use crate::ann::quant::QuantizedAnn;
+use crate::ann::structure::AnnStructure;
+use crate::ann::train::Trainer;
+use crate::posttrain::AccuracyEval;
+use anyhow::{bail, Result};
+use std::convert::Infallible;
+use std::path::{Path, PathBuf};
+
+const UNAVAILABLE: &str = "PJRT support is not compiled in: rebuild with \
+     `--features pjrt` and an xla crate in the workspace (see README §PJRT)";
+
+/// Stub artifact registry; [`Artifacts::new`] always fails.
+pub struct Artifacts {
+    never: Infallible,
+}
+
+impl Artifacts {
+    pub fn new(_dir: impl Into<PathBuf>) -> Result<Artifacts> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Default location: `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Open the default registry (always an error without `pjrt`).
+    pub fn open_default() -> Result<Artifacts> {
+        Artifacts::new(Self::default_dir())
+    }
+
+    pub fn dir(&self) -> &Path {
+        match self.never {}
+    }
+}
+
+/// Stub evaluator; [`PjrtEval::new`] always fails.
+pub struct PjrtEval {
+    never: Infallible,
+}
+
+impl PjrtEval {
+    pub fn new(_reg: &Artifacts, _structure: &AnnStructure, _samples: &[Sample]) -> Result<PjrtEval> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn predict_all(&self, _qann: &QuantizedAnn) -> Result<Vec<Vec<i32>>> {
+        match self.never {}
+    }
+}
+
+impl AccuracyEval for PjrtEval {
+    fn accuracy(&self, _qann: &QuantizedAnn) -> f64 {
+        match self.never {}
+    }
+
+    fn num_samples(&self) -> usize {
+        match self.never {}
+    }
+}
+
+/// Stub trainer; [`PjrtTrainer::new`] always fails.
+pub struct PjrtTrainer {
+    never: Infallible,
+}
+
+impl PjrtTrainer {
+    pub fn new(_reg: &Artifacts, _structure: &AnnStructure, _trainer: Trainer) -> Result<PjrtTrainer> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn grads(&self, _ann: &Ann, _x: &[f32], _y_onehot: &[f32]) -> Result<(f64, Vec<f64>)> {
+        match self.never {}
+    }
+
+    pub fn train(
+        &self,
+        _data: &Dataset,
+        _epochs: usize,
+        _patience: usize,
+        _lr: f64,
+        _seed: u64,
+    ) -> Result<(Ann, TrainLog)> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructors_point_at_the_feature_flag() {
+        let err = Artifacts::open_default().err().unwrap();
+        assert!(err.to_string().contains("--features pjrt"), "{err}");
+        let err = Artifacts::new("/tmp/nowhere").err().unwrap();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

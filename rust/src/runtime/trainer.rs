@@ -4,7 +4,7 @@
 //! of the paper run with the L2 JAX forward/backward — the end-to-end
 //! proof that all three layers compose (examples/train_pendigits.rs).
 
-use super::{Artifacts, CLASSES, TRAIN_BATCH};
+use super::{Artifacts, EpochLog, TrainLog, CLASSES, TRAIN_BATCH};
 use crate::ann::dataset::Dataset;
 use crate::ann::model::{Ann, Init};
 use crate::ann::structure::AnnStructure;
@@ -12,21 +12,6 @@ use crate::ann::train::Trainer;
 use crate::num::Rng;
 use anyhow::Result;
 use std::rc::Rc;
-
-/// One epoch record of the training log.
-#[derive(Debug, Clone)]
-pub struct EpochLog {
-    pub epoch: usize,
-    pub mean_loss: f64,
-    pub validation_accuracy: f64,
-}
-
-/// Full log of a PJRT-driven run (the loss curve EXPERIMENTS.md records).
-#[derive(Debug, Clone, Default)]
-pub struct TrainLog {
-    pub epochs: Vec<EpochLog>,
-    pub steps: usize,
-}
 
 /// Adam state over the flat parameter vector.
 struct Adam {

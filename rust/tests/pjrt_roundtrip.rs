@@ -2,6 +2,10 @@
 //! kernel) executed through PJRT must agree bit-for-bit with the native
 //! golden model across structures, quantization values and tuned weight
 //! sets — the property the whole tuning flow rests on.
+//!
+//! Compiled only with `--features pjrt` (the default build ships the
+//! runtime stub, which cannot execute artifacts).
+#![cfg(feature = "pjrt")]
 
 use simurg::ann::dataset::Dataset;
 use simurg::ann::model::{Ann, Init};
