@@ -11,11 +11,14 @@ use simurg::ann::dataset::Dataset;
 use simurg::ann::model::{Ann, Init};
 use simurg::ann::structure::{Activation, AnnStructure};
 use simurg::ann::quant::QuantizedAnn;
+use simurg::hw::design::{ArchKind, LayerPricer};
 use simurg::hw::netsim;
+use simurg::hw::{Architecture, Style};
 use simurg::mcm::{cse, dbr, optimize_mcm, Effort, LinearTargets};
 use simurg::num::Rng;
 use simurg::posttrain::{AccuracyEval, NativeEval};
 use simurg::runtime::{Artifacts, PjrtEval};
+use std::time::Instant;
 
 fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
     let st = AnnStructure::parse(structure).unwrap();
@@ -85,4 +88,70 @@ fn main() {
     bench("hw smac_neuron/mcm build 16-16-10", 2, 10, || {
         simurg::hw::smac_neuron::build(&lib, &qann, simurg::hw::smac_neuron::SmacStyle::Mcm)
     });
+
+    // == design IR: the tuner scoring path ==
+    // A tuner candidate touches exactly one layer. Compare pricing the
+    // candidate stream with a fresh pricer per eval (rebuild: every layer
+    // re-canonicalized against the engine) vs one persistent LayerPricer
+    // (elaborate-once: untouched layers answered from the per-layer cache).
+    println!("\n== design IR: tuner pricing (elaborate-once vs rebuild per eval) ==");
+    const EVALS: usize = 300;
+    let base = qann_for("16-16-10", 3);
+    let candidate = |i: usize| -> QuantizedAnn {
+        let mut q2 = base.clone();
+        let k = i % q2.structure.num_layers();
+        let m = i % q2.structure.layer_outputs(k);
+        let n = i % q2.structure.layer_inputs(k);
+        q2.weights[k][m][n] += 1 + (i as i64 % 3);
+        q2
+    };
+    // warm the engine on the whole candidate stream so both sides measure
+    // IR-layer overhead, not first-solve cost
+    for i in 0..EVALS {
+        LayerPricer::new(ArchKind::Parallel, Style::Cmvm).adder_ops(&candidate(i));
+    }
+    let t = Instant::now();
+    let mut ops_rebuild = 0usize;
+    for i in 0..EVALS {
+        ops_rebuild += LayerPricer::new(ArchKind::Parallel, Style::Cmvm).adder_ops(&candidate(i));
+    }
+    let rebuild_ms = t.elapsed().as_secs_f64() * 1e3;
+    let t = Instant::now();
+    let mut pricer = LayerPricer::new(ArchKind::Parallel, Style::Cmvm);
+    let mut ops_cached = 0usize;
+    for i in 0..EVALS {
+        ops_cached += pricer.adder_ops(&candidate(i));
+    }
+    let cached_ms = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(ops_rebuild, ops_cached, "both pricing paths must agree");
+    let speedup = rebuild_ms / cached_ms.max(1e-9);
+    println!("rebuild per eval  {rebuild_ms:>10.2} ms  ({EVALS} candidate evals)");
+    println!("elaborate-once    {cached_ms:>10.2} ms  ({speedup:.2}x)");
+
+    // elaborate-once for the full cost walk too: one Design, many cost()
+    // calls, vs re-elaborating per call
+    let t = Instant::now();
+    for _ in 0..50 {
+        std::hint::black_box(
+            simurg::hw::parallel::Parallel.elaborate(&base, Style::Cmvm).cost(&lib),
+        );
+    }
+    let reelab_ms = t.elapsed().as_secs_f64() * 1e3 / 50.0;
+    let design = simurg::hw::parallel::Parallel.elaborate(&base, Style::Cmvm);
+    let t = Instant::now();
+    for _ in 0..50 {
+        std::hint::black_box(design.cost(&lib));
+    }
+    let walk_ms = t.elapsed().as_secs_f64() * 1e3 / 50.0;
+    println!("cost: re-elaborate {reelab_ms:>8.3} ms/call, walk shared design {walk_ms:>8.3} ms/call");
+
+    let json = format!(
+        "{{\n  \"bench\": \"design_ir\",\n  \"structure\": \"16-16-10\",\n  \
+         \"candidate_evals\": {EVALS},\n  \"rebuild_per_eval_ms\": {rebuild_ms:.3},\n  \
+         \"elaborate_once_ms\": {cached_ms:.3},\n  \"speedup\": {speedup:.3},\n  \
+         \"cost_reelaborate_ms\": {reelab_ms:.4},\n  \"cost_walk_ms\": {walk_ms:.4},\n  \
+         \"adder_ops_checksum\": {ops_cached}\n}}\n"
+    );
+    std::fs::write("BENCH_design_ir.json", &json).expect("write BENCH_design_ir.json");
+    println!("wrote BENCH_design_ir.json");
 }

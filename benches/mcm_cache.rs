@@ -41,14 +41,15 @@ fn layer_instances(q: &QuantizedAnn) -> Vec<(LinearTargets, Tier)> {
 
 fn main() {
     // 5 structures × 3 independent nets (the trainer axis of a figure),
-    // priced 3 times each (the metric axis of `report::figure`)
-    const SEEDS: u64 = 3;
-    const PASSES: usize = 3;
+    // priced 3 times each (the metric axis of `report::figure`).
+    // `--smoke` (the CI bit-rot check) shrinks to 1 net per structure.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (seeds, passes): (u64, usize) = if smoke { (1, 3) } else { (3, 3) };
     let mut workload: Vec<(LinearTargets, Tier)> = Vec::new();
     for (i, st) in AnnStructure::paper_benchmarks().iter().enumerate() {
-        for s in 0..SEEDS {
+        for s in 0..seeds {
             let q = qann(st, 1000 + 10 * i as u64 + s);
-            for _ in 0..PASSES {
+            for _ in 0..passes {
                 workload.extend(layer_instances(&q));
             }
         }

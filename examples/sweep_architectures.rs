@@ -9,9 +9,7 @@ use simurg::ann::dataset::Dataset;
 use simurg::ann::structure::AnnStructure;
 use simurg::ann::train::Trainer;
 use simurg::coordinator::flow::{run_flow, FlowConfig};
-use simurg::hw::parallel::MultStyle;
-use simurg::hw::smac_neuron::SmacStyle;
-use simurg::hw::{parallel, smac_ann, smac_neuron, TechLib};
+use simurg::hw::{Architecture, Style, TechLib};
 
 fn main() -> anyhow::Result<()> {
     let data = Dataset::load_or_synthesize(None, 42);
@@ -25,12 +23,10 @@ fn main() -> anyhow::Result<()> {
         cfg.runs = 1;
         let o = run_flow(&data, &cfg, None)?;
         let qann = &o.quant.qann;
-        let rows = [
-            parallel::build(&lib, qann, MultStyle::Behavioral),
-            smac_neuron::build(&lib, qann, SmacStyle::Behavioral),
-            smac_ann::build(&lib, qann, SmacStyle::Behavioral),
-        ];
-        for r in rows {
+        // data-driven over the architecture registry: elaborate once per
+        // architecture, derive the report from the shared design IR
+        for arch in <dyn Architecture>::all() {
+            let r = arch.elaborate(qann, Style::Behavioral).cost(&lib);
             println!(
                 "{:<14}{:<13}{:>12.1}{:>10.3}{:>10}{:>12.2}{:>10.2}",
                 st.to_string(),

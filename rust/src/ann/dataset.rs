@@ -124,6 +124,22 @@ impl Dataset {
         }
         Dataset::synthetic_pendigits(seed)
     }
+
+    /// Content fingerprint over all three splits — what distinguishes two
+    /// datasets with identical split sizes (synthetic seeds, UCI vs
+    /// synthetic). Keys the trained-weight cache (`coordinator::flow`).
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::Hasher;
+        let mut h = crate::num::fxhash::FxHasher::default();
+        for split in [&self.train, &self.validation, &self.test] {
+            h.write_usize(split.len());
+            for s in split.iter() {
+                h.write(&s.features);
+                h.write(&[s.label]);
+            }
+        }
+        h.finish()
+    }
 }
 
 fn parse_uci(text: &str) -> Result<Vec<Sample>> {
@@ -390,6 +406,15 @@ mod tests {
             assert_eq!(x.features, y.features);
             assert_eq!(x.label, y.label);
         }
+    }
+
+    #[test]
+    fn fingerprint_separates_same_shape_datasets() {
+        // identical split sizes, different content -> different prints
+        let a = Dataset::synthetic_with_sizes(5, 100, 50);
+        let b = Dataset::synthetic_with_sizes(6, 100, 50);
+        assert_eq!(a.fingerprint(), Dataset::synthetic_with_sizes(5, 100, 50).fingerprint());
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 
     #[test]

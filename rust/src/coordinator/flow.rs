@@ -7,6 +7,7 @@ use crate::ann::sim;
 use crate::ann::structure::AnnStructure;
 use crate::ann::train::{software_test_accuracy, train_best_of, Trainer};
 use crate::ann::Ann;
+use crate::hw::ArchKind;
 use crate::posttrain::parallel::tune_parallel;
 use crate::posttrain::smac::{tune_smac, SlsScope};
 use crate::posttrain::{realized_adder_ops, AccuracyEval, NativeEval, TuneResult};
@@ -70,11 +71,26 @@ pub struct FlowOutcome {
     pub hta_smac_ann: f64,
 }
 
+/// Cache file of one experiment's trained weights. The name encodes
+/// (trainer, structure, runs, seed) *and* a dataset fingerprint — without
+/// the latter, two datasets with the same structure silently share cached
+/// weights.
+fn weight_cache_path(data: &Dataset, cfg: &FlowConfig) -> Option<PathBuf> {
+    cfg.weights_dir.as_ref().map(|d| {
+        d.join(format!(
+            "{}_{}_r{}_s{}_d{:016x}.txt",
+            cfg.trainer.name(),
+            cfg.structure,
+            cfg.runs,
+            cfg.seed,
+            data.fingerprint()
+        ))
+    })
+}
+
 /// Train (or load the cached weights of) one experiment.
 pub fn get_or_train(data: &Dataset, cfg: &FlowConfig) -> Result<Ann> {
-    let cache = cfg.weights_dir.as_ref().map(|d| {
-        d.join(format!("{}_{}_r{}_s{}.txt", cfg.trainer.name(), cfg.structure, cfg.runs, cfg.seed))
-    });
+    let cache = weight_cache_path(data, cfg);
     if let Some(path) = &cache {
         if path.exists() {
             let text = std::fs::read_to_string(path)
@@ -109,18 +125,37 @@ pub fn run_flow(data: &Dataset, cfg: &FlowConfig, ev: Option<&dyn AccuracyEval>)
     // (structure × trainer) quantized layers recur and become lookups
     let ops_untuned = realized_adder_ops(&quant.qann);
 
-    let native;
-    let ev: &dyn AccuracyEval = match ev {
-        Some(e) => e,
+    // The three tuners are independent (all start from `quant.qann`).
+    // With the native backend each thread builds its own evaluator and
+    // they run concurrently, matching the sweep's threading model; a
+    // caller-provided evaluator (PJRT handles are thread-local) keeps the
+    // sequential path.
+    let (tuned_parallel, tuned_smac_neuron, tuned_smac_ann) = match ev {
+        Some(ev) => (
+            tune_parallel(&quant.qann, ev),
+            tune_smac(&quant.qann, ev, SlsScope::PerNeuron),
+            tune_smac(&quant.qann, ev, SlsScope::WholeAnn),
+        ),
         None => {
-            native = NativeEval::new(&data.validation);
-            &native
+            let qann = &quant.qann;
+            let validation = &data.validation;
+            std::thread::scope(|scope| {
+                let par = scope.spawn(move || {
+                    let ev = NativeEval::new(validation);
+                    tune_parallel(qann, &ev)
+                });
+                let sn = scope.spawn(move || {
+                    let ev = NativeEval::new(validation);
+                    tune_smac(qann, &ev, SlsScope::PerNeuron)
+                });
+                let sa = scope.spawn(move || {
+                    let ev = NativeEval::new(validation);
+                    tune_smac(qann, &ev, SlsScope::WholeAnn)
+                });
+                (par.join().unwrap(), sn.join().unwrap(), sa.join().unwrap())
+            })
         }
     };
-
-    let tuned_parallel = tune_parallel(&quant.qann, ev);
-    let tuned_smac_neuron = tune_smac(&quant.qann, ev, SlsScope::PerNeuron);
-    let tuned_smac_ann = tune_smac(&quant.qann, ev, SlsScope::WholeAnn);
     let hta_parallel = sim::hardware_accuracy(&tuned_parallel.qann, &data.test);
     let hta_smac_neuron = sim::hardware_accuracy(&tuned_smac_neuron.qann, &data.test);
     let hta_smac_ann = sim::hardware_accuracy(&tuned_smac_ann.qann, &data.test);
@@ -144,6 +179,19 @@ pub fn run_flow(data: &Dataset, cfg: &FlowConfig, ev: Option<&dyn AccuracyEval>)
 /// The untuned quantized network of an outcome.
 pub fn untuned(outcome: &FlowOutcome) -> &QuantizedAnn {
     &outcome.quant.qann
+}
+
+impl FlowOutcome {
+    /// The tuning result matched to an architecture — lets consumers
+    /// iterate `<dyn Architecture>::all()` data-driven (the match is
+    /// exhaustive, so a new [`ArchKind`] fails here at compile time).
+    pub fn tuned_for(&self, arch: ArchKind) -> &TuneResult {
+        match arch {
+            ArchKind::Parallel => &self.tuned_parallel,
+            ArchKind::SmacNeuron => &self.tuned_smac_neuron,
+            ArchKind::SmacAnn => &self.tuned_smac_ann,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -175,6 +223,30 @@ mod tests {
         let a = get_or_train(&data, &cfg).unwrap();
         let b = get_or_train(&data, &cfg).unwrap(); // cache hit
         assert_eq!(a.flatten_params(), b.flatten_params());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn weight_cache_key_includes_the_dataset() {
+        // regression: two datasets with the same structure must not share
+        // cached weights — the filename carries a dataset fingerprint
+        let dir = std::env::temp_dir().join(format!("simurg_wcache_ds_{}", std::process::id()));
+        let ds_a = Dataset::synthetic_with_sizes(43, 400, 50);
+        let ds_b = Dataset::synthetic_with_sizes(44, 400, 50);
+        let mut cfg = FlowConfig::new(AnnStructure::parse("16-10").unwrap(), Trainer::Matlab);
+        cfg.runs = 1;
+        cfg.weights_dir = Some(dir.clone());
+        let path_a = weight_cache_path(&ds_a, &cfg).unwrap();
+        let path_b = weight_cache_path(&ds_b, &cfg).unwrap();
+        assert_ne!(path_a, path_b, "same (trainer, structure, runs, seed) must still split by dataset");
+        assert_eq!(path_a, weight_cache_path(&ds_a, &cfg).unwrap(), "fingerprint is stable");
+        // training on A then asking for B trains fresh instead of reading
+        // A's cache file
+        let _ = get_or_train(&ds_a, &cfg).unwrap();
+        assert!(path_a.exists());
+        assert!(!path_b.exists());
+        let _ = get_or_train(&ds_b, &cfg).unwrap();
+        assert!(path_b.exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -5,9 +5,7 @@
 use super::flow::FlowOutcome;
 use crate::ann::structure::AnnStructure;
 use crate::ann::train::Trainer;
-use crate::hw::parallel::MultStyle;
-use crate::hw::smac_neuron::SmacStyle;
-use crate::hw::{parallel, smac_ann, smac_neuron, HwReport, TechLib};
+use crate::hw::{Architecture, HwReport, Style, TechLib};
 use crate::mcm::EngineStats;
 use crate::posttrain::TuneResult;
 use std::fmt::Write as _;
@@ -79,7 +77,8 @@ impl FigureSpec {
     }
 }
 
-/// Price one outcome under a figure's design point.
+/// Price one outcome under a figure's design point, data-driven from the
+/// architecture registry: elaborate once, walk the design's cost.
 pub fn hw_report_for(outcome: &FlowOutcome, spec: &FigureSpec, lib: &TechLib) -> HwReport {
     let qann = match spec.tuning {
         Tuning::None => &outcome.quant.qann,
@@ -87,16 +86,10 @@ pub fn hw_report_for(outcome: &FlowOutcome, spec: &FigureSpec, lib: &TechLib) ->
         Tuning::SmacNeuron => &outcome.tuned_smac_neuron.qann,
         Tuning::SmacAnn => &outcome.tuned_smac_ann.qann,
     };
-    match (spec.arch, spec.style) {
-        ("parallel", "behavioral") => parallel::build(lib, qann, MultStyle::Behavioral),
-        ("parallel", "cavm") => parallel::build(lib, qann, MultStyle::Cavm),
-        ("parallel", "cmvm") => parallel::build(lib, qann, MultStyle::Cmvm),
-        ("smac_neuron", "behavioral") => smac_neuron::build(lib, qann, SmacStyle::Behavioral),
-        ("smac_neuron", "mcm") => smac_neuron::build(lib, qann, SmacStyle::Mcm),
-        ("smac_ann", "behavioral") => smac_ann::build(lib, qann, SmacStyle::Behavioral),
-        ("smac_ann", "mcm") => smac_ann::build(lib, qann, SmacStyle::Mcm),
-        other => panic!("unknown design point {other:?}"),
-    }
+    let arch = <dyn Architecture>::by_name(spec.arch)
+        .unwrap_or_else(|| panic!("unknown architecture {:?}", spec.arch));
+    let style = Style::parse(spec.style).unwrap_or_else(|| panic!("unknown style {:?}", spec.style));
+    arch.elaborate(qann, style).cost(lib)
 }
 
 fn find<'a>(

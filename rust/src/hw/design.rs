@@ -1,0 +1,552 @@
+//! The unified elaborated-design IR every hardware consumer walks.
+//!
+//! SIMURG derives cost, simulation and HDL from *one* description of an
+//! ANN design (paper Sec. VI). This module is that description for the
+//! reproduction: an [`Architecture`] elaborates a [`QuantizedAnn`] under a
+//! constant-multiplication [`Style`] into a [`Design`] — a typed datapath
+//! netlist of [`Block`]s with per-block bitwidths, the architecture's
+//! [`Schedule`] (combinational vs the Sec. III cycle programs), the
+//! engine-solved [`AdderGraph`]s embedded once, and per-layer
+//! [`LayerPlan`]s carrying the data the simulator and the Verilog
+//! emitter need. Downstream:
+//!
+//! - [`Design::cost`] is the single generic cost walker producing the
+//!   [`HwReport`] of every figure;
+//! - [`crate::hw::netsim::simulate`] interprets the schedule bit-exactly
+//!   against the golden model;
+//! - [`crate::hw::verilog::verilog`] emits HDL from the same value —
+//!   so the three can never drift apart.
+//!
+//! The [`LayerPricer`] gives the tuners cached re-elaboration: a price
+//! call re-solves only the layers whose weights changed since the last
+//! call (tuner trajectories touch one weight per step).
+
+use super::blocks::{self, BlockCost};
+use super::gates::TechLib;
+use super::report::{self, HwReport};
+use crate::ann::quant::QuantizedAnn;
+use crate::ann::structure::AnnStructure;
+use crate::mcm::{engine, AdderGraph, LinearTargets, Tier};
+use std::hash::Hasher;
+
+/// Constant-multiplication style (paper Sec. V), unified over the three
+/// architectures: the parallel design supports `Behavioral | Cavm | Cmvm`,
+/// the time-multiplexed designs `Behavioral | Mcm`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Style {
+    Behavioral,
+    Cavm,
+    Cmvm,
+    Mcm,
+}
+
+impl Style {
+    pub fn name(self) -> &'static str {
+        match self {
+            Style::Behavioral => "behavioral",
+            Style::Cavm => "cavm",
+            Style::Cmvm => "cmvm",
+            Style::Mcm => "mcm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Style> {
+        match s {
+            "behavioral" => Some(Style::Behavioral),
+            "cavm" => Some(Style::Cavm),
+            "cmvm" => Some(Style::Cmvm),
+            "mcm" => Some(Style::Mcm),
+            _ => None,
+        }
+    }
+}
+
+/// The three design architectures of paper Sec. III.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArchKind {
+    Parallel,
+    SmacNeuron,
+    SmacAnn,
+}
+
+impl ArchKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchKind::Parallel => "parallel",
+            ArchKind::SmacNeuron => "smac_neuron",
+            ArchKind::SmacAnn => "smac_ann",
+        }
+    }
+}
+
+/// Execution schedule of a design: how many clock cycles one inference
+/// takes (the Sec. III cycle-count formulas live in
+/// [`AnnStructure::smac_neuron_cycles`] / [`AnnStructure::smac_ann_cycles`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// everything ripples combinationally; outputs are registered (1 cycle)
+    Combinational,
+    /// layers execute in sequence, ι_k + 1 cycles each (Sec. III-B1)
+    LayerSequential,
+    /// one MAC serves every neuron, (ι_k + 2)·η_k cycles (Sec. III-B2)
+    NeuronSequential,
+}
+
+impl Schedule {
+    pub fn cycles(self, st: &AnnStructure) -> usize {
+        match self {
+            Schedule::Combinational => 1,
+            Schedule::LayerSequential => st.smac_neuron_cycles(),
+            Schedule::NeuronSequential => st.smac_ann_cycles(),
+        }
+    }
+}
+
+/// A typed datapath block with the parameters its gate-level cost is a
+/// function of. `ShiftAdds` references solved graphs in [`Design::graphs`];
+/// a multi-graph entry is a side-by-side bank (the CAVM per-neuron blocks).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockKind {
+    Adder { bits: u32 },
+    Multiplier { w_bits: u32, x_bits: u32 },
+    Mux { n: usize, bits: u32 },
+    ConstantMux { n: usize, bits: u32 },
+    Register { bits: u32 },
+    Counter { n: usize },
+    ActivationUnit { acc_bits: u32 },
+    ShiftAdds { graphs: Vec<usize>, input_ranges: Vec<(i64, i64)> },
+}
+
+impl BlockKind {
+    /// Gate-level cost of one instance of this block.
+    fn unit(&self, lib: &TechLib, graphs: &[AdderGraph]) -> BlockCost {
+        match self {
+            BlockKind::Adder { bits } => blocks::adder(lib, *bits),
+            BlockKind::Multiplier { w_bits, x_bits } => blocks::multiplier(lib, *w_bits, *x_bits),
+            BlockKind::Mux { n, bits } => blocks::mux(lib, *n, *bits),
+            BlockKind::ConstantMux { n, bits } => blocks::constant_mux(lib, *n, *bits),
+            BlockKind::Register { bits } => blocks::register(lib, *bits),
+            BlockKind::Counter { n } => blocks::counter(lib, *n),
+            BlockKind::ActivationUnit { acc_bits } => blocks::activation_unit(lib, *acc_bits),
+            BlockKind::ShiftAdds { graphs: gs, input_ranges } => gs.iter().fold(BlockCost::ZERO, |acc, &gi| {
+                acc.beside(super::graph_cost(lib, &graphs[gi], input_ranges))
+            }),
+        }
+    }
+}
+
+/// One instantiated block of the datapath.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub kind: BlockKind,
+    /// number of instantiated copies (area/energy scale; delay is one copy's)
+    pub count: usize,
+    /// activations per inference — the energy weight (e.g. a SMAC_NEURON
+    /// layer block fires ι_k + 1 times, a clock-gated one 0)
+    pub fires: f64,
+}
+
+/// Where a MAC layer's products come from when the style is
+/// multiplierless: graph `graph`, whose outputs are the per-(neuron,
+/// input) products starting at `offset` (nonzero for the whole-net
+/// SMAC_ANN block).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct McmRef {
+    pub graph: usize,
+    pub offset: usize,
+}
+
+/// How one layer computes its inner products.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerCompute {
+    /// inner products evaluated through embedded adder graphs: one
+    /// CMVM/behavioral graph for the layer, or one CAVM graph per neuron
+    Graphs(Vec<usize>),
+    /// multiply–accumulate of sls-factored stored weights
+    /// (`stored[m][i] = w >> sls[m]`); products routed through an MCM
+    /// graph when `mcm` is set (paper Sec. V-B, Fig. 9)
+    Mac { stored: Vec<Vec<i64>>, sls: Vec<u32>, mcm: Option<McmRef> },
+}
+
+/// Per-layer slice of the elaborated design: the bitwidths the cost and
+/// HDL walkers size blocks with, and the compute plan the simulator runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlan {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub acc_bits: u32,
+    pub in_range: (i64, i64),
+    pub compute: LayerCompute,
+}
+
+/// An elaborated ANN design: the one value cost, simulation and HDL are
+/// all derived from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Design {
+    pub arch: ArchKind,
+    pub style: Style,
+    /// the quantized net the design realizes (weights, biases, q,
+    /// activations, structure)
+    pub qann: QuantizedAnn,
+    /// engine-solved shift-adds networks, embedded once at elaboration
+    pub graphs: Vec<AdderGraph>,
+    /// the datapath netlist
+    pub blocks: Vec<Block>,
+    /// candidate register-to-register (or input-to-register) paths as
+    /// block-index chains; the clock period is the worst path × margin
+    pub paths: Vec<Vec<usize>>,
+    pub schedule: Schedule,
+    pub layers: Vec<LayerPlan>,
+    /// add/sub operations of the constant-multiplication networks
+    pub adder_ops: usize,
+}
+
+impl Design {
+    /// The generic cost walker: price every block in `lib`, take the
+    /// worst timing path and the schedule's cycle count.
+    pub fn cost(&self, lib: &TechLib) -> HwReport {
+        let units: Vec<BlockCost> = self.blocks.iter().map(|b| b.kind.unit(lib, &self.graphs)).collect();
+        let mut area = 0.0f64;
+        let mut energy = 0.0f64;
+        for (b, u) in self.blocks.iter().zip(&units) {
+            area += u.area * b.count as f64;
+            energy += u.energy * b.count as f64 * b.fires;
+        }
+        let path = self
+            .paths
+            .iter()
+            .map(|p| p.iter().map(|&i| units[i].delay).sum::<f64>())
+            .fold(0.0f64, f64::max);
+        let clock = path * lib.clock_margin;
+        let cycles = self.schedule.cycles(&self.qann.structure);
+        HwReport::from_parts(self.arch.name(), self.style.name(), area, clock, cycles, energy, self.adder_ops)
+    }
+
+    /// Cycle count of one inference under the design's schedule.
+    pub fn cycles(&self) -> usize {
+        self.schedule.cycles(&self.qann.structure)
+    }
+}
+
+/// Incremental constructor the architecture impls assemble a [`Design`]
+/// with — they describe blocks, paths and layer plans; all gate-level
+/// arithmetic stays in [`Design::cost`].
+pub struct DesignBuilder {
+    arch: ArchKind,
+    style: Style,
+    schedule: Schedule,
+    graphs: Vec<AdderGraph>,
+    blocks: Vec<Block>,
+    paths: Vec<Vec<usize>>,
+    layers: Vec<LayerPlan>,
+    adder_ops: usize,
+}
+
+impl DesignBuilder {
+    pub fn new(arch: ArchKind, style: Style, schedule: Schedule) -> DesignBuilder {
+        DesignBuilder {
+            arch,
+            style,
+            schedule,
+            graphs: Vec::new(),
+            blocks: Vec::new(),
+            paths: Vec::new(),
+            layers: Vec::new(),
+            adder_ops: 0,
+        }
+    }
+
+    /// Solve a constant-multiplication instance through the process-wide
+    /// memoized engine, embed the graph and count its operations.
+    pub fn solved(&mut self, targets: &LinearTargets, tier: Tier) -> usize {
+        let g = engine::solve(targets, tier);
+        self.adder_ops += g.num_ops();
+        self.graphs.push(g);
+        self.graphs.len() - 1
+    }
+
+    /// Add `count` copies of a block firing `fires` times per inference;
+    /// returns its index for path construction.
+    pub fn block(&mut self, kind: BlockKind, count: usize, fires: f64) -> usize {
+        self.blocks.push(Block { kind, count, fires });
+        self.blocks.len() - 1
+    }
+
+    /// Declare a candidate critical path through the given blocks.
+    pub fn path(&mut self, through: Vec<usize>) {
+        self.paths.push(through);
+    }
+
+    pub fn layer(&mut self, plan: LayerPlan) {
+        self.layers.push(plan);
+    }
+
+    pub fn finish(self, qann: &QuantizedAnn) -> Design {
+        Design {
+            arch: self.arch,
+            style: self.style,
+            qann: qann.clone(),
+            graphs: self.graphs,
+            blocks: self.blocks,
+            paths: self.paths,
+            schedule: self.schedule,
+            layers: self.layers,
+            adder_ops: self.adder_ops,
+        }
+    }
+}
+
+/// A design architecture: elaborates a quantized net into a [`Design`].
+/// Implementations live in `hw/{parallel,smac_neuron,smac_ann}.rs` and
+/// contain *only* elaboration — no gate arithmetic, no HDL, no simulation.
+pub trait Architecture: Sync {
+    fn kind(&self) -> ArchKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// The constant-multiplication styles this architecture supports.
+    fn styles(&self) -> &'static [Style];
+
+    /// Elaborate `qann` under `style`. Panics on an unsupported style;
+    /// data-driven consumers iterate [`Architecture::styles`] instead.
+    fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design;
+}
+
+impl dyn Architecture {
+    /// The architecture registry: every design point the sweeps, figures
+    /// and the CLI iterate, in the paper's presentation order.
+    pub fn all() -> [&'static dyn Architecture; 3] {
+        [&super::parallel::Parallel, &super::smac_neuron::SmacNeuron, &super::smac_ann::SmacAnn]
+    }
+
+    pub fn by_name(name: &str) -> Option<&'static dyn Architecture> {
+        Self::all().into_iter().find(|a| a.name() == name)
+    }
+}
+
+/// Every (architecture × style) design point, data-driven from the
+/// registry — replaces the triplicated match arms the sweeps used to carry.
+pub fn design_points() -> Vec<(&'static dyn Architecture, Style)> {
+    <dyn Architecture>::all()
+        .into_iter()
+        .flat_map(|a| a.styles().iter().map(move |&s| (a, s)))
+        .collect()
+}
+
+/// The sls-factored stored weights of layer `k` with per-neuron factoring
+/// (SMAC_NEURON): `stored[m][i] = w >> sls[m]`.
+pub fn stored_layer(qann: &QuantizedAnn, k: usize) -> (Vec<Vec<i64>>, Vec<u32>) {
+    let n_out = qann.structure.layer_outputs(k);
+    let mut stored = Vec::with_capacity(n_out);
+    let mut sls = Vec::with_capacity(n_out);
+    for m in 0..n_out {
+        let s = report::smallest_left_shift(qann.weights[k][m].iter().cloned());
+        stored.push(qann.weights[k][m].iter().map(|&w| w >> s).collect());
+        sls.push(s);
+    }
+    (stored, sls)
+}
+
+/// Smallest left shift over every weight of the net (the SMAC_ANN global
+/// factoring, paper Sec. IV-C).
+pub fn global_sls(qann: &QuantizedAnn) -> u32 {
+    report::smallest_left_shift(qann.weights.iter().flat_map(|l| l.iter().flatten().cloned()))
+}
+
+/// The constant-multiplication instances of layer `k` under
+/// (`arch`, `style`), as the matching `Architecture::elaborate` solves
+/// them — kept in lock-step with the elaborators by the
+/// `pricer_agrees_with_elaboration_for_every_design_point` test, so the
+/// tuner metric can never drift from the design. SMAC_ANN has one
+/// whole-net instance, attached to layer 0.
+fn layer_instances(arch: ArchKind, style: Style, qann: &QuantizedAnn, k: usize) -> Vec<(LinearTargets, Tier)> {
+    match (arch, style) {
+        (ArchKind::Parallel, Style::Behavioral) => {
+            vec![(LinearTargets::cmvm(&qann.weights[k]), Tier::Dbr)]
+        }
+        (ArchKind::Parallel, Style::Cavm) => qann.weights[k]
+            .iter()
+            .map(|row| (LinearTargets::cavm(row), Tier::Cse))
+            .collect(),
+        (ArchKind::Parallel, Style::Cmvm) => {
+            vec![(LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)]
+        }
+        (ArchKind::SmacNeuron, Style::Mcm) => {
+            let (stored, _) = stored_layer(qann, k);
+            let consts: Vec<i64> = stored.into_iter().flatten().collect();
+            vec![(LinearTargets::mcm(&consts), Tier::McmHeuristic)]
+        }
+        (ArchKind::SmacAnn, Style::Mcm) if k == 0 => {
+            let sls = global_sls(qann);
+            let consts: Vec<i64> = qann
+                .weights
+                .iter()
+                .flat_map(|l| l.iter().flatten().map(|&w| w >> sls))
+                .collect();
+            vec![(LinearTargets::mcm(&consts), Tier::McmHeuristic)]
+        }
+        // behavioral MACs have no constant-multiplication network, and the
+        // SMAC_ANN whole-net instance is attached to layer 0 only
+        (ArchKind::SmacNeuron | ArchKind::SmacAnn, Style::Behavioral)
+        | (ArchKind::SmacAnn, Style::Mcm) => Vec::new(),
+        (arch, style) => panic!("{} has no {} style", arch.name(), style.name()),
+    }
+}
+
+fn layer_key(arch: ArchKind, qann: &QuantizedAnn, k: usize) -> u64 {
+    let mut h = crate::num::fxhash::FxHasher::default();
+    let mut add_layer = |j: usize| {
+        for row in &qann.weights[j] {
+            h.write_usize(row.len());
+            for &w in row {
+                h.write_u64(w as u64);
+            }
+        }
+    };
+    match arch {
+        // the whole-net instance depends on every layer
+        ArchKind::SmacAnn => (0..qann.structure.num_layers()).for_each(&mut add_layer),
+        _ => add_layer(k),
+    }
+    h.finish()
+}
+
+/// Cached per-layer pricer of the tuners' add/sub-op metric: each call
+/// re-solves only the layers whose weights changed since the previous
+/// call; untouched layers are answered from the local cache without even
+/// canonicalizing an engine instance.
+pub struct LayerPricer {
+    arch: ArchKind,
+    style: Style,
+    keys: Vec<Option<u64>>,
+    ops: Vec<usize>,
+}
+
+impl LayerPricer {
+    pub fn new(arch: ArchKind, style: Style) -> LayerPricer {
+        LayerPricer { arch, style, keys: Vec::new(), ops: Vec::new() }
+    }
+
+    /// Total add/sub operations of `qann`'s constant-multiplication
+    /// realization under this pricer's (architecture, style).
+    pub fn adder_ops(&mut self, qann: &QuantizedAnn) -> usize {
+        let n = match self.arch {
+            ArchKind::SmacAnn => 1,
+            _ => qann.structure.num_layers(),
+        };
+        self.keys.resize(n, None);
+        self.ops.resize(n, 0);
+        for k in 0..n {
+            let key = layer_key(self.arch, qann, k);
+            if self.keys[k] != Some(key) {
+                self.ops[k] = layer_instances(self.arch, self.style, qann, k)
+                    .iter()
+                    .map(|(t, tier)| engine::solve(t, *tier).num_ops())
+                    .sum();
+                self.keys[k] = Some(key);
+            }
+        }
+        self.ops.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::Activation;
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn registry_covers_the_paper_design_points() {
+        let names: Vec<&str> = <dyn Architecture>::all().iter().map(|a| a.name()).collect();
+        assert_eq!(names, ["parallel", "smac_neuron", "smac_ann"]);
+        assert_eq!(design_points().len(), 7, "3 parallel styles + 2 + 2");
+        for (a, s) in design_points() {
+            assert!(a.styles().contains(&s));
+        }
+        assert!(<dyn Architecture>::by_name("parallel").is_some());
+        assert!(<dyn Architecture>::by_name("systolic").is_none());
+    }
+
+    #[test]
+    fn style_names_roundtrip() {
+        for s in [Style::Behavioral, Style::Cavm, Style::Cmvm, Style::Mcm] {
+            assert_eq!(Style::parse(s.name()), Some(s));
+        }
+        assert_eq!(Style::parse("fir"), None);
+    }
+
+    #[test]
+    fn schedules_implement_section_iii_formulas() {
+        let st = AnnStructure::parse("16-16-10").unwrap();
+        assert_eq!(Schedule::Combinational.cycles(&st), 1);
+        assert_eq!(Schedule::LayerSequential.cycles(&st), st.smac_neuron_cycles());
+        assert_eq!(Schedule::NeuronSequential.cycles(&st), st.smac_ann_cycles());
+    }
+
+    #[test]
+    fn elaborate_embeds_graphs_once_and_prices_deterministically() {
+        let q = qann("16-10-10", 6, 3);
+        let lib = TechLib::tsmc40();
+        for (arch, style) in design_points() {
+            let d = arch.elaborate(&q, style);
+            assert_eq!(d.arch.name(), arch.name());
+            assert_eq!(d.style, style);
+            assert_eq!(d.layers.len(), q.structure.num_layers());
+            let r1 = d.cost(&lib);
+            let r2 = d.cost(&lib);
+            assert_eq!(r1, r2, "{} {}: cost walk must be pure", arch.name(), style.name());
+            assert!(r1.area_um2 > 0.0 && r1.clock_ns > 0.0 && r1.energy_pj > 0.0);
+            assert_eq!(r1.cycles, d.cycles());
+        }
+    }
+
+    #[test]
+    fn pricer_agrees_with_elaboration_for_every_design_point() {
+        // the anti-drift pin: the tuner metric (LayerPricer over
+        // layer_instances) must count exactly the operations the
+        // elaborated design embeds
+        let q = qann("16-10-10", 6, 21);
+        for (arch, style) in design_points() {
+            let d = arch.elaborate(&q, style);
+            let mut pricer = LayerPricer::new(d.arch, style);
+            assert_eq!(pricer.adder_ops(&q), d.adder_ops, "{} {}", arch.name(), style.name());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "has no")]
+    fn pricer_rejects_unsupported_design_points() {
+        let q = qann("16-10", 6, 1);
+        LayerPricer::new(ArchKind::Parallel, Style::Mcm).adder_ops(&q);
+    }
+
+    #[test]
+    fn pricer_reuses_untouched_layers() {
+        let q = qann("16-10-10", 6, 9);
+        let mut pricer = LayerPricer::new(ArchKind::Parallel, Style::Cmvm);
+        let a = pricer.adder_ops(&q);
+        assert!(a > 0);
+        assert_eq!(pricer.adder_ops(&q), a, "no change, cached total");
+        let mut q2 = q.clone();
+        q2.weights[1][0][0] = 0;
+        let b = pricer.adder_ops(&q2);
+        assert_ne!(pricer.keys[1], Some(layer_key(ArchKind::Parallel, &q, 1)));
+        assert_eq!(pricer.keys[0], Some(layer_key(ArchKind::Parallel, &q, 0)), "layer 0 untouched");
+        assert!(b > 0);
+        // pricing the original again restores the original total
+        assert_eq!(pricer.adder_ops(&q), a);
+    }
+}

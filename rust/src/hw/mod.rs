@@ -2,11 +2,15 @@
 //! the Verilog generator and the cycle-accurate architectural simulator.
 //!
 //! Stand-in for the Cadence RTL Compiler + TSMC 40nm synthesis flow of
-//! the paper's evaluation (DESIGN.md §Substitutions): every builder takes
-//! a [`crate::ann::QuantizedAnn`] and returns an [`HwReport`] with area,
-//! clock, cycle count, latency and per-inference energy.
+//! the paper's evaluation (DESIGN.md §Substitutions). Everything hangs
+//! off one IR: an [`Architecture`] (see [`design`]) elaborates a
+//! [`crate::ann::QuantizedAnn`] into a [`Design`], and cost
+//! ([`Design::cost`] → [`HwReport`]), cycle-accurate simulation
+//! ([`netsim::simulate`]) and Verilog ([`verilog::verilog`]) are all
+//! derived from that same value.
 
 pub mod blocks;
+pub mod design;
 pub mod gates;
 pub mod netsim;
 pub mod parallel;
@@ -15,6 +19,7 @@ pub mod smac_ann;
 pub mod smac_neuron;
 pub mod verilog;
 
+pub use design::{ArchKind, Architecture, Design, Schedule, Style};
 pub use gates::TechLib;
 pub use report::HwReport;
 

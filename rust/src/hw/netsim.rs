@@ -1,18 +1,26 @@
-//! Cycle-accurate architectural simulator.
+//! Cycle-accurate architectural simulator — a generic interpreter of the
+//! elaborated [`Design`] schedule.
 //!
-//! Executes the three designs the way the generated hardware does —
-//! register transfers per clock edge for the MAC architectures, adder-
-//! graph evaluation for the multiplierless datapaths — and is the
-//! mechanical check that (a) the cycle-count formulas of Sec. III hold
-//! and (b) every architecture is bit-exact against the golden model
-//! (`ann::sim`), which in turn matches the AOT JAX graph. This plays the
-//! role of the paper's testbench simulation (SIMURG "generates a
-//! test-bench and necessary files to verify the ANN design").
+//! [`simulate`] executes any design the way the generated hardware does —
+//! a combinational ripple through the embedded adder graphs for the
+//! parallel architecture, register transfers per clock edge for the MAC
+//! schedules (with products routed through the embedded MCM graphs when
+//! the style is multiplierless) — and is the mechanical check that
+//! (a) the cycle-count formulas of Sec. III hold and (b) every
+//! architecture is bit-exact against the golden model (`ann::sim`), which
+//! in turn matches the AOT JAX graph. This plays the role of the paper's
+//! testbench simulation (SIMURG "generates a test-bench and necessary
+//! files to verify the ANN design").
+//!
+//! Elaborate once, evaluate many: build the [`Design`] a single time and
+//! run the whole test set through it — the graphs are fixed hardware.
 
+use super::design::{Architecture, Design, LayerCompute, Schedule, Style};
 use crate::ann::quant::QuantizedAnn;
 use crate::ann::sim::activate;
-use crate::hw::parallel::MultStyle;
-use crate::mcm::{engine, LinearTargets, Tier};
+use crate::hw::parallel::{MultStyle, Parallel};
+use crate::hw::smac_ann::SmacAnn;
+use crate::hw::smac_neuron::SmacNeuron;
 
 /// Result of a cycle-accurate run.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -21,116 +29,109 @@ pub struct SimRun {
     pub cycles: usize,
 }
 
-/// Parallel design with its constant-multiplication networks elaborated:
-/// build once, evaluate many inputs (the graphs are fixed hardware).
-pub struct ParallelNet {
-    qann: QuantizedAnn,
-    /// one graph per layer (CAVM keeps per-row graphs)
-    layer_graphs: Vec<Vec<crate::mcm::AdderGraph>>,
+/// Interpret one inference of `design` on `input`, counting clock cycles
+/// per its schedule.
+pub fn simulate(design: &Design, input: &[i32]) -> SimRun {
+    let qann = &design.qann;
+    assert_eq!(input.len(), qann.structure.inputs);
+    match design.schedule {
+        Schedule::Combinational => simulate_combinational(design, input),
+        Schedule::LayerSequential => simulate_layer_sequential(design, input),
+        Schedule::NeuronSequential => simulate_neuron_sequential(design, input),
+    }
 }
 
-impl ParallelNet {
-    pub fn new(qann: &QuantizedAnn, style: MultStyle) -> ParallelNet {
-        let st = &qann.structure;
-        let layer_graphs = (0..st.num_layers())
-            .map(|k| match style {
-                MultStyle::Behavioral => {
-                    vec![engine::solve(&LinearTargets::cmvm(&qann.weights[k]), Tier::Dbr)]
-                }
-                MultStyle::Cavm => qann.weights[k]
-                    .iter()
-                    .map(|row| engine::solve(&LinearTargets::cavm(row), Tier::Cse))
-                    .collect(),
-                MultStyle::Cmvm => {
-                    vec![engine::solve(&LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)]
-                }
-            })
+/// Combinational evaluation through the elaborated datapath: the constant
+/// multiplications run through the same adder graphs the hardware
+/// instantiates (a CSE bug shows up here, not just in the op count), then
+/// bias and activation are applied; outputs register after one cycle.
+fn simulate_combinational(design: &Design, input: &[i32]) -> SimRun {
+    let qann = &design.qann;
+    let mut cur: Vec<i64> = input.iter().map(|&x| x as i64).collect();
+    for (k, layer) in design.layers.iter().enumerate() {
+        let xs: Vec<i128> = cur.iter().map(|&x| x as i128).collect();
+        let LayerCompute::Graphs(gis) = &layer.compute else {
+            panic!("combinational layers are graph-computed");
+        };
+        let inner: Vec<i64> = if gis.len() == 1 {
+            design.graphs[gis[0]].eval(&xs).iter().map(|&v| v as i64).collect()
+        } else {
+            gis.iter().map(|&gi| design.graphs[gi].eval(&xs)[0] as i64).collect()
+        };
+        cur = inner
+            .iter()
+            .zip(&qann.biases[k])
+            .map(|(&y, &b)| activate(qann.activations[k], y + b, qann.q) as i64)
             .collect();
-        ParallelNet {
-            qann: qann.clone(),
-            layer_graphs,
-        }
     }
+    SimRun { outputs: cur.iter().map(|&v| v as i32).collect(), cycles: 1 }
+}
 
-    /// Combinational evaluation through the elaborated datapath: the
-    /// constant multiplications run through the same adder graphs the
-    /// hardware instantiates (a CSE bug shows up here, not just in the op
-    /// count), then bias and activation are applied.
-    pub fn run(&self, input: &[i32]) -> SimRun {
-        let qann = &self.qann;
-        let st = &qann.structure;
-        let mut cur: Vec<i64> = input.iter().map(|&x| x as i64).collect();
-        for k in 0..st.num_layers() {
-            let xs: Vec<i128> = cur.iter().map(|&x| x as i128).collect();
-            let graphs = &self.layer_graphs[k];
-            let inner: Vec<i64> = if graphs.len() == 1 {
-                graphs[0].eval(&xs).iter().map(|&v| v as i64).collect()
-            } else {
-                graphs.iter().map(|g| g.eval(&xs)[0] as i64).collect()
-            };
-            cur = inner
-                .iter()
-                .zip(&qann.biases[k])
-                .map(|(&y, &b)| activate(qann.activations[k], y + b, qann.q) as i64)
-                .collect();
-        }
-        SimRun {
-            outputs: cur.iter().map(|&v| v as i32).collect(),
-            cycles: 1,
-        }
+/// Product of stored weight `stored[m][i]` with the broadcast input: taken
+/// from the layer's MCM graph outputs when the style is multiplierless
+/// (exercising the shared product network), multiplied directly otherwise.
+fn mac_product(layer: &LayerCompute, products: &Option<Vec<i128>>, m: usize, i: usize, x: i64) -> i64 {
+    let LayerCompute::Mac { stored, mcm, .. } = layer else {
+        panic!("MAC schedules need MAC layers");
+    };
+    match (products, mcm) {
+        (Some(p), Some(r)) => p[r.offset + m * stored[m].len() + i] as i64,
+        _ => stored[m][i] * x,
     }
 }
 
-/// Convenience one-shot wrapper around [`ParallelNet`].
-pub fn run_parallel(qann: &QuantizedAnn, style: MultStyle, input: &[i32]) -> SimRun {
-    ParallelNet::new(qann, style).run(input)
-}
-
-/// SMAC_NEURON: one MAC per neuron, layers in sequence, ι_k + 1 cycles
-/// per layer (ι_k multiply-accumulate steps + 1 bias/activate step) —
-/// total Σ(ι_i + 1), paper Sec. III-B1.
-pub fn run_smac_neuron(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
-    let st = &qann.structure;
+/// SMAC_NEURON schedule: one MAC per neuron, layers in sequence, ι_k + 1
+/// cycles per layer (ι_k multiply-accumulate steps + 1 bias/activate
+/// step) — total Σ(ι_i + 1), paper Sec. III-B1.
+fn simulate_layer_sequential(design: &Design, input: &[i32]) -> SimRun {
+    let qann = &design.qann;
     let mut cycles = 0usize;
     let mut cur: Vec<i64> = input.iter().map(|&x| x as i64).collect();
-    for k in 0..st.num_layers() {
-        let n_in = st.layer_inputs(k);
-        let n_out = st.layer_outputs(k);
-        let mut acc = vec![0i64; n_out];
+    for (k, layer) in design.layers.iter().enumerate() {
+        let LayerCompute::Mac { sls, .. } = &layer.compute else {
+            panic!("MAC schedules need MAC layers");
+        };
+        let mut acc = vec![0i64; layer.n_out];
         // ι_k MAC cycles: the control block broadcasts input i to every MAC
-        for i in 0..n_in {
+        for i in 0..layer.n_in {
+            let products = products_of(design, &layer.compute, cur[i]);
             for (m, a) in acc.iter_mut().enumerate() {
-                *a += qann.weights[k][m][i] * cur[i];
+                *a += mac_product(&layer.compute, &products, m, i, cur[i]) << sls[m];
             }
             cycles += 1;
         }
         // +1 cycle: bias add, activation, output-register write
-        cur = (0..n_out)
+        cur = (0..layer.n_out)
             .map(|m| activate(qann.activations[k], acc[m] + qann.biases[k][m], qann.q) as i64)
             .collect();
         cycles += 1;
     }
-    SimRun {
-        outputs: cur.iter().map(|&v| v as i32).collect(),
-        cycles,
-    }
+    SimRun { outputs: cur.iter().map(|&v| v as i32).collect(), cycles }
 }
 
-/// SMAC_ANN: a single MAC computes every neuron serially; each neuron
-/// takes ι_k + 2 cycles (ι_k MACs + bias add + activate/writeback) —
-/// total Σ(ι_i + 2)·η_i, paper Sec. III-B2.
-pub fn run_smac_ann(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
-    let st = &qann.structure;
+/// SMAC_ANN schedule: a single MAC computes every neuron serially; each
+/// neuron takes ι_k + 2 cycles (ι_k MACs + bias add + activate/writeback)
+/// — total Σ(ι_i + 2)·η_i, paper Sec. III-B2.
+fn simulate_neuron_sequential(design: &Design, input: &[i32]) -> SimRun {
+    let qann = &design.qann;
     let mut cycles = 0usize;
     let mut layer_regs: Vec<i64> = input.iter().map(|&x| x as i64).collect();
-    for k in 0..st.num_layers() {
-        let n_in = st.layer_inputs(k);
-        let n_out = st.layer_outputs(k);
-        let mut next = vec![0i64; n_out];
+    for (k, layer) in design.layers.iter().enumerate() {
+        let LayerCompute::Mac { sls, .. } = &layer.compute else {
+            panic!("MAC schedules need MAC layers");
+        };
+        // the layer's inputs are held in registers while its neurons are
+        // computed, so each input's product set is evaluated once
+        let products: Vec<Option<Vec<i128>>> = layer_regs
+            .iter()
+            .take(layer.n_in)
+            .map(|&x| products_of(design, &layer.compute, x))
+            .collect();
+        let mut next = vec![0i64; layer.n_out];
         for (m, slot) in next.iter_mut().enumerate() {
             let mut acc = 0i64;
-            for (i, &x) in layer_regs.iter().take(n_in).enumerate() {
-                acc += qann.weights[k][m][i] * x; // one MAC per cycle
+            for (i, &x) in layer_regs.iter().take(layer.n_in).enumerate() {
+                acc += mac_product(&layer.compute, &products[i], m, i, x) << sls[m]; // one MAC per cycle
                 cycles += 1;
             }
             acc += qann.biases[k][m]; // bias cycle
@@ -140,10 +141,54 @@ pub fn run_smac_ann(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
         }
         layer_regs = next;
     }
-    SimRun {
-        outputs: layer_regs.iter().map(|&v| v as i32).collect(),
-        cycles,
+    SimRun { outputs: layer_regs.iter().map(|&v| v as i32).collect(), cycles }
+}
+
+/// All MCM-graph products of the broadcast input (None for behavioral
+/// MACs, which multiply directly).
+fn products_of(design: &Design, layer: &LayerCompute, x: i64) -> Option<Vec<i128>> {
+    let LayerCompute::Mac { mcm, .. } = layer else {
+        return None;
+    };
+    mcm.as_ref().map(|r| design.graphs[r.graph].eval(&[x as i128]))
+}
+
+/// Parallel design with its constant-multiplication networks elaborated:
+/// build once, evaluate many inputs (compatibility wrapper over
+/// [`Design`] + [`simulate`]).
+pub struct ParallelNet {
+    design: Design,
+}
+
+impl ParallelNet {
+    pub fn new(qann: &QuantizedAnn, style: MultStyle) -> ParallelNet {
+        ParallelNet { design: Parallel.elaborate(qann, style) }
     }
+
+    pub fn design(&self) -> &Design {
+        &self.design
+    }
+
+    pub fn run(&self, input: &[i32]) -> SimRun {
+        simulate(&self.design, input)
+    }
+}
+
+/// Convenience one-shot wrapper around [`ParallelNet`].
+pub fn run_parallel(qann: &QuantizedAnn, style: MultStyle, input: &[i32]) -> SimRun {
+    ParallelNet::new(qann, style).run(input)
+}
+
+/// One-shot SMAC_NEURON run (elaborates per call; for many inputs,
+/// elaborate once and call [`simulate`]).
+pub fn run_smac_neuron(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
+    simulate(&SmacNeuron.elaborate(qann, Style::Behavioral), input)
+}
+
+/// One-shot SMAC_ANN run (elaborates per call; for many inputs,
+/// elaborate once and call [`simulate`]).
+pub fn run_smac_ann(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
+    simulate(&SmacAnn.elaborate(qann, Style::Behavioral), input)
 }
 
 #[cfg(test)]
@@ -153,6 +198,7 @@ mod tests {
     use crate::ann::model::{Ann, Init};
     use crate::ann::sim;
     use crate::ann::structure::{Activation, AnnStructure};
+    use crate::hw::design::design_points;
     use crate::num::Rng;
 
     fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
@@ -165,22 +211,26 @@ mod tests {
     }
 
     #[test]
-    fn all_architectures_bit_exact_vs_golden_model() {
+    fn all_design_points_bit_exact_vs_golden_model() {
+        // elaborate once per (architecture × style), run the whole test
+        // set through the same Design values
         let ds = Dataset::synthetic_with_sizes(5, 80, 40);
         for structure in ["16-10", "16-10-10", "16-16-10-10"] {
             let q = qann(structure, 6, 11);
-            let nets: Vec<ParallelNet> = [MultStyle::Behavioral, MultStyle::Cavm, MultStyle::Cmvm]
-                .iter()
-                .map(|&s| ParallelNet::new(&q, s))
-                .collect();
+            let designs: Vec<_> =
+                design_points().into_iter().map(|(a, s)| a.elaborate(&q, s)).collect();
             for s in ds.test.iter() {
                 let x = s.features_q7();
                 let golden = sim::forward(&q, &x);
-                for (net, style) in nets.iter().zip(["behavioral", "cavm", "cmvm"]) {
-                    assert_eq!(net.run(&x).outputs, golden, "{structure} {style}");
+                for d in &designs {
+                    assert_eq!(
+                        simulate(d, &x).outputs,
+                        golden,
+                        "{structure} {} {}",
+                        d.arch.name(),
+                        d.style.name()
+                    );
                 }
-                assert_eq!(run_smac_neuron(&q, &x).outputs, golden, "{structure} smac_neuron");
-                assert_eq!(run_smac_ann(&q, &x).outputs, golden, "{structure} smac_ann");
             }
         }
     }
@@ -194,6 +244,11 @@ mod tests {
             assert_eq!(sn.cycles, q.structure.smac_neuron_cycles(), "{structure}");
             let sa = run_smac_ann(&q, &x);
             assert_eq!(sa.cycles, q.structure.smac_ann_cycles(), "{structure}");
+            // the interpreter's step count agrees with the schedule's
+            for (a, s) in design_points() {
+                let d = a.elaborate(&q, s);
+                assert_eq!(simulate(&d, &x).cycles, d.cycles(), "{structure} {}", a.name());
+            }
         }
     }
 
@@ -202,10 +257,14 @@ mod tests {
         let mut rng = Rng::new(17);
         let q = qann("16-16-10", 7, 29);
         let net = ParallelNet::new(&q, MultStyle::Cmvm);
+        let sn = SmacNeuron.elaborate(&q, Style::Mcm);
+        let sa = SmacAnn.elaborate(&q, Style::Mcm);
         for _ in 0..100 {
             let x: Vec<i32> = (0..16).map(|_| rng.below(128) as i32).collect();
             let golden = sim::forward(&q, &x);
             assert_eq!(net.run(&x).outputs, golden);
+            assert_eq!(simulate(&sn, &x).outputs, golden, "smac_neuron/mcm products");
+            assert_eq!(simulate(&sa, &x).outputs, golden, "smac_ann/mcm products");
             assert_eq!(run_smac_neuron(&q, &x).outputs, golden);
             assert_eq!(run_smac_ann(&q, &x).outputs, golden);
         }

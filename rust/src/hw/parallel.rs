@@ -10,93 +10,88 @@
 //! - `Cavm`: each inner product optimized as one CAVM block (alg. of [19]);
 //! - `Cmvm`: each layer optimized as one CMVM block (alg. of [18]), the
 //!   maximum sharing and smallest area of the three.
+//!
+//! This module only *elaborates* the design (blocks, paths, layer plans);
+//! cost, simulation and HDL are all derived from the resulting
+//! [`Design`] by `hw::design`, `hw::netsim` and `hw::verilog`.
 
-use super::blocks::{self, BlockCost};
+use super::design::{
+    ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, Schedule, Style,
+};
 use super::report::{self, HwReport};
 use super::TechLib;
 use crate::ann::quant::QuantizedAnn;
-use crate::mcm::{engine, LinearTargets, Tier};
+use crate::mcm::{LinearTargets, Tier};
 
-/// Constant-multiplication style of the parallel architecture.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum MultStyle {
-    Behavioral,
-    Cavm,
-    Cmvm,
-}
+/// Constant-multiplication style of the parallel architecture
+/// (compatibility alias for the unified [`Style`]).
+pub use super::design::Style as MultStyle;
 
-impl MultStyle {
-    pub fn name(self) -> &'static str {
-        match self {
-            MultStyle::Behavioral => "behavioral",
-            MultStyle::Cavm => "cavm",
-            MultStyle::Cmvm => "cmvm",
-        }
+/// The parallel architecture (registry entry).
+pub struct Parallel;
+
+impl Architecture for Parallel {
+    fn kind(&self) -> ArchKind {
+        ArchKind::Parallel
     }
-}
 
-/// Build the gate-level model of the parallel design.
-pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: MultStyle) -> HwReport {
-    let st = &qann.structure;
-    let mut area = 0.0f64;
-    let mut energy = 0.0f64; // fJ per inference (every block fires once)
-    let mut path = 0.0f64; // accumulated combinational critical path
-    let mut adders = 0usize;
+    fn styles(&self) -> &'static [Style] {
+        &[Style::Behavioral, Style::Cavm, Style::Cmvm]
+    }
 
-    for k in 0..st.num_layers() {
-        let n_in = st.layer_inputs(k);
-        let n_out = st.layer_outputs(k);
-        let in_range = report::layer_input_range(qann, k);
-        let ranges = vec![in_range; n_in];
-        let acc_bits = report::layer_acc_bits(qann, k);
+    fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
+        let st = &qann.structure;
+        let mut b = DesignBuilder::new(ArchKind::Parallel, style, Schedule::Combinational);
+        // the single input-to-output combinational chain; its total delay
+        // (plus the output register) sets the clock period
+        let mut chain: Vec<usize> = Vec::new();
 
-        // --- constant-multiplication network + inner-product summation ---
-        let (net, sum): (BlockCost, BlockCost) = match style {
-            MultStyle::Behavioral => {
-                // per-row DBR trees realize product terms and their sum in
-                // one expansion (the synthesis view of `sum(w[i]*x[i])`)
-                let t = LinearTargets::cmvm(&qann.weights[k]);
-                let g = engine::solve(&t, Tier::Dbr);
-                adders += g.num_ops();
-                (super::graph_cost(lib, &g, &ranges), BlockCost::ZERO)
-            }
-            MultStyle::Cavm => {
-                // one optimized CAVM block per neuron
-                let mut total = BlockCost::ZERO;
-                for row in &qann.weights[k] {
-                    let t = LinearTargets::cavm(row);
-                    let g = engine::solve(&t, Tier::Cse);
-                    adders += g.num_ops();
-                    let c = super::graph_cost(lib, &g, &ranges);
-                    total = total.beside(c);
+        for k in 0..st.num_layers() {
+            let n_in = st.layer_inputs(k);
+            let n_out = st.layer_outputs(k);
+            let in_range = report::layer_input_range(qann, k);
+            let ranges = vec![in_range; n_in];
+            let acc_bits = report::layer_acc_bits(qann, k);
+
+            // constant-multiplication network realizing the inner products
+            let gis: Vec<usize> = match style {
+                Style::Behavioral => {
+                    // per-row DBR trees realize product terms and their sum
+                    // in one expansion (the synthesis view of `sum(w*x)`)
+                    vec![b.solved(&LinearTargets::cmvm(&qann.weights[k]), Tier::Dbr)]
                 }
-                (total, BlockCost::ZERO)
-            }
-            MultStyle::Cmvm => {
-                // one optimized CMVM block for the whole layer
-                let t = LinearTargets::cmvm(&qann.weights[k]);
-                let g = engine::solve(&t, Tier::Cse);
-                adders += g.num_ops();
-                (super::graph_cost(lib, &g, &ranges), BlockCost::ZERO)
-            }
-        };
+                Style::Cavm => qann.weights[k]
+                    .iter()
+                    .map(|row| b.solved(&LinearTargets::cavm(row), Tier::Cse))
+                    .collect(),
+                Style::Cmvm => vec![b.solved(&LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)],
+                Style::Mcm => panic!("parallel architecture has no mcm style (use cavm/cmvm)"),
+            };
+            let net = b.block(BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges }, 1, 1.0);
 
-        // --- bias adder + activation per neuron ---
-        let bias = blocks::adder(lib, acc_bits).times(n_out);
-        let act = blocks::activation_unit(lib, acc_bits).times(n_out);
+            // bias adder + activation per neuron
+            let bias = b.block(BlockKind::Adder { bits: acc_bits }, n_out, 1.0);
+            let act = b.block(BlockKind::ActivationUnit { acc_bits }, n_out, 1.0);
+            chain.extend([net, bias, act]);
 
-        area += net.area + sum.area + bias.area + act.area;
-        energy += net.energy + sum.energy + bias.energy + act.energy;
-        path += net.delay + sum.delay + bias.delay + act.delay;
+            b.layer(LayerPlan { n_in, n_out, acc_bits, in_range, compute: LayerCompute::Graphs(gis) });
+        }
+
+        // output registers (paper Sec. VII)
+        let out_reg = b.block(
+            BlockKind::Register { bits: 8 },
+            st.layer_outputs(st.num_layers() - 1),
+            1.0,
+        );
+        chain.push(out_reg);
+        b.path(chain);
+        b.finish(qann)
     }
+}
 
-    // output registers (paper Sec. VII)
-    let out_reg = blocks::register(lib, 8).times(st.layer_outputs(st.num_layers() - 1));
-    area += out_reg.area;
-    energy += out_reg.energy;
-
-    let clock = (path + lib.dff.delay) * lib.clock_margin;
-    HwReport::from_parts("parallel", style.name(), area, clock, 1, energy, adders)
+/// Price the parallel design of `qann` (elaborate + generic cost walk).
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+    Parallel.elaborate(qann, style).cost(lib)
 }
 
 #[cfg(test)]
@@ -161,5 +156,22 @@ mod tests {
         let full = build(&lib, &q, MultStyle::Behavioral);
         let trim = build(&lib, &trimmed, MultStyle::Behavioral);
         assert!(trim.area_um2 < full.area_um2);
+    }
+
+    #[test]
+    fn elaboration_is_structure_only() {
+        // the design value carries everything downstream consumers need:
+        // per-layer graphs, plans and the combinational schedule
+        let q = qann("16-10-10", 6, 8);
+        let d = Parallel.elaborate(&q, Style::Cavm);
+        assert_eq!(d.schedule, Schedule::Combinational);
+        assert_eq!(d.layers.len(), 2);
+        for (k, layer) in d.layers.iter().enumerate() {
+            let LayerCompute::Graphs(gis) = &layer.compute else {
+                panic!("parallel layers are graph-computed");
+            };
+            assert_eq!(gis.len(), q.structure.layer_outputs(k), "one CAVM graph per neuron");
+        }
+        assert_eq!(d.paths.len(), 1, "one combinational chain");
     }
 }

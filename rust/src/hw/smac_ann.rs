@@ -5,100 +5,146 @@
 //! bias; one multiplier, one accumulator and one activation unit are
 //! shared by every neuron computation. Smallest area, highest cycle count
 //! and (in the paper's results) the highest energy.
+//!
+//! This module only *elaborates* the design; cost, simulation and HDL
+//! are derived from the resulting [`Design`] by `hw::design`,
+//! `hw::netsim` and `hw::verilog`.
 
-use super::blocks;
+use super::design::{
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, McmRef,
+    Schedule, Style,
+};
 use super::report::{self, HwReport};
-use super::smac_neuron::SmacStyle;
 use super::TechLib;
 use crate::ann::quant::QuantizedAnn;
+use crate::mcm::{LinearTargets, Tier};
 use crate::num::signed_bitwidth;
 
-/// Build the gate-level model of the SMAC_ANN design.
-pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: SmacStyle) -> HwReport {
-    let st = &qann.structure;
-    let layers = st.num_layers();
+/// The SMAC_ANN architecture (registry entry).
+pub struct SmacAnn;
 
-    // global sls over ALL weights (the Sec. IV-C whole-ANN variant): the
-    // single multiplier operates on stored weights c = w >> sls
-    let all_weights = || {
-        (0..layers).flat_map(|k| qann.weights[k].iter().flatten().cloned().collect::<Vec<_>>())
-    };
-    let sls = report::smallest_left_shift(all_weights());
-    let stored_bits = all_weights()
-        .map(|w| signed_bitwidth(w >> sls))
-        .max()
-        .unwrap_or(1);
+impl Architecture for SmacAnn {
+    fn kind(&self) -> ArchKind {
+        ArchKind::SmacAnn
+    }
 
-    // accumulator sized by the worst layer
-    let acc_bits = (0..layers).map(|k| report::layer_acc_bits(qann, k)).max().unwrap_or(1);
+    fn styles(&self) -> &'static [Style] {
+        &[Style::Behavioral, Style::Mcm]
+    }
 
-    let max_inputs = (0..layers).map(|k| st.layer_inputs(k)).max().unwrap();
-    let max_outputs = (0..layers).map(|k| st.layer_outputs(k)).max().unwrap();
-    let total_weights = st.total_weights();
-    let total_biases = st.total_neurons();
+    fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
+        let st = &qann.structure;
+        let layers = st.num_layers();
+        let mut b = DesignBuilder::new(ArchKind::SmacAnn, style, Schedule::NeuronSequential);
 
-    // control: three counters (paper Fig. 7)
-    let control = blocks::counter(lib, layers.max(2))
-        .beside(blocks::counter(lib, max_inputs + 2))
-        .beside(blocks::counter(lib, max_outputs));
+        // global sls over ALL weights (the Sec. IV-C whole-ANN variant):
+        // the single multiplier operates on stored weights c = w >> sls
+        let sls = design::global_sls(qann);
+        let stored_bits = qann
+            .weights
+            .iter()
+            .flat_map(|l| l.iter().flatten())
+            .map(|&w| signed_bitwidth(w >> sls))
+            .max()
+            .unwrap_or(1);
 
-    // input mux over primary inputs and the layer-output feedback registers
-    let in_mux = blocks::mux(lib, st.inputs + max_outputs, 8);
-    // weight and bias storage as hardwired-constant muxes
-    let w_mux = blocks::constant_mux(lib, total_weights, stored_bits);
-    let b_mux = blocks::constant_mux(lib, total_biases, acc_bits);
+        // accumulator sized by the worst layer
+        let acc_bits = (0..layers).map(|k| report::layer_acc_bits(qann, k)).max().unwrap_or(1);
 
-    let acc = blocks::adder(lib, acc_bits);
-    let reg = blocks::register(lib, acc_bits);
-    let act = blocks::activation_unit(lib, acc_bits);
-    // layer-output holding registers (max η words of 8 bits)
-    let out_regs = blocks::register(lib, 8).times(max_outputs);
+        let max_inputs = (0..layers).map(|k| st.layer_inputs(k)).max().unwrap();
+        let max_outputs = (0..layers).map(|k| st.layer_outputs(k)).max().unwrap();
+        let total_weights = st.total_weights();
+        let total_biases = st.total_neurons();
 
-    let (mult_area_energy, mult_delay, adders) = match style {
-        SmacStyle::Behavioral => {
-            let m = blocks::multiplier(lib, stored_bits, 8);
-            ((m.area, m.energy), m.delay, 0)
+        // everything is active every cycle — the energy disadvantage the
+        // paper reports for SMAC_ANN; the activation and the layer-output
+        // registers fire once per neuron, i.e. cycles / max_inputs times
+        let cycles = Schedule::NeuronSequential.cycles(st) as f64;
+        let per_neuron = cycles / max_inputs as f64;
+
+        // control: three counters (paper Fig. 7)
+        b.block(BlockKind::Counter { n: layers.max(2) }, 1, cycles);
+        b.block(BlockKind::Counter { n: max_inputs + 2 }, 1, cycles);
+        b.block(BlockKind::Counter { n: max_outputs }, 1, cycles);
+
+        // input mux over primary inputs and the layer-output feedback
+        // registers; weight and bias storage as hardwired-constant muxes
+        let in_mux = b.block(BlockKind::Mux { n: st.inputs + max_outputs, bits: 8 }, 1, cycles);
+        let w_mux = b.block(BlockKind::ConstantMux { n: total_weights, bits: stored_bits }, 1, cycles);
+        b.block(BlockKind::ConstantMux { n: total_biases, bits: acc_bits }, 1, cycles);
+
+        let (mult_chain, mcm_graph): (Vec<usize>, Option<usize>) = match style {
+            Style::Behavioral => {
+                let m = b.block(BlockKind::Multiplier { w_bits: stored_bits, x_bits: 8 }, 1, cycles);
+                (vec![m], None)
+            }
+            Style::Mcm => {
+                // one MCM block over every stored weight of the ANN (paper
+                // Sec. V-B notes this replaces one multiplier with a large
+                // adder network and usually *increases* complexity)
+                let consts: Vec<i64> = qann
+                    .weights
+                    .iter()
+                    .flat_map(|l| l.iter().flatten().map(|&w| w >> sls))
+                    .collect();
+                let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
+                let mcm = b.block(
+                    BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![(-128, 127)] },
+                    1,
+                    cycles,
+                );
+                // product mux selecting among all distinct products
+                let p_mux = b.block(BlockKind::Mux { n: total_weights, bits: stored_bits + 8 }, 1, cycles);
+                (vec![mcm, p_mux], Some(gi))
+            }
+            other => panic!("smac_ann has no {} style", other.name()),
+        };
+
+        let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, cycles);
+        let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, cycles);
+        b.block(BlockKind::ActivationUnit { acc_bits }, 1, per_neuron);
+        // layer-output holding registers (max η words of 8 bits)
+        b.block(BlockKind::Register { bits: 8 }, max_outputs, per_neuron);
+
+        let mut path_in = vec![in_mux];
+        path_in.extend(&mult_chain);
+        path_in.extend([acc, reg]);
+        b.path(path_in);
+        let mut path_w = vec![w_mux];
+        path_w.extend(&mult_chain);
+        path_w.extend([acc, reg]);
+        b.path(path_w);
+
+        // per-layer plans: the single MAC walks the layers in sequence;
+        // the whole-net product graph (if any) is indexed at each layer's
+        // flattened weight offset
+        let mut offset = 0usize;
+        for k in 0..layers {
+            let n_in = st.layer_inputs(k);
+            let n_out = st.layer_outputs(k);
+            let stored: Vec<Vec<i64>> =
+                qann.weights[k].iter().map(|row| row.iter().map(|&w| w >> sls).collect()).collect();
+            b.layer(LayerPlan {
+                n_in,
+                n_out,
+                acc_bits,
+                in_range: report::layer_input_range(qann, k),
+                compute: LayerCompute::Mac {
+                    stored,
+                    sls: vec![sls; n_out],
+                    mcm: mcm_graph.map(|graph| McmRef { graph, offset }),
+                },
+            });
+            offset += n_in * n_out;
         }
-        SmacStyle::Mcm => {
-            // one MCM block over every stored weight of the ANN (paper
-            // Sec. V-B notes this replaces one multiplier with a large
-            // adder network and usually *increases* complexity)
-            let consts: Vec<i64> = all_weights().map(|w| w >> sls).collect();
-            let (c, n_ops) = blocks::mcm_block(lib, &consts, (-128, 127));
-            // product mux selecting among all distinct products
-            let p_mux = blocks::mux(lib, total_weights, stored_bits + 8);
-            ((c.area + p_mux.area, c.energy + p_mux.energy), c.delay + p_mux.delay, n_ops)
-        }
-    };
 
-    let area = control.area
-        + in_mux.area
-        + w_mux.area
-        + b_mux.area
-        + mult_area_energy.0
-        + acc.area
-        + reg.area
-        + act.area
-        + out_regs.area;
+        b.finish(qann)
+    }
+}
 
-    let cycles = st.smac_ann_cycles();
-    // everything is active every cycle — the energy disadvantage the
-    // paper reports for SMAC_ANN
-    let per_cycle_energy = control.energy
-        + in_mux.energy
-        + w_mux.energy
-        + b_mux.energy
-        + mult_area_energy.1
-        + acc.energy
-        + reg.energy
-        + act.energy / (max_inputs as f64) // activation fires once per neuron
-        + out_regs.energy / (max_inputs as f64);
-    let energy = per_cycle_energy * cycles as f64;
-
-    let path = in_mux.delay.max(w_mux.delay) + mult_delay + acc.delay + lib.dff.delay;
-    let clock = path * lib.clock_margin;
-
-    HwReport::from_parts("smac_ann", style.name(), area, clock, cycles, energy, adders)
+/// Price the SMAC_ANN design of `qann` (elaborate + generic cost walk).
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+    SmacAnn.elaborate(qann, style).cost(lib)
 }
 
 #[cfg(test)]
@@ -108,6 +154,7 @@ mod tests {
     use crate::ann::structure::{Activation, AnnStructure};
     use crate::hw::parallel::{self, MultStyle};
     use crate::hw::smac_neuron;
+    use crate::hw::smac_neuron::SmacStyle;
     use crate::num::Rng;
 
     fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
@@ -171,5 +218,21 @@ mod tests {
         let before = build(&lib, &q, SmacStyle::Behavioral);
         let after = build(&lib, &tuned, SmacStyle::Behavioral);
         assert!(after.area_um2 < before.area_um2);
+    }
+
+    #[test]
+    fn whole_net_product_graph_is_offset_per_layer() {
+        let q = qann("16-10-10", 6, 11);
+        let d = SmacAnn.elaborate(&q, Style::Mcm);
+        assert_eq!(d.schedule, Schedule::NeuronSequential);
+        let mut expected_offset = 0usize;
+        for (k, layer) in d.layers.iter().enumerate() {
+            let LayerCompute::Mac { mcm, .. } = &layer.compute else {
+                panic!("smac layers are MAC-computed");
+            };
+            assert_eq!(mcm.unwrap().offset, expected_offset, "layer {k}");
+            expected_offset += layer.n_in * layer.n_out;
+        }
+        assert_eq!(d.graphs[0].outputs.len(), q.structure.total_weights());
     }
 }

@@ -11,126 +11,115 @@
 //! - `Mcm`: per layer, a single MCM block computes all weight×input
 //!   products of the broadcast input (paper Sec. V-B, Fig. 9) and each
 //!   neuron muxes its product into the accumulator.
+//!
+//! This module only *elaborates* the design; cost, simulation and HDL
+//! are derived from the resulting [`Design`] by `hw::design`,
+//! `hw::netsim` and `hw::verilog`.
 
-use super::blocks;
+use super::design::{
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, McmRef,
+    Schedule, Style,
+};
 use super::report::{self, HwReport};
 use super::TechLib;
 use crate::ann::quant::QuantizedAnn;
+use crate::mcm::{LinearTargets, Tier};
 use crate::num::signed_bitwidth;
 
-/// Constant-multiplication style of the time-multiplexed architectures.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SmacStyle {
-    Behavioral,
-    Mcm,
-}
+/// Constant-multiplication style of the time-multiplexed architectures
+/// (compatibility alias for the unified [`Style`]).
+pub use super::design::Style as SmacStyle;
 
-impl SmacStyle {
-    pub fn name(self) -> &'static str {
-        match self {
-            SmacStyle::Behavioral => "behavioral",
-            SmacStyle::Mcm => "mcm",
+/// The SMAC_NEURON architecture (registry entry).
+pub struct SmacNeuron;
+
+impl Architecture for SmacNeuron {
+    fn kind(&self) -> ArchKind {
+        ArchKind::SmacNeuron
+    }
+
+    fn styles(&self) -> &'static [Style] {
+        &[Style::Behavioral, Style::Mcm]
+    }
+
+    fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
+        let st = &qann.structure;
+        let mut b = DesignBuilder::new(ArchKind::SmacNeuron, style, Schedule::LayerSequential);
+
+        for k in 0..st.num_layers() {
+            let n_in = st.layer_inputs(k);
+            let n_out = st.layer_outputs(k);
+            let in_range = report::layer_input_range(qann, k);
+            let acc_bits = report::layer_acc_bits(qann, k);
+            // the layer is active only during its own ι_k + 1 cycles
+            let fires = (n_in + 1) as f64;
+
+            // shared per-layer control: input counter + broadcast input mux
+            let control = b.block(BlockKind::Counter { n: n_in + 1 }, 1, fires);
+            let in_mux = b.block(BlockKind::Mux { n: n_in, bits: 8 }, 1, fires);
+            b.path(vec![control]);
+            b.path(vec![in_mux]);
+
+            // weights are stored factored by each neuron's smallest left
+            // shift; the back-shift is wiring (paper Sec. IV-C)
+            let (stored, sls) = design::stored_layer(qann, k);
+
+            let mcm = match style {
+                Style::Behavioral => {
+                    for row in &stored {
+                        let w_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1);
+                        let w_mux = b.block(BlockKind::ConstantMux { n: n_in, bits: w_bits }, 1, fires);
+                        let mult = b.block(BlockKind::Multiplier { w_bits, x_bits: 8 }, 1, fires);
+                        let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, fires);
+                        let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, fires);
+                        b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
+                        b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
+                        b.block(BlockKind::Register { bits: 8 }, 1, fires); // out reg
+                        b.path(vec![w_mux, mult, acc, reg]);
+                    }
+                    None
+                }
+                Style::Mcm => {
+                    // single MCM block over all stored weights of the layer
+                    let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
+                    let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
+                    let mcm_blk = b.block(
+                        BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![in_range] },
+                        1,
+                        fires,
+                    );
+                    for row in &stored {
+                        // product width of this neuron's largest stored weight
+                        let p_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8;
+                        let p_mux = b.block(BlockKind::Mux { n: n_in, bits: p_bits }, 1, fires);
+                        let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, fires);
+                        let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, fires);
+                        b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
+                        b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
+                        b.block(BlockKind::Register { bits: 8 }, 1, fires); // out reg
+                        b.path(vec![mcm_blk, p_mux, acc, reg]);
+                    }
+                    Some(McmRef { graph: gi, offset: 0 })
+                }
+                other => panic!("smac_neuron has no {} style", other.name()),
+            };
+
+            b.layer(LayerPlan {
+                n_in,
+                n_out,
+                acc_bits,
+                in_range,
+                compute: LayerCompute::Mac { stored, sls, mcm },
+            });
         }
+
+        b.finish(qann)
     }
 }
 
-/// Build the gate-level model of the SMAC_NEURON design.
-pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: SmacStyle) -> HwReport {
-    let st = &qann.structure;
-    let mut area = 0.0f64;
-    let mut energy = 0.0f64; // fJ per inference
-    let mut clock = 0.0f64; // max register-to-register path over layers
-    let mut adders = 0usize;
-
-    for k in 0..st.num_layers() {
-        let n_in = st.layer_inputs(k);
-        let n_out = st.layer_outputs(k);
-        let in_range = report::layer_input_range(qann, k);
-        let acc_bits = report::layer_acc_bits(qann, k);
-        let layer_cycles = (n_in + 1) as f64;
-
-        // shared per-layer control: input counter + broadcast input mux
-        let control = blocks::counter(lib, n_in + 1);
-        let in_mux = blocks::mux(lib, n_in, 8);
-        let mut layer = control.beside(in_mux);
-        let mut mac_path = control.delay.max(in_mux.delay);
-
-        match style {
-            SmacStyle::Behavioral => {
-                for m in 0..n_out {
-                    let (_sls, w_bits) = report::neuron_stored_bits(qann, k, m);
-                    let w_mux = blocks::constant_mux(lib, n_in, w_bits);
-                    let mult = blocks::multiplier(lib, w_bits, 8);
-                    let acc = blocks::adder(lib, acc_bits);
-                    let reg = blocks::register(lib, acc_bits);
-                    let bias = blocks::adder(lib, acc_bits);
-                    let act = blocks::activation_unit(lib, acc_bits);
-                    let out_reg = blocks::register(lib, 8);
-                    let mac = w_mux
-                        .beside(mult)
-                        .beside(acc)
-                        .beside(reg)
-                        .beside(bias)
-                        .beside(act)
-                        .beside(out_reg);
-                    layer = layer.beside(mac);
-                    mac_path = mac_path
-                        .max(w_mux.delay.max(0.0) + mult.delay + acc.delay + lib.dff.delay);
-                }
-            }
-            SmacStyle::Mcm => {
-                // single MCM block over all stored weights of the layer
-                // (factored by each neuron's sls — the shifts are wiring)
-                let mut consts: Vec<i64> = Vec::new();
-                let mut stored: Vec<Vec<i64>> = Vec::new();
-                for m in 0..n_out {
-                    let (sls, _) = report::neuron_stored_bits(qann, k, m);
-                    let row: Vec<i64> =
-                        qann.weights[k][m].iter().map(|&w| w >> sls).collect();
-                    consts.extend(row.iter().cloned());
-                    stored.push(row);
-                }
-                let (mcm, n_ops) = blocks::mcm_block(lib, &consts, in_range);
-                adders += n_ops;
-                layer = layer.beside(mcm);
-
-                for (m, row) in stored.iter().enumerate() {
-                    // product width of this neuron's largest stored weight
-                    let p_bits = row
-                        .iter()
-                        .map(|&c| signed_bitwidth(c))
-                        .max()
-                        .unwrap_or(1)
-                        + 8;
-                    let p_mux = blocks::mux(lib, n_in, p_bits);
-                    let acc = blocks::adder(lib, acc_bits);
-                    let reg = blocks::register(lib, acc_bits);
-                    let bias = blocks::adder(lib, acc_bits);
-                    let act = blocks::activation_unit(lib, acc_bits);
-                    let out_reg = blocks::register(lib, 8);
-                    let mac = p_mux
-                        .beside(acc)
-                        .beside(reg)
-                        .beside(bias)
-                        .beside(act)
-                        .beside(out_reg);
-                    layer = layer.beside(mac);
-                    mac_path = mac_path
-                        .max(mcm.delay + p_mux.delay + acc.delay + lib.dff.delay);
-                    let _ = m;
-                }
-            }
-        }
-
-        area += layer.area;
-        // the layer is active only during its own ι_k + 1 cycles
-        energy += layer.energy * layer_cycles;
-        clock = clock.max(mac_path);
-    }
-
-    let cycles = st.smac_neuron_cycles();
-    let clock = clock * lib.clock_margin;
-    HwReport::from_parts("smac_neuron", style.name(), area, clock, cycles, energy, adders)
+/// Price the SMAC_NEURON design of `qann` (elaborate + generic cost walk).
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+    SmacNeuron.elaborate(qann, style).cost(lib)
 }
 
 #[cfg(test)]
@@ -195,5 +184,20 @@ mod tests {
         let before = build(&lib, &q, SmacStyle::Behavioral);
         let after = build(&lib, &tuned, SmacStyle::Behavioral);
         assert!(after.area_um2 < before.area_um2);
+    }
+
+    #[test]
+    fn mcm_layer_plan_routes_products_through_the_graph() {
+        let q = qann("16-10", 6, 6);
+        let d = SmacNeuron.elaborate(&q, Style::Mcm);
+        assert_eq!(d.schedule, Schedule::LayerSequential);
+        let LayerCompute::Mac { stored, sls, mcm } = &d.layers[0].compute else {
+            panic!("smac layers are MAC-computed");
+        };
+        let r = mcm.expect("mcm style must reference its product graph");
+        assert_eq!(r.offset, 0);
+        // the graph outputs one product per stored weight, neuron-major
+        assert_eq!(d.graphs[r.graph].outputs.len(), stored.iter().map(Vec::len).sum::<usize>());
+        assert_eq!(sls.len(), q.structure.layer_outputs(0));
     }
 }

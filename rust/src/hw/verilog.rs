@@ -1,26 +1,41 @@
-//! SIMURG's hardware-description output (paper Sec. VI): given the ANN
-//! structure, the integer weight/bias values and the design architecture,
-//! emit synthesizable Verilog, a self-checking testbench and a synthesis
-//! script.
+//! SIMURG's hardware-description output (paper Sec. VI): walk an
+//! elaborated [`Design`] and emit synthesizable Verilog, a self-checking
+//! testbench and a synthesis script.
 //!
-//! The multiplierless netlists instantiate the exact adder graphs the
-//! cost model priced (one `assign` per add/sub node, shifts as wiring);
-//! behavioral netlists leave `*` to the synthesis tool, as the paper's
-//! behavioral baseline does. No EDA tool runs in this environment, so the
-//! functional check is `hw::netsim` (bit-exact vs the golden model) and
-//! the emitted testbench carries golden vectors for an external simulator.
+//! The multiplierless netlists instantiate the *embedded* adder graphs
+//! the cost model priced — the same [`Design::graphs`] the architectural
+//! simulator evaluates (one `assign` per add/sub node, shifts as wiring) —
+//! so cost, simulation and HDL cannot drift apart. Behavioral netlists
+//! leave `*` to the synthesis tool, as the paper's behavioral baseline
+//! does. No EDA tool runs in this environment, so the functional check is
+//! `hw::netsim` (bit-exact vs the golden model) and the emitted testbench
+//! carries golden vectors for an external simulator.
 
+use super::design::{ArchKind, Architecture, Design, LayerCompute, McmRef, Style};
 use crate::ann::dataset::Sample;
 use crate::ann::quant::QuantizedAnn;
 use crate::ann::sim;
 use crate::ann::structure::Activation;
-use crate::hw::parallel::MultStyle;
+use crate::hw::parallel::{MultStyle, Parallel};
 use crate::hw::report;
-use crate::mcm::{engine, AdderGraph, LinearTargets, Op, Operand, Tier};
+use crate::hw::smac_ann::SmacAnn;
+use crate::hw::smac_neuron::SmacNeuron;
+use crate::mcm::{AdderGraph, Op, Operand};
+use crate::num::signed_bitwidth;
 use std::fmt::Write as _;
 
 /// Number of fractional bits of the Q1.7 signal format.
 const QBITS: u32 = 7;
+
+/// Emit the HDL of any elaborated design — the single entry point the
+/// CLI and the examples drive, dispatching on the design's architecture.
+pub fn verilog(design: &Design, module: &str) -> String {
+    match design.arch {
+        ArchKind::Parallel => emit_parallel(design, module),
+        ArchKind::SmacNeuron => emit_smac_neuron(design, module),
+        ArchKind::SmacAnn => emit_smac_ann(design, module),
+    }
+}
 
 /// Emit the activation expression mapping accumulator `y` (width `w`,
 /// scale 2^(q+7)) to the 8-bit output `z` (DESIGN.md fixed-point contract).
@@ -103,17 +118,16 @@ fn emit_graph(out: &mut String, prefix: &str, g: &AdderGraph, ranges: &[(i64, i6
 }
 
 /// Parallel-architecture Verilog (paper Fig. 4 / Sec. V-A). `x*` ports are
-/// signed Q1.7 inputs, `y*` registered signed Q1.7 outputs.
-pub fn parallel_verilog(qann: &QuantizedAnn, style: MultStyle, module: &str) -> String {
+/// signed Q1.7 inputs, `y*` registered signed Q1.7 outputs. Multiplierless
+/// styles instantiate the design's embedded graphs.
+fn emit_parallel(design: &Design, module: &str) -> String {
+    let qann = &design.qann;
     let st = &qann.structure;
     let n_out = st.layer_outputs(st.num_layers() - 1);
-    let max_acc = (0..st.num_layers())
-        .map(|k| report::layer_acc_bits(qann, k))
-        .max()
-        .unwrap_or(8);
+    let max_acc = design.layers.iter().map(|l| l.acc_bits).max().unwrap_or(8);
 
     let mut v = String::new();
-    let _ = writeln!(v, "// generated by SIMURG-RS: parallel / {} / {}", style.name(), st);
+    let _ = writeln!(v, "// generated by SIMURG-RS: parallel / {} / {}", design.style.name(), st);
     let _ = write!(v, "module {module} (\n  input clk,\n");
     for i in 0..st.inputs {
         let _ = writeln!(v, "  input signed [7:0] x{i},");
@@ -130,21 +144,21 @@ pub fn parallel_verilog(qann: &QuantizedAnn, style: MultStyle, module: &str) -> 
         let _ = writeln!(v, "  wire signed [7:0] in_x{i} = x{i};");
     }
 
-    for k in 0..st.num_layers() {
-        let n_in = st.layer_inputs(k);
-        let outs = st.layer_outputs(k);
-        let acc_w = report::layer_acc_bits(qann, k).max(2);
-        let in_range = report::layer_input_range(qann, k);
-        let ranges = vec![in_range; n_in];
+    for (k, layer) in design.layers.iter().enumerate() {
+        let acc_w = layer.acc_bits.max(2);
+        let ranges = vec![layer.in_range; layer.n_in];
         let prefix = format!("l{k}");
         // bind the graph inputs
         for (i, src) in layer_in.iter().enumerate() {
             let _ = writeln!(v, "  wire signed [7:0] {prefix}_x{i} = {src};");
         }
-        let exprs: Vec<String> = match style {
-            MultStyle::Behavioral => {
+        let LayerCompute::Graphs(gis) = &layer.compute else {
+            panic!("parallel layers are graph-computed");
+        };
+        let exprs: Vec<String> = match design.style {
+            Style::Behavioral => {
                 // leave the constant multiplications to the synthesis tool
-                (0..outs)
+                (0..layer.n_out)
                     .map(|m| {
                         let terms: Vec<String> = qann.weights[k][m]
                             .iter()
@@ -160,24 +174,21 @@ pub fn parallel_verilog(qann: &QuantizedAnn, style: MultStyle, module: &str) -> 
                     })
                     .collect()
             }
-            MultStyle::Cavm => {
+            Style::Cavm => {
                 let mut exprs = Vec::new();
-                for (m, row) in qann.weights[k].iter().enumerate() {
-                    let g = engine::solve(&LinearTargets::cavm(row), Tier::Cse);
+                for (m, &gi) in gis.iter().enumerate() {
                     let sub = format!("{prefix}r{m}");
-                    for (i, _) in row.iter().enumerate() {
+                    for i in 0..layer.n_in {
                         let _ = writeln!(v, "  wire signed [7:0] {sub}_x{i} = {prefix}_x{i};");
                     }
-                    exprs.extend(emit_graph(&mut v, &sub, &g, &ranges));
+                    exprs.extend(emit_graph(&mut v, &sub, &design.graphs[gi], &ranges));
                 }
                 exprs
             }
-            MultStyle::Cmvm => {
-                let g = engine::solve(&LinearTargets::cmvm(&qann.weights[k]), Tier::Cse);
-                emit_graph(&mut v, &prefix, &g, &ranges)
-            }
+            Style::Cmvm => emit_graph(&mut v, &prefix, &design.graphs[gis[0]], &ranges),
+            other => panic!("parallel has no {} style", other.name()),
         };
-        let mut next = Vec::with_capacity(outs);
+        let mut next = Vec::with_capacity(layer.n_out);
         for (m, e) in exprs.iter().enumerate() {
             let b = qann.biases[k][m];
             let _ = writeln!(
@@ -200,19 +211,27 @@ pub fn parallel_verilog(qann: &QuantizedAnn, style: MultStyle, module: &str) -> 
     v
 }
 
+/// The sls-factored stored weights, shifts and (for `Style::Mcm`) the
+/// embedded product graph of one MAC layer of the design.
+fn mac_layer(design: &Design, k: usize) -> (&Vec<Vec<i64>>, &Vec<u32>, Option<McmRef>) {
+    let LayerCompute::Mac { stored, sls, mcm } = &design.layers[k].compute else {
+        panic!("MAC architectures have MAC layers");
+    };
+    (stored, sls, *mcm)
+}
+
 /// SMAC_NEURON-architecture Verilog (paper Fig. 6): per-layer control
 /// counter, one MAC register per neuron, weight selection by hardwired
-/// case statements (what a constant mux synthesizes to).
-pub fn smac_neuron_verilog(qann: &QuantizedAnn, module: &str) -> String {
+/// case statements (what a constant mux synthesizes to), all sized from
+/// the design's stored-weight factoring.
+fn emit_smac_neuron(design: &Design, module: &str) -> String {
+    let qann = &design.qann;
     let st = &qann.structure;
     let n_out = st.layer_outputs(st.num_layers() - 1);
-    let max_acc = (0..st.num_layers())
-        .map(|k| report::layer_acc_bits(qann, k))
-        .max()
-        .unwrap_or(8);
+    let max_acc = design.layers.iter().map(|l| l.acc_bits).max().unwrap_or(8);
 
     let mut v = String::new();
-    let _ = writeln!(v, "// generated by SIMURG-RS: smac_neuron / {st}");
+    let _ = writeln!(v, "// generated by SIMURG-RS: smac_neuron / {} / {st}", design.style.name());
     let _ = write!(v, "module {module} (\n  input clk,\n  input rst,\n  input start,\n");
     for i in 0..st.inputs {
         let _ = writeln!(v, "  input signed [7:0] x{i},");
@@ -227,21 +246,20 @@ pub fn smac_neuron_verilog(qann: &QuantizedAnn, module: &str) -> String {
     let _ = writeln!(v, "  reg [7:0] cnt;    // input counter of the active layer");
 
     // per-layer input sources and neuron registers
-    for k in 0..st.num_layers() {
-        let outs = st.layer_outputs(k);
-        let acc_w = report::layer_acc_bits(qann, k).max(2);
-        for m in 0..outs {
+    for (k, layer) in design.layers.iter().enumerate() {
+        let acc_w = layer.acc_bits.max(2);
+        for m in 0..layer.n_out {
             let _ = writeln!(v, "  reg signed [{}:0] acc_{k}_{m};", acc_w - 1);
             let _ = writeln!(v, "  reg signed [7:0] z_{k}_{m};");
         }
     }
 
     // broadcast input select per layer
-    for k in 0..st.num_layers() {
-        let n_in = st.layer_inputs(k);
+    for (k, layer) in design.layers.iter().enumerate() {
+        let (stored, _, mcm) = mac_layer(design, k);
         let _ = writeln!(v, "  reg signed [7:0] xsel_{k};");
         let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
-        for i in 0..n_in {
+        for i in 0..layer.n_in {
             let src = if k == 0 {
                 format!("x{i}")
             } else {
@@ -250,40 +268,64 @@ pub fn smac_neuron_verilog(qann: &QuantizedAnn, module: &str) -> String {
             let _ = writeln!(v, "      8'd{i}: xsel_{k} = {src};");
         }
         let _ = writeln!(v, "      default: xsel_{k} = 8'sd0;\n    endcase\n  end");
-        // per-neuron weight select (hardwired constant mux)
-        for m in 0..st.layer_outputs(k) {
-            let (_, wb) = report::neuron_stored_bits(qann, k, m);
-            let wb = wb.max(2);
-            let _ = writeln!(v, "  reg signed [{}:0] wsel_{k}_{m};", wb - 1);
-            let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
-            let sls = report::neuron_stored_bits(qann, k, m).0;
-            for (i, &w) in qann.weights[k][m].iter().enumerate() {
-                let c = w >> sls;
-                let _ = writeln!(v, "      8'd{i}: wsel_{k}_{m} = {c};");
+        match mcm {
+            None => {
+                // per-neuron weight select (hardwired constant mux)
+                for (m, row) in stored.iter().enumerate() {
+                    let wb = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1).max(2);
+                    let _ = writeln!(v, "  reg signed [{}:0] wsel_{k}_{m};", wb - 1);
+                    let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
+                    for (i, &c) in row.iter().enumerate() {
+                        let _ = writeln!(v, "      8'd{i}: wsel_{k}_{m} = {c};");
+                    }
+                    let _ = writeln!(v, "      default: wsel_{k}_{m} = 0;\n    endcase\n  end");
+                }
             }
-            let _ = writeln!(v, "      default: wsel_{k}_{m} = 0;\n    endcase\n  end");
+            Some(r) => {
+                // the layer's embedded MCM block (paper Fig. 9): every
+                // stored-weight product of the broadcast input is one tap
+                // of the design's adder graph; each neuron muxes its own
+                // product per input count
+                let prefix = format!("g{k}");
+                let _ = writeln!(v, "  wire signed [7:0] {prefix}_x0 = xsel_{k};");
+                let taps =
+                    emit_graph(&mut v, &prefix, &design.graphs[r.graph], &[layer.in_range]);
+                for (m, row) in stored.iter().enumerate() {
+                    let p_bits =
+                        (row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8).max(2);
+                    let _ = writeln!(v, "  reg signed [{}:0] psel_{k}_{m};", p_bits - 1);
+                    let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
+                    for i in 0..row.len() {
+                        let tap = &taps[r.offset + m * layer.n_in + i];
+                        let _ = writeln!(v, "      8'd{i}: psel_{k}_{m} = {tap};");
+                    }
+                    let _ = writeln!(v, "      default: psel_{k}_{m} = 0;\n    endcase\n  end");
+                }
+            }
         }
     }
 
     // the sequential MAC schedule: layer k runs for ι_k + 1 cycles
     let _ = writeln!(v, "  always @(posedge clk) begin");
     let _ = writeln!(v, "    if (rst) begin\n      layer <= 0; cnt <= 0; done <= 0;\n    end else if (start || layer < {}) begin", st.num_layers());
-    for k in 0..st.num_layers() {
-        let n_in = st.layer_inputs(k);
+    for (k, layer) in design.layers.iter().enumerate() {
+        let (_, sls, mcm) = mac_layer(design, k);
         let _ = writeln!(v, "      if (layer == {k}) begin");
-        let _ = writeln!(v, "        if (cnt < {n_in}) begin");
-        for m in 0..st.layer_outputs(k) {
-            let sls = report::neuron_stored_bits(qann, k, m).0;
-            let shift = if sls > 0 { format!(" <<< {sls}") } else { String::new() };
-            let _ = writeln!(
-                v,
-                "          acc_{k}_{m} <= acc_{k}_{m} + ((wsel_{k}_{m} * xsel_{k}){shift});"
-            );
+        let _ = writeln!(v, "        if (cnt < {}) begin", layer.n_in);
+        for (m, &s) in sls.iter().enumerate() {
+            let shift = if s > 0 { format!(" <<< {s}") } else { String::new() };
+            // the product: generic multiply (behavioral) or the muxed
+            // MCM-graph tap (multiplierless); the sls back-shift is wiring
+            let product = match mcm {
+                None => format!("(wsel_{k}_{m} * xsel_{k})"),
+                Some(_) => format!("psel_{k}_{m}"),
+            };
+            let _ = writeln!(v, "          acc_{k}_{m} <= acc_{k}_{m} + ({product}{shift});");
         }
         let _ = writeln!(v, "          cnt <= cnt + 1;");
         let _ = writeln!(v, "        end else begin");
-        let acc_w = report::layer_acc_bits(qann, k).max(2);
-        for m in 0..st.layer_outputs(k) {
+        let acc_w = layer.acc_bits.max(2);
+        for m in 0..layer.n_out {
             let b = qann.biases[k][m];
             let y = format!("(acc_{k}_{m} + ({b}))");
             let z = activation_expr(qann.activations[k], &y, acc_w, qann.q);
@@ -292,7 +334,7 @@ pub fn smac_neuron_verilog(qann: &QuantizedAnn, module: &str) -> String {
         }
         let _ = writeln!(v, "          cnt <= 0; layer <= layer + 1;");
         if k == st.num_layers() - 1 {
-            for m in 0..st.layer_outputs(k) {
+            for m in 0..layer.n_out {
                 let b = qann.biases[k][m];
                 let y = format!("(acc_{k}_{m} + ({b}))");
                 let z = activation_expr(qann.activations[k], &y, acc_w, qann.q);
@@ -310,19 +352,17 @@ pub fn smac_neuron_verilog(qann: &QuantizedAnn, module: &str) -> String {
 /// SMAC_ANN-architecture Verilog (paper Fig. 7): the whole ANN through a
 /// single MAC; three nested counters (layer / neuron / input) drive the
 /// weight, bias and input selection; layer outputs are held in a register
-/// bank that feeds back into the input mux.
-pub fn smac_ann_verilog(qann: &QuantizedAnn, module: &str) -> String {
+/// bank that feeds back into the input mux. Sized from the design's
+/// global stored-weight factoring.
+fn emit_smac_ann(design: &Design, module: &str) -> String {
+    let qann = &design.qann;
     let st = &qann.structure;
     let n_out = st.layer_outputs(st.num_layers() - 1);
-    let max_outputs = (0..st.num_layers()).map(|k| st.layer_outputs(k)).max().unwrap();
-    let max_acc = (0..st.num_layers())
-        .map(|k| report::layer_acc_bits(qann, k))
-        .max()
-        .unwrap_or(8)
-        .max(2);
+    let max_outputs = design.layers.iter().map(|l| l.n_out).max().unwrap();
+    let max_acc = design.layers.iter().map(|l| l.acc_bits).max().unwrap_or(8).max(2);
 
     let mut v = String::new();
-    let _ = writeln!(v, "// generated by SIMURG-RS: smac_ann / {st}");
+    let _ = writeln!(v, "// generated by SIMURG-RS: smac_ann / {} / {st}", design.style.name());
     let _ = write!(v, "module {module} (\n  input clk,\n  input rst,\n  input start,\n");
     for i in 0..st.inputs {
         let _ = writeln!(v, "  input signed [7:0] x{i},");
@@ -356,37 +396,67 @@ pub fn smac_ann_verilog(qann: &QuantizedAnn, module: &str) -> String {
     }
     let _ = writeln!(v, "        default: xsel = 8'sd0;\n      endcase\n    end\n  end");
 
-    // weight select: one hardwired case over {layer, neuron, cnt}
-    let sls = report::smallest_left_shift(
-        qann.weights.iter().flat_map(|l| l.iter().flatten().cloned()),
-    );
-    let w_bits = qann
-        .weights
+    // product source over {layer, neuron, cnt}, on the design's globally
+    // sls-factored stored weights: a hardwired weight case feeding the
+    // single multiplier (behavioral), or taps of the design's whole-net
+    // MCM adder graph muxed into `psel` (multiplierless, paper Sec. V-B)
+    let sls = mac_layer(design, 0).1[0];
+    let mcm = mac_layer(design, 0).2;
+    let w_bits = design
+        .layers
         .iter()
-        .flat_map(|l| l.iter().flatten())
-        .map(|&w| crate::num::signed_bitwidth(w >> sls))
+        .flat_map(|l| {
+            let LayerCompute::Mac { stored, .. } = &l.compute else {
+                panic!("MAC architectures have MAC layers");
+            };
+            stored.iter().flatten()
+        })
+        .map(|&c| signed_bitwidth(c))
         .max()
         .unwrap_or(2)
         .max(2);
-    let _ = writeln!(v, "  reg signed [{}:0] wsel;  // stored weights, sls = {sls}", w_bits - 1);
-    let _ = writeln!(v, "  always @(*) begin\n    case ({{layer, neuron, cnt}})");
-    for k in 0..st.num_layers() {
-        for m in 0..st.layer_outputs(k) {
-            for (i, &w) in qann.weights[k][m].iter().enumerate() {
-                let c = w >> sls;
-                if c != 0 {
-                    let _ = writeln!(v, "      {{8'd{k}, 8'd{m}, 8'd{i}}}: wsel = {c};");
+    match mcm {
+        None => {
+            let _ = writeln!(v, "  reg signed [{}:0] wsel;  // stored weights, sls = {sls}", w_bits - 1);
+            let _ = writeln!(v, "  always @(*) begin\n    case ({{layer, neuron, cnt}})");
+            for (k, layer) in design.layers.iter().enumerate() {
+                let (stored, _, _) = mac_layer(design, k);
+                for m in 0..layer.n_out {
+                    for (i, &c) in stored[m].iter().enumerate() {
+                        if c != 0 {
+                            let _ = writeln!(v, "      {{8'd{k}, 8'd{m}, 8'd{i}}}: wsel = {c};");
+                        }
+                    }
                 }
             }
+            let _ = writeln!(v, "      default: wsel = 0;\n    endcase\n  end");
+        }
+        Some(r) => {
+            let _ = writeln!(v, "  wire signed [7:0] g_x0 = xsel;");
+            let taps = emit_graph(&mut v, "g", &design.graphs[r.graph], &[(-128, 127)]);
+            let _ = writeln!(v, "  reg signed [{}:0] psel;  // MCM products, sls = {sls}", w_bits + 7);
+            let _ = writeln!(v, "  always @(*) begin\n    case ({{layer, neuron, cnt}})");
+            for (k, layer) in design.layers.iter().enumerate() {
+                let (stored, _, lref) = mac_layer(design, k);
+                let offset = lref.expect("mcm style carries a graph per layer").offset;
+                for m in 0..layer.n_out {
+                    for (i, &c) in stored[m].iter().enumerate() {
+                        if c != 0 {
+                            let tap = &taps[offset + m * layer.n_in + i];
+                            let _ = writeln!(v, "      {{8'd{k}, 8'd{m}, 8'd{i}}}: psel = {tap};");
+                        }
+                    }
+                }
+            }
+            let _ = writeln!(v, "      default: psel = 0;\n    endcase\n  end");
         }
     }
-    let _ = writeln!(v, "      default: wsel = 0;\n    endcase\n  end");
 
     // bias select over {layer, neuron}
     let _ = writeln!(v, "  reg signed [{}:0] bsel;", max_acc - 1);
     let _ = writeln!(v, "  always @(*) begin\n    case ({{layer, neuron}})");
-    for k in 0..st.num_layers() {
-        for m in 0..st.layer_outputs(k) {
+    for (k, layer) in design.layers.iter().enumerate() {
+        for m in 0..layer.n_out {
             let b = qann.biases[k][m];
             if b != 0 {
                 let _ = writeln!(v, "      {{8'd{k}, 8'd{m}}}: bsel = {b};");
@@ -400,25 +470,27 @@ pub fn smac_ann_verilog(qann: &QuantizedAnn, module: &str) -> String {
     let _ = writeln!(v, "    if (rst) begin");
     let _ = writeln!(v, "      layer <= 0; neuron <= 0; cnt <= 0; acc <= 0; done <= 0;");
     let _ = writeln!(v, "    end else if (start && !done) begin");
-    for k in 0..st.num_layers() {
-        let n_in = st.layer_inputs(k);
-        let outs = st.layer_outputs(k);
-        let acc_w = report::layer_acc_bits(qann, k).max(2);
+    for (k, layer) in design.layers.iter().enumerate() {
+        let acc_w = layer.acc_bits.max(2);
         let _ = writeln!(v, "      if (layer == {k}) begin");
         let shift = if sls > 0 { format!(" <<< {sls}") } else { String::new() };
-        let _ = writeln!(v, "        if (cnt < {n_in}) begin");
-        let _ = writeln!(v, "          acc <= acc + ((wsel * xsel){shift}); cnt <= cnt + 1;");
-        let _ = writeln!(v, "        end else if (cnt == {n_in}) begin");
+        let product = match mcm {
+            None => "(wsel * xsel)",
+            Some(_) => "psel",
+        };
+        let _ = writeln!(v, "        if (cnt < {}) begin", layer.n_in);
+        let _ = writeln!(v, "          acc <= acc + ({product}{shift}); cnt <= cnt + 1;");
+        let _ = writeln!(v, "        end else if (cnt == {}) begin", layer.n_in);
         let _ = writeln!(v, "          acc <= acc + bsel; cnt <= cnt + 1;");
         let _ = writeln!(v, "        end else begin");
         let z = activation_expr(qann.activations[k], "acc", acc_w, qann.q);
         let _ = writeln!(v, "          case (neuron)");
-        for m in 0..outs {
+        for m in 0..layer.n_out {
             let _ = writeln!(v, "            8'd{m}: znext{m} <= {z};");
         }
         let _ = writeln!(v, "            default: ;\n          endcase");
         let _ = writeln!(v, "          acc <= 0; cnt <= 0;");
-        let _ = writeln!(v, "          if (neuron + 1 < {outs}) neuron <= neuron + 1;");
+        let _ = writeln!(v, "          if (neuron + 1 < {}) neuron <= neuron + 1;", layer.n_out);
         let _ = writeln!(v, "          else begin");
         let _ = writeln!(v, "            neuron <= 0; layer <= layer + 1;");
         for r in 0..max_outputs {
@@ -442,6 +514,21 @@ pub fn smac_ann_verilog(qann: &QuantizedAnn, module: &str) -> String {
     }
     let _ = writeln!(v, "    end\n  end\nendmodule");
     v
+}
+
+/// Compatibility wrapper: elaborate + emit the parallel design.
+pub fn parallel_verilog(qann: &QuantizedAnn, style: MultStyle, module: &str) -> String {
+    verilog(&Parallel.elaborate(qann, style), module)
+}
+
+/// Compatibility wrapper: elaborate + emit the SMAC_NEURON design.
+pub fn smac_neuron_verilog(qann: &QuantizedAnn, module: &str) -> String {
+    verilog(&SmacNeuron.elaborate(qann, Style::Behavioral), module)
+}
+
+/// Compatibility wrapper: elaborate + emit the SMAC_ANN design.
+pub fn smac_ann_verilog(qann: &QuantizedAnn, module: &str) -> String {
+    verilog(&SmacAnn.elaborate(qann, Style::Behavioral), module)
 }
 
 /// Self-checking testbench with golden vectors from the bit-accurate
@@ -488,6 +575,12 @@ pub fn testbench(qann: &QuantizedAnn, samples: &[Sample], dut: &str, cycles: usi
     let _ = writeln!(v, "    if (errors == 0) $display(\"TB PASS\"); else $display(\"TB FAIL: %d\", errors);");
     let _ = writeln!(v, "    $finish;\n  end\nendmodule");
     v
+}
+
+/// [`testbench`] for an elaborated design: golden vectors from the
+/// design's own net, run length from its schedule.
+pub fn testbench_for(design: &Design, samples: &[Sample], dut: &str) -> String {
+    testbench(&design.qann, samples, dut, design.cycles())
 }
 
 /// Cadence-style synthesis script (the paper's Sec. VII flow: RTL
@@ -538,7 +631,8 @@ mod tests {
     fn parallel_netlists_have_expected_structure() {
         let q = qann("16-10");
         for style in [MultStyle::Behavioral, MultStyle::Cavm, MultStyle::Cmvm] {
-            let v = parallel_verilog(&q, style, "ann_par");
+            let d = Parallel.elaborate(&q, style);
+            let v = verilog(&d, "ann_par");
             assert!(v.contains("module ann_par"));
             assert!(v.contains("endmodule"));
             assert!(v.contains("input signed [7:0] x15"));
@@ -556,6 +650,19 @@ mod tests {
     }
 
     #[test]
+    fn cmvm_netlist_instantiates_every_embedded_graph_node() {
+        // the HDL walks the same Design the cost model priced: every
+        // add/sub node of the embedded graphs appears as one wire
+        let q = qann("16-10");
+        let d = Parallel.elaborate(&q, Style::Cmvm);
+        let v = verilog(&d, "ann_par");
+        let nodes: usize = d.graphs.iter().map(|g| g.nodes.len()).sum();
+        assert_eq!(nodes, d.adder_ops);
+        let wires = v.lines().filter(|l| l.contains("<<<") && l.contains("wire signed")).count();
+        assert!(wires >= nodes, "expected >= {nodes} graph wires, got {wires}");
+    }
+
+    #[test]
     fn smac_neuron_netlist_structure() {
         let q = qann("16-10-10");
         let v = smac_neuron_verilog(&q, "ann_sn");
@@ -570,13 +677,37 @@ mod tests {
     }
 
     #[test]
+    fn smac_mcm_netlists_instantiate_the_product_graphs() {
+        // Style::Mcm HDL must realize the priced datapath: the embedded
+        // MCM adder graph + per-neuron product muxes, and no multiplier
+        let q = qann("16-10-10");
+        let dn = SmacNeuron.elaborate(&q, Style::Mcm);
+        let vn = verilog(&dn, "ann_sn_mcm");
+        assert!(vn.contains("// generated by SIMURG-RS: smac_neuron / mcm"));
+        assert!(vn.contains("g0_x0"), "layer 0 graph input binding");
+        assert!(vn.contains("psel_0_0"), "per-neuron product select");
+        assert!(!vn.contains(" * "), "multiplierless must not multiply");
+        let nodes: usize = dn.graphs.iter().map(|g| g.nodes.len()).sum();
+        let wires = vn.lines().filter(|l| l.contains("wire signed") && l.contains("<<<")).count();
+        assert!(wires >= nodes, "expected >= {nodes} graph wires, got {wires}");
+
+        let da = SmacAnn.elaborate(&q, Style::Mcm);
+        let va = verilog(&da, "ann_sa_mcm");
+        assert!(va.contains("// generated by SIMURG-RS: smac_ann / mcm"));
+        assert!(va.contains("g_x0"), "whole-net graph input binding");
+        assert!(va.contains("psel"), "single product select");
+        assert!(!va.contains(" * "), "multiplierless must not multiply");
+        assert!(va.contains("case ({layer, neuron, cnt})"));
+    }
+
+    #[test]
     fn smac_ann_netlist_structure() {
         let q = qann("16-10-10");
         let v = smac_ann_verilog(&q, "ann_sa");
         assert!(v.contains("module ann_sa"));
         assert!(v.contains("reg [7:0] neuron"));
         // a single accumulator and a single weight mux
-        assert_eq!(v.matches("reg signed").count() >= 3, true);
+        assert!(v.matches("reg signed").count() >= 3);
         assert!(v.contains("case ({layer, neuron, cnt})"));
         assert!(v.contains("done <= 1"));
         assert_eq!(v.matches("module ").count(), 1);
@@ -586,7 +717,8 @@ mod tests {
     fn testbench_embeds_golden_vectors() {
         let q = qann("16-10");
         let ds = Dataset::synthetic_with_sizes(3, 20, 5);
-        let tb = testbench(&q, &ds.test[..3], "ann_sn", q.structure.smac_neuron_cycles());
+        let d = SmacNeuron.elaborate(&q, Style::Behavioral);
+        let tb = testbench_for(&d, &ds.test[..3], "ann_sn");
         assert!(tb.contains("module tb_ann_sn"));
         assert!(tb.contains("TB PASS"));
         // golden values come from the bit-accurate simulator

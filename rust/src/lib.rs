@@ -17,7 +17,12 @@
 //! - python never runs on the request path.
 //!
 //! Hot-path architecture:
-//! - every constant-multiplication solve (hardware cost models, tuner
+//! - every hardware consumer walks one IR: an [`hw::Architecture`]
+//!   elaborates a quantized net into an [`hw::Design`] (typed datapath
+//!   netlist + schedule + embedded adder graphs), and cost, cycle-accurate
+//!   simulation and Verilog are all derived from that same value
+//!   (README §Design IR);
+//! - every constant-multiplication solve (design elaboration, tuner
 //!   metrics, netlist simulation, Verilog generation, reports) goes
 //!   through [`mcm::engine`] — a process-wide, sharded, content-addressed
 //!   cache over canonicalized instances. The coordinator sweep's worker
@@ -28,6 +33,11 @@
 //!   cargo feature; the default build substitutes an API-compatible stub
 //!   so builds and tests stay hermetic on machines without XLA (README
 //!   §PJRT).
+
+// Deliberate style trade (CI lints with `-D warnings`): the hardware
+// models index with the paper's (k, m, n) loop notation throughout, which
+// clippy would otherwise rewrite into iterator chains.
+#![allow(clippy::needless_range_loop)]
 
 pub mod ann;
 pub mod coordinator;

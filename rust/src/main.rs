@@ -5,6 +5,7 @@
 //!   simurg flow    --structure 16-16-10 --trainer zaal [--eval pjrt]
 //!   simurg train   --structure 16-10 --trainer zaal --backend pjrt
 //!   simurg verilog --structure 16-10 --trainer zaal --arch parallel --style cmvm --out out/
+//!   simurg archs                      list registered (architecture x style) design points
 //!   simurg mcm     --constants 11,3,5,13 [--alg dbr|cse|exact|engine]
 //!
 //! Common flags: --runs N --seed N --threads N --data-dir DIR --out DIR
@@ -16,8 +17,7 @@ use simurg::ann::train::Trainer;
 use simurg::coordinator::flow::{run_flow, FlowConfig};
 use simurg::coordinator::report;
 use simurg::coordinator::sweep::{sweep_all_with_stats, SweepConfig};
-use simurg::hw::parallel::MultStyle;
-use simurg::hw::{verilog, TechLib};
+use simurg::hw::{verilog, Architecture, Style, TechLib};
 use simurg::mcm::{cse, dbr, engine, optimize_mcm, Effort, LinearTargets, Tier};
 use simurg::posttrain::AccuracyEval;
 use simurg::runtime::{Artifacts, PjrtEval, PjrtTrainer};
@@ -248,60 +248,66 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve `--arch` / `--style` against the architecture registry so the
+/// CLI accepts exactly the design points the registry declares.
+fn parse_design_point(args: &Args) -> Result<(&'static dyn Architecture, Style)> {
+    let arch_name = args.get("arch").unwrap_or("parallel");
+    let names: Vec<&str> = <dyn Architecture>::all().iter().map(|a| a.name()).collect();
+    let arch = <dyn Architecture>::by_name(arch_name)
+        .with_context(|| format!("architectures: {} (got {arch_name})", names.join("|")))?;
+    let style_name = args.get("style").unwrap_or("behavioral");
+    let style = Style::parse(style_name).context("styles: behavioral|cavm|cmvm|mcm")?;
+    let styles: Vec<&str> = arch.styles().iter().map(|s| s.name()).collect();
+    anyhow::ensure!(
+        arch.styles().contains(&style),
+        "{} styles: {} (got {style_name})",
+        arch.name(),
+        styles.join("|")
+    );
+    Ok((arch, style))
+}
+
+fn cmd_archs() -> Result<()> {
+    println!("{:<14}{}", "architecture", "styles");
+    for arch in <dyn Architecture>::all() {
+        let styles: Vec<&str> = arch.styles().iter().map(|s| s.name()).collect();
+        println!("{:<14}{}", arch.name(), styles.join(", "));
+    }
+    Ok(())
+}
+
 fn cmd_verilog(args: &Args) -> Result<()> {
     let data = dataset(args);
     let mut cfg = FlowConfig::new(parse_structure(args)?, parse_trainer(args)?);
     cfg.runs = args.get_usize("runs", 1)?;
     let o = run_flow(&data, &cfg, None)?;
-    let arch = args.get("arch").unwrap_or("parallel");
-    let style = args.get("style").unwrap_or("behavioral");
+    let (arch, style) = parse_design_point(args)?;
     let module = format!("ann_{}", cfg.structure.to_string().replace('-', "_"));
-    let (qann, text, cycles) = match arch {
-        "parallel" => {
-            let style = match style {
-                "behavioral" => MultStyle::Behavioral,
-                "cavm" => MultStyle::Cavm,
-                "cmvm" => MultStyle::Cmvm,
-                other => bail!("parallel styles: behavioral|cavm|cmvm (got {other})"),
-            };
-            let q = &o.tuned_parallel.qann;
-            (q.clone(), verilog::parallel_verilog(q, style, &module), 1)
-        }
-        "smac_neuron" => {
-            let q = &o.tuned_smac_neuron.qann;
-            (
-                q.clone(),
-                verilog::smac_neuron_verilog(q, &module),
-                q.structure.smac_neuron_cycles(),
-            )
-        }
-        "smac_ann" => {
-            let q = &o.tuned_smac_ann.qann;
-            (
-                q.clone(),
-                verilog::smac_ann_verilog(q, &module),
-                q.structure.smac_ann_cycles(),
-            )
-        }
-        other => bail!("verilog generation: parallel|smac_neuron|smac_ann (got {other})"),
-    };
+
+    // one elaboration; HDL, testbench run length and the synthesis
+    // script's clock all derive from the same Design value
+    let qann = &o.tuned_for(arch.kind()).qann;
+    let design = arch.elaborate(qann, style);
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
     let (v_name, tb_name, tcl_name) = verilog::artifact_names(&module);
-    std::fs::write(dir.join(&v_name), &text)?;
-    let tb = verilog::testbench(&qann, &data.test[..8.min(data.test.len())], &module, cycles);
+    std::fs::write(dir.join(&v_name), verilog::verilog(&design, &module))?;
+    let tb = verilog::testbench_for(&design, &data.test[..8.min(data.test.len())], &module);
     std::fs::write(dir.join(&tb_name), tb)?;
-    let lib = TechLib::tsmc40();
-    let r = match arch {
-        "parallel" => simurg::hw::parallel::build(&lib, &qann, MultStyle::Behavioral),
-        _ => simurg::hw::smac_neuron::build(
-            &lib,
-            &qann,
-            simurg::hw::smac_neuron::SmacStyle::Behavioral,
-        ),
-    };
+    let r = design.cost(&TechLib::tsmc40());
     std::fs::write(dir.join(&tcl_name), verilog::synthesis_script(&module, r.clock_ns))?;
-    println!("wrote {} / {} / {} to {}", v_name, tb_name, tcl_name, dir.display());
+    println!(
+        "wrote {} / {} / {} to {} ({} / {}: {:.1} um^2 @ {:.3} ns x {} cycles)",
+        v_name,
+        tb_name,
+        tcl_name,
+        dir.display(),
+        arch.name(),
+        style.name(),
+        r.area_um2,
+        r.clock_ns,
+        r.cycles
+    );
     Ok(())
 }
 
@@ -336,12 +342,14 @@ fn cmd_mcm(args: &Args) -> Result<()> {
 
 fn usage() -> &'static str {
     "SIMURG-RS — efficient hardware realizations of feedforward ANNs
-usage: simurg <table|figure|flow|train|verilog|mcm> [flags]
+usage: simurg <table|figure|flow|train|verilog|archs|mcm> [flags]
   table <1|2|3|4>           regenerate a paper table
   figure <10..18|all>       regenerate a paper figure (+ CSV in --out)
   flow                      full flow for one --structure/--trainer
   train                     train via --backend pjrt|native
   verilog                   emit Verilog + testbench + synthesis script
+                            for --arch ARCH --style STYLE (see `archs`)
+  archs                     list the registered (architecture x style) points
   mcm                       optimize --constants with --alg dbr|cse|exact|engine
 flags: --structure 16-16-10 --trainer zaal|pytorch|matlab --runs N --seed N
        --threads N --data-dir DIR --data-seed N --out DIR --eval native|pjrt"
@@ -360,6 +368,7 @@ fn main() -> Result<()> {
         "flow" => cmd_flow(&args),
         "train" => cmd_train(&args),
         "verilog" => cmd_verilog(&args),
+        "archs" => cmd_archs(),
         "mcm" => cmd_mcm(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());

@@ -16,7 +16,7 @@ pub mod smac;
 pub use eval::{AccuracyEval, NativeEval};
 
 use crate::ann::QuantizedAnn;
-use crate::mcm::{engine, LinearTargets, Tier};
+use crate::hw::design::{ArchKind, LayerPricer, Style};
 
 /// Outcome of a tuning run.
 #[derive(Debug, Clone)]
@@ -40,17 +40,11 @@ pub struct TuneResult {
 }
 
 /// Total add/sub operations of the per-layer CMVM realization of `qann`
-/// (the parallel architecture's multiplierless view), solved through the
-/// process-wide MCM engine. Tuner trajectories visit neighborhoods of
-/// near-identical constant sets (one weight nudged per step), so after
-/// the first sweep these solves are predominantly cache hits. The SMAC
-/// tuners price their own architecture-matched instances instead
-/// (`posttrain::smac`), mirroring the hardware models' constant sets.
+/// (the parallel architecture's multiplierless view), priced through the
+/// unified design IR's [`LayerPricer`] and therefore the process-wide MCM
+/// engine. The SMAC tuners price their own architecture-matched instances
+/// the same way (`posttrain::smac`), mirroring the constant sets the
+/// hardware elaboration solves.
 pub fn realized_adder_ops(qann: &QuantizedAnn) -> usize {
-    let mut total = 0usize;
-    for k in 0..qann.structure.num_layers() {
-        let t = LinearTargets::cmvm(&qann.weights[k]);
-        total += engine::solve(&t, Tier::Cse).num_ops();
-    }
-    total
+    LayerPricer::new(ArchKind::Parallel, Style::Cmvm).adder_ops(qann)
 }

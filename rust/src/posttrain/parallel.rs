@@ -7,6 +7,7 @@
 use super::eval::AccuracyEval;
 use super::TuneResult;
 use crate::ann::quant::QuantizedAnn;
+use crate::hw::design::{ArchKind, LayerPricer, Style};
 use crate::num::Csd;
 use std::time::Instant;
 
@@ -15,10 +16,17 @@ use std::time::Instant;
 /// Step 2 note of the paper holds by construction: a replacement always
 /// has strictly fewer nonzero digits than the original, so the total
 /// digit count is a strictly decreasing bound and the loop terminates.
+///
+/// The result is priced through the design IR's [`LayerPricer`] (the
+/// parallel architecture realizes each layer as one CMVM block): warmed
+/// on the baseline, so the post-tuning price re-elaborates only the
+/// layers the sweeps actually changed.
 pub fn tune_parallel(qann: &QuantizedAnn, ev: &dyn AccuracyEval) -> TuneResult {
     let start = Instant::now();
+    let mut pricer = LayerPricer::new(ArchKind::Parallel, Style::Cmvm);
     let mut best = qann.clone();
     let mut bha = ev.accuracy(&best);
+    pricer.adder_ops(&best);
     let mut evals = 1usize;
     let mut sweeps = 0usize;
 
@@ -52,8 +60,8 @@ pub fn tune_parallel(qann: &QuantizedAnn, ev: &dyn AccuracyEval) -> TuneResult {
         }
     }
 
-    // the parallel architecture realizes each layer as one CMVM block
-    let adder_ops = super::realized_adder_ops(&best);
+    // cached re-elaboration: only the layers the tuning changed re-solve
+    let adder_ops = pricer.adder_ops(&best);
     TuneResult {
         qann: best,
         bha,

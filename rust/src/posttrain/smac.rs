@@ -10,6 +10,7 @@
 use super::eval::AccuracyEval;
 use super::TuneResult;
 use crate::ann::quant::QuantizedAnn;
+use crate::hw::design::{ArchKind, LayerPricer, Style};
 use crate::hw::report::smallest_left_shift;
 use crate::num::signed_bitwidth;
 use std::time::Instant;
@@ -26,10 +27,26 @@ pub enum SlsScope {
 }
 
 /// Run the Sec. IV-C tuning procedure to its fixed point.
+///
+/// Candidates are priced through the design IR's [`LayerPricer`] on the
+/// same constant sets the architecture's elaboration solves — per-layer
+/// MCM blocks over per-neuron sls-shifted stored weights for SMAC_NEURON,
+/// one whole-net block over globally sls-shifted weights for SMAC_ANN —
+/// so the metric and the figures agree, the post-tuning price re-solves
+/// only the layers the sweeps touched, and the engine cache is already
+/// warm when the reports price the design.
 pub fn tune_smac(qann: &QuantizedAnn, ev: &dyn AccuracyEval, scope: SlsScope) -> TuneResult {
     let start = Instant::now();
+    let arch = match scope {
+        SlsScope::PerNeuron => ArchKind::SmacNeuron,
+        SlsScope::WholeAnn => ArchKind::SmacAnn,
+    };
+    let mut pricer = LayerPricer::new(arch, Style::Mcm);
     let mut best = qann.clone();
     let mut bha = ev.accuracy(&best);
+    // warm the per-layer cache on the baseline so the post-tuning price
+    // below re-solves only what actually changed
+    pricer.adder_ops(&best);
     let mut evals = 1usize;
     let mut sweeps = 0usize;
 
@@ -53,7 +70,7 @@ pub fn tune_smac(qann: &QuantizedAnn, ev: &dyn AccuracyEval, scope: SlsScope) ->
         }
     }
 
-    let adder_ops = smac_adder_ops(&best, scope);
+    let adder_ops = pricer.adder_ops(&best);
     TuneResult {
         qann: best,
         bha,
@@ -61,41 +78,6 @@ pub fn tune_smac(qann: &QuantizedAnn, ev: &dyn AccuracyEval, scope: SlsScope) ->
         sweeps,
         cpu_seconds: start.elapsed().as_secs_f64(),
         adder_ops,
-    }
-}
-
-/// Adder ops of the tuned net's own MCM realization, mirroring the
-/// constant sets the hardware models solve — per layer over per-neuron
-/// sls-shifted stored weights for SMAC_NEURON (`hw::smac_neuron::build`),
-/// one whole-net block over globally sls-shifted weights for SMAC_ANN
-/// (`hw::smac_ann::build`) — so the metric and the figures agree, and
-/// the engine cache is already warm when the reports price the design.
-fn smac_adder_ops(qann: &QuantizedAnn, scope: SlsScope) -> usize {
-    use crate::hw::report::neuron_stored_bits;
-    use crate::mcm::{engine, LinearTargets, Tier};
-    match scope {
-        SlsScope::PerNeuron => {
-            let mut total = 0usize;
-            for k in 0..qann.structure.num_layers() {
-                let mut consts: Vec<i64> = Vec::new();
-                for m in 0..qann.structure.layer_outputs(k) {
-                    let (sls, _) = neuron_stored_bits(qann, k, m);
-                    consts.extend(qann.weights[k][m].iter().map(|&w| w >> sls));
-                }
-                total += engine::solve(&LinearTargets::mcm(&consts), Tier::McmHeuristic).num_ops();
-            }
-            total
-        }
-        SlsScope::WholeAnn => {
-            let all: Vec<i64> = qann
-                .weights
-                .iter()
-                .flat_map(|l| l.iter().flatten().cloned().collect::<Vec<_>>())
-                .collect();
-            let sls = smallest_left_shift(all.iter().cloned());
-            let consts: Vec<i64> = all.iter().map(|&w| w >> sls).collect();
-            engine::solve(&LinearTargets::mcm(&consts), Tier::McmHeuristic).num_ops()
-        }
     }
 }
 

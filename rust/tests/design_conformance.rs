@@ -1,0 +1,373 @@
+//! Cross-architecture conformance suite for the unified `hw::design` IR.
+//!
+//! For every (architecture × style) design point of the registry this
+//! asserts, on the paper benchmark structures, that:
+//!
+//! 1. `Design::cost` reproduces the pre-refactor `HwReport` numbers —
+//!    the `legacy` module below is a verbatim copy of the hand-rolled
+//!    cost builders `hw/{parallel,smac_neuron,smac_ann}.rs` carried
+//!    before the refactor, kept here as the golden reference;
+//! 2. the generic netsim interpreter is bit-exact against the golden
+//!    model (`ann::sim`) across a whole test set, elaborate-once;
+//! 3. the Sec. III cycle-count formulas hold.
+
+// the legacy copies keep the paper's (k, m, n) index-loop notation verbatim
+#![allow(clippy::needless_range_loop)]
+
+use simurg::ann::dataset::Dataset;
+use simurg::ann::model::{Ann, Init};
+use simurg::ann::quant::QuantizedAnn;
+use simurg::ann::sim;
+use simurg::ann::structure::{Activation, AnnStructure};
+use simurg::hw::design::design_points;
+use simurg::hw::{netsim, HwReport, Style, TechLib};
+use simurg::num::Rng;
+
+/// The pre-refactor gate-level builders, copied verbatim (modulo paths)
+/// from the seed's `hw/{parallel,smac_neuron,smac_ann}.rs`. Any drift
+/// between the `Design` cost walker and these is a conformance failure.
+mod legacy {
+    use simurg::ann::quant::QuantizedAnn;
+    use simurg::hw::blocks::{self, BlockCost};
+    use simurg::hw::{graph_cost, report, HwReport, Style, TechLib};
+    use simurg::mcm::{engine, LinearTargets, Tier};
+    use simurg::num::signed_bitwidth;
+
+    pub fn build(lib: &TechLib, qann: &QuantizedAnn, arch: &str, style: Style) -> HwReport {
+        match arch {
+            "parallel" => parallel(lib, qann, style),
+            "smac_neuron" => smac_neuron(lib, qann, style),
+            "smac_ann" => smac_ann(lib, qann, style),
+            other => panic!("unknown architecture {other}"),
+        }
+    }
+
+    fn parallel(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+        let st = &qann.structure;
+        let mut area = 0.0f64;
+        let mut energy = 0.0f64; // fJ per inference (every block fires once)
+        let mut path = 0.0f64; // accumulated combinational critical path
+        let mut adders = 0usize;
+
+        for k in 0..st.num_layers() {
+            let n_in = st.layer_inputs(k);
+            let n_out = st.layer_outputs(k);
+            let in_range = report::layer_input_range(qann, k);
+            let ranges = vec![in_range; n_in];
+            let acc_bits = report::layer_acc_bits(qann, k);
+
+            let (net, sum): (BlockCost, BlockCost) = match style {
+                Style::Behavioral => {
+                    let t = LinearTargets::cmvm(&qann.weights[k]);
+                    let g = engine::solve(&t, Tier::Dbr);
+                    adders += g.num_ops();
+                    (graph_cost(lib, &g, &ranges), BlockCost::ZERO)
+                }
+                Style::Cavm => {
+                    let mut total = BlockCost::ZERO;
+                    for row in &qann.weights[k] {
+                        let t = LinearTargets::cavm(row);
+                        let g = engine::solve(&t, Tier::Cse);
+                        adders += g.num_ops();
+                        let c = graph_cost(lib, &g, &ranges);
+                        total = total.beside(c);
+                    }
+                    (total, BlockCost::ZERO)
+                }
+                Style::Cmvm => {
+                    let t = LinearTargets::cmvm(&qann.weights[k]);
+                    let g = engine::solve(&t, Tier::Cse);
+                    adders += g.num_ops();
+                    (graph_cost(lib, &g, &ranges), BlockCost::ZERO)
+                }
+                other => panic!("parallel has no {} style", other.name()),
+            };
+
+            let bias = blocks::adder(lib, acc_bits).times(n_out);
+            let act = blocks::activation_unit(lib, acc_bits).times(n_out);
+
+            area += net.area + sum.area + bias.area + act.area;
+            energy += net.energy + sum.energy + bias.energy + act.energy;
+            path += net.delay + sum.delay + bias.delay + act.delay;
+        }
+
+        let out_reg = blocks::register(lib, 8).times(st.layer_outputs(st.num_layers() - 1));
+        area += out_reg.area;
+        energy += out_reg.energy;
+
+        let clock = (path + lib.dff.delay) * lib.clock_margin;
+        HwReport::from_parts("parallel", style.name(), area, clock, 1, energy, adders)
+    }
+
+    fn smac_neuron(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+        let st = &qann.structure;
+        let mut area = 0.0f64;
+        let mut energy = 0.0f64; // fJ per inference
+        let mut clock = 0.0f64; // max register-to-register path over layers
+        let mut adders = 0usize;
+
+        for k in 0..st.num_layers() {
+            let n_in = st.layer_inputs(k);
+            let n_out = st.layer_outputs(k);
+            let in_range = report::layer_input_range(qann, k);
+            let acc_bits = report::layer_acc_bits(qann, k);
+            let layer_cycles = (n_in + 1) as f64;
+
+            let control = blocks::counter(lib, n_in + 1);
+            let in_mux = blocks::mux(lib, n_in, 8);
+            let mut layer = control.beside(in_mux);
+            let mut mac_path = control.delay.max(in_mux.delay);
+
+            match style {
+                Style::Behavioral => {
+                    for m in 0..n_out {
+                        let (_sls, w_bits) = report::neuron_stored_bits(qann, k, m);
+                        let w_mux = blocks::constant_mux(lib, n_in, w_bits);
+                        let mult = blocks::multiplier(lib, w_bits, 8);
+                        let acc = blocks::adder(lib, acc_bits);
+                        let reg = blocks::register(lib, acc_bits);
+                        let bias = blocks::adder(lib, acc_bits);
+                        let act = blocks::activation_unit(lib, acc_bits);
+                        let out_reg = blocks::register(lib, 8);
+                        let mac = w_mux
+                            .beside(mult)
+                            .beside(acc)
+                            .beside(reg)
+                            .beside(bias)
+                            .beside(act)
+                            .beside(out_reg);
+                        layer = layer.beside(mac);
+                        mac_path = mac_path
+                            .max(w_mux.delay.max(0.0) + mult.delay + acc.delay + lib.dff.delay);
+                    }
+                }
+                Style::Mcm => {
+                    let mut consts: Vec<i64> = Vec::new();
+                    let mut stored: Vec<Vec<i64>> = Vec::new();
+                    for m in 0..n_out {
+                        let (sls, _) = report::neuron_stored_bits(qann, k, m);
+                        let row: Vec<i64> = qann.weights[k][m].iter().map(|&w| w >> sls).collect();
+                        consts.extend(row.iter().cloned());
+                        stored.push(row);
+                    }
+                    let (mcm, n_ops) = blocks::mcm_block(lib, &consts, in_range);
+                    adders += n_ops;
+                    layer = layer.beside(mcm);
+
+                    for row in stored.iter() {
+                        let p_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8;
+                        let p_mux = blocks::mux(lib, n_in, p_bits);
+                        let acc = blocks::adder(lib, acc_bits);
+                        let reg = blocks::register(lib, acc_bits);
+                        let bias = blocks::adder(lib, acc_bits);
+                        let act = blocks::activation_unit(lib, acc_bits);
+                        let out_reg = blocks::register(lib, 8);
+                        let mac = p_mux.beside(acc).beside(reg).beside(bias).beside(act).beside(out_reg);
+                        layer = layer.beside(mac);
+                        mac_path = mac_path.max(mcm.delay + p_mux.delay + acc.delay + lib.dff.delay);
+                    }
+                }
+                other => panic!("smac_neuron has no {} style", other.name()),
+            }
+
+            area += layer.area;
+            energy += layer.energy * layer_cycles;
+            clock = clock.max(mac_path);
+        }
+
+        let cycles = st.smac_neuron_cycles();
+        let clock = clock * lib.clock_margin;
+        HwReport::from_parts("smac_neuron", style.name(), area, clock, cycles, energy, adders)
+    }
+
+    fn smac_ann(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+        let st = &qann.structure;
+        let layers = st.num_layers();
+
+        let all_weights =
+            || (0..layers).flat_map(|k| qann.weights[k].iter().flatten().cloned().collect::<Vec<_>>());
+        let sls = report::smallest_left_shift(all_weights());
+        let stored_bits = all_weights().map(|w| signed_bitwidth(w >> sls)).max().unwrap_or(1);
+
+        let acc_bits = (0..layers).map(|k| report::layer_acc_bits(qann, k)).max().unwrap_or(1);
+
+        let max_inputs = (0..layers).map(|k| st.layer_inputs(k)).max().unwrap();
+        let max_outputs = (0..layers).map(|k| st.layer_outputs(k)).max().unwrap();
+        let total_weights = st.total_weights();
+        let total_biases = st.total_neurons();
+
+        let control = blocks::counter(lib, layers.max(2))
+            .beside(blocks::counter(lib, max_inputs + 2))
+            .beside(blocks::counter(lib, max_outputs));
+
+        let in_mux = blocks::mux(lib, st.inputs + max_outputs, 8);
+        let w_mux = blocks::constant_mux(lib, total_weights, stored_bits);
+        let b_mux = blocks::constant_mux(lib, total_biases, acc_bits);
+
+        let acc = blocks::adder(lib, acc_bits);
+        let reg = blocks::register(lib, acc_bits);
+        let act = blocks::activation_unit(lib, acc_bits);
+        let out_regs = blocks::register(lib, 8).times(max_outputs);
+
+        let (mult_area_energy, mult_delay, adders) = match style {
+            Style::Behavioral => {
+                let m = blocks::multiplier(lib, stored_bits, 8);
+                ((m.area, m.energy), m.delay, 0)
+            }
+            Style::Mcm => {
+                let consts: Vec<i64> = all_weights().map(|w| w >> sls).collect();
+                let (c, n_ops) = blocks::mcm_block(lib, &consts, (-128, 127));
+                let p_mux = blocks::mux(lib, total_weights, stored_bits + 8);
+                ((c.area + p_mux.area, c.energy + p_mux.energy), c.delay + p_mux.delay, n_ops)
+            }
+            other => panic!("smac_ann has no {} style", other.name()),
+        };
+
+        let area = control.area
+            + in_mux.area
+            + w_mux.area
+            + b_mux.area
+            + mult_area_energy.0
+            + acc.area
+            + reg.area
+            + act.area
+            + out_regs.area;
+
+        let cycles = st.smac_ann_cycles();
+        let per_cycle_energy = control.energy
+            + in_mux.energy
+            + w_mux.energy
+            + b_mux.energy
+            + mult_area_energy.1
+            + acc.energy
+            + reg.energy
+            + act.energy / (max_inputs as f64)
+            + out_regs.energy / (max_inputs as f64);
+        let energy = per_cycle_energy * cycles as f64;
+
+        let path = in_mux.delay.max(w_mux.delay) + mult_delay + acc.delay + lib.dff.delay;
+        let clock = path * lib.clock_margin;
+
+        HwReport::from_parts("smac_ann", style.name(), area, clock, cycles, energy, adders)
+    }
+}
+
+fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+    let st = AnnStructure::parse(structure).unwrap();
+    let layers = st.num_layers();
+    let mut acts = vec![Activation::HTanh; layers];
+    acts[layers - 1] = Activation::HSig;
+    let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+    QuantizedAnn::quantize(&ann, q, &acts)
+}
+
+fn assert_close(name: &str, field: &str, got: f64, want: f64) {
+    let denom = want.abs().max(1e-12);
+    assert!(
+        ((got - want) / denom).abs() < 1e-9,
+        "{name} {field}: got {got}, pre-refactor golden {want}"
+    );
+}
+
+fn assert_reports_match(name: &str, got: &HwReport, want: &HwReport) {
+    assert_eq!(got.arch, want.arch, "{name} arch");
+    assert_eq!(got.style, want.style, "{name} style");
+    assert_eq!(got.cycles, want.cycles, "{name} cycles");
+    assert_eq!(got.adders, want.adders, "{name} adders");
+    assert_close(name, "area_um2", got.area_um2, want.area_um2);
+    assert_close(name, "clock_ns", got.clock_ns, want.clock_ns);
+    assert_close(name, "latency_ns", got.latency_ns, want.latency_ns);
+    assert_close(name, "energy_pj", got.energy_pj, want.energy_pj);
+    assert_close(name, "power_mw", got.power_mw, want.power_mw);
+}
+
+#[test]
+fn design_cost_reproduces_prerefactor_reports() {
+    let lib = TechLib::tsmc40();
+    for structure in ["16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10"] {
+        let q = qann(structure, 6, 5);
+        for (arch, style) in design_points() {
+            let name = format!("{structure} {} {}", arch.name(), style.name());
+            let got = arch.elaborate(&q, style).cost(&lib);
+            let want = legacy::build(&lib, &q, arch.name(), style);
+            assert_reports_match(&name, &got, &want);
+        }
+    }
+}
+
+#[test]
+fn design_cost_is_stable_under_requantization() {
+    // the walker must agree with the goldens away from the default q too
+    let lib = TechLib::tsmc40();
+    for q_bits in [4, 8] {
+        let q = qann("16-16-10", q_bits, 23);
+        for (arch, style) in design_points() {
+            let name = format!("q{q_bits} {} {}", arch.name(), style.name());
+            let got = arch.elaborate(&q, style).cost(&lib);
+            let want = legacy::build(&lib, &q, arch.name(), style);
+            assert_reports_match(&name, &got, &want);
+        }
+    }
+}
+
+#[test]
+fn netsim_is_bit_exact_for_every_design_point() {
+    let ds = Dataset::synthetic_with_sizes(7, 60, 120);
+    for structure in ["16-10", "16-16-10", "16-16-10-10"] {
+        let q = qann(structure, 6, 5);
+        // elaborate once; run the whole test set through the same designs
+        let designs: Vec<_> = design_points().into_iter().map(|(a, s)| a.elaborate(&q, s)).collect();
+        for s in &ds.test {
+            let x = s.features_q7();
+            let golden = sim::forward(&q, &x);
+            for d in &designs {
+                let run = netsim::simulate(d, &x);
+                assert_eq!(
+                    run.outputs,
+                    golden,
+                    "{structure} {} {}",
+                    d.arch.name(),
+                    d.style.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cycle_formulas_hold_for_every_design_point() {
+    let x = vec![64i32; 16];
+    for structure in ["16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10"] {
+        let q = qann(structure, 6, 3);
+        let st = &q.structure;
+        for (arch, style) in design_points() {
+            let d = arch.elaborate(&q, style);
+            let expected = match arch.name() {
+                "parallel" => 1,
+                "smac_neuron" => st.smac_neuron_cycles(),
+                "smac_ann" => st.smac_ann_cycles(),
+                other => panic!("unknown architecture {other}"),
+            };
+            assert_eq!(d.cycles(), expected, "{structure} {} schedule", arch.name());
+            assert_eq!(
+                netsim::simulate(&d, &x).cycles,
+                expected,
+                "{structure} {} {} interpreter",
+                arch.name(),
+                style.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn style_panics_are_confined_to_unsupported_combinations() {
+    // every advertised combination elaborates; the registry never hands
+    // out an unsupported (arch, style) pair
+    let q = qann("16-10", 6, 2);
+    for (arch, style) in design_points() {
+        let d = arch.elaborate(&q, style);
+        assert_eq!(d.style, style);
+    }
+    assert!(Style::parse("behavioral").is_some());
+}
