@@ -1,7 +1,17 @@
 //! Hot-path microbenchmarks (the §Perf targets of EXPERIMENTS.md):
-//! hardware-accuracy evaluation (native vs PJRT), the tuners' end-to-end
-//! cost, the shift-adds optimizers and the cycle-accurate simulator.
-//! `cargo bench --bench hot_paths`
+//! hardware-accuracy evaluation (native vs PJRT), the batched SoA
+//! netsim path vs the per-input loop, the shift-adds optimizers and the
+//! cycle-accurate simulator.
+//!
+//!   cargo bench --bench hot_paths            full run
+//!   cargo bench --bench hot_paths -- --smoke batch section only, reduced
+//!                                            workload (the CI bit-rot +
+//!                                            acceptance check)
+//!
+//! Emits `BENCH_batch_netsim.json` (batched vs per-input throughput per
+//! design point, design-cache hit rate) and, on full runs,
+//! `BENCH_design_ir.json` (tuner pricing elaborate-once vs rebuild).
+//! Methodology: see README §Serving.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -9,15 +19,17 @@ mod common;
 use common::bench;
 use simurg::ann::dataset::Dataset;
 use simurg::ann::model::{Ann, Init};
-use simurg::ann::structure::{Activation, AnnStructure};
 use simurg::ann::quant::QuantizedAnn;
+use simurg::ann::structure::{Activation, AnnStructure};
 use simurg::hw::design::{ArchKind, LayerPricer};
 use simurg::hw::netsim;
+use simurg::hw::serve::{self, BatchInputs};
 use simurg::hw::{Architecture, Style};
-use simurg::mcm::{cse, dbr, optimize_mcm, Effort, LinearTargets};
 use simurg::num::Rng;
-use simurg::posttrain::{AccuracyEval, NativeEval};
+use simurg::posttrain::{AccuracyEval, BatchEval, NativeEval};
 use simurg::runtime::{Artifacts, PjrtEval};
+use std::fmt::Write as _;
+use std::hint::black_box;
 use std::time::Instant;
 
 fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
@@ -29,7 +41,119 @@ fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
     QuantizedAnn::quantize(&ann, 6, &acts)
 }
 
+/// Batched SoA serving vs the per-input interpreter, across the design
+/// points whose batch behavior differs: a combinational graph design, a
+/// behavioral MAC schedule, and both SMAC mcm product-graph routes.
+/// Writes `BENCH_batch_netsim.json`; asserts the acceptance criterion
+/// (>= 3x batched throughput on the mcm serving path at batch >= 64).
+fn bench_batch_netsim(smoke: bool) {
+    let data = if smoke {
+        Dataset::synthetic_with_sizes(42, 300, 64)
+    } else {
+        Dataset::load_or_synthesize(None, 42)
+    };
+    let samples = &data.validation;
+    let n = samples.len();
+    assert!(n >= 64, "acceptance criterion needs batch >= 64 (got {n})");
+    let inputs = BatchInputs::from_samples(samples);
+    let rows: Vec<[i32; 16]> = samples.iter().map(|s| s.features_q7()).collect();
+    let qann = qann_for("16-16-10", 7);
+    let reps = if smoke { 2 } else { 5 };
+
+    println!("\n== batched netsim (SoA, batch = {n}) vs per-input loop ==");
+    let points = [
+        (ArchKind::Parallel, Style::Cmvm),
+        (ArchKind::SmacNeuron, Style::Behavioral),
+        (ArchKind::SmacNeuron, Style::Mcm),
+        (ArchKind::SmacAnn, Style::Mcm),
+    ];
+    let mut entries = String::new();
+    let mut headline = 0.0f64;
+    for (arch, style) in points {
+        let design = serve::design_for(&qann, arch, style);
+        // bit-exactness first: the batch must match the per-input loop
+        let run = serve::simulate_batch(&design, &inputs);
+        for (s, row) in rows.iter().enumerate() {
+            let per = netsim::simulate(&design, &row[..]);
+            assert_eq!(run.sample_outputs(s), per.outputs, "batch/per-input drift");
+            assert_eq!(run.cycles, per.cycles);
+        }
+
+        let t = Instant::now();
+        for _ in 0..reps {
+            for row in &rows {
+                black_box(netsim::simulate(&design, &row[..]));
+            }
+        }
+        let per_input_ms = t.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let t = Instant::now();
+        for _ in 0..reps {
+            black_box(serve::simulate_batch(&design, &inputs));
+        }
+        let batch_ms = t.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        let speedup = per_input_ms / batch_ms.max(1e-9);
+        if arch == ArchKind::SmacNeuron && style == Style::Mcm {
+            headline = speedup;
+        }
+        let point = format!("{}/{}", arch.name(), style.name());
+        println!(
+            "{point:<22} per-input {per_input_ms:>9.2} ms  batched {batch_ms:>9.2} ms  ({speedup:.2}x, {:.2} Msamples/s)",
+            n as f64 / (batch_ms / 1e3) / 1e6
+        );
+        let sep = if entries.is_empty() { "" } else { ", " };
+        let _ = write!(
+            entries,
+            "{sep}{{\"arch\": \"{}\", \"style\": \"{}\", \"per_input_ms\": {per_input_ms:.3}, \
+             \"batch_ms\": {batch_ms:.3}, \"speedup\": {speedup:.3}}}",
+            arch.name(),
+            style.name()
+        );
+    }
+
+    // serving loop cache behavior: one design fetch per batch of 64 —
+    // everything after the first fetch per scenario is a hit
+    let batches = inputs.split(n.div_ceil(64));
+    let before = serve::cache_stats();
+    for b in &batches {
+        let d = serve::design_for(&qann, ArchKind::SmacNeuron, Style::Mcm);
+        black_box(serve::simulate_batch(&d, b));
+    }
+    let cache = serve::cache_stats().since(&before);
+    println!(
+        "design cache over {} batches: {} lookups, {} hits ({:.1}% hit rate)",
+        batches.len(),
+        cache.lookups(),
+        cache.hits,
+        100.0 * cache.hit_rate()
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"batch_netsim\",\n  \"structure\": \"16-16-10\",\n  \
+         \"samples\": {n},\n  \"batch\": {n},\n  \"smoke\": {smoke},\n  \
+         \"points\": [{entries}],\n  \"headline_speedup_smac_neuron_mcm\": {headline:.3},\n  \
+         \"cache\": {{\"lookups\": {}, \"hits\": {}, \"hit_rate\": {:.4}}}\n}}\n",
+        cache.lookups(),
+        cache.hits,
+        cache.hit_rate()
+    );
+    std::fs::write("BENCH_batch_netsim.json", &json).expect("write BENCH_batch_netsim.json");
+    println!("wrote BENCH_batch_netsim.json");
+    assert!(
+        headline >= 3.0,
+        "acceptance: batched mcm serving must be >= 3x the per-input loop (got {headline:.2}x)"
+    );
+    assert!(cache.hit_rate() > 0.5, "serving loop must hit the design cache");
+}
+
 fn main() {
+    // `--smoke` (the CI bit-rot + acceptance check) runs only the batch
+    // section, on a reduced workload.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        bench_batch_netsim(true);
+        return;
+    }
+
     let data = Dataset::load_or_synthesize(None, 42);
     println!("== accuracy evaluation (validation = {} samples) ==", data.validation.len());
     for structure in ["16-10", "16-16-10", "16-16-10-10"] {
@@ -37,6 +161,10 @@ fn main() {
         let native = NativeEval::new(&data.validation);
         bench(&format!("native_eval {structure}"), 2, 10, || {
             native.accuracy(&qann)
+        });
+        let batched = BatchEval::new(&data.validation);
+        bench(&format!("batch_eval {structure}"), 2, 10, || {
+            batched.accuracy(&qann)
         });
         let n = data.validation.len() as f64;
         let t = std::time::Instant::now();
@@ -63,13 +191,16 @@ fn main() {
     let rows: Vec<Vec<i64>> = (0..16)
         .map(|_| (0..16).map(|_| rng.below(256) as i64 - 127).collect())
         .collect();
-    let t = LinearTargets::cmvm(&rows);
-    bench("dbr 16x16", 2, 20, || dbr(&t));
-    bench("cse_cmvm 16x16", 2, 10, || cse(&t));
-    let consts: Vec<i64> = rows.iter().flatten().cloned().collect();
-    bench("mcm_heuristic 256 consts", 1, 5, || {
-        optimize_mcm(&consts, Effort::Heuristic)
-    });
+    {
+        use simurg::mcm::{cse, dbr, optimize_mcm, Effort, LinearTargets};
+        let t = LinearTargets::cmvm(&rows);
+        bench("dbr 16x16", 2, 20, || dbr(&t));
+        bench("cse_cmvm 16x16", 2, 10, || cse(&t));
+        let consts: Vec<i64> = rows.iter().flatten().cloned().collect();
+        bench("mcm_heuristic 256 consts", 1, 5, || {
+            optimize_mcm(&consts, Effort::Heuristic)
+        });
+    }
 
     println!("\n== cycle-accurate simulator ==");
     let qann = qann_for("16-16-10", 3);
@@ -88,6 +219,8 @@ fn main() {
     bench("hw smac_neuron/mcm build 16-16-10", 2, 10, || {
         simurg::hw::smac_neuron::build(&lib, &qann, simurg::hw::smac_neuron::SmacStyle::Mcm)
     });
+
+    bench_batch_netsim(false);
 
     // == design IR: the tuner scoring path ==
     // A tuner candidate touches exactly one layer. Compare pricing the

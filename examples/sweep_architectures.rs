@@ -1,7 +1,9 @@
 //! Architecture exploration (paper Figs. 10–12): price every paper
 //! structure under the three architectures and print the area / latency /
 //! energy trade-off a designer would pick from (paper Sec. VII: "a
-//! designer can choose the one that fits best in an application").
+//! designer can choose the one that fits best in an application") —
+//! plus the batched test-set hardware accuracy of each design, served
+//! through the process-wide design cache.
 //!
 //!   cargo run --release --example sweep_architectures
 
@@ -9,36 +11,45 @@ use simurg::ann::dataset::Dataset;
 use simurg::ann::structure::AnnStructure;
 use simurg::ann::train::Trainer;
 use simurg::coordinator::flow::{run_flow, FlowConfig};
+use simurg::coordinator::report;
+use simurg::hw::serve::{self, BatchInputs};
 use simurg::hw::{Architecture, Style, TechLib};
 
 fn main() -> anyhow::Result<()> {
     let data = Dataset::load_or_synthesize(None, 42);
     let lib = TechLib::tsmc40();
+    let test_inputs = BatchInputs::from_samples(&data.test);
+    let labels: Vec<u8> = data.test.iter().map(|s| s.label).collect();
     println!(
-        "{:<14}{:<13}{:>12}{:>10}{:>10}{:>12}{:>10}",
-        "structure", "arch", "area um^2", "clock ns", "cycles", "latency ns", "energy pJ"
+        "{:<14}{:<13}{:>12}{:>10}{:>10}{:>12}{:>10}{:>8}",
+        "structure", "arch", "area um^2", "clock ns", "cycles", "latency ns", "energy pJ", "hta %"
     );
     for st in AnnStructure::paper_benchmarks() {
         let mut cfg = FlowConfig::new(st.clone(), Trainer::Zaal);
         cfg.runs = 1;
         let o = run_flow(&data, &cfg, None)?;
         let qann = &o.quant.qann;
-        // data-driven over the architecture registry: elaborate once per
-        // architecture, derive the report from the shared design IR
+        // data-driven over the architecture registry: designs come from
+        // the process-wide cache (elaborate once per design point), and
+        // the whole test set runs as one SoA batch per design
         for arch in <dyn Architecture>::all() {
-            let r = arch.elaborate(qann, Style::Behavioral).cost(&lib);
+            let design = serve::design_for(qann, arch.kind(), Style::Behavioral);
+            let r = design.cost(&lib);
+            let correct = serve::simulate_batch(&design, &test_inputs).count_correct(&labels);
             println!(
-                "{:<14}{:<13}{:>12.1}{:>10.3}{:>10}{:>12.2}{:>10.2}",
+                "{:<14}{:<13}{:>12.1}{:>10.3}{:>10}{:>12.2}{:>10.2}{:>8.2}",
                 st.to_string(),
                 r.arch,
                 r.area_um2,
                 r.clock_ns,
                 r.cycles,
                 r.latency_ns,
-                r.energy_pj
+                r.energy_pj,
+                100.0 * correct as f64 / labels.len().max(1) as f64
             );
         }
         println!();
     }
+    print!("{}", report::design_cache_summary(&serve::cache_stats()));
     Ok(())
 }

@@ -3,14 +3,13 @@
 
 use crate::ann::dataset::Dataset;
 use crate::ann::quant::{find_min_quantization, QuantSearch, QuantizedAnn};
-use crate::ann::sim;
 use crate::ann::structure::AnnStructure;
 use crate::ann::train::{software_test_accuracy, train_best_of, Trainer};
 use crate::ann::Ann;
-use crate::hw::ArchKind;
+use crate::hw::{serve, ArchKind};
 use crate::posttrain::parallel::tune_parallel;
 use crate::posttrain::smac::{tune_smac, SlsScope};
-use crate::posttrain::{realized_adder_ops, AccuracyEval, NativeEval, TuneResult};
+use crate::posttrain::{realized_adder_ops, AccuracyEval, BatchEval, TuneResult};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -120,16 +119,19 @@ pub fn run_flow(data: &Dataset, cfg: &FlowConfig, ev: Option<&dyn AccuracyEval>)
     let sta = software_test_accuracy(&ann, data);
     let hw_acts = cfg.trainer.hardware_activations(cfg.structure.num_layers());
     let quant = find_min_quantization(&ann, &hw_acts, data, cfg.q_cap);
-    let hta = sim::hardware_accuracy(&quant.qann, &data.test);
+    // test-set hardware accuracy through the batched serving path (bit-
+    // identical to the per-sample golden model; the whole set runs as one
+    // SoA batch over a cached design)
+    let hta = serve::hardware_accuracy_batch(&quant.qann, &data.test);
     // priced through the shared engine: across sweep jobs the same
     // (structure × trainer) quantized layers recur and become lookups
     let ops_untuned = realized_adder_ops(&quant.qann);
 
     // The three tuners are independent (all start from `quant.qann`).
-    // With the native backend each thread builds its own evaluator and
-    // they run concurrently, matching the sweep's threading model; a
-    // caller-provided evaluator (PJRT handles are thread-local) keeps the
-    // sequential path.
+    // With the default batched backend each thread builds its own
+    // evaluator and they run concurrently, matching the sweep's threading
+    // model; a caller-provided evaluator (PJRT handles are thread-local)
+    // keeps the sequential path.
     let (tuned_parallel, tuned_smac_neuron, tuned_smac_ann) = match ev {
         Some(ev) => (
             tune_parallel(&quant.qann, ev),
@@ -141,24 +143,24 @@ pub fn run_flow(data: &Dataset, cfg: &FlowConfig, ev: Option<&dyn AccuracyEval>)
             let validation = &data.validation;
             std::thread::scope(|scope| {
                 let par = scope.spawn(move || {
-                    let ev = NativeEval::new(validation);
+                    let ev = BatchEval::new(validation);
                     tune_parallel(qann, &ev)
                 });
                 let sn = scope.spawn(move || {
-                    let ev = NativeEval::new(validation);
+                    let ev = BatchEval::new(validation);
                     tune_smac(qann, &ev, SlsScope::PerNeuron)
                 });
                 let sa = scope.spawn(move || {
-                    let ev = NativeEval::new(validation);
+                    let ev = BatchEval::new(validation);
                     tune_smac(qann, &ev, SlsScope::WholeAnn)
                 });
                 (par.join().unwrap(), sn.join().unwrap(), sa.join().unwrap())
             })
         }
     };
-    let hta_parallel = sim::hardware_accuracy(&tuned_parallel.qann, &data.test);
-    let hta_smac_neuron = sim::hardware_accuracy(&tuned_smac_neuron.qann, &data.test);
-    let hta_smac_ann = sim::hardware_accuracy(&tuned_smac_ann.qann, &data.test);
+    let hta_parallel = serve::hardware_accuracy_batch(&tuned_parallel.qann, &data.test);
+    let hta_smac_neuron = serve::hardware_accuracy_batch(&tuned_smac_neuron.qann, &data.test);
+    let hta_smac_ann = serve::hardware_accuracy_batch(&tuned_smac_ann.qann, &data.test);
 
     Ok(FlowOutcome {
         config: cfg.clone(),

@@ -8,4 +8,4 @@ pub mod report;
 pub mod sweep;
 
 pub use flow::{run_flow, FlowConfig, FlowOutcome};
-pub use sweep::{sweep_all, SweepConfig};
+pub use sweep::{sweep_all, SweepConfig, SweepStats};

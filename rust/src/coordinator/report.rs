@@ -5,6 +5,7 @@
 use super::flow::FlowOutcome;
 use crate::ann::structure::AnnStructure;
 use crate::ann::train::Trainer;
+use crate::hw::serve::{self, CacheStats};
 use crate::hw::{Architecture, HwReport, Style, TechLib};
 use crate::mcm::EngineStats;
 use crate::posttrain::TuneResult;
@@ -24,6 +25,22 @@ pub fn engine_summary(stats: &EngineStats) -> String {
         stats.entries,
         stats.ops_solved,
         stats.ops_reused,
+    )
+}
+
+/// One-line [`serve::DesignCache`] report, plumbed like
+/// [`engine_summary`]: how many elaborations the shared design cache
+/// answered from content-addressed lookups.
+pub fn design_cache_summary(stats: &CacheStats) -> String {
+    format!(
+        "Design cache: {} lookups, {} hits ({:.1}% hit rate), {} elaborations, \
+         {} cached designs, {} evicted\n",
+        stats.lookups(),
+        stats.hits,
+        100.0 * stats.hit_rate(),
+        stats.misses,
+        stats.entries,
+        stats.evictions,
     )
 }
 
@@ -78,7 +95,10 @@ impl FigureSpec {
 }
 
 /// Price one outcome under a figure's design point, data-driven from the
-/// architecture registry: elaborate once, walk the design's cost.
+/// architecture registry. The design is served from the process-wide
+/// [`serve::DesignCache`]: each figure prices one outcome once per metric
+/// and the tables re-price the same nets, so only the first lookup per
+/// distinct (net × design point) elaborates.
 pub fn hw_report_for(outcome: &FlowOutcome, spec: &FigureSpec, lib: &TechLib) -> HwReport {
     let qann = match spec.tuning {
         Tuning::None => &outcome.quant.qann,
@@ -89,7 +109,7 @@ pub fn hw_report_for(outcome: &FlowOutcome, spec: &FigureSpec, lib: &TechLib) ->
     let arch = <dyn Architecture>::by_name(spec.arch)
         .unwrap_or_else(|| panic!("unknown architecture {:?}", spec.arch));
     let style = Style::parse(spec.style).unwrap_or_else(|| panic!("unknown style {:?}", spec.style));
-    arch.elaborate(qann, style).cost(lib)
+    serve::design_for(qann, arch.kind(), style).cost(lib)
 }
 
 fn find<'a>(
@@ -317,6 +337,31 @@ mod tests {
         let s = engine_summary(&crate::mcm::engine::stats());
         assert!(s.contains("MCM engine"));
         assert!(s.contains("hit rate"));
+    }
+
+    #[test]
+    fn design_cache_summary_renders() {
+        let s = design_cache_summary(&serve::cache_stats());
+        assert!(s.contains("Design cache"));
+        assert!(s.contains("hit rate"));
+        assert!(s.contains("elaborations"));
+    }
+
+    #[test]
+    fn figure_pricing_is_stable_through_the_design_cache() {
+        // a figure prices one outcome once per metric (area / latency /
+        // energy); all three walks must read the same cached design (hit
+        // accounting itself is pinned with isolated caches in
+        // rust/tests/design_cache.rs — the global counters race with
+        // sibling tests)
+        let outcomes = tiny_outcomes();
+        let lib = TechLib::tsmc40();
+        let spec = FigureSpec::for_fig(10).unwrap();
+        let before = serve::cache_stats();
+        let a = hw_report_for(&outcomes[0], &spec, &lib);
+        let b = hw_report_for(&outcomes[0], &spec, &lib);
+        assert_eq!(a, b);
+        assert!(serve::cache_stats().since(&before).lookups() >= 2);
     }
 
     #[test]

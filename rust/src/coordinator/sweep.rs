@@ -1,19 +1,21 @@
 //! Threaded experiment sweep: all (structure × trainer) flow runs of the
-//! paper's evaluation, fanned out over worker threads with the native
-//! accuracy backend (PJRT handles are thread-local; the CLI's
+//! paper's evaluation, fanned out over worker threads with the batched
+//! native accuracy backend (PJRT handles are thread-local; the CLI's
 //! `--eval pjrt` path runs experiments sequentially instead).
 //!
 //! Every worker prices hardware through the process-wide
-//! [`crate::mcm::engine`], so the redundant constant-multiplication
-//! solves of sibling jobs (identical layers recur across trainers, runs
-//! and tuner trajectories) collapse into cache hits;
-//! [`sweep_all_with_stats`] reports how much of the solve cost the cache
-//! amortized.
+//! [`crate::mcm::engine`] and serves elaborated designs from the
+//! process-wide [`crate::hw::serve::DesignCache`], so the redundant work
+//! of sibling jobs (identical layers recur across trainers, runs and
+//! tuner trajectories; identical nets recur across figures and metrics)
+//! collapses into cache hits; [`sweep_all_with_stats`] reports how much
+//! of both costs the caches amortized.
 
 use super::flow::{run_flow, FlowConfig, FlowOutcome};
 use crate::ann::dataset::Dataset;
 use crate::ann::structure::AnnStructure;
 use crate::ann::train::Trainer;
+use crate::hw::serve::{self, CacheStats};
 use crate::mcm::{engine, EngineStats};
 use anyhow::Result;
 use std::path::PathBuf;
@@ -43,20 +45,38 @@ impl Default for SweepConfig {
     }
 }
 
+/// Counter deltas of one sweep across both process-wide caches: the MCM
+/// solve engine and the elaborated-design cache.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SweepStats {
+    pub engine: EngineStats,
+    pub designs: CacheStats,
+}
+
 /// Run every experiment of the sweep; results come back ordered by
 /// (structure, trainer) regardless of scheduling.
 pub fn sweep_all(data: &Dataset, cfg: &SweepConfig) -> Result<Vec<FlowOutcome>> {
-    sweep_all_with_stats(data, cfg).map(|(outcomes, _)| outcomes)
+    sweep_all_with_caches(data, cfg).map(|(outcomes, _)| outcomes)
 }
 
-/// [`sweep_all`] plus the MCM-engine counter delta for this sweep — all
-/// worker threads share the process-wide cache, so cross-job sharing
-/// shows up directly in the hit rate.
+/// [`sweep_all_with_caches`] narrowed to the MCM-engine delta
+/// (compatibility shim for callers that predate the design cache).
 pub fn sweep_all_with_stats(
     data: &Dataset,
     cfg: &SweepConfig,
 ) -> Result<(Vec<FlowOutcome>, EngineStats)> {
+    sweep_all_with_caches(data, cfg).map(|(outcomes, stats)| (outcomes, stats.engine))
+}
+
+/// [`sweep_all`] plus the counter deltas of both process-wide caches for
+/// this sweep — all worker threads share them, so cross-job sharing shows
+/// up directly in the hit rates.
+pub fn sweep_all_with_caches(
+    data: &Dataset,
+    cfg: &SweepConfig,
+) -> Result<(Vec<FlowOutcome>, SweepStats)> {
     let before = engine::stats();
+    let designs_before = serve::cache_stats();
     let jobs: Vec<FlowConfig> = cfg
         .structures
         .iter()
@@ -99,7 +119,11 @@ pub fn sweep_all_with_stats(
     anyhow::ensure!(errors.is_empty(), "sweep failures: {errors:?}");
     let outcomes: Vec<FlowOutcome> =
         results.into_inner().unwrap().into_iter().map(Option::unwrap).collect();
-    Ok((outcomes, engine::stats().since(&before)))
+    let stats = SweepStats {
+        engine: engine::stats().since(&before),
+        designs: serve::cache_stats().since(&designs_before),
+    };
+    Ok((outcomes, stats))
 }
 
 #[cfg(test)]
@@ -120,10 +144,12 @@ mod tests {
             threads: 4,
             weights_dir: None,
         };
-        let (outcomes, stats) = sweep_all_with_stats(&data, &cfg).unwrap();
+        let (outcomes, stats) = sweep_all_with_caches(&data, &cfg).unwrap();
         assert_eq!(outcomes.len(), 4);
         // every job priced its nets through the shared engine
-        assert!(stats.lookups() >= outcomes.len() as u64, "{stats:?}");
+        assert!(stats.engine.lookups() >= outcomes.len() as u64, "{stats:?}");
+        // and served its accuracy evaluations from the shared design cache
+        assert!(stats.designs.lookups() >= outcomes.len() as u64, "{stats:?}");
         // deterministic ordering: structure-major, trainer-minor
         assert_eq!(outcomes[0].config.structure.to_string(), "16-10");
         assert_eq!(outcomes[0].config.trainer, Trainer::Zaal);

@@ -15,6 +15,7 @@ pub mod gates;
 pub mod netsim;
 pub mod parallel;
 pub mod report;
+pub mod serve;
 pub mod smac_ann;
 pub mod smac_neuron;
 pub mod verilog;
@@ -22,6 +23,7 @@ pub mod verilog;
 pub use design::{ArchKind, Architecture, Design, Schedule, Style};
 pub use gates::TechLib;
 pub use report::HwReport;
+pub use serve::{simulate_batch, BatchInputs, BatchRun, CacheStats, DesignCache};
 
 use crate::mcm::{AdderGraph, Operand};
 use blocks::BlockCost;

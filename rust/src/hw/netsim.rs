@@ -15,12 +15,12 @@
 //! Elaborate once, evaluate many: build the [`Design`] a single time and
 //! run the whole test set through it — the graphs are fixed hardware.
 
-use super::design::{Architecture, Design, LayerCompute, Schedule, Style};
+use super::design::{ArchKind, Design, LayerCompute, Schedule, Style};
+use super::serve;
 use crate::ann::quant::QuantizedAnn;
 use crate::ann::sim::activate;
-use crate::hw::parallel::{MultStyle, Parallel};
-use crate::hw::smac_ann::SmacAnn;
-use crate::hw::smac_neuron::SmacNeuron;
+use crate::hw::parallel::MultStyle;
+use std::sync::Arc;
 
 /// Result of a cycle-accurate run.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -155,14 +155,16 @@ fn products_of(design: &Design, layer: &LayerCompute, x: i64) -> Option<Vec<i128
 
 /// Parallel design with its constant-multiplication networks elaborated:
 /// build once, evaluate many inputs (compatibility wrapper over
-/// [`Design`] + [`simulate`]).
+/// [`Design`] + [`simulate`]; the design comes from the process-wide
+/// [`serve::DesignCache`], so repeated construction for the same net is a
+/// lookup).
 pub struct ParallelNet {
-    design: Design,
+    design: Arc<Design>,
 }
 
 impl ParallelNet {
     pub fn new(qann: &QuantizedAnn, style: MultStyle) -> ParallelNet {
-        ParallelNet { design: Parallel.elaborate(qann, style) }
+        ParallelNet { design: serve::design_for(qann, ArchKind::Parallel, style) }
     }
 
     pub fn design(&self) -> &Design {
@@ -179,16 +181,17 @@ pub fn run_parallel(qann: &QuantizedAnn, style: MultStyle, input: &[i32]) -> Sim
     ParallelNet::new(qann, style).run(input)
 }
 
-/// One-shot SMAC_NEURON run (elaborates per call; for many inputs,
-/// elaborate once and call [`simulate`]).
+/// One-shot SMAC_NEURON run. The design is served from the process-wide
+/// [`serve::DesignCache`]: the first call for a given net elaborates, every
+/// later call is a lookup (regression-pinned in `rust/tests/design_cache.rs`).
 pub fn run_smac_neuron(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
-    simulate(&SmacNeuron.elaborate(qann, Style::Behavioral), input)
+    simulate(&serve::design_for(qann, ArchKind::SmacNeuron, Style::Behavioral), input)
 }
 
-/// One-shot SMAC_ANN run (elaborates per call; for many inputs,
-/// elaborate once and call [`simulate`]).
+/// One-shot SMAC_ANN run, served from the process-wide
+/// [`serve::DesignCache`] like [`run_smac_neuron`].
 pub fn run_smac_ann(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
-    simulate(&SmacAnn.elaborate(qann, Style::Behavioral), input)
+    simulate(&serve::design_for(qann, ArchKind::SmacAnn, Style::Behavioral), input)
 }
 
 #[cfg(test)]
@@ -198,7 +201,9 @@ mod tests {
     use crate::ann::model::{Ann, Init};
     use crate::ann::sim;
     use crate::ann::structure::{Activation, AnnStructure};
-    use crate::hw::design::design_points;
+    use crate::hw::design::{design_points, Architecture};
+    use crate::hw::smac_ann::SmacAnn;
+    use crate::hw::smac_neuron::SmacNeuron;
     use crate::num::Rng;
 
     fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {

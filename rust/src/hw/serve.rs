@@ -1,0 +1,765 @@
+//! Batched many-scenario serving: the SoA batch interpreter over the
+//! elaborated [`Design`] schedule plus the process-wide [`DesignCache`].
+//!
+//! The paper's flow evaluates hardware accuracy over the whole validation
+//! set for every tuner candidate and every (architecture × style) design
+//! point — the elaborate-once/evaluate-many shape taken to its
+//! conclusion:
+//!
+//! - [`simulate_batch`] runs a whole [`BatchInputs`] through one design in
+//!   structure-of-arrays layout. Every schedule step is executed once per
+//!   *inference*, with an inner loop over the batch, so the interpreter's
+//!   dispatch (block walk, graph-node walk, product routing) is amortized
+//!   across samples instead of being paid per sample. The MCM product
+//!   graphs of the SMAC styles are linear in their single input, so they
+//!   are evaluated **once per weight per batch** (at x = 1) and scaled per
+//!   sample — bit-identical to the per-input route, pinned by
+//!   `rust/tests/batch_equivalence.rs`;
+//! - [`DesignCache`] is a process-wide, sharded, content-addressed cache
+//!   in front of [`Architecture::elaborate`], keyed like [`mcm::engine`]:
+//!   the full quantized content (structure, weights, biases, q,
+//!   activations) plus (arch, style). Sweeps, tuners, report emitters and
+//!   the CLI `serve` subcommand all fetch [`Design`]s through it, so
+//!   serving many (structure × trainer × tuning) scenarios re-elaborates
+//!   each distinct design exactly once per process.
+//!
+//! [`mcm::engine`]: crate::mcm::engine
+
+use super::design::{Architecture, ArchKind, Design, LayerCompute, Schedule, Style};
+use crate::ann::dataset::Sample;
+use crate::ann::quant::QuantizedAnn;
+use crate::ann::sim::activate;
+use crate::ann::structure::{Activation, AnnStructure};
+use crate::mcm::{AdderGraph, Op, Operand};
+use crate::num::FxHashMap;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A batch of inference inputs in structure-of-arrays layout:
+/// `data[i * len + s]` is input feature `i` of sample `s`, so each
+/// feature's values are contiguous across the batch (the layout every
+/// batched schedule step streams over).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchInputs {
+    features: usize,
+    len: usize,
+    data: Vec<i32>,
+}
+
+impl BatchInputs {
+    /// Build from per-sample rows (each row is one inference's inputs).
+    pub fn from_rows<R: AsRef<[i32]>>(rows: &[R]) -> BatchInputs {
+        let len = rows.len();
+        let features = rows.first().map_or(0, |r| r.as_ref().len());
+        let mut data = vec![0i32; features * len];
+        for (s, row) in rows.iter().enumerate() {
+            let row = row.as_ref();
+            assert_eq!(row.len(), features, "ragged batch rows");
+            for (i, &x) in row.iter().enumerate() {
+                data[i * len + s] = x;
+            }
+        }
+        BatchInputs { features, len, data }
+    }
+
+    /// Build from dataset samples, quantized to the hardware Q1.7 input
+    /// format (the layout the validation/test sets are served in).
+    pub fn from_samples(samples: &[Sample]) -> BatchInputs {
+        let rows: Vec<[i32; 16]> = samples.iter().map(|s| s.features_q7()).collect();
+        BatchInputs::from_rows(&rows)
+    }
+
+    /// Number of samples in the batch.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Inputs per sample.
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// All values of feature `i`, one per sample.
+    pub fn feature(&self, i: usize) -> &[i32] {
+        &self.data[i * self.len..(i + 1) * self.len]
+    }
+
+    /// One sample's inputs, extracted back to array-of-structures order
+    /// (for per-input cross-checks).
+    pub fn sample(&self, s: usize) -> Vec<i32> {
+        (0..self.features).map(|i| self.data[i * self.len + s]).collect()
+    }
+
+    /// Split into at most `parts` contiguous sub-batches of near-equal
+    /// size (the evaluator's thread fan-out unit).
+    pub fn split(&self, parts: usize) -> Vec<BatchInputs> {
+        let parts = parts.max(1).min(self.len.max(1));
+        let chunk = self.len.div_ceil(parts);
+        (0..parts)
+            .map(|p| {
+                let lo = (p * chunk).min(self.len);
+                let hi = ((p + 1) * chunk).min(self.len);
+                let n = hi - lo;
+                let mut data = vec![0i32; self.features * n];
+                for i in 0..self.features {
+                    data[i * n..(i + 1) * n]
+                        .copy_from_slice(&self.data[i * self.len + lo..i * self.len + hi]);
+                }
+                BatchInputs { features: self.features, len: n, data }
+            })
+            .filter(|b| !b.is_empty())
+            .collect()
+    }
+}
+
+/// Result of one batched cycle-accurate run. Outputs are SoA like the
+/// inputs: `outputs[m * len + s]` is output neuron `m` of sample `s`.
+/// The schedules are data-independent, so every inference in the batch
+/// takes the same number of cycles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchRun {
+    pub outputs: Vec<i32>,
+    pub n_outputs: usize,
+    pub len: usize,
+    /// clock cycles of one inference (identical across the batch)
+    pub cycles: usize,
+}
+
+impl BatchRun {
+    /// One sample's output vector, in array-of-structures order.
+    pub fn sample_outputs(&self, s: usize) -> Vec<i32> {
+        (0..self.n_outputs).map(|m| self.outputs[m * self.len + s]).collect()
+    }
+
+    /// Predicted class of sample `s`: first-index argmax, matching the
+    /// hardware comparator tree's tie-break (`ann::sim::predict`).
+    pub fn argmax(&self, s: usize) -> usize {
+        let mut best = 0usize;
+        for m in 1..self.n_outputs {
+            if self.outputs[m * self.len + s] > self.outputs[best * self.len + s] {
+                best = m;
+            }
+        }
+        best
+    }
+
+    /// Number of samples whose predicted class matches its label — the
+    /// one correctness count every accuracy consumer shares, so the
+    /// comparator tie-break can never drift between them.
+    pub fn count_correct(&self, labels: &[u8]) -> usize {
+        assert_eq!(labels.len(), self.len, "one label per sample");
+        labels
+            .iter()
+            .enumerate()
+            .filter(|(s, &label)| self.argmax(*s) == label as usize)
+            .count()
+    }
+}
+
+/// Interpret one inference of `design` for every sample of `inputs`,
+/// bit-identical (outputs and cycle count) to running each sample through
+/// [`crate::hw::netsim::simulate`].
+pub fn simulate_batch(design: &Design, inputs: &BatchInputs) -> BatchRun {
+    // an empty batch carries no feature count; every step degrades to a
+    // zero-length inner loop and only the cycle program runs
+    assert!(
+        inputs.is_empty() || inputs.features() == design.qann.structure.inputs,
+        "batch feature arity mismatch"
+    );
+    match design.schedule {
+        Schedule::Combinational => batch_combinational(design, inputs),
+        Schedule::LayerSequential => batch_layer_sequential(design, inputs),
+        Schedule::NeuronSequential => batch_neuron_sequential(design, inputs),
+    }
+}
+
+/// SoA evaluation of an adder graph: `xs[k * n + s]` is input `k` of
+/// sample `s`; returns `out[j * n + s]` for output `j`. Each node is
+/// dispatched once with an inner loop over the batch.
+fn eval_graph_batch(g: &AdderGraph, xs: &[i128], n: usize) -> Vec<i128> {
+    debug_assert_eq!(xs.len(), g.num_inputs * n);
+    let mut vals = vec![0i128; g.nodes.len() * n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        let (done, rest) = vals.split_at_mut(i * n);
+        let a: &[i128] = match node.a {
+            Operand::Input(k) => &xs[k * n..(k + 1) * n],
+            Operand::Node(j) => &done[j * n..(j + 1) * n],
+        };
+        let b: &[i128] = match node.b {
+            Operand::Input(k) => &xs[k * n..(k + 1) * n],
+            Operand::Node(j) => &done[j * n..(j + 1) * n],
+        };
+        let dst = &mut rest[..n];
+        match node.op {
+            Op::Add => {
+                for s in 0..n {
+                    dst[s] = (a[s] << node.sa) + (b[s] << node.sb);
+                }
+            }
+            Op::Sub => {
+                for s in 0..n {
+                    dst[s] = (a[s] << node.sa) - (b[s] << node.sb);
+                }
+            }
+        }
+    }
+    let mut out = vec![0i128; g.outputs.len() * n];
+    for (j, o) in g.outputs.iter().enumerate() {
+        if o.is_zero {
+            continue;
+        }
+        let src: &[i128] = match o.src {
+            Operand::Input(k) => &xs[k * n..(k + 1) * n],
+            Operand::Node(i) => &vals[i * n..(i + 1) * n],
+        };
+        let dst = &mut out[j * n..(j + 1) * n];
+        for s in 0..n {
+            let v = src[s] << o.shift;
+            dst[s] = if o.negate { -v } else { v };
+        }
+    }
+    out
+}
+
+/// Combinational schedule, batched: every embedded adder graph's nodes
+/// ripple once per batch (inner loop over samples), then bias and
+/// activation; one output-register cycle, as per input.
+fn batch_combinational(design: &Design, inputs: &BatchInputs) -> BatchRun {
+    let qann = &design.qann;
+    let n = inputs.len();
+    // current layer activations, SoA: cur[i * n + s]
+    let mut cur: Vec<i128> = Vec::with_capacity(inputs.features() * n);
+    for i in 0..inputs.features() {
+        cur.extend(inputs.feature(i).iter().map(|&x| x as i128));
+    }
+    let mut n_cur = inputs.features();
+    for (k, layer) in design.layers.iter().enumerate() {
+        let LayerCompute::Graphs(gis) = &layer.compute else {
+            panic!("combinational layers are graph-computed");
+        };
+        let inner: Vec<i128> = if gis.len() == 1 {
+            eval_graph_batch(&design.graphs[gis[0]], &cur, n)
+        } else {
+            // CAVM: one single-output graph per neuron over the same inputs
+            let mut inner = vec![0i128; layer.n_out * n];
+            for (m, &gi) in gis.iter().enumerate() {
+                let o = eval_graph_batch(&design.graphs[gi], &cur, n);
+                inner[m * n..(m + 1) * n].copy_from_slice(&o[..n]);
+            }
+            inner
+        };
+        cur.clear();
+        for m in 0..layer.n_out {
+            let b = qann.biases[k][m];
+            cur.extend(
+                inner[m * n..(m + 1) * n]
+                    .iter()
+                    .map(|&y| activate(qann.activations[k], y as i64 + b, qann.q) as i128),
+            );
+        }
+        n_cur = layer.n_out;
+    }
+    let outputs: Vec<i32> = cur.iter().map(|&v| v as i32).collect();
+    BatchRun { outputs, n_outputs: n_cur, len: n, cycles: 1 }
+}
+
+/// Per-weight unit products of a MAC layer's MCM graph: the graph has one
+/// input and is linear, so `eval(x)[j] == eval(1)[j] * x` exactly — one
+/// graph evaluation serves every sample of the batch.
+fn unit_products(design: &Design, compute: &LayerCompute) -> Option<Vec<i128>> {
+    let LayerCompute::Mac { mcm, .. } = compute else {
+        return None;
+    };
+    mcm.as_ref().map(|r| design.graphs[r.graph].eval(&[1]))
+}
+
+/// Product of stored weight (m, i) with broadcast value `x`: routed
+/// through the unit products when the style is multiplierless, multiplied
+/// directly otherwise — value-identical to `netsim::mac_product`.
+#[inline]
+fn batch_product(
+    compute: &LayerCompute,
+    units: &Option<Vec<i128>>,
+    m: usize,
+    i: usize,
+    x: i64,
+) -> i64 {
+    let LayerCompute::Mac { stored, mcm, .. } = compute else {
+        panic!("MAC schedules need MAC layers");
+    };
+    match (units, mcm) {
+        (Some(u), Some(r)) => (u[r.offset + m * stored[m].len() + i] * x as i128) as i64,
+        _ => stored[m][i] * x,
+    }
+}
+
+/// SMAC_NEURON schedule, batched: ι_k MAC cycles + 1 bias/activate cycle
+/// per layer, each step streaming over the batch.
+fn batch_layer_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
+    let qann = &design.qann;
+    let n = inputs.len();
+    let mut cycles = 0usize;
+    let mut cur: Vec<i64> = Vec::with_capacity(inputs.features() * n);
+    for i in 0..inputs.features() {
+        cur.extend(inputs.feature(i).iter().map(|&x| x as i64));
+    }
+    for (k, layer) in design.layers.iter().enumerate() {
+        let LayerCompute::Mac { sls, .. } = &layer.compute else {
+            panic!("MAC schedules need MAC layers");
+        };
+        let units = unit_products(design, &layer.compute);
+        let mut acc = vec![0i64; layer.n_out * n];
+        for i in 0..layer.n_in {
+            let xs = &cur[i * n..(i + 1) * n];
+            for m in 0..layer.n_out {
+                let dst = &mut acc[m * n..(m + 1) * n];
+                let sl = sls[m];
+                for (d, &x) in dst.iter_mut().zip(xs) {
+                    *d += batch_product(&layer.compute, &units, m, i, x) << sl;
+                }
+            }
+            cycles += 1;
+        }
+        cur.clear();
+        for m in 0..layer.n_out {
+            let b = qann.biases[k][m];
+            cur.extend(
+                acc[m * n..(m + 1) * n]
+                    .iter()
+                    .map(|&a| activate(qann.activations[k], a + b, qann.q) as i64),
+            );
+        }
+        cycles += 1;
+    }
+    let n_outputs = design.layers.last().map_or(inputs.features(), |l| l.n_out);
+    let outputs: Vec<i32> = cur.iter().map(|&v| v as i32).collect();
+    BatchRun { outputs, n_outputs, len: n, cycles }
+}
+
+/// SMAC_ANN schedule, batched: one MAC serves every neuron serially,
+/// (ι_k + 2) cycles per neuron; the batch rides along each step.
+fn batch_neuron_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
+    let qann = &design.qann;
+    let n = inputs.len();
+    let mut cycles = 0usize;
+    let mut regs: Vec<i64> = Vec::with_capacity(inputs.features() * n);
+    for i in 0..inputs.features() {
+        regs.extend(inputs.feature(i).iter().map(|&x| x as i64));
+    }
+    for (k, layer) in design.layers.iter().enumerate() {
+        let LayerCompute::Mac { sls, .. } = &layer.compute else {
+            panic!("MAC schedules need MAC layers");
+        };
+        let units = unit_products(design, &layer.compute);
+        let mut next = vec![0i64; layer.n_out * n];
+        for m in 0..layer.n_out {
+            let dst = &mut next[m * n..(m + 1) * n];
+            let sl = sls[m];
+            let mut acc = vec![0i64; n];
+            for i in 0..layer.n_in {
+                let xs = &regs[i * n..(i + 1) * n];
+                for (a, &x) in acc.iter_mut().zip(xs) {
+                    *a += batch_product(&layer.compute, &units, m, i, x) << sl;
+                }
+                cycles += 1; // one MAC per cycle
+            }
+            let b = qann.biases[k][m];
+            cycles += 1; // bias cycle
+            for (d, &a) in dst.iter_mut().zip(&acc) {
+                *d = activate(qann.activations[k], a + b, qann.q) as i64;
+            }
+            cycles += 1; // activate/writeback cycle
+        }
+        regs = next;
+    }
+    let n_outputs = design.layers.last().map_or(inputs.features(), |l| l.n_out);
+    let outputs: Vec<i32> = regs.iter().map(|&v| v as i32).collect();
+    BatchRun { outputs, n_outputs, len: n, cycles }
+}
+
+/// Hardware accuracy over `samples` through the batched serving path:
+/// design fetched from the process-wide [`DesignCache`], whole set
+/// evaluated in one [`simulate_batch`] call. Bit-identical to
+/// [`crate::ann::sim::hardware_accuracy`] (any design point is bit-exact
+/// against the golden model; the cheap-to-elaborate SMAC_NEURON
+/// behavioral point is used).
+pub fn hardware_accuracy_batch(qann: &QuantizedAnn, samples: &[Sample]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let inputs = BatchInputs::from_samples(samples);
+    let labels: Vec<u8> = samples.iter().map(|s| s.label).collect();
+    let design = design_for(qann, ArchKind::SmacNeuron, Style::Behavioral);
+    let correct = simulate_batch(&design, &inputs).count_correct(&labels);
+    100.0 * correct as f64 / samples.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// The process-wide Design cache.
+
+/// Content address of an elaborated design: the full quantized content
+/// plus the design point. Structurally exact (no lossy hashing), like the
+/// MCM engine's canonical keys — two nets with equal structure but
+/// different weights, biases, q or activations can never share an entry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct DesignKey {
+    arch: ArchKind,
+    style: Style,
+    q: u32,
+    structure: AnnStructure,
+    activations: Vec<Activation>,
+    weights: Vec<i64>,
+    biases: Vec<i64>,
+}
+
+impl DesignKey {
+    fn of(qann: &QuantizedAnn, arch: ArchKind, style: Style) -> DesignKey {
+        DesignKey {
+            arch,
+            style,
+            q: qann.q,
+            structure: qann.structure.clone(),
+            activations: qann.activations.clone(),
+            weights: qann.weights.iter().flat_map(|l| l.iter().flatten().cloned()).collect(),
+            biases: qann.biases.iter().flatten().cloned().collect(),
+        }
+    }
+}
+
+/// Cumulative [`DesignCache`] counters (monotonic except `entries`;
+/// snapshot with [`DesignCache::stats`], delta with [`CacheStats::since`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    /// misses == elaborations performed by the cache
+    pub misses: u64,
+    /// distinct designs currently cached
+    pub entries: usize,
+    /// entries dropped by the per-shard capacity bound
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups answered from cache, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// Counter delta against an earlier snapshot (entries stay absolute).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            entries: self.entries,
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+        }
+    }
+}
+
+const SHARD_COUNT: usize = 16;
+/// FIFO capacity per shard. Tuner trajectories push thousands of
+/// one-shot candidate keys through the cache; the bound keeps the
+/// process-wide store from growing with trajectory length while staying
+/// far above the working set of the sweep/report/serve consumers.
+const SHARD_CAP: usize = 64;
+
+struct Shard {
+    map: FxHashMap<DesignKey, Arc<Design>>,
+    /// insertion order for FIFO eviction at the capacity bound
+    order: VecDeque<DesignKey>,
+}
+
+/// Thread-safe content-addressed cache in front of design elaboration.
+/// One process-wide instance ([`DesignCache::global`]) serves every
+/// consumer; fresh instances are for isolation in tests.
+pub struct DesignCache {
+    shards: Vec<Mutex<Shard>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for DesignCache {
+    fn default() -> Self {
+        DesignCache::new()
+    }
+}
+
+impl DesignCache {
+    pub fn new() -> DesignCache {
+        DesignCache {
+            shards: (0..SHARD_COUNT)
+                .map(|_| Mutex::new(Shard { map: FxHashMap::default(), order: VecDeque::new() }))
+                .collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache every serving consumer goes through.
+    pub fn global() -> &'static DesignCache {
+        static GLOBAL: OnceLock<DesignCache> = OnceLock::new();
+        GLOBAL.get_or_init(DesignCache::new)
+    }
+
+    fn shard(&self, key: &DesignKey) -> &Mutex<Shard> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARD_COUNT]
+    }
+
+    fn lookup(&self, key: &DesignKey) -> Option<Arc<Design>> {
+        let d = self.shard(key).lock().unwrap().map.get(key).cloned();
+        if d.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        d
+    }
+
+    fn elaborate(&self, qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
+        let a = <dyn Architecture>::by_name(arch.name()).expect("registry covers every ArchKind");
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Arc::new(a.elaborate(qann, style))
+    }
+
+    /// The elaborated design of `qann` under (`arch`, `style`), elaborating
+    /// at most once per distinct content (by any thread).
+    pub fn design(&self, qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
+        let key = DesignKey::of(qann, arch, style);
+        if let Some(d) = self.lookup(&key) {
+            return d;
+        }
+        // miss: elaborate outside any lock so concurrent distinct designs
+        // overlap; a racing duplicate elaboration is harmless (elaboration
+        // is deterministic, first insert wins)
+        let solved = self.elaborate(qann, arch, style);
+        let mut shard = self.shard(&key).lock().unwrap();
+        if let Some(existing) = shard.map.get(&key) {
+            return existing.clone();
+        }
+        while shard.order.len() >= SHARD_CAP {
+            if let Some(old) = shard.order.pop_front() {
+                shard.map.remove(&old);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.order.push_back(key.clone());
+        shard.map.insert(key, solved.clone());
+        solved
+    }
+
+    /// Like [`DesignCache::design`], but a miss does **not** populate the
+    /// cache: for one-shot content — tuner candidates are distinct on
+    /// almost every call — where insertion would only churn the FIFO and
+    /// evict genuinely reusable entries. Hits still count as hits and an
+    /// elaboration still counts as a miss, so `misses == elaborations`
+    /// stays true.
+    pub fn design_ephemeral(&self, qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
+        let key = DesignKey::of(qann, arch, style);
+        if let Some(d) = self.lookup(&key) {
+            return d;
+        }
+        self.elaborate(qann, arch, style)
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum(),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every cached design and zero the counters (benches).
+    pub fn reset(&self) {
+        for s in &self.shards {
+            let mut s = s.lock().unwrap();
+            s.map.clear();
+            s.order.clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+        self.evictions.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Fetch a design through the process-wide cache.
+pub fn design_for(qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
+    DesignCache::global().design(qann, arch, style)
+}
+
+/// Fetch through the process-wide cache without populating it on a miss
+/// (see [`DesignCache::design_ephemeral`]).
+pub fn design_for_ephemeral(qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
+    DesignCache::global().design_ephemeral(qann, arch, style)
+}
+
+/// Counters of the process-wide cache.
+pub fn cache_stats() -> CacheStats {
+    DesignCache::global().stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::Activation;
+    use crate::hw::design::design_points;
+    use crate::hw::netsim::simulate;
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    fn random_rows(n: usize, features: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..features).map(|_| rng.below(256) as i32 - 128).collect())
+            .collect()
+    }
+
+    #[test]
+    fn soa_roundtrip_preserves_samples() {
+        let rows = random_rows(7, 16, 5);
+        let b = BatchInputs::from_rows(&rows);
+        assert_eq!(b.len(), 7);
+        assert_eq!(b.features(), 16);
+        for (s, row) in rows.iter().enumerate() {
+            assert_eq!(&b.sample(s), row);
+        }
+        assert_eq!(b.feature(3)[2], rows[2][3]);
+    }
+
+    #[test]
+    fn split_partitions_the_batch_in_order() {
+        let rows = random_rows(10, 16, 9);
+        let b = BatchInputs::from_rows(&rows);
+        let parts = b.split(3);
+        assert_eq!(parts.iter().map(BatchInputs::len).sum::<usize>(), 10);
+        let mut s = 0usize;
+        for p in &parts {
+            for i in 0..p.len() {
+                assert_eq!(p.sample(i), rows[s]);
+                s += 1;
+            }
+        }
+        // more parts than samples degrades gracefully
+        assert!(b.split(100).iter().all(|p| !p.is_empty()));
+    }
+
+    #[test]
+    fn batch_matches_per_input_on_one_design() {
+        let q = qann("16-16-10", 6, 11);
+        let d = design_for(&q, ArchKind::SmacNeuron, Style::Mcm);
+        let rows = random_rows(33, 16, 2);
+        let run = simulate_batch(&d, &BatchInputs::from_rows(&rows));
+        for (s, row) in rows.iter().enumerate() {
+            let per = simulate(&d, row);
+            assert_eq!(run.sample_outputs(s), per.outputs);
+            assert_eq!(run.cycles, per.cycles);
+        }
+    }
+
+    #[test]
+    fn empty_batch_still_reports_schedule_cycles() {
+        let q = qann("16-10", 6, 3);
+        for (a, s) in design_points() {
+            let d = a.elaborate(&q, s);
+            let run = simulate_batch(&d, &BatchInputs::from_rows::<[i32; 16]>(&[]));
+            assert_eq!(run.len, 0);
+            assert!(run.outputs.is_empty());
+            assert_eq!(run.cycles, d.cycles(), "{} {}", a.name(), s.name());
+        }
+    }
+
+    #[test]
+    fn cache_hits_after_first_elaboration() {
+        let cache = DesignCache::new();
+        let q = qann("16-10", 6, 7);
+        let a = cache.design(&q, ArchKind::Parallel, Style::Cmvm);
+        let b = cache.design(&q, ArchKind::Parallel, Style::Cmvm);
+        assert!(Arc::ptr_eq(&a, &b), "second fetch must be the cached value");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1), "{s:?}");
+        // a different style is a different design
+        let c = cache.design(&q, ArchKind::Parallel, Style::Behavioral);
+        assert_ne!(c.style, a.style);
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn ephemeral_fetches_hit_but_never_populate() {
+        let cache = DesignCache::new();
+        let q = qann("16-10", 6, 31);
+        // one-shot content: elaborates (a miss) but leaves no entry behind
+        let a = cache.design_ephemeral(&q, ArchKind::SmacNeuron, Style::Behavioral);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 1, 0), "{s:?}");
+        // once something else populated the key, ephemeral fetches hit it
+        let b = cache.design(&q, ArchKind::SmacNeuron, Style::Behavioral);
+        let c = cache.design_ephemeral(&q, ArchKind::SmacNeuron, Style::Behavioral);
+        assert!(Arc::ptr_eq(&b, &c));
+        assert_eq!(*a, *b, "ephemeral elaboration is the same design");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 1), "{s:?}");
+    }
+
+    #[test]
+    fn count_correct_matches_the_golden_tie_break() {
+        let q = qann("16-10", 6, 23);
+        let rows = random_rows(40, 16, 8);
+        let d = design_for(&q, ArchKind::SmacAnn, Style::Behavioral);
+        let run = simulate_batch(&d, &BatchInputs::from_rows(&rows));
+        let labels: Vec<u8> =
+            rows.iter().map(|r| crate::ann::sim::predict(&q, r) as u8).collect();
+        assert_eq!(run.count_correct(&labels), rows.len(), "predict() labels all count");
+        let wrong: Vec<u8> = labels.iter().map(|&l| (l + 1) % 10).collect();
+        assert_eq!(run.count_correct(&wrong), 0);
+    }
+
+    #[test]
+    fn cache_capacity_is_bounded() {
+        let cache = DesignCache::new();
+        // far more distinct keys than the total capacity
+        for seed in 0..((SHARD_COUNT * SHARD_CAP + 64) as u64) {
+            cache.design(&qann("16-10", 6, seed), ArchKind::SmacNeuron, Style::Behavioral);
+        }
+        let s = cache.stats();
+        assert!(s.entries <= SHARD_COUNT * SHARD_CAP, "{s:?}");
+        assert!(s.evictions > 0, "{s:?}");
+    }
+
+    #[test]
+    fn batch_accuracy_matches_golden_model() {
+        let ds = crate::ann::dataset::Dataset::synthetic_with_sizes(13, 120, 60);
+        let q = qann("16-10", 6, 19);
+        let got = hardware_accuracy_batch(&q, &ds.test);
+        let want = crate::ann::sim::hardware_accuracy(&q, &ds.test);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        assert_eq!(hardware_accuracy_batch(&q, &[]), 0.0);
+    }
+}

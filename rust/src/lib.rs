@@ -29,6 +29,13 @@
 //!   threads therefore share one solution store, and re-pricing a layer
 //!   the sweep has already seen (across figures, metrics, trainers and
 //!   tuner iterations) is a lookup instead of a fresh search;
+//! - batched many-scenario serving lives in [`hw::serve`]: a SoA batch
+//!   interpreter over the design schedules (`simulate_batch`,
+//!   bit-identical to the per-input `hw::netsim::simulate`) behind a
+//!   process-wide content-addressed `DesignCache`, so tuner inner loops,
+//!   flow accuracies, report pricing and the CLI `serve` subcommand
+//!   evaluate whole sample sets per elaborated design instead of one
+//!   input at a time (README §Serving);
 //! - the PJRT [`runtime`] compiles only with the off-by-default `pjrt`
 //!   cargo feature; the default build substitutes an API-compatible stub
 //!   so builds and tests stay hermetic on machines without XLA (README

@@ -3,6 +3,7 @@
 //!   simurg table <1|2|3|4>            regenerate a paper table
 //!   simurg figure <10..18|all>        regenerate a paper figure (+CSV)
 //!   simurg flow    --structure 16-16-10 --trainer zaal [--eval pjrt]
+//!   simurg serve   --structure 16-16-10 --trainer zaal [--batch 64] [--split test]
 //!   simurg train   --structure 16-10 --trainer zaal --backend pjrt
 //!   simurg verilog --structure 16-10 --trainer zaal --arch parallel --style cmvm --out out/
 //!   simurg archs                      list registered (architecture x style) design points
@@ -16,7 +17,8 @@ use simurg::ann::structure::AnnStructure;
 use simurg::ann::train::Trainer;
 use simurg::coordinator::flow::{run_flow, FlowConfig};
 use simurg::coordinator::report;
-use simurg::coordinator::sweep::{sweep_all_with_stats, SweepConfig};
+use simurg::coordinator::sweep::{sweep_all_with_caches, SweepConfig};
+use simurg::hw::serve::{self, BatchInputs};
 use simurg::hw::{verilog, Architecture, Style, TechLib};
 use simurg::mcm::{cse, dbr, engine, optimize_mcm, Effort, LinearTargets, Tier};
 use simurg::posttrain::AccuracyEval;
@@ -95,14 +97,15 @@ fn cmd_table(args: &Args) -> Result<()> {
         .context("usage: simurg table <1|2|3|4>")?
         .parse()?;
     let data = dataset(args);
-    let (outcomes, stats) = sweep_all_with_stats(&data, &sweep_config(args)?)?;
+    let (outcomes, stats) = sweep_all_with_caches(&data, &sweep_config(args)?)?;
     let text = match n {
         1 => report::table1(&outcomes),
         2..=4 => report::table_posttrain(&outcomes, n),
         _ => bail!("tables are 1..=4"),
     };
     println!("{text}");
-    print!("{}", report::engine_summary(&stats));
+    print!("{}", report::engine_summary(&stats.engine));
+    print!("{}", report::design_cache_summary(&stats.designs));
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
     std::fs::write(dir.join(format!("table_{n}.txt")), &text)?;
@@ -120,7 +123,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
         vec![which.parse()?]
     };
     let data = dataset(args);
-    let (outcomes, _) = sweep_all_with_stats(&data, &sweep_config(args)?)?;
+    let (outcomes, _) = sweep_all_with_caches(&data, &sweep_config(args)?)?;
     let lib = TechLib::tsmc40();
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
@@ -135,6 +138,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
     }
     // figure pricing itself re-solves heavily; report the process totals
     print!("{}", report::engine_summary(&engine::stats()));
+    print!("{}", report::design_cache_summary(&serve::cache_stats()));
     Ok(())
 }
 
@@ -209,6 +213,80 @@ fn cmd_flow(args: &Args) -> Result<()> {
         o.tuned_smac_ann.adder_ops
     );
     print!("  {}", report::engine_summary(&engine::stats()));
+    print!("  {}", report::design_cache_summary(&serve::cache_stats()));
+    Ok(())
+}
+
+/// Batched many-scenario serving: push a whole data split through every
+/// (architecture × style) design point for every tuning scenario of one
+/// experiment, in batches, reporting accuracy, cycles, throughput and
+/// how much elaboration the design cache amortized.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let data = dataset(args);
+    let mut cfg = FlowConfig::new(parse_structure(args)?, parse_trainer(args)?);
+    cfg.runs = args.get_usize("runs", 1)?;
+    cfg.seed = args.get_usize("seed", 1)? as u64;
+    let o = run_flow(&data, &cfg, None)?;
+
+    let split = args.get("split").unwrap_or("test");
+    let samples = match split {
+        "test" => &data.test,
+        "validation" => &data.validation,
+        other => bail!("splits: test|validation (got {other})"),
+    };
+    let batch = args.get_usize("batch", 64)?.max(1);
+    let labels: Vec<u8> = samples.iter().map(|s| s.label).collect();
+    let inputs = BatchInputs::from_samples(samples);
+    let batches = inputs.split(inputs.len().div_ceil(batch));
+
+    // scenarios: the untuned quantized net plus each architecture's tuned
+    // net — every (scenario × design point) is one served model
+    let scenarios: Vec<(&str, &simurg::ann::quant::QuantizedAnn)> = vec![
+        ("untuned", &o.quant.qann),
+        ("tuned/parallel", &o.tuned_parallel.qann),
+        ("tuned/smac_neuron", &o.tuned_smac_neuron.qann),
+        ("tuned/smac_ann", &o.tuned_smac_ann.qann),
+    ];
+    println!(
+        "serving {} {split} samples in {} batches of <= {batch} ({} scenarios x {} design points)",
+        samples.len(),
+        batches.len(),
+        scenarios.len(),
+        simurg::hw::design::design_points().len()
+    );
+    println!(
+        "{:<20}{:<22}{:>10}{:>10}{:>14}",
+        "scenario", "design point", "acc %", "cycles", "samples/s"
+    );
+    let before = serve::cache_stats();
+    for (name, qann) in &scenarios {
+        for (arch, style) in simurg::hw::design::design_points() {
+            let t = std::time::Instant::now();
+            let mut correct = 0usize;
+            let mut cycles = 0usize;
+            let mut offset = 0usize;
+            for b in &batches {
+                // fetched per batch: every batch after the first is a hit
+                let design = serve::design_for(qann, arch.kind(), style);
+                let run = serve::simulate_batch(&design, b);
+                cycles = run.cycles;
+                correct += run.count_correct(&labels[offset..offset + b.len()]);
+                offset += b.len();
+            }
+            let secs = t.elapsed().as_secs_f64();
+            let point = format!("{}/{}", arch.name(), style.name());
+            println!(
+                "{:<20}{:<22}{:>10.2}{:>10}{:>14.0}",
+                name,
+                point,
+                100.0 * correct as f64 / samples.len().max(1) as f64,
+                cycles,
+                samples.len() as f64 / secs.max(1e-12)
+            );
+        }
+    }
+    print!("{}", report::design_cache_summary(&serve::cache_stats().since(&before)));
+    print!("{}", report::engine_summary(&engine::stats()));
     Ok(())
 }
 
@@ -342,17 +420,21 @@ fn cmd_mcm(args: &Args) -> Result<()> {
 
 fn usage() -> &'static str {
     "SIMURG-RS — efficient hardware realizations of feedforward ANNs
-usage: simurg <table|figure|flow|train|verilog|archs|mcm> [flags]
+usage: simurg <table|figure|flow|serve|train|verilog|archs|mcm> [flags]
   table <1|2|3|4>           regenerate a paper table
   figure <10..18|all>       regenerate a paper figure (+ CSV in --out)
   flow                      full flow for one --structure/--trainer
+  serve                     batched many-scenario serving: every tuning
+                            scenario x design point over --split test|validation
+                            in batches of --batch N (default 64)
   train                     train via --backend pjrt|native
   verilog                   emit Verilog + testbench + synthesis script
                             for --arch ARCH --style STYLE (see `archs`)
   archs                     list the registered (architecture x style) points
   mcm                       optimize --constants with --alg dbr|cse|exact|engine
 flags: --structure 16-16-10 --trainer zaal|pytorch|matlab --runs N --seed N
-       --threads N --data-dir DIR --data-seed N --out DIR --eval native|pjrt"
+       --threads N --data-dir DIR --data-seed N --out DIR --eval native|pjrt
+       --batch N --split test|validation"
 }
 
 fn main() -> Result<()> {
@@ -366,6 +448,7 @@ fn main() -> Result<()> {
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
         "flow" => cmd_flow(&args),
+        "serve" => cmd_serve(&args),
         "train" => cmd_train(&args),
         "verilog" => cmd_verilog(&args),
         "archs" => cmd_archs(),

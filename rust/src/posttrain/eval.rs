@@ -1,17 +1,27 @@
 //! Hardware-accuracy evaluation — the inner loop of every tuner.
 //!
 //! The paper recomputes the validation-set hardware accuracy for every
-//! candidate weight replacement, so this is the flow's hot path. Two
+//! candidate weight replacement, so this is the flow's hot path. Three
 //! interchangeable backends:
-//! - [`NativeEval`]: the bit-accurate rust simulator with pre-quantized
-//!   features (this module);
+//! - [`BatchEval`]: the batched serving path — one [`Design`] per
+//!   candidate from the process-wide [`serve::DesignCache`], the whole
+//!   sample set pushed through [`serve::simulate_batch`] in SoA layout
+//!   (fanned out over threads for large sets). This is the default the
+//!   flow tunes with;
+//! - [`NativeEval`]: the per-sample bit-accurate rust simulator with
+//!   pre-quantized features (the golden reference the batch path is
+//!   pinned against);
 //! - `runtime::PjrtEval`: the AOT-lowered JAX graph executed through the
 //!   PJRT CPU client (bit-identical by the fixed-point contract; cross-
 //!   checked in `rust/tests/pjrt_roundtrip.rs`).
+//!
+//! [`Design`]: crate::hw::Design
 
 use crate::ann::dataset::Sample;
 use crate::ann::quant::QuantizedAnn;
 use crate::ann::sim;
+use crate::hw::design::{ArchKind, Architecture, Style};
+use crate::hw::serve::{self, BatchInputs};
 
 /// Scores a candidate quantized ANN, in percent on a fixed sample set.
 pub trait AccuracyEval {
@@ -85,13 +95,115 @@ impl AccuracyEval for NativeEval {
     }
 }
 
+/// Threshold (in samples) above which [`BatchEval`] pre-splits the set
+/// into one sub-batch per worker thread.
+const BATCH_FANOUT_MIN: usize = 256;
+
+/// Batched serving evaluator: scores candidates through
+/// [`serve::simulate_batch`] on a design fetched from the process-wide
+/// [`serve::DesignCache`]. Bit-identical to [`NativeEval`] (every design
+/// point is bit-exact against the golden model — see
+/// `rust/tests/batch_equivalence.rs`); the SoA batch layout amortizes the
+/// interpreter's per-step dispatch across the whole sample set.
+pub struct BatchEval {
+    /// pre-split sub-batches with their labels (the thread fan-out unit)
+    chunks: Vec<(BatchInputs, Vec<u8>)>,
+    n: usize,
+    arch: ArchKind,
+    style: Style,
+}
+
+impl BatchEval {
+    /// Evaluator over `samples` on the cheap-to-elaborate SMAC_NEURON
+    /// behavioral design point (accuracy is design-point-independent).
+    pub fn new(samples: &[Sample]) -> BatchEval {
+        BatchEval::with_design_point(samples, ArchKind::SmacNeuron, Style::Behavioral)
+    }
+
+    /// Evaluator pinned to a specific registry design point (tests and
+    /// style-specific serving).
+    pub fn with_design_point(samples: &[Sample], arch: ArchKind, style: Style) -> BatchEval {
+        let supported = <dyn Architecture>::by_name(arch.name())
+            .map(|a| a.styles().contains(&style))
+            .unwrap_or(false);
+        assert!(supported, "{} has no {} style", arch.name(), style.name());
+        let n = samples.len();
+        let threads = if n >= BATCH_FANOUT_MIN {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+        } else {
+            1
+        };
+        let inputs = BatchInputs::from_samples(samples);
+        let labels: Vec<u8> = samples.iter().map(|s| s.label).collect();
+        let chunks = if threads <= 1 {
+            vec![(inputs, labels)]
+        } else {
+            let mut chunks = Vec::new();
+            let mut offset = 0usize;
+            for part in inputs.split(threads) {
+                let m = part.len();
+                chunks.push((part, labels[offset..offset + m].to_vec()));
+                offset += m;
+            }
+            chunks
+        };
+        BatchEval { chunks, n, arch, style }
+    }
+
+    fn correct_in(design: &crate::hw::Design, chunk: &(BatchInputs, Vec<u8>)) -> usize {
+        serve::simulate_batch(design, &chunk.0).count_correct(&chunk.1)
+    }
+}
+
+impl AccuracyEval for BatchEval {
+    fn accuracy(&self, qann: &QuantizedAnn) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        // ephemeral fetch: tuner candidates are one-shot content, so a
+        // miss must not churn the shared cache; recurring nets (the
+        // untuned starting point every tuner scores first) still hit
+        let design = serve::design_for_ephemeral(qann, self.arch, self.style);
+        let correct: usize = if self.chunks.len() <= 1 {
+            Self::correct_in(&design, &self.chunks[0])
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .chunks
+                    .iter()
+                    .map(|chunk| {
+                        let design = &design;
+                        scope.spawn(move || Self::correct_in(design, chunk))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            })
+        };
+        100.0 * correct as f64 / self.n as f64
+    }
+
+    fn num_samples(&self) -> usize {
+        self.n
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::ann::dataset::Dataset;
     use crate::ann::model::{Ann, Init};
     use crate::ann::structure::{Activation, AnnStructure};
+    use crate::hw::design::design_points;
     use crate::num::Rng;
+
+    fn quantized(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
 
     #[test]
     fn native_eval_matches_direct_sim() {
@@ -102,5 +214,54 @@ mod tests {
         let ev = NativeEval::new(&ds.validation);
         assert_eq!(ev.num_samples(), ds.validation.len());
         assert!((ev.accuracy(&q) - sim::hardware_accuracy(&q, &ds.validation)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_eval_matches_hardware_accuracy_for_every_design_point() {
+        // the batch-path acceptance pin, extended from the single-arch
+        // assertion above: accuracy() through simulate_batch matches the
+        // golden sim::hardware_accuracy on the validation set for every
+        // (architecture × style) registry point
+        let ds = Dataset::synthetic_with_sizes(3, 200, 60);
+        for structure in ["16-10", "16-16-10"] {
+            let q = quantized(structure, 6, 17);
+            let want = sim::hardware_accuracy(&q, &ds.validation);
+            for (arch, style) in design_points() {
+                let ev = BatchEval::with_design_point(&ds.validation, arch.kind(), style);
+                assert_eq!(ev.num_samples(), ds.validation.len());
+                let got = ev.accuracy(&q);
+                assert!(
+                    (got - want).abs() < 1e-12,
+                    "{structure} {} {}: {got} vs {want}",
+                    arch.name(),
+                    style.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_eval_fans_out_above_the_threshold() {
+        // above the fan-out threshold the evaluator pre-splits; the
+        // accuracy must not depend on the chunking
+        let ds = Dataset::synthetic_with_sizes(5, 1200, 60);
+        let q = quantized("16-10", 6, 23);
+        let ev = BatchEval::new(&ds.validation);
+        let native = NativeEval::new(&ds.validation);
+        assert!((ev.accuracy(&q) - native.accuracy(&q)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "has no")]
+    fn batch_eval_rejects_unsupported_design_points() {
+        let ds = Dataset::synthetic_with_sizes(7, 40, 10);
+        BatchEval::with_design_point(&ds.validation, ArchKind::Parallel, Style::Mcm);
+    }
+
+    #[test]
+    fn batch_eval_empty_set_scores_zero() {
+        let ev = BatchEval::new(&[]);
+        assert_eq!(ev.num_samples(), 0);
+        assert_eq!(ev.accuracy(&quantized("16-10", 6, 2)), 0.0);
     }
 }

@@ -3,7 +3,8 @@
 //! validation set.
 //!
 //! - [`eval`]: the `AccuracyEval` abstraction every tuner scores
-//!   candidates through — native bit-accurate simulation or the
+//!   candidates through — the batched serving path (`BatchEval`, the
+//!   default), per-sample native simulation (`NativeEval`) or the
 //!   PJRT-executed AOT graph (`runtime::PjrtEval`);
 //! - [`parallel`]: CSD least-significant-digit removal (Sec. IV-B);
 //! - [`smac`]: smallest-left-shift maximization with bias repair
@@ -13,7 +14,7 @@ pub mod eval;
 pub mod parallel;
 pub mod smac;
 
-pub use eval::{AccuracyEval, NativeEval};
+pub use eval::{AccuracyEval, BatchEval, NativeEval};
 
 use crate::ann::QuantizedAnn;
 use crate::hw::design::{ArchKind, LayerPricer, Style};

@@ -1,0 +1,150 @@
+//! The batch-serving acceptance suite: for randomized quantized nets
+//! across **every** (architecture × style) registry design point,
+//! `serve::simulate_batch` is bit-identical — outputs *and* cycle counts —
+//! to running each sample through the per-input `netsim::simulate`,
+//! including the SMAC styles whose products route through the embedded
+//! MCM graphs. This is the contract that lets every consumer move to the
+//! batched path without re-auditing numerics.
+
+use simurg::ann::model::{Ann, Init};
+use simurg::ann::quant::QuantizedAnn;
+use simurg::ann::sim;
+use simurg::ann::structure::{Activation, AnnStructure};
+use simurg::hw::design::{design_points, LayerCompute, Style};
+use simurg::hw::netsim::simulate;
+use simurg::hw::serve::{simulate_batch, BatchInputs};
+use simurg::hw::Architecture;
+use simurg::num::Rng;
+
+fn random_qann(structure: &str, q: u32, rng: &mut Rng) -> QuantizedAnn {
+    let st = AnnStructure::parse(structure).unwrap();
+    let layers = st.num_layers();
+    let acts: Vec<Activation> = (0..layers)
+        .map(|k| {
+            if k == layers - 1 {
+                Activation::HSig
+            } else if rng.uniform() < 0.5 {
+                Activation::HTanh
+            } else {
+                Activation::ReLU
+            }
+        })
+        .collect();
+    let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(rng.below(1 << 30) as u64));
+    QuantizedAnn::quantize(&ann, q, &acts)
+}
+
+fn random_rows(n: usize, features: usize, rng: &mut Rng) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|_| (0..features).map(|_| rng.below(256) as i32 - 128).collect())
+        .collect()
+}
+
+#[test]
+fn batch_is_bit_identical_to_per_input_for_every_design_point() {
+    let mut rng = Rng::new(20260728);
+    for structure in ["16-10", "16-16-10", "16-10-10-10"] {
+        for q in [5u32, 7] {
+            let qann = random_qann(structure, q, &mut rng);
+            let rows = random_rows(65, 16, &mut rng);
+            let batch = BatchInputs::from_rows(&rows);
+            for (arch, style) in design_points() {
+                let design = arch.elaborate(&qann, style);
+                let run = simulate_batch(&design, &batch);
+                assert_eq!(run.len, rows.len());
+                for (s, row) in rows.iter().enumerate() {
+                    let per = simulate(&design, row);
+                    assert_eq!(
+                        run.sample_outputs(s),
+                        per.outputs,
+                        "{structure} q={q} {} {} sample {s}",
+                        arch.name(),
+                        style.name()
+                    );
+                    assert_eq!(
+                        run.cycles,
+                        per.cycles,
+                        "{structure} q={q} {} {} cycle count",
+                        arch.name(),
+                        style.name()
+                    );
+                }
+                // and the schedule's closed-form cycle count holds
+                assert_eq!(run.cycles, design.cycles());
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_matches_the_golden_model_too() {
+    // transitively implied by the per-input equivalence + the design
+    // conformance suite, pinned directly here for the batched path
+    let mut rng = Rng::new(77);
+    let qann = random_qann("16-16-10", 6, &mut rng);
+    let rows = random_rows(80, 16, &mut rng);
+    let batch = BatchInputs::from_rows(&rows);
+    for (arch, style) in design_points() {
+        let design = arch.elaborate(&qann, style);
+        let run = simulate_batch(&design, &batch);
+        for (s, row) in rows.iter().enumerate() {
+            assert_eq!(
+                run.sample_outputs(s),
+                sim::forward(&qann, row),
+                "{} {} vs golden model",
+                arch.name(),
+                style.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn smac_mcm_product_routes_are_exercised_and_equivalent() {
+    // the SMAC mcm design points must actually route products through
+    // their embedded MCM graphs (not fall back to behavioral multiplies),
+    // and stay bit-identical under that route
+    let mut rng = Rng::new(4242);
+    let qann = random_qann("16-10-10", 6, &mut rng);
+    let rows = random_rows(64, 16, &mut rng);
+    let batch = BatchInputs::from_rows(&rows);
+    for (arch, style) in design_points() {
+        if style != Style::Mcm {
+            continue;
+        }
+        let design = arch.elaborate(&qann, style);
+        let routed = design.layers.iter().any(|l| {
+            matches!(&l.compute, LayerCompute::Mac { mcm: Some(_), .. })
+        });
+        assert!(routed, "{} mcm design must reference a product graph", arch.name());
+        let run = simulate_batch(&design, &batch);
+        for (s, row) in rows.iter().enumerate() {
+            let per = simulate(&design, row);
+            assert_eq!(run.sample_outputs(s), per.outputs, "{} mcm sample {s}", arch.name());
+            assert_eq!(run.cycles, per.cycles);
+        }
+    }
+}
+
+#[test]
+fn batch_of_one_and_argmax_agree_with_predict() {
+    let mut rng = Rng::new(9);
+    let qann = random_qann("16-10", 6, &mut rng);
+    let rows = random_rows(17, 16, &mut rng);
+    for (arch, style) in design_points() {
+        let design = arch.elaborate(&qann, style);
+        for row in &rows {
+            let single = BatchInputs::from_rows(std::slice::from_ref(row));
+            let run = simulate_batch(&design, &single);
+            assert_eq!(run.sample_outputs(0), simulate(&design, row).outputs);
+            // first-index argmax matches the golden comparator tie-break
+            assert_eq!(
+                run.argmax(0),
+                sim::predict(&qann, row),
+                "{} {}",
+                arch.name(),
+                style.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! The process-wide `DesignCache` contract: concurrent hit/miss
+//! correctness under thread hammering, no key aliasing between nets that
+//! share a structure but differ in content, stats plumbing, and the
+//! regression that the netsim convenience wrappers elaborate once per
+//! key instead of once per call.
+
+use simurg::ann::model::{Ann, Init};
+use simurg::ann::quant::QuantizedAnn;
+use simurg::ann::structure::{Activation, AnnStructure};
+use simurg::coordinator::report;
+use simurg::hw::design::{design_points, ArchKind, Architecture, Style};
+use simurg::hw::netsim;
+use simurg::hw::serve::{self, DesignCache};
+use simurg::num::Rng;
+
+fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+    let st = AnnStructure::parse(structure).unwrap();
+    let layers = st.num_layers();
+    let mut acts = vec![Activation::HTanh; layers];
+    acts[layers - 1] = Activation::HSig;
+    let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+    QuantizedAnn::quantize(&ann, q, &acts)
+}
+
+#[test]
+fn concurrent_fetches_share_one_cache() {
+    let cache = DesignCache::new();
+    let nets: Vec<QuantizedAnn> = (0..6).map(|s| qann("16-10", 6, 100 + s)).collect();
+    let points = design_points();
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            scope.spawn(|| {
+                for net in &nets {
+                    for &(arch, style) in &points {
+                        let d = cache.design(net, arch.kind(), style);
+                        // every fetch returns the right design for its key
+                        assert_eq!(d.arch, arch.kind());
+                        assert_eq!(d.style, style);
+                        assert_eq!(&d.qann, net);
+                    }
+                }
+            });
+        }
+    });
+    let s = cache.stats();
+    let keys = (nets.len() * points.len()) as u64;
+    assert_eq!(s.lookups(), 4 * keys, "{s:?}");
+    // racing threads may duplicate an elaboration (every thread can miss
+    // the same cold key), but the cache converges to one entry per key
+    // and each key was elaborated at least once
+    assert!(s.entries as u64 <= keys, "{s:?}");
+    assert!(s.misses >= keys, "{s:?}");
+    // a fully warm pass is pure hits
+    let warm_before = cache.stats();
+    for net in &nets {
+        for &(arch, style) in &points {
+            cache.design(net, arch.kind(), style);
+        }
+    }
+    let warm = cache.stats().since(&warm_before);
+    assert_eq!((warm.hits, warm.misses), (keys, 0), "{warm:?}");
+}
+
+#[test]
+fn equal_structure_different_content_never_aliases() {
+    // regression: two nets with the same structure (and so the same
+    // shapes everywhere) but different weights / biases / q / activations
+    // must not share designs
+    let cache = DesignCache::new();
+    let base = qann("16-10-10", 6, 7);
+
+    let mut other_weights = base.clone();
+    other_weights.weights[1][2][3] += 1;
+
+    let mut other_biases = base.clone();
+    other_biases.biases[0][0] += 1;
+
+    let mut other_q = base.clone();
+    other_q.q += 1;
+
+    let mut other_act = base.clone();
+    other_act.activations[0] = Activation::ReLU;
+
+    let d_base = cache.design(&base, ArchKind::Parallel, Style::Cmvm);
+    for variant in [&other_weights, &other_biases, &other_q, &other_act] {
+        let d = cache.design(variant, ArchKind::Parallel, Style::Cmvm);
+        assert_eq!(&d.qann, variant, "cache must return the variant's own design");
+        assert_ne!(d.qann, d_base.qann, "variant must not be served the base design");
+    }
+    let s = cache.stats();
+    assert_eq!(s.misses, 5, "five distinct keys, five elaborations: {s:?}");
+    assert_eq!(s.hits, 0, "{s:?}");
+    // and each cached design matches a direct elaboration of its net
+    let direct = <dyn Architecture>::by_name("parallel")
+        .unwrap()
+        .elaborate(&other_weights, Style::Cmvm);
+    assert_eq!(*cache.design(&other_weights, ArchKind::Parallel, Style::Cmvm), direct);
+}
+
+#[test]
+fn netsim_wrappers_elaborate_once_per_key() {
+    // regression: the convenience wrappers used to re-elaborate on every
+    // call; they now serve designs from the process-wide cache. This is
+    // the only test in this binary that touches the global cache, so the
+    // counter deltas below cannot race with sibling tests.
+    let q = qann("16-16-10", 7, 987654);
+    let x = vec![33i32; 16];
+
+    let before = serve::cache_stats();
+    let a1 = netsim::run_smac_neuron(&q, &x);
+    let first = serve::cache_stats().since(&before);
+    assert_eq!(first.misses, 1, "first call elaborates: {first:?}");
+
+    let a2 = netsim::run_smac_neuron(&q, &x);
+    let warm = serve::cache_stats().since(&before);
+    assert_eq!(warm.misses, 1, "second call must not re-elaborate: {warm:?}");
+    assert_eq!(warm.hits, first.hits + 1, "{warm:?}");
+    assert_eq!(a1, a2);
+
+    // each wrapper keys its own design point: one elaboration each
+    let b1 = netsim::run_smac_ann(&q, &x);
+    let b2 = netsim::run_smac_ann(&q, &x);
+    assert_eq!(b1, b2);
+    let p1 = netsim::run_parallel(&q, Style::Cmvm, &x);
+    let p2 = netsim::run_parallel(&q, Style::Cmvm, &x);
+    assert_eq!(p1, p2);
+    let total = serve::cache_stats().since(&before);
+    assert_eq!(total.misses, 3, "one elaboration per distinct key: {total:?}");
+    assert_eq!(total.hits, first.hits + 3, "{total:?}");
+
+    // all three wrappers agree with each other on the outputs
+    assert_eq!(a1.outputs, b1.outputs);
+    assert_eq!(a1.outputs, p1.outputs);
+}
+
+#[test]
+fn stats_snapshot_and_delta_arithmetic() {
+    let cache = DesignCache::new();
+    let q = qann("16-10", 6, 55);
+    cache.design(&q, ArchKind::SmacNeuron, Style::Behavioral);
+    let snap = cache.stats();
+    cache.design(&q, ArchKind::SmacNeuron, Style::Behavioral);
+    cache.design(&q, ArchKind::SmacNeuron, Style::Behavioral);
+    let delta = cache.stats().since(&snap);
+    assert_eq!((delta.hits, delta.misses), (2, 0), "{delta:?}");
+    assert!(delta.hit_rate() > 0.99);
+    assert_eq!(snap.hit_rate(), 0.0);
+    // reset clears entries and counters
+    cache.reset();
+    assert_eq!(cache.stats(), Default::default());
+}
+
+#[test]
+fn summary_line_is_plumbed_like_the_engine_summary() {
+    let cache = DesignCache::new();
+    let q = qann("16-10", 6, 21);
+    cache.design(&q, ArchKind::SmacAnn, Style::Mcm);
+    cache.design(&q, ArchKind::SmacAnn, Style::Mcm);
+    let line = report::design_cache_summary(&cache.stats());
+    assert!(line.contains("Design cache: 2 lookups"), "{line}");
+    assert!(line.contains("1 hits (50.0% hit rate)"), "{line}");
+    assert!(line.contains("1 elaborations"), "{line}");
+}
