@@ -63,6 +63,8 @@ fn bench_batch_netsim(smoke: bool) {
     println!("\n== batched netsim (SoA, batch = {n}) vs per-input loop ==");
     let points = [
         (ArchKind::Parallel, Style::Cmvm),
+        (ArchKind::Pipelined, Style::Cmvm),
+        (ArchKind::Pipelined, Style::Mcm),
         (ArchKind::SmacNeuron, Style::Behavioral),
         (ArchKind::SmacNeuron, Style::Mcm),
         (ArchKind::SmacAnn, Style::Mcm),
@@ -127,11 +129,37 @@ fn bench_batch_netsim(smoke: bool) {
         100.0 * cache.hit_rate()
     );
 
+    // pipelined vs combinational batch serving: same per-layer datapaths,
+    // but the pipe's clock is the slowest stage instead of the whole
+    // chain, so the modeled batch time (throughput cycles x clock period)
+    // must beat the combinational design despite the stages + n fill cost
+    let lib = simurg::hw::TechLib::tsmc40();
+    let comb = serve::design_for(&qann, ArchKind::Parallel, Style::Cmvm);
+    let pipe = serve::design_for(&qann, ArchKind::Pipelined, Style::Cmvm);
+    let comb_run = serve::simulate_batch(&comb, &inputs);
+    let pipe_run = serve::simulate_batch(&pipe, &inputs);
+    let stages = qann.structure.num_layers();
+    assert_eq!(pipe_run.throughput_cycles, stages + n, "fill once, then 1/cycle");
+    assert_eq!(comb_run.throughput_cycles, n);
+    let comb_ns = comb_run.throughput_cycles as f64 * comb.cost(&lib).clock_ns;
+    let pipe_ns = pipe_run.throughput_cycles as f64 * pipe.cost(&lib).clock_ns;
+    let pipe_speedup = comb_ns / pipe_ns.max(1e-12);
+    println!(
+        "batch throughput model (batch = {n}): combinational {comb_ns:.1} ns ({} cyc), \
+         pipelined {pipe_ns:.1} ns ({} cyc) -> {pipe_speedup:.2}x",
+        comb_run.throughput_cycles, pipe_run.throughput_cycles
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"batch_netsim\",\n  \"structure\": \"16-16-10\",\n  \
          \"samples\": {n},\n  \"batch\": {n},\n  \"smoke\": {smoke},\n  \
          \"points\": [{entries}],\n  \"headline_speedup_smac_neuron_mcm\": {headline:.3},\n  \
+         \"pipelined_vs_combinational\": {{\"comb_batch_ns\": {comb_ns:.3}, \
+         \"pipe_batch_ns\": {pipe_ns:.3}, \"speedup\": {pipe_speedup:.3}, \
+         \"pipe_throughput_cycles\": {}, \"comb_throughput_cycles\": {}}},\n  \
          \"cache\": {{\"lookups\": {}, \"hits\": {}, \"hit_rate\": {:.4}}}\n}}\n",
+        pipe_run.throughput_cycles,
+        comb_run.throughput_cycles,
         cache.lookups(),
         cache.hits,
         cache.hit_rate()
@@ -141,6 +169,11 @@ fn bench_batch_netsim(smoke: bool) {
     assert!(
         headline >= 3.0,
         "acceptance: batched mcm serving must be >= 3x the per-input loop (got {headline:.2}x)"
+    );
+    assert!(
+        pipe_ns < comb_ns,
+        "acceptance: pipelined batch serving must beat combinational parallel on modeled \
+         throughput ({pipe_ns:.1} ns !< {comb_ns:.1} ns at batch {n})"
     );
     assert!(cache.hit_rate() > 0.5, "serving loop must hit the design cache");
 }

@@ -1,5 +1,6 @@
 //! Architecture exploration (paper Figs. 10–12): price every paper
-//! structure under the three architectures and print the area / latency /
+//! structure under every registry architecture (the paper's three plus
+//! the layer-pipelined parallel variant) and print the area / latency /
 //! energy trade-off a designer would pick from (paper Sec. VII: "a
 //! designer can choose the one that fits best in an application") —
 //! plus the batched test-set hardware accuracy of each design, served

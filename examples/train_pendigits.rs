@@ -143,6 +143,7 @@ fn main() -> anyhow::Result<()> {
             &data.test[..8],
             module,
             structure.smac_neuron_cycles(),
+            true,
         ),
     )?;
     println!("  wrote results/{module}.v + testbench");

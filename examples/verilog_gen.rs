@@ -27,7 +27,8 @@ fn main() -> anyhow::Result<()> {
         let qann = &o.tuned_parallel.qann;
         let module = format!("ann_par_{}", style.name());
         let v = verilog::parallel_verilog(qann, style, &module);
-        let tb = verilog::testbench(qann, &data.test[..8], &module, 1);
+        // the feedforward module has no rst/start/done handshake
+        let tb = verilog::testbench(qann, &data.test[..8], &module, 1, false);
         let r = parallel::build(&lib, qann, style);
         std::fs::write(dir.join(format!("{module}.v")), &v)?;
         std::fs::write(dir.join(format!("tb_{module}.v")), tb)?;
@@ -52,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         &data.test[..8],
         module,
         qann.structure.smac_neuron_cycles(),
+        true,
     );
     let r = smac_neuron::build(&lib, qann, simurg::hw::smac_neuron::SmacStyle::Behavioral);
     std::fs::write(dir.join(format!("{module}.v")), &v)?;

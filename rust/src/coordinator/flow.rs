@@ -189,7 +189,11 @@ impl FlowOutcome {
     /// exhaustive, so a new [`ArchKind`] fails here at compile time).
     pub fn tuned_for(&self, arch: ArchKind) -> &TuneResult {
         match arch {
-            ArchKind::Parallel => &self.tuned_parallel,
+            // the pipelined variant instantiates the same per-layer
+            // constant-multiplication graphs as the combinational parallel
+            // design, so the parallel tuner's result is the one that
+            // minimizes its datapath too
+            ArchKind::Parallel | ArchKind::Pipelined => &self.tuned_parallel,
             ArchKind::SmacNeuron => &self.tuned_smac_neuron,
             ArchKind::SmacAnn => &self.tuned_smac_ann,
         }

@@ -61,10 +61,13 @@ impl Style {
     }
 }
 
-/// The three design architectures of paper Sec. III.
+/// The three design architectures of paper Sec. III plus the
+/// layer-pipelined parallel variant (`hw::pipelined`) this reproduction
+/// adds as the fourth point on the latency/throughput trade-off curve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArchKind {
     Parallel,
+    Pipelined,
     SmacNeuron,
     SmacAnn,
 }
@@ -73,6 +76,7 @@ impl ArchKind {
     pub fn name(self) -> &'static str {
         match self {
             ArchKind::Parallel => "parallel",
+            ArchKind::Pipelined => "pipelined",
             ArchKind::SmacNeuron => "smac_neuron",
             ArchKind::SmacAnn => "smac_ann",
         }
@@ -86,6 +90,11 @@ impl ArchKind {
 pub enum Schedule {
     /// everything ripples combinationally; outputs are registered (1 cycle)
     Combinational,
+    /// register banks between layers: `stages` pipeline stages (one per
+    /// layer, the last doubling as the output register, plus a registered
+    /// input stage), so one inference's latency is `stages + 1` cycles
+    /// while a new sample enters every cycle once the pipe is full
+    Pipelined { stages: usize },
     /// layers execute in sequence, ι_k + 1 cycles each (Sec. III-B1)
     LayerSequential,
     /// one MAC serves every neuron, (ι_k + 2)·η_k cycles (Sec. III-B2)
@@ -93,11 +102,29 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Latency of one inference in clock cycles.
     pub fn cycles(self, st: &AnnStructure) -> usize {
         match self {
             Schedule::Combinational => 1,
+            Schedule::Pipelined { stages } => stages + 1,
             Schedule::LayerSequential => st.smac_neuron_cycles(),
             Schedule::NeuronSequential => st.smac_ann_cycles(),
+        }
+    }
+
+    /// Clock cycles to push a batch of `n` inferences through a design
+    /// under this schedule: the sequential schedules serialize inferences
+    /// (`n × latency`), the combinational datapath accepts a new sample
+    /// every (long) cycle, and the pipelined datapath fills once and then
+    /// retires one sample per cycle (`stages + n`).
+    pub fn throughput_cycles(self, st: &AnnStructure, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        match self {
+            Schedule::Combinational => n,
+            Schedule::Pipelined { stages } => stages + n,
+            Schedule::LayerSequential | Schedule::NeuronSequential => n * self.cycles(st),
         }
     }
 }
@@ -162,6 +189,11 @@ pub enum LayerCompute {
     /// inner products evaluated through embedded adder graphs: one
     /// CMVM/behavioral graph for the layer, or one CAVM graph per neuron
     Graphs(Vec<usize>),
+    /// one single-input MCM product graph per layer *input column*
+    /// (paper Sec. V-B brought to the parallel datapath): graph `i`
+    /// outputs the products `w[m][i] · x_i` for every neuron `m`, and the
+    /// inner product of neuron `m` is the adder-tree sum over columns
+    McmColumns(Vec<usize>),
     /// multiply–accumulate of sls-factored stored weights
     /// (`stored[m][i] = w >> sls[m]`); products routed through an MCM
     /// graph when `mcm` is set (paper Sec. V-B, Fig. 9)
@@ -297,8 +329,8 @@ impl DesignBuilder {
 }
 
 /// A design architecture: elaborates a quantized net into a [`Design`].
-/// Implementations live in `hw/{parallel,smac_neuron,smac_ann}.rs` and
-/// contain *only* elaboration — no gate arithmetic, no HDL, no simulation.
+/// Implementations live in `hw/{parallel,pipelined,smac_neuron,smac_ann}.rs`
+/// and contain *only* elaboration — no gate arithmetic, no HDL, no simulation.
 pub trait Architecture: Sync {
     fn kind(&self) -> ArchKind;
 
@@ -316,9 +348,16 @@ pub trait Architecture: Sync {
 
 impl dyn Architecture {
     /// The architecture registry: every design point the sweeps, figures
-    /// and the CLI iterate, in the paper's presentation order.
-    pub fn all() -> [&'static dyn Architecture; 3] {
-        [&super::parallel::Parallel, &super::smac_neuron::SmacNeuron, &super::smac_ann::SmacAnn]
+    /// and the CLI iterate — the paper's three architectures in their
+    /// presentation order, with the layer-pipelined parallel variant
+    /// slotted in right after the combinational design it pipelines.
+    pub fn all() -> [&'static dyn Architecture; 4] {
+        [
+            &super::parallel::Parallel,
+            &super::pipelined::PipelinedParallel,
+            &super::smac_neuron::SmacNeuron,
+            &super::smac_ann::SmacAnn,
+        ]
     }
 
     pub fn by_name(name: &str) -> Option<&'static dyn Architecture> {
@@ -355,6 +394,21 @@ pub fn global_sls(qann: &QuantizedAnn) -> u32 {
     report::smallest_left_shift(qann.weights.iter().flat_map(|l| l.iter().flatten().cloned()))
 }
 
+/// The per-input-column MCM instances of a fully parallel `Style::Mcm`
+/// layer: one single-input instance per column `i`, whose outputs are the
+/// products `w[m][i] · x_i` in neuron order. Shared between
+/// [`LayerPricer`]'s `layer_instances` and the `hw::pipelined` elaborator
+/// so the tuner metric can never drift from the elaborated design.
+pub(super) fn mcm_column_instances(qann: &QuantizedAnn, k: usize) -> Vec<(LinearTargets, Tier)> {
+    let n_in = qann.structure.layer_inputs(k);
+    (0..n_in)
+        .map(|i| {
+            let col: Vec<i64> = qann.weights[k].iter().map(|row| row[i]).collect();
+            (LinearTargets::mcm(&col), Tier::McmHeuristic)
+        })
+        .collect()
+}
+
 /// The constant-multiplication instances of layer `k` under
 /// (`arch`, `style`), as the matching `Architecture::elaborate` solves
 /// them — kept in lock-step with the elaborators by the
@@ -363,16 +417,17 @@ pub fn global_sls(qann: &QuantizedAnn) -> u32 {
 /// whole-net instance, attached to layer 0.
 fn layer_instances(arch: ArchKind, style: Style, qann: &QuantizedAnn, k: usize) -> Vec<(LinearTargets, Tier)> {
     match (arch, style) {
-        (ArchKind::Parallel, Style::Behavioral) => {
+        (ArchKind::Parallel | ArchKind::Pipelined, Style::Behavioral) => {
             vec![(LinearTargets::cmvm(&qann.weights[k]), Tier::Dbr)]
         }
-        (ArchKind::Parallel, Style::Cavm) => qann.weights[k]
+        (ArchKind::Parallel | ArchKind::Pipelined, Style::Cavm) => qann.weights[k]
             .iter()
             .map(|row| (LinearTargets::cavm(row), Tier::Cse))
             .collect(),
-        (ArchKind::Parallel, Style::Cmvm) => {
+        (ArchKind::Parallel | ArchKind::Pipelined, Style::Cmvm) => {
             vec![(LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)]
         }
+        (ArchKind::Pipelined, Style::Mcm) => mcm_column_instances(qann, k),
         (ArchKind::SmacNeuron, Style::Mcm) => {
             let (stored, _) = stored_layer(qann, k);
             let consts: Vec<i64> = stored.into_iter().flatten().collect();
@@ -471,12 +526,13 @@ mod tests {
     #[test]
     fn registry_covers_the_paper_design_points() {
         let names: Vec<&str> = <dyn Architecture>::all().iter().map(|a| a.name()).collect();
-        assert_eq!(names, ["parallel", "smac_neuron", "smac_ann"]);
-        assert_eq!(design_points().len(), 7, "3 parallel styles + 2 + 2");
+        assert_eq!(names, ["parallel", "pipelined", "smac_neuron", "smac_ann"]);
+        assert_eq!(design_points().len(), 11, "3 parallel + 4 pipelined + 2 + 2");
         for (a, s) in design_points() {
             assert!(a.styles().contains(&s));
         }
         assert!(<dyn Architecture>::by_name("parallel").is_some());
+        assert!(<dyn Architecture>::by_name("pipelined").is_some());
         assert!(<dyn Architecture>::by_name("systolic").is_none());
     }
 
@@ -492,8 +548,36 @@ mod tests {
     fn schedules_implement_section_iii_formulas() {
         let st = AnnStructure::parse("16-16-10").unwrap();
         assert_eq!(Schedule::Combinational.cycles(&st), 1);
+        assert_eq!(Schedule::Pipelined { stages: 2 }.cycles(&st), 3);
         assert_eq!(Schedule::LayerSequential.cycles(&st), st.smac_neuron_cycles());
         assert_eq!(Schedule::NeuronSequential.cycles(&st), st.smac_ann_cycles());
+    }
+
+    #[test]
+    fn throughput_cycles_fill_once_then_one_per_cycle() {
+        let st = AnnStructure::parse("16-16-10").unwrap();
+        // pipelined: fill the pipe once, then retire 1/cycle
+        assert_eq!(Schedule::Pipelined { stages: 2 }.throughput_cycles(&st, 64), 66);
+        assert_eq!(Schedule::Pipelined { stages: 2 }.throughput_cycles(&st, 1), 3, "= latency");
+        // the combinational datapath streams 1/(long) cycle; the MAC
+        // schedules serialize whole inferences
+        assert_eq!(Schedule::Combinational.throughput_cycles(&st, 64), 64);
+        assert_eq!(
+            Schedule::LayerSequential.throughput_cycles(&st, 64),
+            64 * st.smac_neuron_cycles()
+        );
+        assert_eq!(
+            Schedule::NeuronSequential.throughput_cycles(&st, 64),
+            64 * st.smac_ann_cycles()
+        );
+        for s in [
+            Schedule::Combinational,
+            Schedule::Pipelined { stages: 2 },
+            Schedule::LayerSequential,
+            Schedule::NeuronSequential,
+        ] {
+            assert_eq!(s.throughput_cycles(&st, 0), 0, "empty batch costs nothing");
+        }
     }
 
     #[test]

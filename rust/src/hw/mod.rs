@@ -1,4 +1,5 @@
-//! Gate-level hardware models of the paper's three design architectures,
+//! Gate-level hardware models of the paper's three design architectures
+//! (plus the layer-pipelined parallel variant this reproduction adds),
 //! the Verilog generator and the cycle-accurate architectural simulator.
 //!
 //! Stand-in for the Cadence RTL Compiler + TSMC 40nm synthesis flow of
@@ -14,6 +15,7 @@ pub mod design;
 pub mod gates;
 pub mod netsim;
 pub mod parallel;
+pub mod pipelined;
 pub mod report;
 pub mod serve;
 pub mod smac_ann;

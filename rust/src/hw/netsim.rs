@@ -35,36 +35,62 @@ pub fn simulate(design: &Design, input: &[i32]) -> SimRun {
     let qann = &design.qann;
     assert_eq!(input.len(), qann.structure.inputs);
     match design.schedule {
-        Schedule::Combinational => simulate_combinational(design, input),
+        // the pipelined datapath computes the same per-layer feedforward
+        // values as the combinational one; only the cycle accounting
+        // differs (fill the pipe: stages + 1 cycles to the first output)
+        Schedule::Combinational | Schedule::Pipelined { .. } => simulate_feedforward(design, input),
         Schedule::LayerSequential => simulate_layer_sequential(design, input),
         Schedule::NeuronSequential => simulate_neuron_sequential(design, input),
     }
 }
 
-/// Combinational evaluation through the elaborated datapath: the constant
-/// multiplications run through the same adder graphs the hardware
-/// instantiates (a CSE bug shows up here, not just in the op count), then
-/// bias and activation are applied; outputs register after one cycle.
-fn simulate_combinational(design: &Design, input: &[i32]) -> SimRun {
+/// Inner products of one fully parallel layer, routed through the same
+/// embedded adder graphs the hardware instantiates (a CSE bug shows up
+/// here, not just in the op count): one CMVM/behavioral graph, one CAVM
+/// graph per neuron, or per-input-column MCM product graphs summed per
+/// neuron (the pipelined `Style::Mcm`).
+fn feedforward_inner(design: &Design, layer: &LayerCompute, xs: &[i128]) -> Vec<i64> {
+    match layer {
+        LayerCompute::Graphs(gis) => {
+            if gis.len() == 1 {
+                design.graphs[gis[0]].eval(xs).iter().map(|&v| v as i64).collect()
+            } else {
+                gis.iter().map(|&gi| design.graphs[gi].eval(xs)[0] as i64).collect()
+            }
+        }
+        LayerCompute::McmColumns(gis) => {
+            let n_out = design.graphs[gis[0]].outputs.len();
+            let mut inner = vec![0i64; n_out];
+            for (i, &gi) in gis.iter().enumerate() {
+                // column graph i: products w[m][i] * x_i for every neuron m
+                for (m, p) in design.graphs[gi].eval(&xs[i..i + 1]).iter().enumerate() {
+                    inner[m] += *p as i64;
+                }
+            }
+            inner
+        }
+        LayerCompute::Mac { .. } => panic!("feedforward schedules are graph-computed"),
+    }
+}
+
+/// Feedforward evaluation through the elaborated datapath (combinational
+/// and pipelined schedules): constant multiplications through the
+/// embedded graphs, then bias and activation per layer. The cycle count
+/// is the schedule's latency — 1 for registered combinational outputs,
+/// `stages + 1` for the pipeline fill.
+fn simulate_feedforward(design: &Design, input: &[i32]) -> SimRun {
     let qann = &design.qann;
     let mut cur: Vec<i64> = input.iter().map(|&x| x as i64).collect();
     for (k, layer) in design.layers.iter().enumerate() {
         let xs: Vec<i128> = cur.iter().map(|&x| x as i128).collect();
-        let LayerCompute::Graphs(gis) = &layer.compute else {
-            panic!("combinational layers are graph-computed");
-        };
-        let inner: Vec<i64> = if gis.len() == 1 {
-            design.graphs[gis[0]].eval(&xs).iter().map(|&v| v as i64).collect()
-        } else {
-            gis.iter().map(|&gi| design.graphs[gi].eval(&xs)[0] as i64).collect()
-        };
+        let inner = feedforward_inner(design, &layer.compute, &xs);
         cur = inner
             .iter()
             .zip(&qann.biases[k])
             .map(|(&y, &b)| activate(qann.activations[k], y + b, qann.q) as i64)
             .collect();
     }
-    SimRun { outputs: cur.iter().map(|&v| v as i32).collect(), cycles: 1 }
+    SimRun { outputs: cur.iter().map(|&v| v as i32).collect(), cycles: design.cycles() }
 }
 
 /// Product of stored weight `stored[m][i]` with the broadcast input: taken

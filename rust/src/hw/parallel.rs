@@ -30,6 +30,33 @@ pub use super::design::Style as MultStyle;
 /// The parallel architecture (registry entry).
 pub struct Parallel;
 
+/// Solve the constant-multiplication networks of layer `k` for a fully
+/// parallel datapath and embed them in `b` — shared by the combinational
+/// [`Parallel`] design and the layer-pipelined variant
+/// (`hw::pipelined::PipelinedParallel`), so the two can never drift on
+/// what hardware a style instantiates.
+pub(super) fn solve_layer_graphs(
+    b: &mut DesignBuilder,
+    qann: &QuantizedAnn,
+    k: usize,
+    style: Style,
+    arch: &str,
+) -> Vec<usize> {
+    match style {
+        Style::Behavioral => {
+            // per-row DBR trees realize product terms and their sum
+            // in one expansion (the synthesis view of `sum(w*x)`)
+            vec![b.solved(&LinearTargets::cmvm(&qann.weights[k]), Tier::Dbr)]
+        }
+        Style::Cavm => qann.weights[k]
+            .iter()
+            .map(|row| b.solved(&LinearTargets::cavm(row), Tier::Cse))
+            .collect(),
+        Style::Cmvm => vec![b.solved(&LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)],
+        Style::Mcm => panic!("{arch} layer graphs have no mcm style (use cavm/cmvm)"),
+    }
+}
+
 impl Architecture for Parallel {
     fn kind(&self) -> ArchKind {
         ArchKind::Parallel
@@ -54,19 +81,7 @@ impl Architecture for Parallel {
             let acc_bits = report::layer_acc_bits(qann, k);
 
             // constant-multiplication network realizing the inner products
-            let gis: Vec<usize> = match style {
-                Style::Behavioral => {
-                    // per-row DBR trees realize product terms and their sum
-                    // in one expansion (the synthesis view of `sum(w*x)`)
-                    vec![b.solved(&LinearTargets::cmvm(&qann.weights[k]), Tier::Dbr)]
-                }
-                Style::Cavm => qann.weights[k]
-                    .iter()
-                    .map(|row| b.solved(&LinearTargets::cavm(row), Tier::Cse))
-                    .collect(),
-                Style::Cmvm => vec![b.solved(&LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)],
-                Style::Mcm => panic!("parallel architecture has no mcm style (use cavm/cmvm)"),
-            };
+            let gis: Vec<usize> = solve_layer_graphs(&mut b, qann, k, style, "parallel");
             let net = b.block(BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges }, 1, 1.0);
 
             // bias adder + activation per neuron

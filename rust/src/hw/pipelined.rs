@@ -1,0 +1,226 @@
+//! Layer-pipelined parallel architecture — the fourth registry entry and
+//! the natural fourth point on the paper's area/latency trade-off curve.
+//!
+//! The combinational parallel design (Sec. III-A) pays the *sum* of every
+//! layer's critical path on each sample; the Sec. III time-multiplexed
+//! designs trade latency for area. This variant keeps the fully parallel
+//! per-layer datapaths but places register banks between layers: the
+//! clock period is set by the *slowest layer* instead of the whole chain,
+//! one sample completes per cycle once the pipe is full, and a single
+//! inference takes `stages + 1` cycles (a registered input stage plus one
+//! register bank per layer, the last doubling as the output register).
+//! Throughput-oriented FPGA ANN implementations have used exactly this
+//! structure since Won (2007); multiplierless pipelined datapaths are the
+//! regime where shift-add ANNs win on energy (Sarwar et al., 2016).
+//!
+//! Constant-multiplication styles: `Behavioral | Cavm | Cmvm` are shared
+//! verbatim with the combinational design
+//! ([`parallel::solve_layer_graphs`]), and `Mcm` brings the paper's
+//! Sec. V-B product-graph idea to the parallel datapath — one single-input
+//! MCM block per layer *input column* computes every `w[m][i] · x_i`
+//! product, and per-neuron adder trees sum the columns
+//! ([`LayerCompute::McmColumns`]).
+//!
+//! This module only *elaborates* the design (blocks, per-stage paths,
+//! layer plans); cost, simulation and HDL are all derived from the
+//! resulting [`Design`] by `hw::design`, `hw::netsim`, `hw::serve` and
+//! `hw::verilog`.
+
+use super::design::{
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, Schedule,
+    Style,
+};
+use super::parallel;
+use super::report::{self, HwReport};
+use super::TechLib;
+use crate::ann::quant::QuantizedAnn;
+
+/// The layer-pipelined parallel architecture (registry entry).
+pub struct PipelinedParallel;
+
+/// Depth of a balanced binary adder tree over `n` inputs.
+fn tree_depth(n: usize) -> usize {
+    n.max(1).next_power_of_two().trailing_zeros() as usize
+}
+
+impl Architecture for PipelinedParallel {
+    fn kind(&self) -> ArchKind {
+        ArchKind::Pipelined
+    }
+
+    fn styles(&self) -> &'static [Style] {
+        &[Style::Behavioral, Style::Cavm, Style::Cmvm, Style::Mcm]
+    }
+
+    fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
+        let st = &qann.structure;
+        let stages = st.num_layers();
+        let mut b = DesignBuilder::new(ArchKind::Pipelined, style, Schedule::Pipelined { stages });
+
+        // registered input stage (stage 0 of the pipe)
+        b.block(BlockKind::Register { bits: 8 }, st.inputs, 1.0);
+
+        for k in 0..stages {
+            let n_in = st.layer_inputs(k);
+            let n_out = st.layer_outputs(k);
+            let in_range = report::layer_input_range(qann, k);
+            let acc_bits = report::layer_acc_bits(qann, k);
+
+            // the stage's register-to-register path: constant-mult network,
+            // (mcm only) per-neuron adder tree, bias, activation, stage reg
+            let mut path: Vec<usize> = Vec::new();
+
+            let compute = match style {
+                Style::Mcm => {
+                    // one single-input MCM product graph per input column,
+                    // instances shared with the tuner pricer
+                    let gis: Vec<usize> = design::mcm_column_instances(qann, k)
+                        .iter()
+                        .map(|(t, tier)| b.solved(t, *tier))
+                        .collect();
+                    let net = b.block(
+                        BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: vec![in_range] },
+                        1,
+                        1.0,
+                    );
+                    // per-neuron adder trees summing the column products:
+                    // n_in - 1 adders per neuron, log2-depth on the path
+                    let tree = b.block(
+                        BlockKind::Adder { bits: acc_bits },
+                        n_out * n_in.saturating_sub(1),
+                        1.0,
+                    );
+                    path.push(net);
+                    for _ in 0..tree_depth(n_in) {
+                        path.push(tree);
+                    }
+                    LayerCompute::McmColumns(gis)
+                }
+                _ => {
+                    // graph styles shared verbatim with the combinational design
+                    let gis = parallel::solve_layer_graphs(&mut b, qann, k, style, "pipelined");
+                    let ranges = vec![in_range; n_in];
+                    let net = b.block(
+                        BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges },
+                        1,
+                        1.0,
+                    );
+                    path.push(net);
+                    LayerCompute::Graphs(gis)
+                }
+            };
+
+            // bias adder + activation per neuron, then the stage register
+            // bank (the last bank is the output register)
+            let bias = b.block(BlockKind::Adder { bits: acc_bits }, n_out, 1.0);
+            let act = b.block(BlockKind::ActivationUnit { acc_bits }, n_out, 1.0);
+            let reg = b.block(BlockKind::Register { bits: 8 }, n_out, 1.0);
+            path.extend([bias, act, reg]);
+            b.path(path);
+
+            b.layer(LayerPlan { n_in, n_out, acc_bits, in_range, compute });
+        }
+
+        b.finish(qann)
+    }
+}
+
+/// Price the pipelined design of `qann` (elaborate + generic cost walk).
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+    PipelinedParallel.elaborate(qann, style).cost(lib)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::hw::parallel::Parallel;
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn latency_is_stages_plus_one() {
+        let q = qann("16-16-10", 6, 1);
+        let r = build(&TechLib::tsmc40(), &q, Style::Cmvm);
+        assert_eq!(r.cycles, 3, "2 layers -> 3-cycle latency");
+        assert!((r.latency_ns - 3.0 * r.clock_ns).abs() < 1e-12);
+        assert!(r.area_um2 > 0.0 && r.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn shorter_clock_than_combinational_but_more_area() {
+        // the whole point of the pipe: the clock is the slowest stage,
+        // not the sum of stages; the register banks cost area
+        let lib = TechLib::tsmc40();
+        for structure in ["16-16-10", "16-16-10-10"] {
+            let q = qann(structure, 6, 2);
+            for style in [Style::Behavioral, Style::Cavm, Style::Cmvm] {
+                let comb = parallel::build(&lib, &q, style);
+                let pipe = build(&lib, &q, style);
+                assert!(
+                    pipe.clock_ns < comb.clock_ns,
+                    "{structure} {}: pipelined clock {} !< combinational {}",
+                    style.name(),
+                    pipe.clock_ns,
+                    comb.clock_ns
+                );
+                assert!(pipe.area_um2 > comb.area_um2, "{structure} registers cost area");
+                assert_eq!(pipe.adders, comb.adders, "same graph styles, same op counts");
+            }
+        }
+    }
+
+    #[test]
+    fn single_layer_pipe_degenerates_to_two_cycles() {
+        let q = qann("16-10", 6, 3);
+        let d = PipelinedParallel.elaborate(&q, Style::Behavioral);
+        assert_eq!(d.schedule, Schedule::Pipelined { stages: 1 });
+        assert_eq!(d.cycles(), 2, "input reg + output reg");
+    }
+
+    #[test]
+    fn mcm_style_routes_products_through_column_graphs() {
+        let q = qann("16-10-10", 6, 4);
+        let d = PipelinedParallel.elaborate(&q, Style::Mcm);
+        assert_eq!(d.layers.len(), 2);
+        for (k, layer) in d.layers.iter().enumerate() {
+            let LayerCompute::McmColumns(gis) = &layer.compute else {
+                panic!("mcm layers are column-computed");
+            };
+            assert_eq!(gis.len(), layer.n_in, "one product graph per input column");
+            for (i, &gi) in gis.iter().enumerate() {
+                // graph i outputs one product per neuron, in neuron order
+                assert_eq!(d.graphs[gi].outputs.len(), layer.n_out, "layer {k} column {i}");
+                assert_eq!(d.graphs[gi].num_inputs, 1);
+            }
+        }
+        assert!(d.adder_ops > 0);
+    }
+
+    #[test]
+    fn per_stage_paths_one_per_layer() {
+        let q = qann("16-16-10-10", 6, 5);
+        let d = PipelinedParallel.elaborate(&q, Style::Cmvm);
+        assert_eq!(d.paths.len(), 3, "one register-to-register path per stage");
+        let c = Parallel.elaborate(&q, Style::Cmvm);
+        assert_eq!(c.paths.len(), 1, "the combinational design has one chain");
+    }
+
+    #[test]
+    fn adder_tree_depth() {
+        assert_eq!(tree_depth(1), 0);
+        assert_eq!(tree_depth(2), 1);
+        assert_eq!(tree_depth(3), 2);
+        assert_eq!(tree_depth(16), 4);
+        assert_eq!(tree_depth(17), 5);
+    }
+}

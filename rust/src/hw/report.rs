@@ -12,7 +12,7 @@ use crate::num::signed_bitwidth;
 /// training algorithm and structure).
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwReport {
-    /// architecture: "parallel" | "smac_neuron" | "smac_ann"
+    /// architecture: "parallel" | "pipelined" | "smac_neuron" | "smac_ann"
     pub arch: &'static str,
     /// constant-multiplication style: "behavioral" | "cavm" | "cmvm" | "mcm"
     pub style: &'static str,

@@ -130,6 +130,13 @@ pub struct BatchRun {
     pub len: usize,
     /// clock cycles of one inference (identical across the batch)
     pub cycles: usize,
+    /// clock cycles to push the whole batch through the design — where
+    /// pipelining actually pays: the sequential schedules serialize
+    /// inferences (`len × cycles`), the combinational datapath streams one
+    /// sample per (long) cycle, and the pipelined schedule fills once and
+    /// then retires one sample per cycle (`stages + len`); see
+    /// [`Schedule::throughput_cycles`]
+    pub throughput_cycles: usize,
 }
 
 impl BatchRun {
@@ -174,7 +181,9 @@ pub fn simulate_batch(design: &Design, inputs: &BatchInputs) -> BatchRun {
         "batch feature arity mismatch"
     );
     match design.schedule {
-        Schedule::Combinational => batch_combinational(design, inputs),
+        // the pipelined datapath computes combinational feedforward values;
+        // only the cycle accounting (latency + batch fill/drain) differs
+        Schedule::Combinational | Schedule::Pipelined { .. } => batch_feedforward(design, inputs),
         Schedule::LayerSequential => batch_layer_sequential(design, inputs),
         Schedule::NeuronSequential => batch_neuron_sequential(design, inputs),
     }
@@ -228,10 +237,13 @@ fn eval_graph_batch(g: &AdderGraph, xs: &[i128], n: usize) -> Vec<i128> {
     out
 }
 
-/// Combinational schedule, batched: every embedded adder graph's nodes
-/// ripple once per batch (inner loop over samples), then bias and
-/// activation; one output-register cycle, as per input.
-fn batch_combinational(design: &Design, inputs: &BatchInputs) -> BatchRun {
+/// Feedforward schedules (combinational and pipelined), batched: every
+/// embedded adder graph's nodes ripple once per batch (inner loop over
+/// samples), then bias and activation. The per-input-column MCM graphs of
+/// the pipelined `mcm` style are single-input and linear, so each column
+/// is evaluated **once per batch** at x = 1 and scaled per sample — the
+/// same unit-product linearity the MAC schedules exploit.
+fn batch_feedforward(design: &Design, inputs: &BatchInputs) -> BatchRun {
     let qann = &design.qann;
     let n = inputs.len();
     // current layer activations, SoA: cur[i * n + s]
@@ -241,19 +253,39 @@ fn batch_combinational(design: &Design, inputs: &BatchInputs) -> BatchRun {
     }
     let mut n_cur = inputs.features();
     for (k, layer) in design.layers.iter().enumerate() {
-        let LayerCompute::Graphs(gis) = &layer.compute else {
-            panic!("combinational layers are graph-computed");
-        };
-        let inner: Vec<i128> = if gis.len() == 1 {
-            eval_graph_batch(&design.graphs[gis[0]], &cur, n)
-        } else {
-            // CAVM: one single-output graph per neuron over the same inputs
-            let mut inner = vec![0i128; layer.n_out * n];
-            for (m, &gi) in gis.iter().enumerate() {
-                let o = eval_graph_batch(&design.graphs[gi], &cur, n);
-                inner[m * n..(m + 1) * n].copy_from_slice(&o[..n]);
+        let inner: Vec<i128> = match &layer.compute {
+            LayerCompute::Graphs(gis) => {
+                if gis.len() == 1 {
+                    eval_graph_batch(&design.graphs[gis[0]], &cur, n)
+                } else {
+                    // CAVM: one single-output graph per neuron over the same inputs
+                    let mut inner = vec![0i128; layer.n_out * n];
+                    for (m, &gi) in gis.iter().enumerate() {
+                        let o = eval_graph_batch(&design.graphs[gi], &cur, n);
+                        inner[m * n..(m + 1) * n].copy_from_slice(&o[..n]);
+                    }
+                    inner
+                }
             }
-            inner
+            LayerCompute::McmColumns(gis) => {
+                let mut inner = vec![0i128; layer.n_out * n];
+                for (i, &gi) in gis.iter().enumerate() {
+                    // unit products of column i: w[m][i] per neuron m
+                    let units = design.graphs[gi].eval(&[1]);
+                    let xs = &cur[i * n..(i + 1) * n];
+                    for (m, &u) in units.iter().enumerate() {
+                        if u == 0 {
+                            continue;
+                        }
+                        let dst = &mut inner[m * n..(m + 1) * n];
+                        for (d, &x) in dst.iter_mut().zip(xs) {
+                            *d += u * x;
+                        }
+                    }
+                }
+                inner
+            }
+            LayerCompute::Mac { .. } => panic!("feedforward schedules are graph-computed"),
         };
         cur.clear();
         for m in 0..layer.n_out {
@@ -267,7 +299,13 @@ fn batch_combinational(design: &Design, inputs: &BatchInputs) -> BatchRun {
         n_cur = layer.n_out;
     }
     let outputs: Vec<i32> = cur.iter().map(|&v| v as i32).collect();
-    BatchRun { outputs, n_outputs: n_cur, len: n, cycles: 1 }
+    BatchRun {
+        outputs,
+        n_outputs: n_cur,
+        len: n,
+        cycles: design.cycles(),
+        throughput_cycles: design.schedule.throughput_cycles(&qann.structure, n),
+    }
 }
 
 /// Per-weight unit products of a MAC layer's MCM graph: the graph has one
@@ -340,7 +378,13 @@ fn batch_layer_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
     }
     let n_outputs = design.layers.last().map_or(inputs.features(), |l| l.n_out);
     let outputs: Vec<i32> = cur.iter().map(|&v| v as i32).collect();
-    BatchRun { outputs, n_outputs, len: n, cycles }
+    BatchRun {
+        outputs,
+        n_outputs,
+        len: n,
+        cycles,
+        throughput_cycles: design.schedule.throughput_cycles(&qann.structure, n),
+    }
 }
 
 /// SMAC_ANN schedule, batched: one MAC serves every neuron serially,
@@ -381,7 +425,13 @@ fn batch_neuron_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
     }
     let n_outputs = design.layers.last().map_or(inputs.features(), |l| l.n_out);
     let outputs: Vec<i32> = regs.iter().map(|&v| v as i32).collect();
-    BatchRun { outputs, n_outputs, len: n, cycles }
+    BatchRun {
+        outputs,
+        n_outputs,
+        len: n,
+        cycles,
+        throughput_cycles: design.schedule.throughput_cycles(&qann.structure, n),
+    }
 }
 
 /// Hardware accuracy over `samples` through the batched serving path:
@@ -484,6 +534,16 @@ struct Shard {
     order: VecDeque<DesignKey>,
 }
 
+/// Lock a shard, recovering from poisoning: a thread that panicked while
+/// holding a shard (e.g. out of a panicking fetch) must not brick the
+/// process-wide cache for every later consumer. Shard state is safe to
+/// reuse after a panic — the map/order pair is only appended to or
+/// cleared under the lock, and a torn FIFO entry at worst re-evicts —
+/// so we take the guard out of the `PoisonError` instead of unwrapping.
+fn lock_shard(shard: &Mutex<Shard>) -> std::sync::MutexGuard<'_, Shard> {
+    shard.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Thread-safe content-addressed cache in front of design elaboration.
 /// One process-wide instance ([`DesignCache::global`]) serves every
 /// consumer; fresh instances are for isolation in tests.
@@ -525,7 +585,7 @@ impl DesignCache {
     }
 
     fn lookup(&self, key: &DesignKey) -> Option<Arc<Design>> {
-        let d = self.shard(key).lock().unwrap().map.get(key).cloned();
+        let d = lock_shard(self.shard(key)).map.get(key).cloned();
         if d.is_some() {
             self.hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -549,7 +609,7 @@ impl DesignCache {
         // overlap; a racing duplicate elaboration is harmless (elaboration
         // is deterministic, first insert wins)
         let solved = self.elaborate(qann, arch, style);
-        let mut shard = self.shard(&key).lock().unwrap();
+        let mut shard = lock_shard(self.shard(&key));
         if let Some(existing) = shard.map.get(&key) {
             return existing.clone();
         }
@@ -583,7 +643,7 @@ impl DesignCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum(),
+            entries: self.shards.iter().map(|s| lock_shard(s).map.len()).sum(),
             evictions: self.evictions.load(Ordering::Relaxed),
         }
     }
@@ -591,7 +651,7 @@ impl DesignCache {
     /// Drop every cached design and zero the counters (benches).
     pub fn reset(&self) {
         for s in &self.shards {
-            let mut s = s.lock().unwrap();
+            let mut s = lock_shard(s);
             s.map.clear();
             s.order.clear();
         }
@@ -693,7 +753,70 @@ mod tests {
             assert_eq!(run.len, 0);
             assert!(run.outputs.is_empty());
             assert_eq!(run.cycles, d.cycles(), "{} {}", a.name(), s.name());
+            assert_eq!(run.throughput_cycles, 0, "no samples, no throughput cycles");
         }
+    }
+
+    #[test]
+    fn pipelined_batch_fills_once_then_streams() {
+        let q = qann("16-16-10", 6, 41);
+        let rows = random_rows(33, 16, 6);
+        let batch = BatchInputs::from_rows(&rows);
+        for style in [Style::Behavioral, Style::Cavm, Style::Cmvm, Style::Mcm] {
+            let d = design_for(&q, ArchKind::Pipelined, style);
+            let run = simulate_batch(&d, &batch);
+            assert_eq!(run.cycles, 3, "2 stages + 1 latency");
+            assert_eq!(run.throughput_cycles, 2 + rows.len(), "fill once, then 1/cycle");
+            for (s, row) in rows.iter().enumerate() {
+                let per = simulate(&d, row);
+                assert_eq!(run.sample_outputs(s), per.outputs, "{} sample {s}", style.name());
+                assert_eq!(run.cycles, per.cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn poisoned_shard_locks_recover() {
+        let cache = DesignCache::new();
+        let q = qann("16-10", 6, 51);
+        let a = cache.design(&q, ArchKind::Parallel, Style::Cmvm);
+        // poison every shard: a thread panics while holding each lock
+        for shard in &cache.shards {
+            std::thread::scope(|scope| {
+                let h = scope.spawn(|| {
+                    let _guard = shard.lock().unwrap();
+                    panic!("poison the shard");
+                });
+                assert!(h.join().is_err());
+            });
+            assert!(shard.is_poisoned());
+        }
+        // hits, misses, stats and reset all still work afterwards
+        let b = cache.design(&q, ArchKind::Parallel, Style::Cmvm);
+        assert!(Arc::ptr_eq(&a, &b), "hit through a poisoned shard");
+        let c = cache.design(&q, ArchKind::SmacAnn, Style::Behavioral);
+        assert_eq!(c.arch, ArchKind::SmacAnn);
+        assert!(cache.stats().entries >= 2);
+        cache.reset();
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn panicking_fetch_does_not_brick_the_cache() {
+        // regression: a fetch whose elaboration panics (an unsupported
+        // design point) must leave the process-wide cache serviceable for
+        // every later hit and miss
+        let cache = DesignCache::new();
+        let q = qann("16-10", 6, 52);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.design(&q, ArchKind::Parallel, Style::Mcm)
+        }));
+        assert!(r.is_err(), "parallel has no mcm style");
+        let a = cache.design(&q, ArchKind::Parallel, Style::Cmvm);
+        let b = cache.design(&q, ArchKind::Parallel, Style::Cmvm);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert!(s.hits >= 1 && s.entries >= 1, "{s:?}");
     }
 
     #[test]

@@ -32,6 +32,7 @@ const QBITS: u32 = 7;
 pub fn verilog(design: &Design, module: &str) -> String {
     match design.arch {
         ArchKind::Parallel => emit_parallel(design, module),
+        ArchKind::Pipelined => emit_pipelined(design, module),
         ArchKind::SmacNeuron => emit_smac_neuron(design, module),
         ArchKind::SmacAnn => emit_smac_ann(design, module),
     }
@@ -117,6 +118,77 @@ fn emit_graph(out: &mut String, prefix: &str, g: &AdderGraph, ranges: &[(i64, i6
         .collect()
 }
 
+/// Emit the combinational inner-product network of one feedforward layer
+/// (layer inputs already bound to `{prefix}_x*`); returns one inner-product
+/// expression per neuron. Shared by the combinational parallel and the
+/// layer-pipelined emitters — multiplierless styles instantiate the
+/// design's embedded graphs, behavioral leaves `*` to the synthesis tool.
+fn emit_layer_inner(v: &mut String, design: &Design, k: usize, prefix: &str) -> Vec<String> {
+    let qann = &design.qann;
+    let layer = &design.layers[k];
+    let ranges = vec![layer.in_range; layer.n_in];
+    match (&layer.compute, design.style) {
+        (LayerCompute::Graphs(_), Style::Behavioral) => {
+            // leave the constant multiplications to the synthesis tool
+            (0..layer.n_out)
+                .map(|m| {
+                    let terms: Vec<String> = qann.weights[k][m]
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &w)| w != 0)
+                        .map(|(i, &w)| format!("({w}) * {prefix}_x{i}"))
+                        .collect();
+                    if terms.is_empty() {
+                        "0".into()
+                    } else {
+                        terms.join(" + ")
+                    }
+                })
+                .collect()
+        }
+        (LayerCompute::Graphs(gis), Style::Cavm) => {
+            let mut exprs = Vec::new();
+            for (m, &gi) in gis.iter().enumerate() {
+                let sub = format!("{prefix}r{m}");
+                for i in 0..layer.n_in {
+                    let _ = writeln!(v, "  wire signed [7:0] {sub}_x{i} = {prefix}_x{i};");
+                }
+                exprs.extend(emit_graph(v, &sub, &design.graphs[gi], &ranges));
+            }
+            exprs
+        }
+        (LayerCompute::Graphs(gis), Style::Cmvm) => {
+            emit_graph(v, prefix, &design.graphs[gis[0]], &ranges)
+        }
+        (LayerCompute::McmColumns(gis), _) => {
+            // per-input-column MCM product graphs (pipelined mcm style):
+            // column i's taps are the products w[m][i] * x_i; each neuron
+            // sums its tap across columns
+            let mut col_taps: Vec<Vec<String>> = Vec::with_capacity(gis.len());
+            for (i, &gi) in gis.iter().enumerate() {
+                let sub = format!("{prefix}c{i}");
+                let _ = writeln!(v, "  wire signed [7:0] {sub}_x0 = {prefix}_x{i};");
+                col_taps.push(emit_graph(v, &sub, &design.graphs[gi], &[layer.in_range]));
+            }
+            (0..layer.n_out)
+                .map(|m| {
+                    let terms: Vec<String> = col_taps
+                        .iter()
+                        .map(|taps| taps[m].clone())
+                        .filter(|t| t != "0")
+                        .collect();
+                    if terms.is_empty() {
+                        "0".into()
+                    } else {
+                        terms.join(" + ")
+                    }
+                })
+                .collect()
+        }
+        (_, style) => panic!("feedforward layers have no {} realization", style.name()),
+    }
+}
+
 /// Parallel-architecture Verilog (paper Fig. 4 / Sec. V-A). `x*` ports are
 /// signed Q1.7 inputs, `y*` registered signed Q1.7 outputs. Multiplierless
 /// styles instantiate the design's embedded graphs.
@@ -146,48 +218,12 @@ fn emit_parallel(design: &Design, module: &str) -> String {
 
     for (k, layer) in design.layers.iter().enumerate() {
         let acc_w = layer.acc_bits.max(2);
-        let ranges = vec![layer.in_range; layer.n_in];
         let prefix = format!("l{k}");
         // bind the graph inputs
         for (i, src) in layer_in.iter().enumerate() {
             let _ = writeln!(v, "  wire signed [7:0] {prefix}_x{i} = {src};");
         }
-        let LayerCompute::Graphs(gis) = &layer.compute else {
-            panic!("parallel layers are graph-computed");
-        };
-        let exprs: Vec<String> = match design.style {
-            Style::Behavioral => {
-                // leave the constant multiplications to the synthesis tool
-                (0..layer.n_out)
-                    .map(|m| {
-                        let terms: Vec<String> = qann.weights[k][m]
-                            .iter()
-                            .enumerate()
-                            .filter(|(_, &w)| w != 0)
-                            .map(|(i, &w)| format!("({w}) * {prefix}_x{i}"))
-                            .collect();
-                        if terms.is_empty() {
-                            "0".into()
-                        } else {
-                            terms.join(" + ")
-                        }
-                    })
-                    .collect()
-            }
-            Style::Cavm => {
-                let mut exprs = Vec::new();
-                for (m, &gi) in gis.iter().enumerate() {
-                    let sub = format!("{prefix}r{m}");
-                    for i in 0..layer.n_in {
-                        let _ = writeln!(v, "  wire signed [7:0] {sub}_x{i} = {prefix}_x{i};");
-                    }
-                    exprs.extend(emit_graph(&mut v, &sub, &design.graphs[gi], &ranges));
-                }
-                exprs
-            }
-            Style::Cmvm => emit_graph(&mut v, &prefix, &design.graphs[gis[0]], &ranges),
-            other => panic!("parallel has no {} style", other.name()),
-        };
+        let exprs = emit_layer_inner(&mut v, design, k, &prefix);
         let mut next = Vec::with_capacity(layer.n_out);
         for (m, e) in exprs.iter().enumerate() {
             let b = qann.biases[k][m];
@@ -208,6 +244,82 @@ fn emit_parallel(design: &Design, module: &str) -> String {
         let _ = writeln!(v, "    y{m} <= {src};");
     }
     let _ = writeln!(v, "  end\nendmodule");
+    v
+}
+
+/// Layer-pipelined parallel Verilog (`hw::pipelined`): the same per-layer
+/// combinational datapaths as [`emit_parallel`], with a register bank
+/// between stages — a registered input stage, one `always` block per
+/// stage, and the last stage's bank doubling as the output registers. One
+/// sample completes per clock once the pipe is full; latency is
+/// `stages + 1` cycles.
+fn emit_pipelined(design: &Design, module: &str) -> String {
+    let qann = &design.qann;
+    let st = &qann.structure;
+    let n_out = st.layer_outputs(st.num_layers() - 1);
+    let max_acc = design.layers.iter().map(|l| l.acc_bits).max().unwrap_or(8);
+
+    let mut v = String::new();
+    let _ = writeln!(v, "// generated by SIMURG-RS: pipelined / {} / {}", design.style.name(), st);
+    let _ = write!(v, "module {module} (\n  input clk,\n");
+    for i in 0..st.inputs {
+        let _ = writeln!(v, "  input signed [7:0] x{i},");
+    }
+    for m in 0..n_out {
+        let c = if m + 1 == n_out { "" } else { "," };
+        let _ = writeln!(v, "  output reg signed [7:0] y{m}{c}");
+    }
+    let _ = writeln!(v, ");");
+    v.push_str(&clamp_functions(max_acc));
+
+    // stage 0: the registered input bank
+    for i in 0..st.inputs {
+        let _ = writeln!(v, "  reg signed [7:0] s0_x{i};");
+    }
+    let _ = writeln!(v, "  always @(posedge clk) begin");
+    for i in 0..st.inputs {
+        let _ = writeln!(v, "    s0_x{i} <= x{i};");
+    }
+    let _ = writeln!(v, "  end");
+
+    for (k, layer) in design.layers.iter().enumerate() {
+        let acc_w = layer.acc_bits.max(2);
+        let prefix = format!("l{k}");
+        // the stage computes from the previous stage's register bank
+        for i in 0..layer.n_in {
+            let _ = writeln!(v, "  wire signed [7:0] {prefix}_x{i} = s{k}_x{i};");
+        }
+        let exprs = emit_layer_inner(&mut v, design, k, &prefix);
+        for (m, e) in exprs.iter().enumerate() {
+            let b = qann.biases[k][m];
+            let _ = writeln!(
+                v,
+                "  wire signed [{msb}:0] {prefix}_acc{m} = {e} + {acc_w}'sd0 + ({b});",
+                msb = acc_w - 1
+            );
+            let z = activation_expr(qann.activations[k], &format!("{prefix}_acc{m}"), acc_w, qann.q);
+            let _ = writeln!(v, "  wire signed [7:0] {prefix}_z{m} = {z};");
+        }
+        // stage k+1 register bank (one always block per stage); the last
+        // bank is the output registers
+        if k + 1 < design.layers.len() {
+            for m in 0..layer.n_out {
+                let _ = writeln!(v, "  reg signed [7:0] s{}_x{m};", k + 1);
+            }
+            let _ = writeln!(v, "  always @(posedge clk) begin");
+            for m in 0..layer.n_out {
+                let _ = writeln!(v, "    s{}_x{m} <= {prefix}_z{m};", k + 1);
+            }
+            let _ = writeln!(v, "  end");
+        } else {
+            let _ = writeln!(v, "  always @(posedge clk) begin");
+            for m in 0..layer.n_out {
+                let _ = writeln!(v, "    y{m} <= {prefix}_z{m};");
+            }
+            let _ = writeln!(v, "  end");
+        }
+    }
+    let _ = writeln!(v, "endmodule");
     v
 }
 
@@ -533,31 +645,48 @@ pub fn smac_ann_verilog(qann: &QuantizedAnn, module: &str) -> String {
 
 /// Self-checking testbench with golden vectors from the bit-accurate
 /// simulator (`ann::sim`) — the files SIMURG generates "to verify the ANN
-/// design" (paper Sec. VI).
-pub fn testbench(qann: &QuantizedAnn, samples: &[Sample], dut: &str, cycles: usize) -> String {
+/// design" (paper Sec. VI). `control` selects the DUT handshake: the
+/// time-multiplexed architectures expose `rst`/`start`/`done`, the
+/// feedforward (parallel / pipelined) modules only `clk` — the testbench
+/// must connect exactly the ports the module declares or an external
+/// simulator rejects it at elaboration.
+pub fn testbench(qann: &QuantizedAnn, samples: &[Sample], dut: &str, cycles: usize, control: bool) -> String {
     let st = &qann.structure;
     let n_out = st.layer_outputs(st.num_layers() - 1);
     let mut v = String::new();
     let _ = writeln!(v, "// self-checking testbench for {dut} ({st})");
     let _ = writeln!(v, "`timescale 1ns/1ps\nmodule tb_{dut};");
-    let _ = writeln!(v, "  reg clk = 0; reg rst = 1; reg start = 0;");
+    if control {
+        let _ = writeln!(v, "  reg clk = 0; reg rst = 1; reg start = 0;");
+    } else {
+        let _ = writeln!(v, "  reg clk = 0;");
+    }
     for i in 0..st.inputs {
         let _ = writeln!(v, "  reg signed [7:0] x{i};");
     }
     for m in 0..n_out {
         let _ = writeln!(v, "  wire signed [7:0] y{m};");
     }
-    let _ = writeln!(v, "  wire done;");
-    let ports: Vec<String> = std::iter::once(".clk(clk), .rst(rst), .start(start)".to_string())
+    if control {
+        let _ = writeln!(v, "  wire done;");
+    }
+    let head = if control { ".clk(clk), .rst(rst), .start(start)" } else { ".clk(clk)" };
+    let mut ports: Vec<String> = std::iter::once(head.to_string())
         .chain((0..st.inputs).map(|i| format!(".x{i}(x{i})")))
         .chain((0..n_out).map(|m| format!(".y{m}(y{m})")))
-        .chain(std::iter::once(".done(done)".to_string()))
         .collect();
+    if control {
+        ports.push(".done(done)".to_string());
+    }
     let _ = writeln!(v, "  {dut} dut ({});", ports.join(", "));
     let _ = writeln!(v, "  always #1 clk = ~clk;");
     let _ = writeln!(v, "  integer errors = 0;");
     let _ = writeln!(v, "  initial begin");
-    let _ = writeln!(v, "    #4 rst = 0; start = 1;");
+    if control {
+        let _ = writeln!(v, "    #4 rst = 0; start = 1;");
+    } else {
+        let _ = writeln!(v, "    #4;");
+    }
     for s in samples {
         let x = s.features_q7();
         let golden = sim::forward(qann, &x);
@@ -578,9 +707,11 @@ pub fn testbench(qann: &QuantizedAnn, samples: &[Sample], dut: &str, cycles: usi
 }
 
 /// [`testbench`] for an elaborated design: golden vectors from the
-/// design's own net, run length from its schedule.
+/// design's own net, run length from its schedule, handshake ports from
+/// its architecture.
 pub fn testbench_for(design: &Design, samples: &[Sample], dut: &str) -> String {
-    testbench(&design.qann, samples, dut, design.cycles())
+    let control = matches!(design.arch, ArchKind::SmacNeuron | ArchKind::SmacAnn);
+    testbench(&design.qann, samples, dut, design.cycles(), control)
 }
 
 /// Cadence-style synthesis script (the paper's Sec. VII flow: RTL
@@ -659,6 +790,41 @@ mod tests {
         let nodes: usize = d.graphs.iter().map(|g| g.nodes.len()).sum();
         assert_eq!(nodes, d.adder_ops);
         let wires = v.lines().filter(|l| l.contains("<<<") && l.contains("wire signed")).count();
+        assert!(wires >= nodes, "expected >= {nodes} graph wires, got {wires}");
+    }
+
+    #[test]
+    fn pipelined_netlists_have_staged_registers() {
+        use crate::hw::pipelined::PipelinedParallel;
+        let q = qann("16-10-10");
+        for style in [Style::Behavioral, Style::Cavm, Style::Cmvm, Style::Mcm] {
+            let d = PipelinedParallel.elaborate(&q, style);
+            let v = verilog(&d, "ann_pipe");
+            assert!(v.contains("module ann_pipe"), "{}", style.name());
+            assert!(v.contains("reg signed [7:0] s0_x15"), "registered input stage");
+            assert!(v.contains("reg signed [7:0] s1_x9"), "inter-layer stage bank");
+            assert!(!v.contains("s2_x0"), "last bank is the output registers");
+            assert!(v.contains("y9 <= l1_z9"), "outputs driven by the last stage");
+            // one always block per stage: input bank + one per layer
+            assert_eq!(
+                v.matches("always @(posedge clk)").count(),
+                1 + q.structure.num_layers(),
+                "{}",
+                style.name()
+            );
+            if style == Style::Behavioral {
+                assert!(v.contains(") *"), "behavioral must keep `*`");
+            } else {
+                assert!(!v.contains(") *"), "multiplierless must not multiply");
+            }
+        }
+        // the mcm style instantiates one product graph per input column
+        let d = PipelinedParallel.elaborate(&q, Style::Mcm);
+        let v = verilog(&d, "ann_pipe");
+        assert!(v.contains("l0c0_x0"), "column 0 graph input binding");
+        assert!(v.contains("l0c15_x0"), "column 15 graph input binding");
+        let nodes: usize = d.graphs.iter().map(|g| g.nodes.len()).sum();
+        let wires = v.lines().filter(|l| l.contains("wire signed") && l.contains("<<<")).count();
         assert!(wires >= nodes, "expected >= {nodes} graph wires, got {wires}");
     }
 

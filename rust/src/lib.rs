@@ -3,12 +3,13 @@
 //! Reproduction of *"Efficient Hardware Realizations of Feedforward
 //! Artificial Neural Networks"* (Nojehdeh, Parvin, Altun, 2021): a CAD
 //! flow that takes a trained feedforward ANN and produces optimized
-//! hardware realizations under three design architectures — **parallel**,
-//! **SMAC_NEURON** (one multiply–accumulate block per neuron) and
-//! **SMAC_ANN** (a single MAC block for the whole network) — with
-//! hardware-aware post-training (minimum quantization + weight tuning)
-//! and multiplierless shift-adds realizations of the constant
-//! multiplications (MCM / CAVM / CMVM).
+//! hardware realizations under the paper's three design architectures —
+//! **parallel**, **SMAC_NEURON** (one multiply–accumulate block per
+//! neuron) and **SMAC_ANN** (a single MAC block for the whole network) —
+//! plus a **layer-pipelined parallel** variant this reproduction adds as
+//! the fourth registry entry, with hardware-aware post-training (minimum
+//! quantization + weight tuning) and multiplierless shift-adds
+//! realizations of the constant multiplications (MCM / CAVM / CMVM).
 //!
 //! Layering (see DESIGN.md):
 //! - this crate is **L3**: the coordinator / CAD tool;

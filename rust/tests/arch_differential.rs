@@ -1,0 +1,318 @@
+//! Cross-architecture differential test harness — the wall every new
+//! registry entry lands against.
+//!
+//! Property-based: a seeded [`simurg::num::Rng`] generates random
+//! [`QuantizedAnn`]s of varying structure, quantization, weight signs and
+//! weight-row shape (dense, zero-heavy, ±1-heavy, power-of-two, even-only
+//! and all-zero rows — the MCM edge cases), and every (architecture ×
+//! style) point of the registry runs a shared input corpus through both
+//! the per-input interpreter and the batched SoA path. The harness
+//! asserts, for every design point:
+//!
+//! 1. outputs are bit-identical to the float-free golden model
+//!    (`ann::sim::forward`) — and therefore bit-identical *across*
+//!    architectures;
+//! 2. the interpreter's cycle count matches each schedule's closed-form
+//!    formula (1 / stages+1 / Σ(ι+1) / Σ(ι+2)·η);
+//! 3. `simulate_batch` agrees with the per-input route on outputs and
+//!    cycles, and its batch throughput matches
+//!    `Schedule::throughput_cycles` (for the pipelined schedule:
+//!    `stages + batch_len`, fill once then one sample per cycle).
+//!
+//! On failure the harness shrinks by repeatedly halving the net (inputs
+//! and neurons per layer) while the failure reproduces, then reports the
+//! minimal failing case — so a regression in a 3-layer net usually
+//! arrives as a one-or-two-neuron reproducer.
+
+use simurg::ann::quant::QuantizedAnn;
+use simurg::ann::sim;
+use simurg::ann::structure::{Activation, AnnStructure};
+use simurg::hw::design::design_points;
+use simurg::hw::netsim::simulate;
+use simurg::hw::serve::{simulate_batch, BatchInputs};
+use simurg::hw::Architecture;
+use simurg::num::Rng;
+
+/// One random weight row of length `n`, drawn from one of the MCM
+/// edge-case shapes.
+fn random_row(rng: &mut Rng, n: usize, q: u32) -> Vec<i64> {
+    let max = 1i64 << (q + 1);
+    match rng.below(6) {
+        // dense random signs and magnitudes
+        0 => (0..n).map(|_| rng.below((2 * max) as usize) as i64 - max).collect(),
+        // zero-heavy (what the Sec. IV-B tuner produces)
+        1 => (0..n)
+            .map(|_| {
+                if rng.uniform() < 0.7 {
+                    0
+                } else {
+                    rng.below((2 * max) as usize) as i64 - max
+                }
+            })
+            .collect(),
+        // ±1-heavy (single-digit CSD terms)
+        2 => (0..n).map(|_| [-1i64, 0, 1][rng.below(3)]).collect(),
+        // powers of two with signs (pure-shift products, zero-op graphs)
+        3 => (0..n)
+            .map(|_| {
+                let p = 1i64 << rng.below(q as usize + 1);
+                if rng.uniform() < 0.5 {
+                    -p
+                } else {
+                    p
+                }
+            })
+            .collect(),
+        // even-only (forces sls > 0 in the SMAC stored-weight factoring)
+        4 => (0..n)
+            .map(|_| (rng.below(max as usize) as i64 - max / 2) & !1)
+            .collect(),
+        // all-zero row (is_zero graph outputs, dead neuron)
+        _ => vec![0; n],
+    }
+}
+
+/// A random quantized net: varying structure, q and activations, rows
+/// drawn per-neuron from [`random_row`].
+fn random_qann(rng: &mut Rng) -> QuantizedAnn {
+    let inputs = [4usize, 8, 16][rng.below(3)];
+    let layers = 1 + rng.below(3);
+    let neurons: Vec<usize> = (0..layers).map(|_| 2 + rng.below(9)).collect();
+    let structure = AnnStructure::new(inputs, &neurons);
+    let q = 4 + rng.below(4) as u32;
+    let hidden = [Activation::HTanh, Activation::ReLU, Activation::SatLin, Activation::Lin];
+    let activations: Vec<Activation> = (0..layers)
+        .map(|k| {
+            if k == layers - 1 {
+                [Activation::HSig, Activation::HTanh][rng.below(2)]
+            } else {
+                hidden[rng.below(hidden.len())]
+            }
+        })
+        .collect();
+    let weights: Vec<Vec<Vec<i64>>> = (0..layers)
+        .map(|k| {
+            let n_in = structure.layer_inputs(k);
+            (0..structure.layer_outputs(k)).map(|_| random_row(rng, n_in, q)).collect()
+        })
+        .collect();
+    let biases: Vec<Vec<i64>> = (0..layers)
+        .map(|k| {
+            let max = 1i64 << (q + 2);
+            (0..structure.layer_outputs(k))
+                .map(|_| rng.below((2 * max) as usize) as i64 - max)
+                .collect()
+        })
+        .collect();
+    QuantizedAnn { structure, weights, biases, q, activations }
+}
+
+/// A shared input corpus for one net (signed Q1.7 values, including the
+/// extremes).
+fn corpus(rng: &mut Rng, inputs: usize, n: usize) -> Vec<Vec<i32>> {
+    let mut rows: Vec<Vec<i32>> = (0..n)
+        .map(|_| (0..inputs).map(|_| rng.below(256) as i32 - 128).collect())
+        .collect();
+    rows.push(vec![0; inputs]);
+    rows.push(vec![127; inputs]);
+    rows.push(vec![-128; inputs]);
+    rows
+}
+
+/// The closed-form cycle count of one inference for an architecture, as
+/// stated in the paper (Sec. III) and in `hw::pipelined`.
+fn closed_form_cycles(arch: &str, st: &AnnStructure) -> usize {
+    match arch {
+        "parallel" => 1,
+        "pipelined" => st.num_layers() + 1,
+        "smac_neuron" => st.smac_neuron_cycles(),
+        "smac_ann" => st.smac_ann_cycles(),
+        other => panic!("unknown architecture {other}"),
+    }
+}
+
+/// Closed-form batch throughput cycles for an architecture.
+fn closed_form_throughput(arch: &str, st: &AnnStructure, n: usize) -> usize {
+    match arch {
+        "parallel" => n,
+        "pipelined" => st.num_layers() + n,
+        _ => n * closed_form_cycles(arch, st),
+    }
+}
+
+/// Run every registry design point of `qann` against the golden model
+/// over `rows`; `Err` carries a description of the first divergence.
+fn check(qann: &QuantizedAnn, rows: &[Vec<i32>]) -> Result<(), String> {
+    let st = &qann.structure;
+    let batch = BatchInputs::from_rows(rows);
+    for (arch, style) in design_points() {
+        let point = format!("{}/{}", arch.name(), style.name());
+        let design = arch.elaborate(qann, style);
+        if design.cycles() != closed_form_cycles(arch.name(), st) {
+            return Err(format!(
+                "{point}: schedule cycles {} != closed form {}",
+                design.cycles(),
+                closed_form_cycles(arch.name(), st)
+            ));
+        }
+        let run = simulate_batch(&design, &batch);
+        if run.throughput_cycles != closed_form_throughput(arch.name(), st, rows.len()) {
+            return Err(format!(
+                "{point}: batch throughput {} != closed form {}",
+                run.throughput_cycles,
+                closed_form_throughput(arch.name(), st, rows.len())
+            ));
+        }
+        for (s, row) in rows.iter().enumerate() {
+            let golden = sim::forward(qann, row);
+            let per = simulate(&design, row);
+            if per.outputs != golden {
+                return Err(format!(
+                    "{point} sample {s}: outputs {:?} != golden {:?}",
+                    per.outputs, golden
+                ));
+            }
+            if per.cycles != design.cycles() {
+                return Err(format!(
+                    "{point} sample {s}: interpreter took {} cycles, schedule says {}",
+                    per.cycles,
+                    design.cycles()
+                ));
+            }
+            if run.sample_outputs(s) != golden {
+                return Err(format!(
+                    "{point} sample {s}: batch outputs {:?} != golden {:?}",
+                    run.sample_outputs(s),
+                    golden
+                ));
+            }
+            if run.cycles != per.cycles {
+                return Err(format!(
+                    "{point}: batch cycles {} != per-input {}",
+                    run.cycles, per.cycles
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Halve the net (inputs and neurons per layer, floored at 1) by taking
+/// leading sub-slices of the weight matrices; `None` once it can shrink
+/// no further.
+fn halve(qann: &QuantizedAnn) -> Option<QuantizedAnn> {
+    let st = &qann.structure;
+    let inputs = (st.inputs / 2).max(1);
+    let neurons: Vec<usize> = st.neurons.iter().map(|&n| (n / 2).max(1)).collect();
+    if inputs == st.inputs && neurons == st.neurons {
+        return None;
+    }
+    let structure = AnnStructure::new(inputs, &neurons);
+    let weights: Vec<Vec<Vec<i64>>> = (0..structure.num_layers())
+        .map(|k| {
+            let n_in = structure.layer_inputs(k);
+            qann.weights[k][..structure.layer_outputs(k)]
+                .iter()
+                .map(|row| row[..n_in].to_vec())
+                .collect()
+        })
+        .collect();
+    let biases: Vec<Vec<i64>> = (0..structure.num_layers())
+        .map(|k| qann.biases[k][..structure.layer_outputs(k)].to_vec())
+        .collect();
+    Some(QuantizedAnn {
+        structure,
+        weights,
+        biases,
+        q: qann.q,
+        activations: qann.activations.clone(),
+    })
+}
+
+/// Check one net; on failure, shrink by halving while the failure
+/// reproduces and panic with the minimal reproducer.
+fn check_shrinking(net_index: usize, qann: &QuantizedAnn, rows: &[Vec<i32>]) {
+    let Err(first) = check(qann, rows) else {
+        return;
+    };
+    let mut failing = qann.clone();
+    let mut failure = first;
+    while let Some(smaller) = halve(&failing) {
+        let shrunk_rows: Vec<Vec<i32>> =
+            rows.iter().map(|r| r[..smaller.structure.inputs].to_vec()).collect();
+        match check(&smaller, &shrunk_rows) {
+            Err(e) => {
+                failing = smaller;
+                failure = e;
+            }
+            Ok(()) => break,
+        }
+    }
+    panic!(
+        "net #{net_index}: architectures diverge; minimal reproducer {} q={} acts={:?}\n\
+         weights={:?}\nbiases={:?}\n{failure}",
+        failing.structure, failing.q, failing.activations, failing.weights, failing.biases
+    );
+}
+
+#[test]
+fn all_architectures_agree_on_random_nets() {
+    // the acceptance bar: >= 64 random nets x every registry design point
+    let mut rng = Rng::new(0x51AC_D1FF);
+    for net_index in 0..64 {
+        let qann = random_qann(&mut rng);
+        let rows = corpus(&mut rng, qann.structure.inputs, 6);
+        check_shrinking(net_index, &qann, &rows);
+    }
+}
+
+#[test]
+fn all_architectures_agree_on_the_paper_benchmarks() {
+    // the five evaluation structures at the default quantization, with
+    // tuner-shaped (zero-heavy) weights mixed in
+    let mut rng = Rng::new(20260728);
+    for (i, st) in AnnStructure::paper_benchmarks().into_iter().enumerate() {
+        let layers = st.num_layers();
+        let q = 6u32;
+        let mut activations = vec![Activation::HTanh; layers];
+        activations[layers - 1] = Activation::HSig;
+        let weights: Vec<Vec<Vec<i64>>> = (0..layers)
+            .map(|k| {
+                (0..st.layer_outputs(k))
+                    .map(|_| random_row(&mut rng, st.layer_inputs(k), q))
+                    .collect()
+            })
+            .collect();
+        let biases: Vec<Vec<i64>> = (0..layers)
+            .map(|k| (0..st.layer_outputs(k)).map(|_| rng.below(128) as i64 - 64).collect())
+            .collect();
+        let qann = QuantizedAnn { structure: st, weights, biases, q, activations };
+        let rows = corpus(&mut rng, qann.structure.inputs, 8);
+        check_shrinking(1000 + i, &qann, &rows);
+    }
+}
+
+#[test]
+fn shrinker_halves_toward_a_minimal_structure() {
+    // the shrinker itself is load-bearing on failure day: halving must
+    // produce valid, strictly smaller nets down to 1-1...-1 and stop
+    let mut rng = Rng::new(7);
+    let mut qann = random_qann(&mut rng);
+    let mut steps = 0usize;
+    while let Some(smaller) = halve(&qann) {
+        assert!(smaller.structure.inputs <= qann.structure.inputs);
+        let shrank = smaller.structure.total_neurons() < qann.structure.total_neurons()
+            || smaller.structure.inputs < qann.structure.inputs;
+        assert!(shrank, "halving must make progress");
+        // the shrunk net is still well-formed: every design point runs
+        let x: Vec<i32> = vec![1; smaller.structure.inputs];
+        for (arch, style) in design_points() {
+            let d = arch.elaborate(&smaller, style);
+            assert_eq!(simulate(&d, &x).outputs, sim::forward(&smaller, &x));
+        }
+        qann = smaller;
+        steps += 1;
+        assert!(steps < 32, "halving must terminate");
+    }
+    assert!(qann.structure.inputs == 1 && qann.structure.neurons.iter().all(|&n| n == 1));
+}

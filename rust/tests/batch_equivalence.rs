@@ -113,8 +113,13 @@ fn smac_mcm_product_routes_are_exercised_and_equivalent() {
             continue;
         }
         let design = arch.elaborate(&qann, style);
+        // MAC architectures reference a shared product graph per layer;
+        // the pipelined datapath routes through per-column product graphs
         let routed = design.layers.iter().any(|l| {
-            matches!(&l.compute, LayerCompute::Mac { mcm: Some(_), .. })
+            matches!(
+                &l.compute,
+                LayerCompute::Mac { mcm: Some(_), .. } | LayerCompute::McmColumns(_)
+            )
         });
         assert!(routed, "{} mcm design must reference a product graph", arch.name());
         let run = simulate_batch(&design, &batch);
@@ -122,6 +127,68 @@ fn smac_mcm_product_routes_are_exercised_and_equivalent() {
             let per = simulate(&design, row);
             assert_eq!(run.sample_outputs(s), per.outputs, "{} mcm sample {s}", arch.name());
             assert_eq!(run.cycles, per.cycles);
+        }
+    }
+}
+
+#[test]
+fn pipelined_batch_throughput_is_fill_once_then_one_per_cycle() {
+    // the Pipelined schedule's whole point: a batch costs
+    // `stages + batch_len` cycles (fill the pipe once, then retire one
+    // sample per cycle) — NOT `batch_len × per-input latency` — while
+    // staying bit-identical to the per-input interpreter
+    let mut rng = Rng::new(31415);
+    for structure in ["16-10", "16-16-10", "16-10-10-10"] {
+        let qann = random_qann(structure, 6, &mut rng);
+        let stages = qann.structure.num_layers();
+        let rows = random_rows(65, 16, &mut rng);
+        let batch = BatchInputs::from_rows(&rows);
+        let arch = <dyn Architecture>::by_name("pipelined").expect("pipelined is a registry entry");
+        for &style in arch.styles() {
+            let design = arch.elaborate(&qann, style);
+            let run = simulate_batch(&design, &batch);
+            assert_eq!(run.cycles, stages + 1, "{structure} {} latency", style.name());
+            assert_eq!(
+                run.throughput_cycles,
+                stages + rows.len(),
+                "{structure} {} batch throughput",
+                style.name()
+            );
+            assert!(
+                run.throughput_cycles < rows.len() * run.cycles,
+                "{structure} {}: pipelining must beat serialized latency",
+                style.name()
+            );
+            for (s, row) in rows.iter().enumerate() {
+                let per = simulate(&design, row);
+                assert_eq!(run.sample_outputs(s), per.outputs, "{structure} {} sample {s}", style.name());
+                assert_eq!(run.cycles, per.cycles);
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_throughput_matches_every_schedule_model() {
+    // every design point's BatchRun reports the closed-form batch
+    // throughput of its schedule (Schedule::throughput_cycles)
+    let mut rng = Rng::new(2718);
+    let qann = random_qann("16-16-10", 6, &mut rng);
+    let rows = random_rows(33, 16, &mut rng);
+    let batch = BatchInputs::from_rows(&rows);
+    for (arch, style) in design_points() {
+        let design = arch.elaborate(&qann, style);
+        let run = simulate_batch(&design, &batch);
+        let want = design.schedule.throughput_cycles(&qann.structure, rows.len());
+        assert_eq!(run.throughput_cycles, want, "{} {}", arch.name(), style.name());
+        let per_sample_serialized = rows.len() * run.cycles;
+        match arch.name() {
+            // the overlapped schedules stream: strictly better than
+            // serializing inferences (for any multi-sample batch)
+            "parallel" => assert_eq!(run.throughput_cycles, rows.len()),
+            "pipelined" => assert!(run.throughput_cycles < per_sample_serialized),
+            // the MAC schedules serialize whole inferences
+            _ => assert_eq!(run.throughput_cycles, per_sample_serialized),
         }
     }
 }

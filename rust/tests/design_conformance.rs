@@ -287,6 +287,11 @@ fn design_cost_reproduces_prerefactor_reports() {
     for structure in ["16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10"] {
         let q = qann(structure, 6, 5);
         for (arch, style) in design_points() {
+            if arch.name() == "pipelined" {
+                // post-refactor architecture: no pre-refactor golden exists;
+                // its conformance harness is rust/tests/arch_differential.rs
+                continue;
+            }
             let name = format!("{structure} {} {}", arch.name(), style.name());
             let got = arch.elaborate(&q, style).cost(&lib);
             let want = legacy::build(&lib, &q, arch.name(), style);
@@ -302,6 +307,9 @@ fn design_cost_is_stable_under_requantization() {
     for q_bits in [4, 8] {
         let q = qann("16-16-10", q_bits, 23);
         for (arch, style) in design_points() {
+            if arch.name() == "pipelined" {
+                continue; // no pre-refactor golden (see above)
+            }
             let name = format!("q{q_bits} {} {}", arch.name(), style.name());
             let got = arch.elaborate(&q, style).cost(&lib);
             let want = legacy::build(&lib, &q, arch.name(), style);
@@ -344,6 +352,7 @@ fn cycle_formulas_hold_for_every_design_point() {
             let d = arch.elaborate(&q, style);
             let expected = match arch.name() {
                 "parallel" => 1,
+                "pipelined" => st.num_layers() + 1,
                 "smac_neuron" => st.smac_neuron_cycles(),
                 "smac_ann" => st.smac_ann_cycles(),
                 other => panic!("unknown architecture {other}"),
