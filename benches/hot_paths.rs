@@ -43,9 +43,11 @@ fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
 
 /// Batched SoA serving vs the per-input interpreter, across the design
 /// points whose batch behavior differs: a combinational graph design, a
-/// behavioral MAC schedule, and both SMAC mcm product-graph routes.
-/// Writes `BENCH_batch_netsim.json`; asserts the acceptance criterion
-/// (>= 3x batched throughput on the mcm serving path at batch >= 64).
+/// behavioral MAC schedule, both SMAC mcm product-graph routes and the
+/// digit-serial mcm route (bit-serial cycle accounting over the same MAC
+/// program). Writes `BENCH_batch_netsim.json`; asserts the acceptance
+/// criteria (>= 3x batched throughput on the mcm serving path at batch
+/// >= 64; digit-serial modeled area below combinational parallel).
 fn bench_batch_netsim(smoke: bool) {
     let data = if smoke {
         Dataset::synthetic_with_sizes(42, 300, 64)
@@ -68,6 +70,7 @@ fn bench_batch_netsim(smoke: bool) {
         (ArchKind::SmacNeuron, Style::Behavioral),
         (ArchKind::SmacNeuron, Style::Mcm),
         (ArchKind::SmacAnn, Style::Mcm),
+        (ArchKind::DigitSerial, Style::Mcm),
     ];
     let mut entries = String::new();
     let mut headline = 0.0f64;
@@ -150,6 +153,25 @@ fn bench_batch_netsim(smoke: bool) {
         comb_run.throughput_cycles, pipe_run.throughput_cycles
     );
 
+    // digit-serial vs combinational parallel: the latency/area trade the
+    // paper states, on the modeled figures of the standard net — the
+    // serial datapath must be (much) smaller while paying for it in
+    // bit-cycles of latency
+    let ds = serve::design_for(&qann, ArchKind::DigitSerial, Style::Behavioral);
+    let par_b = serve::design_for(&qann, ArchKind::Parallel, Style::Behavioral);
+    let ds_cost = ds.cost(&lib);
+    let par_cost = par_b.cost(&lib);
+    println!(
+        "digit-serial trade (behavioral): area {:.1} um^2 vs parallel {:.1} um^2, \
+         latency {:.1} ns vs {:.1} ns ({} vs {} cycles)",
+        ds_cost.area_um2,
+        par_cost.area_um2,
+        ds_cost.latency_ns,
+        par_cost.latency_ns,
+        ds_cost.cycles,
+        par_cost.cycles
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"batch_netsim\",\n  \"structure\": \"16-16-10\",\n  \
          \"samples\": {n},\n  \"batch\": {n},\n  \"smoke\": {smoke},\n  \
@@ -157,9 +179,16 @@ fn bench_batch_netsim(smoke: bool) {
          \"pipelined_vs_combinational\": {{\"comb_batch_ns\": {comb_ns:.3}, \
          \"pipe_batch_ns\": {pipe_ns:.3}, \"speedup\": {pipe_speedup:.3}, \
          \"pipe_throughput_cycles\": {}, \"comb_throughput_cycles\": {}}},\n  \
+         \"digit_serial_vs_parallel\": {{\"ds_area_um2\": {:.3}, \"par_area_um2\": {:.3}, \
+         \"ds_latency_ns\": {:.3}, \"par_latency_ns\": {:.3}, \"ds_cycles\": {}}},\n  \
          \"cache\": {{\"lookups\": {}, \"hits\": {}, \"hit_rate\": {:.4}}}\n}}\n",
         pipe_run.throughput_cycles,
         comb_run.throughput_cycles,
+        ds_cost.area_um2,
+        par_cost.area_um2,
+        ds_cost.latency_ns,
+        par_cost.latency_ns,
+        ds_cost.cycles,
         cache.lookups(),
         cache.hits,
         cache.hit_rate()
@@ -174,6 +203,13 @@ fn bench_batch_netsim(smoke: bool) {
         pipe_ns < comb_ns,
         "acceptance: pipelined batch serving must beat combinational parallel on modeled \
          throughput ({pipe_ns:.1} ns !< {comb_ns:.1} ns at batch {n})"
+    );
+    assert!(
+        ds_cost.area_um2 < par_cost.area_um2,
+        "acceptance: digit-serial modeled area must be below combinational parallel \
+         ({:.1} um^2 !< {:.1} um^2)",
+        ds_cost.area_um2,
+        par_cost.area_um2
     );
     assert!(cache.hit_rate() > 0.5, "serving loop must hit the design cache");
 }

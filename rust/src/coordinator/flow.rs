@@ -194,7 +194,10 @@ impl FlowOutcome {
             // design, so the parallel tuner's result is the one that
             // minimizes its datapath too
             ArchKind::Parallel | ArchKind::Pipelined => &self.tuned_parallel,
-            ArchKind::SmacNeuron => &self.tuned_smac_neuron,
+            // the digit-serial MAC stores the same per-neuron sls-factored
+            // weights (and shares SMAC_NEURON's per-layer mcm product
+            // instance), so the per-neuron sls tuner is its tuner too
+            ArchKind::SmacNeuron | ArchKind::DigitSerial => &self.tuned_smac_neuron,
             ArchKind::SmacAnn => &self.tuned_smac_ann,
         }
     }

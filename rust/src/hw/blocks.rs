@@ -150,6 +150,34 @@ pub fn shift_add_node(lib: &TechLib, result_bits: u32) -> BlockCost {
     adder(lib, result_bits)
 }
 
+/// Bit-serial multiply–accumulate slice (the digit-serial MAC datapath):
+/// the broadcast input streams LSB-first through a `w_bits`-wide
+/// carry-save row — one partial-product AND and one full adder per
+/// stored-weight bit, with sum/carry flops. Area and energy are O(w) and
+/// the register-to-register delay is a *single* gate + FA + flop (no
+/// carry chain, no reduction tree): the accumulation pays its cost in
+/// bit-cycles instead of carry depth, which is the whole latency/area
+/// trade of the digit-serial architecture.
+pub fn serial_adder(lib: &TechLib, w_bits: u32) -> BlockCost {
+    let w = w_bits.max(1) as f64;
+    BlockCost {
+        area: w * (lib.fa.area + 0.5 * lib.nand2.area + lib.dff.area),
+        delay: lib.nand2.delay + lib.fa.delay + lib.dff.delay,
+        energy: lib.activity * w * (lib.fa.energy + 0.5 * lib.nand2.energy + lib.dff.energy),
+    }
+}
+
+/// `bits`-wide shift register (the serial accumulator / operand store of
+/// the digit-serial MAC). Unlike [`register`], every flop toggles toward
+/// its neighbor each bit-cycle, so there is no low-activity discount.
+pub fn shift_register(lib: &TechLib, bits: u32) -> BlockCost {
+    BlockCost {
+        area: bits as f64 * lib.dff.area,
+        delay: lib.dff.delay,
+        energy: bits as f64 * lib.dff.energy,
+    }
+}
+
 /// Multiplierless constant-multiplication block computing `c_j · x` for
 /// every constant of the broadcast input (the SMAC MCM style, paper
 /// Sec. V-B). Solved through the process-wide memoized
@@ -215,6 +243,31 @@ mod tests {
         let t = a.times(3);
         assert!((t.area - 3.0 * a.area).abs() < 1e-9);
         assert!((t.delay - a.delay).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serial_adder_trades_delay_for_cycles() {
+        // the digit-serial slice must be smaller and much shorter than the
+        // word-parallel multiplier + CLA adder it replaces — it pays in
+        // bit-cycles, not in gates
+        let s = serial_adder(&lib(), 7);
+        let m = multiplier(&lib(), 7, 8);
+        let a = adder(&lib(), 20);
+        assert!(s.area < m.area, "serial {} !< multiplier {}", s.area, m.area);
+        assert!(s.delay < m.delay + a.delay);
+        assert!(s.delay < a.delay + lib().dff.delay * 2.0, "no carry chain");
+        // area is O(w)
+        let s14 = serial_adder(&lib(), 14);
+        assert!((s14.area - 2.0 * s.area).abs() < 1e-9);
+        assert!((s14.delay - s.delay).abs() < 1e-12, "delay is width-independent");
+    }
+
+    #[test]
+    fn shift_register_has_full_activity() {
+        let sr = shift_register(&lib(), 16);
+        let r = register(&lib(), 16);
+        assert!((sr.area - r.area).abs() < 1e-9, "same flops");
+        assert!(sr.energy > r.energy, "every bit toggles per cycle");
     }
 
     #[test]

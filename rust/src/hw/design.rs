@@ -20,6 +20,32 @@
 //! The [`LayerPricer`] gives the tuners cached re-elaboration: a price
 //! call re-solves only the layers whose weights changed since the last
 //! call (tuner trajectories touch one weight per step).
+//!
+//! The five registry entries and their closed-form cycle models are
+//! tabulated in ARCHITECTURE.md; `rust/tests/arch_differential.rs`
+//! asserts the same formulas against the interpreters. End to end:
+//!
+//! ```
+//! use simurg::ann::quant::QuantizedAnn;
+//! use simurg::ann::structure::{Activation, AnnStructure};
+//! use simurg::hw::report::layer_acc_bits;
+//! use simurg::hw::{Architecture, Style};
+//!
+//! let qann = QuantizedAnn {
+//!     structure: AnnStructure::parse("2-2-1").unwrap(),
+//!     weights: vec![vec![vec![20, -24], vec![5, 0]], vec![vec![3, -6]]],
+//!     biases: vec![vec![10, -10], vec![0]],
+//!     q: 4,
+//!     activations: vec![Activation::HTanh, Activation::HSig],
+//! };
+//! // elaborate the digit-serial MAC entry and read its cycle model back:
+//! // latency = B · Σ(ι_k + 1), with B the worst layer accumulator width
+//! let arch = <dyn Architecture>::by_name("digit_serial").unwrap();
+//! let design = arch.elaborate(&qann, Style::Mcm);
+//! let st = &qann.structure;
+//! let b = (0..st.num_layers()).map(|k| layer_acc_bits(&qann, k)).max().unwrap();
+//! assert_eq!(design.cycles(), b as usize * st.smac_neuron_cycles());
+//! ```
 
 use super::blocks::{self, BlockCost};
 use super::gates::TechLib;
@@ -29,9 +55,10 @@ use crate::ann::structure::AnnStructure;
 use crate::mcm::{engine, AdderGraph, LinearTargets, Tier};
 use std::hash::Hasher;
 
-/// Constant-multiplication style (paper Sec. V), unified over the three
-/// architectures: the parallel design supports `Behavioral | Cavm | Cmvm`,
-/// the time-multiplexed designs `Behavioral | Mcm`.
+/// Constant-multiplication style (paper Sec. V), unified over the
+/// registry architectures: the parallel designs support
+/// `Behavioral | Cavm | Cmvm` (plus `Mcm` on the pipelined variant), the
+/// time-multiplexed designs — SMAC and digit-serial — `Behavioral | Mcm`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Style {
     Behavioral,
@@ -61,15 +88,18 @@ impl Style {
     }
 }
 
-/// The three design architectures of paper Sec. III plus the
-/// layer-pipelined parallel variant (`hw::pipelined`) this reproduction
-/// adds as the fourth point on the latency/throughput trade-off curve.
+/// The three design architectures of paper Sec. III plus the two entries
+/// this reproduction adds to the latency/area trade-off curve: the
+/// layer-pipelined parallel variant (`hw::pipelined`) on the throughput
+/// end, and the digit-serial MAC (`hw::digit_serial`) on the area end
+/// (serial adders at 1 bit per cycle).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArchKind {
     Parallel,
     Pipelined,
     SmacNeuron,
     SmacAnn,
+    DigitSerial,
 }
 
 impl ArchKind {
@@ -79,6 +109,7 @@ impl ArchKind {
             ArchKind::Pipelined => "pipelined",
             ArchKind::SmacNeuron => "smac_neuron",
             ArchKind::SmacAnn => "smac_ann",
+            ArchKind::DigitSerial => "digit_serial",
         }
     }
 }
@@ -99,21 +130,33 @@ pub enum Schedule {
     LayerSequential,
     /// one MAC serves every neuron, (ι_k + 2)·η_k cycles (Sec. III-B2)
     NeuronSequential,
+    /// the layer-sequential cycle program with every register-transfer
+    /// step stretched into `bits` bit-cycles: the datapath is bit-serial
+    /// (1 bit per cycle through serial adders), a shared bit-counter FSM
+    /// sequences each broadcast, and `bits` is the design-wide
+    /// accumulator width `B = max_k acc_bits(k)` — so the cycle count
+    /// scales with the quantized weight/accumulator bit widths, not just
+    /// the layer/neuron counts: latency `B · Σ(ι_k + 1)`
+    DigitSerial { bits: u32 },
 }
 
 impl Schedule {
-    /// Latency of one inference in clock cycles.
+    /// Latency of one inference in clock cycles — the closed forms of
+    /// ARCHITECTURE.md's cycle-model table, asserted against the
+    /// interpreters by `rust/tests/arch_differential.rs`.
     pub fn cycles(self, st: &AnnStructure) -> usize {
         match self {
             Schedule::Combinational => 1,
             Schedule::Pipelined { stages } => stages + 1,
             Schedule::LayerSequential => st.smac_neuron_cycles(),
             Schedule::NeuronSequential => st.smac_ann_cycles(),
+            Schedule::DigitSerial { bits } => bits as usize * st.smac_neuron_cycles(),
         }
     }
 
     /// Clock cycles to push a batch of `n` inferences through a design
-    /// under this schedule: the sequential schedules serialize inferences
+    /// under this schedule: the sequential schedules (the MAC cycle
+    /// programs and their digit-serial stretching) serialize inferences
     /// (`n × latency`), the combinational datapath accepts a new sample
     /// every (long) cycle, and the pipelined datapath fills once and then
     /// retires one sample per cycle (`stages + n`).
@@ -124,7 +167,9 @@ impl Schedule {
         match self {
             Schedule::Combinational => n,
             Schedule::Pipelined { stages } => stages + n,
-            Schedule::LayerSequential | Schedule::NeuronSequential => n * self.cycles(st),
+            Schedule::LayerSequential
+            | Schedule::NeuronSequential
+            | Schedule::DigitSerial { .. } => n * self.cycles(st),
         }
     }
 }
@@ -142,6 +187,15 @@ pub enum BlockKind {
     Counter { n: usize },
     ActivationUnit { acc_bits: u32 },
     ShiftAdds { graphs: Vec<usize>, input_ranges: Vec<(i64, i64)> },
+    /// bit-serial MAC slice: `w_bits` partial-product gates feeding a
+    /// carry-save row with sum/carry flops (O(w) area, O(1) delay)
+    SerialAdder { w_bits: u32 },
+    /// serial operand/accumulator store: every flop toggles per bit-cycle
+    ShiftRegister { bits: u32 },
+    /// a shift-adds network realized bit-serially: per node one serial
+    /// slice plus alignment flops for its shifts, width-independent
+    /// (priced by [`crate::hw::serial_graph_cost`])
+    SerialShiftAdds { graphs: Vec<usize> },
 }
 
 impl BlockKind {
@@ -157,6 +211,11 @@ impl BlockKind {
             BlockKind::ActivationUnit { acc_bits } => blocks::activation_unit(lib, *acc_bits),
             BlockKind::ShiftAdds { graphs: gs, input_ranges } => gs.iter().fold(BlockCost::ZERO, |acc, &gi| {
                 acc.beside(super::graph_cost(lib, &graphs[gi], input_ranges))
+            }),
+            BlockKind::SerialAdder { w_bits } => blocks::serial_adder(lib, *w_bits),
+            BlockKind::ShiftRegister { bits } => blocks::shift_register(lib, *bits),
+            BlockKind::SerialShiftAdds { graphs: gs } => gs.iter().fold(BlockCost::ZERO, |acc, &gi| {
+                acc.beside(super::serial_graph_cost(lib, &graphs[gi]))
             }),
         }
     }
@@ -329,8 +388,9 @@ impl DesignBuilder {
 }
 
 /// A design architecture: elaborates a quantized net into a [`Design`].
-/// Implementations live in `hw/{parallel,pipelined,smac_neuron,smac_ann}.rs`
-/// and contain *only* elaboration — no gate arithmetic, no HDL, no simulation.
+/// Implementations live in
+/// `hw/{parallel,pipelined,smac_neuron,smac_ann,digit_serial}.rs` and
+/// contain *only* elaboration — no gate arithmetic, no HDL, no simulation.
 pub trait Architecture: Sync {
     fn kind(&self) -> ArchKind;
 
@@ -350,13 +410,16 @@ impl dyn Architecture {
     /// The architecture registry: every design point the sweeps, figures
     /// and the CLI iterate — the paper's three architectures in their
     /// presentation order, with the layer-pipelined parallel variant
-    /// slotted in right after the combinational design it pipelines.
-    pub fn all() -> [&'static dyn Architecture; 4] {
+    /// slotted in right after the combinational design it pipelines, and
+    /// the digit-serial MAC closing the list as the extreme point of the
+    /// latency/area trade.
+    pub fn all() -> [&'static dyn Architecture; 5] {
         [
             &super::parallel::Parallel,
             &super::pipelined::PipelinedParallel,
             &super::smac_neuron::SmacNeuron,
             &super::smac_ann::SmacAnn,
+            &super::digit_serial::DigitSerial,
         ]
     }
 
@@ -428,7 +491,10 @@ fn layer_instances(arch: ArchKind, style: Style, qann: &QuantizedAnn, k: usize) 
             vec![(LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)]
         }
         (ArchKind::Pipelined, Style::Mcm) => mcm_column_instances(qann, k),
-        (ArchKind::SmacNeuron, Style::Mcm) => {
+        // the digit-serial MAC shares SMAC_NEURON's per-layer product
+        // instance: one MCM block over the sls-factored stored weights of
+        // the broadcast input — its graph is merely *realized* serially
+        (ArchKind::SmacNeuron | ArchKind::DigitSerial, Style::Mcm) => {
             let (stored, _) = stored_layer(qann, k);
             let consts: Vec<i64> = stored.into_iter().flatten().collect();
             vec![(LinearTargets::mcm(&consts), Tier::McmHeuristic)]
@@ -444,7 +510,7 @@ fn layer_instances(arch: ArchKind, style: Style, qann: &QuantizedAnn, k: usize) 
         }
         // behavioral MACs have no constant-multiplication network, and the
         // SMAC_ANN whole-net instance is attached to layer 0 only
-        (ArchKind::SmacNeuron | ArchKind::SmacAnn, Style::Behavioral)
+        (ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial, Style::Behavioral)
         | (ArchKind::SmacAnn, Style::Mcm) => Vec::new(),
         (arch, style) => panic!("{} has no {} style", arch.name(), style.name()),
     }
@@ -526,13 +592,14 @@ mod tests {
     #[test]
     fn registry_covers_the_paper_design_points() {
         let names: Vec<&str> = <dyn Architecture>::all().iter().map(|a| a.name()).collect();
-        assert_eq!(names, ["parallel", "pipelined", "smac_neuron", "smac_ann"]);
-        assert_eq!(design_points().len(), 11, "3 parallel + 4 pipelined + 2 + 2");
+        assert_eq!(names, ["parallel", "pipelined", "smac_neuron", "smac_ann", "digit_serial"]);
+        assert_eq!(design_points().len(), 13, "3 parallel + 4 pipelined + 2 + 2 + 2");
         for (a, s) in design_points() {
             assert!(a.styles().contains(&s));
         }
         assert!(<dyn Architecture>::by_name("parallel").is_some());
         assert!(<dyn Architecture>::by_name("pipelined").is_some());
+        assert!(<dyn Architecture>::by_name("digit_serial").is_some());
         assert!(<dyn Architecture>::by_name("systolic").is_none());
     }
 
@@ -551,6 +618,14 @@ mod tests {
         assert_eq!(Schedule::Pipelined { stages: 2 }.cycles(&st), 3);
         assert_eq!(Schedule::LayerSequential.cycles(&st), st.smac_neuron_cycles());
         assert_eq!(Schedule::NeuronSequential.cycles(&st), st.smac_ann_cycles());
+        // the digit-serial model stretches every layer-sequential step
+        // into B bit-cycles — cycles scale with the accumulator width
+        assert_eq!(Schedule::DigitSerial { bits: 20 }.cycles(&st), 20 * st.smac_neuron_cycles());
+        assert!(
+            Schedule::DigitSerial { bits: 40 }.cycles(&st)
+                > Schedule::DigitSerial { bits: 20 }.cycles(&st),
+            "wider accumulators must cost more cycles"
+        );
     }
 
     #[test]
@@ -570,11 +645,17 @@ mod tests {
             Schedule::NeuronSequential.throughput_cycles(&st, 64),
             64 * st.smac_ann_cycles()
         );
+        assert_eq!(
+            Schedule::DigitSerial { bits: 20 }.throughput_cycles(&st, 64),
+            64 * 20 * st.smac_neuron_cycles(),
+            "bit-serial inferences serialize"
+        );
         for s in [
             Schedule::Combinational,
             Schedule::Pipelined { stages: 2 },
             Schedule::LayerSequential,
             Schedule::NeuronSequential,
+            Schedule::DigitSerial { bits: 20 },
         ] {
             assert_eq!(s.throughput_cycles(&st, 0), 0, "empty batch costs nothing");
         }

@@ -1,0 +1,272 @@
+//! Digit-serial MAC architecture — the fifth registry entry and the
+//! extreme point of the paper's latency/area trade-off curve.
+//!
+//! The Sec. III time-multiplexed designs already trade latency for area
+//! by sharing word-parallel MACs; the digit-serial design pushes the same
+//! trade *inside* the arithmetic: operands stream LSB-first, 1 bit per
+//! cycle, through serial adders (one full adder + carry flop per slice),
+//! accumulators live in shift registers, and a shared bit-counter FSM
+//! stretches every register-transfer step of the SMAC_NEURON cycle
+//! program into `B` bit-cycles. Area and clock period become independent
+//! of operand widths — the regime where multiplierless shift-add
+//! realizations pay off hardest (Sarwar et al., "Multiplier-less
+//! Artificial Neurons"; the paper's own SMAC designs are the word-level
+//! siblings).
+//!
+//! **Cycle-model contract** (stated here, tabulated in ARCHITECTURE.md,
+//! asserted by `rust/tests/arch_differential.rs`): with `B` the
+//! design-wide accumulator width `max_k acc_bits(k)` (exact interval
+//! propagation, [`report::layer_acc_bits`]) and ι_k the inputs of layer
+//! `k`,
+//!
+//! - latency of one inference: `B · Σ_k (ι_k + 1)` cycles
+//!   ([`Schedule::DigitSerial`]);
+//! - batch throughput: `n · B · Σ_k (ι_k + 1)` cycles — bit-serial
+//!   inferences serialize, there is no pipe to fill.
+//!
+//! Styles:
+//! - `Behavioral`: each neuron owns a hardwired-constant weight mux and a
+//!   bit-serial MAC slice (`w_bits` partial-product gates + carry-save
+//!   row) — the synthesis-tool view of `w * x` folded into the serial
+//!   datapath;
+//! - `Mcm`: per layer, the SMAC_NEURON product instance — one MCM block
+//!   over the sls-factored stored weights of the broadcast input (paper
+//!   Sec. V-B, Fig. 9) — with the solved graph *realized serially*: every
+//!   add/sub node is a flopped serial slice, shifts become alignment
+//!   flops, so the network's area is width-independent
+//!   ([`crate::hw::serial_graph_cost`]).
+//! - `Cavm` / `Cmvm` are **declined**: those styles realize whole inner
+//!   products as matrix adder graphs over the *full parallel input
+//!   vector*, which contradicts the one-input-per-broadcast dataflow of a
+//!   time-multiplexed serial MAC — there is no broadcast input for a
+//!   CAVM/CMVM block to tap. The same rationale keeps them off both SMAC
+//!   designs; the MCM engine serves the styles whose graph structure fits
+//!   ([`Architecture::styles`] is the machine-readable form of this).
+//!
+//! This module only *elaborates* the design; cost, simulation and HDL are
+//! derived from the resulting [`Design`] by `hw::design`, `hw::netsim`,
+//! `hw::serve` and `hw::verilog`.
+
+use super::design::{
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, McmRef,
+    Schedule, Style,
+};
+use super::report::{self, HwReport};
+use super::TechLib;
+use crate::ann::quant::QuantizedAnn;
+use crate::mcm::{LinearTargets, Tier};
+use crate::num::signed_bitwidth;
+
+/// The digit-serial MAC architecture (registry entry).
+pub struct DigitSerial;
+
+/// The design-wide serial word length `B`: the worst layer accumulator
+/// width, which every shift register, serial slice and the bit-counter
+/// FSM are sequenced over.
+pub fn serial_bits(qann: &QuantizedAnn) -> u32 {
+    (0..qann.structure.num_layers())
+        .map(|k| report::layer_acc_bits(qann, k))
+        .max()
+        .unwrap_or(1)
+}
+
+impl Architecture for DigitSerial {
+    fn kind(&self) -> ArchKind {
+        ArchKind::DigitSerial
+    }
+
+    fn styles(&self) -> &'static [Style] {
+        // Cavm/Cmvm are declined: their matrix graphs need the full
+        // parallel input vector, which a serial broadcast MAC never holds
+        // (see the module docs for the full rationale)
+        &[Style::Behavioral, Style::Mcm]
+    }
+
+    fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
+        let st = &qann.structure;
+        let bits = serial_bits(qann);
+        let mut b = DesignBuilder::new(ArchKind::DigitSerial, style, Schedule::DigitSerial { bits });
+
+        for k in 0..st.num_layers() {
+            let n_in = st.layer_inputs(k);
+            let n_out = st.layer_outputs(k);
+            let in_range = report::layer_input_range(qann, k);
+            let acc_bits = report::layer_acc_bits(qann, k);
+            // broadcasts: ι_k MAC steps + 1 bias/activate step; the serial
+            // datapath is active for every bit-cycle of each broadcast
+            let broadcasts = (n_in + 1) as f64;
+            let bit_cycles = broadcasts * bits as f64;
+
+            // shared per-layer control: input counter + the bit-counter
+            // FSM sequencing B bit-cycles per broadcast + broadcast mux
+            let control = b.block(BlockKind::Counter { n: n_in + 1 }, 1, bit_cycles);
+            let bit_fsm = b.block(BlockKind::Counter { n: bits as usize }, 1, bit_cycles);
+            let in_mux = b.block(BlockKind::Mux { n: n_in, bits: 8 }, 1, broadcasts);
+            b.path(vec![control]);
+            b.path(vec![bit_fsm]);
+
+            // weights are stored factored by each neuron's smallest left
+            // shift, exactly as in SMAC_NEURON; the back-shift is wiring
+            let (stored, sls) = design::stored_layer(qann, k);
+
+            let mcm = match style {
+                Style::Behavioral => {
+                    for row in &stored {
+                        let w_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1);
+                        let w_mux = b.block(BlockKind::ConstantMux { n: n_in, bits: w_bits }, 1, broadcasts);
+                        // the bias add rides the serial slice during the
+                        // +1 broadcast, so no separate word-wide adder
+                        let ser = b.block(BlockKind::SerialAdder { w_bits }, 1, bit_cycles);
+                        let acc = b.block(BlockKind::ShiftRegister { bits: acc_bits }, 1, bit_cycles);
+                        b.block(BlockKind::ActivationUnit { acc_bits }, 1, broadcasts);
+                        b.block(BlockKind::Register { bits: 8 }, 1, broadcasts); // out reg
+                        b.path(vec![in_mux, w_mux, ser, acc]);
+                    }
+                    None
+                }
+                Style::Mcm => {
+                    // the SMAC_NEURON product instance (kept in lock-step
+                    // with LayerPricer::layer_instances), realized as a
+                    // serial shift-adds network
+                    let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
+                    let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
+                    let net = b.block(BlockKind::SerialShiftAdds { graphs: vec![gi] }, 1, bit_cycles);
+                    for _ in &stored {
+                        // products arrive bit-serially, so the per-neuron
+                        // product mux and accumulating slice are 1 bit wide
+                        let p_mux = b.block(BlockKind::Mux { n: n_in, bits: 1 }, 1, broadcasts);
+                        let ser = b.block(BlockKind::SerialAdder { w_bits: 1 }, 1, bit_cycles);
+                        let acc = b.block(BlockKind::ShiftRegister { bits: acc_bits }, 1, bit_cycles);
+                        b.block(BlockKind::ActivationUnit { acc_bits }, 1, broadcasts);
+                        b.block(BlockKind::Register { bits: 8 }, 1, broadcasts); // out reg
+                        b.path(vec![net, p_mux, ser, acc]);
+                    }
+                    Some(McmRef { graph: gi, offset: 0 })
+                }
+                other => panic!("digit_serial has no {} style", other.name()),
+            };
+
+            b.layer(LayerPlan {
+                n_in,
+                n_out,
+                acc_bits,
+                in_range,
+                compute: LayerCompute::Mac { stored, sls, mcm },
+            });
+        }
+
+        b.finish(qann)
+    }
+}
+
+/// Price the digit-serial design of `qann` (elaborate + generic cost walk).
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+    DigitSerial.elaborate(qann, style).cost(lib)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::hw::{parallel, smac_neuron};
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut crate::num::Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn cycle_model_is_bit_width_dependent() {
+        let q = qann("16-16-10", 6, 1);
+        let d = DigitSerial.elaborate(&q, Style::Behavioral);
+        let bits = serial_bits(&q);
+        assert_eq!(d.schedule, Schedule::DigitSerial { bits });
+        assert_eq!(d.cycles(), bits as usize * q.structure.smac_neuron_cycles());
+        // widening the accumulators (bigger weights) must cost cycles
+        let mut wide = q.clone();
+        for row in wide.weights[0].iter_mut() {
+            for w in row.iter_mut() {
+                *w *= 1 << 8;
+            }
+        }
+        let dw = DigitSerial.elaborate(&wide, Style::Behavioral);
+        assert!(serial_bits(&wide) > bits);
+        assert!(dw.cycles() > d.cycles(), "wider operands must take more bit-cycles");
+    }
+
+    #[test]
+    fn smallest_area_longest_latency() {
+        // the extreme point of the paper's trade: below even SMAC_NEURON
+        // on area, above it on latency; far below combinational parallel
+        let lib = TechLib::tsmc40();
+        for structure in ["16-16-10", "16-10-10-10"] {
+            let q = qann(structure, 6, 2);
+            let ds = build(&lib, &q, Style::Behavioral);
+            let sn = smac_neuron::build(&lib, &q, Style::Behavioral);
+            let par = parallel::build(&lib, &q, Style::Behavioral);
+            assert!(
+                ds.area_um2 < sn.area_um2,
+                "{structure}: digit-serial {} !< smac_neuron {}",
+                ds.area_um2,
+                sn.area_um2
+            );
+            assert!(
+                ds.area_um2 < par.area_um2,
+                "{structure}: digit-serial {} !< parallel {}",
+                ds.area_um2,
+                par.area_um2
+            );
+            assert!(ds.latency_ns > sn.latency_ns, "{structure}: serial bit-cycles must cost latency");
+            assert!(ds.clock_ns < sn.clock_ns, "{structure}: no carry chain on the serial clock path");
+        }
+    }
+
+    #[test]
+    fn mcm_style_routes_products_through_the_graph() {
+        let q = qann("16-10", 6, 6);
+        let d = DigitSerial.elaborate(&q, Style::Mcm);
+        let LayerCompute::Mac { stored, sls, mcm } = &d.layers[0].compute else {
+            panic!("digit-serial layers are MAC-computed");
+        };
+        let r = mcm.expect("mcm style must reference its product graph");
+        assert_eq!(r.offset, 0);
+        // the graph outputs one product per stored weight, neuron-major —
+        // the same instance the LayerPricer counts
+        assert_eq!(d.graphs[r.graph].outputs.len(), stored.iter().map(Vec::len).sum::<usize>());
+        assert_eq!(sls.len(), q.structure.layer_outputs(0));
+        assert!(d.adder_ops > 0);
+        // the serial realization prices the graph width-independently
+        assert!(d.blocks.iter().any(|blk| matches!(blk.kind, BlockKind::SerialShiftAdds { .. })));
+    }
+
+    #[test]
+    fn serial_bits_is_the_worst_layer() {
+        let q = qann("16-16-10", 6, 9);
+        let per_layer: Vec<u32> =
+            (0..q.structure.num_layers()).map(|k| report::layer_acc_bits(&q, k)).collect();
+        assert_eq!(serial_bits(&q), per_layer.iter().cloned().max().unwrap());
+    }
+
+    #[test]
+    fn sls_tuning_reduces_cost() {
+        // making every weight of a neuron even must shrink the stored
+        // widths and with them the serial MAC — the Sec. IV-C reward
+        // signal carries over to the serial datapath
+        let q = qann("16-10", 6, 4);
+        let mut tuned = q.clone();
+        for row in tuned.weights[0].iter_mut() {
+            for w in row.iter_mut() {
+                *w &= !1;
+            }
+        }
+        let lib = TechLib::tsmc40();
+        let before = build(&lib, &q, Style::Behavioral);
+        let after = build(&lib, &tuned, Style::Behavioral);
+        assert!(after.area_um2 < before.area_um2);
+    }
+}

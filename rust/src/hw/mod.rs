@@ -1,6 +1,9 @@
-//! Gate-level hardware models of the paper's three design architectures
-//! (plus the layer-pipelined parallel variant this reproduction adds),
-//! the Verilog generator and the cycle-accurate architectural simulator.
+//! Gate-level hardware models of the five registry design architectures —
+//! the paper's three (parallel, SMAC_NEURON, SMAC_ANN) plus the
+//! layer-pipelined parallel variant and the digit-serial MAC this
+//! reproduction adds — the Verilog generator and the cycle-accurate
+//! architectural simulator. ARCHITECTURE.md maps the paper's sections to
+//! these modules and tabulates every schedule's closed-form cycle model.
 //!
 //! Stand-in for the Cadence RTL Compiler + TSMC 40nm synthesis flow of
 //! the paper's evaluation (DESIGN.md §Substitutions). Everything hangs
@@ -12,6 +15,7 @@
 
 pub mod blocks;
 pub mod design;
+pub mod digit_serial;
 pub mod gates;
 pub mod netsim;
 pub mod parallel;
@@ -66,6 +70,27 @@ pub fn graph_cost(lib: &TechLib, g: &AdderGraph, input_ranges: &[(i64, i64)]) ->
     total
 }
 
+/// Gate cost of a shift-adds network realized **bit-serially** (the
+/// digit-serial architecture, `hw::digit_serial`): every add/sub node is
+/// one serial slice — a full adder with a carry flop — plus `sa + sb`
+/// alignment flops realizing the node's shifts as bit delays. Area and
+/// energy are therefore independent of operand bitwidths (the serial win
+/// over [`graph_cost`]'s width-scaled adders), and the clock sees a
+/// single flopped slice rather than the graph's combinational depth: the
+/// network pays its cost in the schedule's bit-cycles instead.
+pub fn serial_graph_cost(lib: &TechLib, g: &AdderGraph) -> BlockCost {
+    let mut total = BlockCost::ZERO;
+    for n in &g.nodes {
+        let align = (n.sa + n.sb) as f64;
+        total.area += lib.fa.area + lib.dff.area * (1.0 + align);
+        total.energy += lib.activity * (lib.fa.energy + lib.dff.energy * (1.0 + align));
+    }
+    if !g.nodes.is_empty() {
+        total.delay = lib.fa.delay + lib.dff.delay;
+    }
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +112,23 @@ mod tests {
         let cz = graph_cost(&lib, &z, &[(0, 127)]);
         assert_eq!(cz.area, 0.0);
         assert_eq!(cz.delay, 0.0);
+    }
+
+    #[test]
+    fn serial_graph_cost_is_width_independent() {
+        let lib = TechLib::tsmc40();
+        let t = LinearTargets::cmvm(&[vec![11, 3], vec![5, 13]]);
+        let g = cse(&t);
+        let serial = serial_graph_cost(&lib, &g);
+        // the same graph priced serially must be smaller than priced with
+        // width-scaled parallel adders over realistic input ranges...
+        let parallel = graph_cost(&lib, &g, &[(0, 127), (0, 127)]);
+        assert!(serial.area < parallel.area, "serial {} !< parallel {}", serial.area, parallel.area);
+        // ...and its clock must see one flopped slice, not the graph depth
+        assert!(serial.delay <= lib.fa.delay + lib.dff.delay + 1e-12);
+        assert!(serial.delay > 0.0 && serial.energy > 0.0);
+        // zero-op graphs still cost nothing
+        let z = dbr(&LinearTargets::mcm(&[8]));
+        assert_eq!(serial_graph_cost(&lib, &z), BlockCost::ZERO);
     }
 }

@@ -14,6 +14,28 @@
 //!
 //! Elaborate once, evaluate many: build the [`Design`] a single time and
 //! run the whole test set through it — the graphs are fixed hardware.
+//!
+//! ```
+//! use simurg::ann::quant::QuantizedAnn;
+//! use simurg::ann::structure::{Activation, AnnStructure};
+//! use simurg::hw::{netsim, Architecture, Style};
+//!
+//! let qann = QuantizedAnn {
+//!     structure: AnnStructure::parse("2-2-1").unwrap(),
+//!     weights: vec![vec![vec![20, -24], vec![5, 0]], vec![vec![3, -6]]],
+//!     biases: vec![vec![10, -10], vec![0]],
+//!     q: 4,
+//!     activations: vec![Activation::HTanh, Activation::HSig],
+//! };
+//! let design = <dyn Architecture>::by_name("smac_neuron")
+//!     .unwrap()
+//!     .elaborate(&qann, Style::Mcm);
+//! let run = netsim::simulate(&design, &[64, 32]);
+//! // bit-exact against the integer golden model, cycle count from the
+//! // schedule's closed form (Σ(ι_k + 1) for SMAC_NEURON)
+//! assert_eq!(run.outputs, simurg::ann::sim::forward(&qann, &[64, 32]));
+//! assert_eq!(run.cycles, qann.structure.smac_neuron_cycles());
+//! ```
 
 use super::design::{ArchKind, Design, LayerCompute, Schedule, Style};
 use super::serve;
@@ -39,8 +61,23 @@ pub fn simulate(design: &Design, input: &[i32]) -> SimRun {
         // values as the combinational one; only the cycle accounting
         // differs (fill the pipe: stages + 1 cycles to the first output)
         Schedule::Combinational | Schedule::Pipelined { .. } => simulate_feedforward(design, input),
-        Schedule::LayerSequential => simulate_layer_sequential(design, input),
+        // the digit-serial MAC runs the layer-sequential program with
+        // every step stretched into `bits` bit-cycles (see step_cycles)
+        Schedule::LayerSequential | Schedule::DigitSerial { .. } => {
+            simulate_layer_sequential(design, input)
+        }
         Schedule::NeuronSequential => simulate_neuron_sequential(design, input),
+    }
+}
+
+/// Clock cycles of one register-transfer step of a MAC schedule: 1 for
+/// the word-parallel designs, `bits` bit-cycles for the digit-serial
+/// datapath (the bit-counter FSM sequences every broadcast over the
+/// design-wide accumulator width — the bit-width-dependent cycle model).
+pub(super) fn step_cycles(design: &Design) -> usize {
+    match design.schedule {
+        Schedule::DigitSerial { bits } => bits as usize,
+        _ => 1,
     }
 }
 
@@ -107,10 +144,13 @@ fn mac_product(layer: &LayerCompute, products: &Option<Vec<i128>>, m: usize, i: 
 }
 
 /// SMAC_NEURON schedule: one MAC per neuron, layers in sequence, ι_k + 1
-/// cycles per layer (ι_k multiply-accumulate steps + 1 bias/activate
-/// step) — total Σ(ι_i + 1), paper Sec. III-B1.
+/// steps per layer (ι_k multiply-accumulate steps + 1 bias/activate
+/// step) — total Σ(ι_i + 1) steps, paper Sec. III-B1. A step costs one
+/// cycle word-parallel and [`step_cycles`] bit-cycles digit-serial, so
+/// the digit-serial total is `B · Σ(ι_i + 1)`.
 fn simulate_layer_sequential(design: &Design, input: &[i32]) -> SimRun {
     let qann = &design.qann;
+    let step = step_cycles(design);
     let mut cycles = 0usize;
     let mut cur: Vec<i64> = input.iter().map(|&x| x as i64).collect();
     for (k, layer) in design.layers.iter().enumerate() {
@@ -118,19 +158,19 @@ fn simulate_layer_sequential(design: &Design, input: &[i32]) -> SimRun {
             panic!("MAC schedules need MAC layers");
         };
         let mut acc = vec![0i64; layer.n_out];
-        // ι_k MAC cycles: the control block broadcasts input i to every MAC
+        // ι_k MAC steps: the control block broadcasts input i to every MAC
         for i in 0..layer.n_in {
             let products = products_of(design, &layer.compute, cur[i]);
             for (m, a) in acc.iter_mut().enumerate() {
                 *a += mac_product(&layer.compute, &products, m, i, cur[i]) << sls[m];
             }
-            cycles += 1;
+            cycles += step;
         }
-        // +1 cycle: bias add, activation, output-register write
+        // +1 step: bias add, activation, output-register write
         cur = (0..layer.n_out)
             .map(|m| activate(qann.activations[k], acc[m] + qann.biases[k][m], qann.q) as i64)
             .collect();
-        cycles += 1;
+        cycles += step;
     }
     SimRun { outputs: cur.iter().map(|&v| v as i32).collect(), cycles }
 }

@@ -15,7 +15,7 @@
 //!
 //! Constant-multiplication styles: `Behavioral | Cavm | Cmvm` are shared
 //! verbatim with the combinational design
-//! ([`parallel::solve_layer_graphs`]), and `Mcm` brings the paper's
+//! (`parallel::solve_layer_graphs`), and `Mcm` brings the paper's
 //! Sec. V-B product-graph idea to the parallel datapath — one single-input
 //! MCM block per layer *input column* computes every `w[m][i] · x_i`
 //! product, and per-neuron adder trees sum the columns

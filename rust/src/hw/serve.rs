@@ -23,9 +23,34 @@
 //!   serving many (structure × trainer × tuning) scenarios re-elaborates
 //!   each distinct design exactly once per process.
 //!
+//! ```
+//! use simurg::ann::quant::QuantizedAnn;
+//! use simurg::ann::structure::{Activation, AnnStructure};
+//! use simurg::hw::{serve, verilog, Architecture, BatchInputs, Style};
+//!
+//! let qann = QuantizedAnn {
+//!     structure: AnnStructure::parse("2-2-1").unwrap(),
+//!     weights: vec![vec![vec![20, -24], vec![5, 0]], vec![vec![3, -6]]],
+//!     biases: vec![vec![10, -10], vec![0]],
+//!     q: 4,
+//!     activations: vec![Activation::HTanh, Activation::HSig],
+//! };
+//! // elaborate → simulate_batch → verilog, all from the same Design
+//! let arch = <dyn Architecture>::by_name("digit_serial").unwrap();
+//! let design = arch.elaborate(&qann, Style::Behavioral);
+//! let batch = BatchInputs::from_rows(&[[64, 32], [0, 127], [90, 1]]);
+//! let run = serve::simulate_batch(&design, &batch);
+//! assert_eq!(run.len, 3);
+//! assert_eq!(run.cycles, design.cycles());
+//! // bit-serial inferences serialize: batch throughput is n × latency
+//! assert_eq!(run.throughput_cycles, 3 * design.cycles());
+//! assert!(verilog::verilog(&design, "ann").contains("module ann"));
+//! ```
+//!
 //! [`mcm::engine`]: crate::mcm::engine
 
 use super::design::{Architecture, ArchKind, Design, LayerCompute, Schedule, Style};
+use super::netsim::step_cycles;
 use crate::ann::dataset::Sample;
 use crate::ann::quant::QuantizedAnn;
 use crate::ann::sim::activate;
@@ -131,10 +156,11 @@ pub struct BatchRun {
     /// clock cycles of one inference (identical across the batch)
     pub cycles: usize,
     /// clock cycles to push the whole batch through the design — where
-    /// pipelining actually pays: the sequential schedules serialize
-    /// inferences (`len × cycles`), the combinational datapath streams one
-    /// sample per (long) cycle, and the pipelined schedule fills once and
-    /// then retires one sample per cycle (`stages + len`); see
+    /// pipelining actually pays: the sequential schedules (the MAC cycle
+    /// programs and their digit-serial stretching) serialize inferences
+    /// (`len × cycles`), the combinational datapath streams one sample
+    /// per (long) cycle, and the pipelined schedule fills once and then
+    /// retires one sample per cycle (`stages + len`); see
     /// [`Schedule::throughput_cycles`]
     pub throughput_cycles: usize,
 }
@@ -184,7 +210,11 @@ pub fn simulate_batch(design: &Design, inputs: &BatchInputs) -> BatchRun {
         // the pipelined datapath computes combinational feedforward values;
         // only the cycle accounting (latency + batch fill/drain) differs
         Schedule::Combinational | Schedule::Pipelined { .. } => batch_feedforward(design, inputs),
-        Schedule::LayerSequential => batch_layer_sequential(design, inputs),
+        // the digit-serial MAC runs the layer-sequential program with
+        // every step stretched into `bits` bit-cycles
+        Schedule::LayerSequential | Schedule::DigitSerial { .. } => {
+            batch_layer_sequential(design, inputs)
+        }
         Schedule::NeuronSequential => batch_neuron_sequential(design, inputs),
     }
 }
@@ -338,11 +368,14 @@ fn batch_product(
     }
 }
 
-/// SMAC_NEURON schedule, batched: ι_k MAC cycles + 1 bias/activate cycle
-/// per layer, each step streaming over the batch.
+/// SMAC_NEURON schedule, batched: ι_k MAC steps + 1 bias/activate step
+/// per layer, each step streaming over the batch. A step costs one cycle
+/// word-parallel and `bits` bit-cycles under the digit-serial schedule
+/// ([`step_cycles`]), mirroring the per-input interpreter exactly.
 fn batch_layer_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
     let qann = &design.qann;
     let n = inputs.len();
+    let step = step_cycles(design);
     let mut cycles = 0usize;
     let mut cur: Vec<i64> = Vec::with_capacity(inputs.features() * n);
     for i in 0..inputs.features() {
@@ -363,7 +396,7 @@ fn batch_layer_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
                     *d += batch_product(&layer.compute, &units, m, i, x) << sl;
                 }
             }
-            cycles += 1;
+            cycles += step;
         }
         cur.clear();
         for m in 0..layer.n_out {
@@ -374,7 +407,7 @@ fn batch_layer_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
                     .map(|&a| activate(qann.activations[k], a + b, qann.q) as i64),
             );
         }
-        cycles += 1;
+        cycles += step;
     }
     let n_outputs = design.layers.last().map_or(inputs.features(), |l| l.n_out);
     let outputs: Vec<i32> = cur.iter().map(|&v| v as i32).collect();

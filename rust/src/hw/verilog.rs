@@ -11,7 +11,7 @@
 //! `hw::netsim` (bit-exact vs the golden model) and the emitted testbench
 //! carries golden vectors for an external simulator.
 
-use super::design::{ArchKind, Architecture, Design, LayerCompute, McmRef, Style};
+use super::design::{ArchKind, Architecture, Design, LayerCompute, McmRef, Schedule, Style};
 use crate::ann::dataset::Sample;
 use crate::ann::quant::QuantizedAnn;
 use crate::ann::sim;
@@ -35,6 +35,7 @@ pub fn verilog(design: &Design, module: &str) -> String {
         ArchKind::Pipelined => emit_pipelined(design, module),
         ArchKind::SmacNeuron => emit_smac_neuron(design, module),
         ArchKind::SmacAnn => emit_smac_ann(design, module),
+        ArchKind::DigitSerial => emit_digit_serial(design, module),
     }
 }
 
@@ -461,6 +462,163 @@ fn emit_smac_neuron(design: &Design, module: &str) -> String {
     v
 }
 
+/// Digit-serial MAC Verilog (`hw::digit_serial`): the SMAC_NEURON control
+/// structure plus a bit-counter FSM — every register-transfer step of the
+/// layer-sequential program is held for `B` bit-cycles (`B` the
+/// design-wide accumulator width), so one inference takes
+/// `B · Σ(ι_k + 1)` cycles, the [`Schedule::DigitSerial`] contract. The
+/// serial adder slices and shift registers the cost model prices are
+/// rendered as word-level register transfers gated on the bit counter;
+/// multiplierless styles tap the embedded product graphs and emit no `*`.
+/// Like the SMAC emitters, the module computes one inference per
+/// rst/start handshake (no self-restart); closing the external-simulator
+/// loop on these netlists is ROADMAP §External HDL equivalence.
+///
+/// The selection fabric and commit body deliberately mirror
+/// [`emit_smac_neuron`] statement for statement (only the bit-counter
+/// gate differs) — a change to either emitter's fabric must be applied to
+/// both, or the two architectures' HDL drifts.
+fn emit_digit_serial(design: &Design, module: &str) -> String {
+    let qann = &design.qann;
+    let st = &qann.structure;
+    let n_out = st.layer_outputs(st.num_layers() - 1);
+    let max_acc = design.layers.iter().map(|l| l.acc_bits).max().unwrap_or(8);
+    let Schedule::DigitSerial { bits } = design.schedule else {
+        panic!("digit-serial designs carry the DigitSerial schedule");
+    };
+
+    let mut v = String::new();
+    let _ = writeln!(v, "// generated by SIMURG-RS: digit_serial / {} / {st}", design.style.name());
+    let _ = write!(v, "module {module} (\n  input clk,\n  input rst,\n  input start,\n");
+    for i in 0..st.inputs {
+        let _ = writeln!(v, "  input signed [7:0] x{i},");
+    }
+    for m in 0..n_out {
+        let _ = writeln!(v, "  output reg signed [7:0] y{m},");
+    }
+    let _ = writeln!(v, "  output reg done\n);");
+    v.push_str(&clamp_functions(max_acc));
+
+    let _ = writeln!(v, "  reg [7:0] layer;   // active layer counter");
+    let _ = writeln!(v, "  reg [7:0] cnt;     // input counter of the active layer");
+    let _ = writeln!(v, "  reg [7:0] bitcnt;  // bit-counter FSM: {bits} bit-cycles per step");
+
+    // per-layer accumulator shift registers and output registers
+    for (k, layer) in design.layers.iter().enumerate() {
+        let acc_w = layer.acc_bits.max(2);
+        for m in 0..layer.n_out {
+            let _ = writeln!(v, "  reg signed [{}:0] acc_{k}_{m};", acc_w - 1);
+            let _ = writeln!(v, "  reg signed [7:0] z_{k}_{m};");
+        }
+    }
+
+    // broadcast input select per layer, plus the weight/product muxes —
+    // identical selection fabric to the SMAC_NEURON emitter
+    for (k, layer) in design.layers.iter().enumerate() {
+        let (stored, _, mcm) = mac_layer(design, k);
+        let _ = writeln!(v, "  reg signed [7:0] xsel_{k};");
+        let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
+        for i in 0..layer.n_in {
+            let src = if k == 0 {
+                format!("x{i}")
+            } else {
+                format!("z_{}_{i}", k - 1)
+            };
+            let _ = writeln!(v, "      8'd{i}: xsel_{k} = {src};");
+        }
+        let _ = writeln!(v, "      default: xsel_{k} = 8'sd0;\n    endcase\n  end");
+        match mcm {
+            None => {
+                for (m, row) in stored.iter().enumerate() {
+                    let wb = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1).max(2);
+                    let _ = writeln!(v, "  reg signed [{}:0] wsel_{k}_{m};", wb - 1);
+                    let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
+                    for (i, &c) in row.iter().enumerate() {
+                        let _ = writeln!(v, "      8'd{i}: wsel_{k}_{m} = {c};");
+                    }
+                    let _ = writeln!(v, "      default: wsel_{k}_{m} = 0;\n    endcase\n  end");
+                }
+            }
+            Some(r) => {
+                // the layer's embedded MCM product graph (realized as
+                // serial slices in hardware; rendered combinationally
+                // here), one tap muxed per neuron per input count
+                let prefix = format!("g{k}");
+                let _ = writeln!(v, "  wire signed [7:0] {prefix}_x0 = xsel_{k};");
+                let taps =
+                    emit_graph(&mut v, &prefix, &design.graphs[r.graph], &[layer.in_range]);
+                for (m, row) in stored.iter().enumerate() {
+                    let p_bits =
+                        (row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8).max(2);
+                    let _ = writeln!(v, "  reg signed [{}:0] psel_{k}_{m};", p_bits - 1);
+                    let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
+                    for i in 0..row.len() {
+                        let tap = &taps[r.offset + m * layer.n_in + i];
+                        let _ = writeln!(v, "      8'd{i}: psel_{k}_{m} = {tap};");
+                    }
+                    let _ = writeln!(v, "      default: psel_{k}_{m} = 0;\n    endcase\n  end");
+                }
+            }
+        }
+    }
+
+    // the digit-serial schedule: each layer-sequential step commits only
+    // when the bit counter wraps, so layer k holds for (ι_k + 1)·B cycles
+    let _ = writeln!(v, "  always @(posedge clk) begin");
+    let _ = writeln!(v, "    if (rst) begin");
+    let _ = writeln!(v, "      layer <= 0; cnt <= 0; bitcnt <= 0; done <= 0;");
+    // clear every accumulator so the first MAC step starts from 0 in a
+    // 4-state simulator (X would otherwise poison every output)
+    for (k, layer) in design.layers.iter().enumerate() {
+        for m in 0..layer.n_out {
+            let _ = writeln!(v, "      acc_{k}_{m} <= 0;");
+        }
+    }
+    let _ = writeln!(v, "    end else if (start || layer < {}) begin", st.num_layers());
+    let _ = writeln!(v, "      if (bitcnt < {}) begin", bits.saturating_sub(1));
+    let _ = writeln!(v, "        bitcnt <= bitcnt + 1;  // serial slices stream 1 bit/cycle");
+    let _ = writeln!(v, "      end else begin");
+    let _ = writeln!(v, "        bitcnt <= 0;");
+    for (k, layer) in design.layers.iter().enumerate() {
+        let (_, sls, mcm) = mac_layer(design, k);
+        let _ = writeln!(v, "        if (layer == {k}) begin");
+        let _ = writeln!(v, "          if (cnt < {}) begin", layer.n_in);
+        for (m, &s) in sls.iter().enumerate() {
+            let shift = if s > 0 { format!(" <<< {s}") } else { String::new() };
+            let product = match mcm {
+                None => format!("(wsel_{k}_{m} * xsel_{k})"),
+                Some(_) => format!("psel_{k}_{m}"),
+            };
+            let _ = writeln!(v, "            acc_{k}_{m} <= acc_{k}_{m} + ({product}{shift});");
+        }
+        let _ = writeln!(v, "            cnt <= cnt + 1;");
+        let _ = writeln!(v, "          end else begin");
+        let acc_w = layer.acc_bits.max(2);
+        for m in 0..layer.n_out {
+            let b = qann.biases[k][m];
+            let y = format!("(acc_{k}_{m} + ({b}))");
+            let z = activation_expr(qann.activations[k], &y, acc_w, qann.q);
+            let _ = writeln!(v, "            z_{k}_{m} <= {z};");
+            let _ = writeln!(v, "            acc_{k}_{m} <= 0;");
+        }
+        let _ = writeln!(v, "            cnt <= 0; layer <= layer + 1;");
+        if k == st.num_layers() - 1 {
+            for m in 0..layer.n_out {
+                let b = qann.biases[k][m];
+                let y = format!("(acc_{k}_{m} + ({b}))");
+                let z = activation_expr(qann.activations[k], &y, acc_w, qann.q);
+                let _ = writeln!(v, "            y{m} <= {z};");
+            }
+            let _ = writeln!(v, "            done <= 1;");
+        }
+        let _ = writeln!(v, "          end");
+        let _ = writeln!(v, "        end");
+    }
+    let _ = writeln!(v, "      end");
+    let _ = writeln!(v, "    end\n  end\nendmodule");
+    v
+}
+
 /// SMAC_ANN-architecture Verilog (paper Fig. 7): the whole ANN through a
 /// single MAC; three nested counters (layer / neuron / input) drive the
 /// weight, bias and input selection; layer outputs are held in a register
@@ -710,7 +868,10 @@ pub fn testbench(qann: &QuantizedAnn, samples: &[Sample], dut: &str, cycles: usi
 /// design's own net, run length from its schedule, handshake ports from
 /// its architecture.
 pub fn testbench_for(design: &Design, samples: &[Sample], dut: &str) -> String {
-    let control = matches!(design.arch, ArchKind::SmacNeuron | ArchKind::SmacAnn);
+    let control = matches!(
+        design.arch,
+        ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial
+    );
     testbench(&design.qann, samples, dut, design.cycles(), control)
 }
 
@@ -864,6 +1025,30 @@ mod tests {
         assert!(va.contains("psel"), "single product select");
         assert!(!va.contains(" * "), "multiplierless must not multiply");
         assert!(va.contains("case ({layer, neuron, cnt})"));
+    }
+
+    #[test]
+    fn digit_serial_netlist_structure() {
+        use crate::hw::digit_serial::DigitSerial;
+        let q = qann("16-10-10");
+        // behavioral: bit-counter FSM present, product left to synthesis
+        let db = DigitSerial.elaborate(&q, Style::Behavioral);
+        let vb = verilog(&db, "ann_ds");
+        assert!(vb.contains("// generated by SIMURG-RS: digit_serial / behavioral"));
+        assert!(vb.contains("reg [7:0] bitcnt"), "bit-counter FSM must be emitted");
+        assert!(vb.contains("bitcnt <= bitcnt + 1"));
+        assert!(vb.contains(" * "), "behavioral leaves the product to the synthesis tool");
+        assert!(vb.contains("done <= 1"));
+        // mcm: products tapped from the embedded graph, no multiplier
+        let dm = DigitSerial.elaborate(&q, Style::Mcm);
+        let vm = verilog(&dm, "ann_ds_mcm");
+        assert!(vm.contains("reg [7:0] bitcnt"));
+        assert!(vm.contains("g0_x0"), "layer 0 graph input binding");
+        assert!(vm.contains("psel_0_0"), "per-neuron product select");
+        assert!(!vm.contains(" * "), "multiplierless must not multiply");
+        let nodes: usize = dm.graphs.iter().map(|g| g.nodes.len()).sum();
+        let wires = vm.lines().filter(|l| l.contains("wire signed") && l.contains("<<<")).count();
+        assert!(wires >= nodes, "expected >= {nodes} graph wires, got {wires}");
     }
 
     #[test]

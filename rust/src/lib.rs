@@ -6,10 +6,37 @@
 //! hardware realizations under the paper's three design architectures —
 //! **parallel**, **SMAC_NEURON** (one multiply–accumulate block per
 //! neuron) and **SMAC_ANN** (a single MAC block for the whole network) —
-//! plus a **layer-pipelined parallel** variant this reproduction adds as
-//! the fourth registry entry, with hardware-aware post-training (minimum
-//! quantization + weight tuning) and multiplierless shift-adds
-//! realizations of the constant multiplications (MCM / CAVM / CMVM).
+//! plus the two entries this reproduction adds to the trade-off curve: a
+//! **layer-pipelined parallel** variant on the throughput end and a
+//! **digit-serial MAC** (serial adders at 1 bit per cycle, cycle count
+//! scaling with the quantized bit widths) on the area end — with
+//! hardware-aware post-training (minimum quantization + weight tuning)
+//! and multiplierless shift-adds realizations of the constant
+//! multiplications (MCM / CAVM / CMVM). ARCHITECTURE.md maps the paper's
+//! sections to modules and tabulates every schedule's closed forms.
+//!
+//! The whole pipeline in one breath — elaborate a design point from the
+//! registry, serve a batch through it, emit its HDL:
+//!
+//! ```
+//! use simurg::ann::quant::QuantizedAnn;
+//! use simurg::ann::structure::{Activation, AnnStructure};
+//! use simurg::hw::{serve, verilog, Architecture, BatchInputs, Style};
+//!
+//! let qann = QuantizedAnn {
+//!     structure: AnnStructure::parse("2-2-1").unwrap(),
+//!     weights: vec![vec![vec![20, -24], vec![5, 0]], vec![vec![3, -6]]],
+//!     biases: vec![vec![10, -10], vec![0]],
+//!     q: 4,
+//!     activations: vec![Activation::HTanh, Activation::HSig],
+//! };
+//! for arch in <dyn Architecture>::all() {
+//!     let design = arch.elaborate(&qann, Style::Behavioral);
+//!     let run = serve::simulate_batch(&design, &BatchInputs::from_rows(&[[64, 32]]));
+//!     assert_eq!(run.cycles, design.cycles(), "{}", arch.name());
+//!     assert!(verilog::verilog(&design, "ann").contains("endmodule"));
+//! }
+//! ```
 //!
 //! Layering (see DESIGN.md):
 //! - this crate is **L3**: the coordinator / CAD tool;

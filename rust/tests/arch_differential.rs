@@ -13,7 +13,11 @@
 //!    (`ann::sim::forward`) — and therefore bit-identical *across*
 //!    architectures;
 //! 2. the interpreter's cycle count matches each schedule's closed-form
-//!    formula (1 / stages+1 / Σ(ι+1) / Σ(ι+2)·η);
+//!    formula — the same table ARCHITECTURE.md documents:
+//!    1 / stages+1 / Σ(ι+1) / Σ(ι+2)·η / B·Σ(ι+1), with `B` the
+//!    digit-serial design's worst accumulator width (the bit-width-
+//!    dependent cycle model, exercised away from small weights by the
+//!    wide-bit-width corpus below);
 //! 3. `simulate_batch` agrees with the per-input route on outputs and
 //!    cycles, and its batch throughput matches
 //!    `Schedule::throughput_cycles` (for the pipelined schedule:
@@ -119,48 +123,65 @@ fn corpus(rng: &mut Rng, inputs: usize, n: usize) -> Vec<Vec<i32>> {
     rows
 }
 
+/// The digit-serial word length `B`, restated from its documented
+/// definition (ARCHITECTURE.md / `hw::digit_serial`): the worst layer
+/// accumulator width. The restatement independently pins the fold
+/// (max over layers, not min/first/per-layer) and the schedule plumbing
+/// against `serial_bits`; `layer_acc_bits` itself is the *definition* of
+/// a layer's width, so it is shared, not re-derived.
+fn serial_word_bits(qann: &QuantizedAnn) -> usize {
+    (0..qann.structure.num_layers())
+        .map(|k| simurg::hw::report::layer_acc_bits(qann, k))
+        .max()
+        .unwrap_or(1) as usize
+}
+
 /// The closed-form cycle count of one inference for an architecture, as
-/// stated in the paper (Sec. III) and in `hw::pipelined`.
-fn closed_form_cycles(arch: &str, st: &AnnStructure) -> usize {
+/// stated in the paper (Sec. III), in `hw::pipelined` / `hw::digit_serial`
+/// and in ARCHITECTURE.md's cycle-model table.
+fn closed_form_cycles(arch: &str, qann: &QuantizedAnn) -> usize {
+    let st = &qann.structure;
     match arch {
         "parallel" => 1,
         "pipelined" => st.num_layers() + 1,
         "smac_neuron" => st.smac_neuron_cycles(),
         "smac_ann" => st.smac_ann_cycles(),
+        // bit-width-dependent: every layer-sequential step stretched into
+        // B bit-cycles
+        "digit_serial" => serial_word_bits(qann) * st.smac_neuron_cycles(),
         other => panic!("unknown architecture {other}"),
     }
 }
 
 /// Closed-form batch throughput cycles for an architecture.
-fn closed_form_throughput(arch: &str, st: &AnnStructure, n: usize) -> usize {
+fn closed_form_throughput(arch: &str, qann: &QuantizedAnn, n: usize) -> usize {
     match arch {
         "parallel" => n,
-        "pipelined" => st.num_layers() + n,
-        _ => n * closed_form_cycles(arch, st),
+        "pipelined" => qann.structure.num_layers() + n,
+        _ => n * closed_form_cycles(arch, qann),
     }
 }
 
 /// Run every registry design point of `qann` against the golden model
 /// over `rows`; `Err` carries a description of the first divergence.
 fn check(qann: &QuantizedAnn, rows: &[Vec<i32>]) -> Result<(), String> {
-    let st = &qann.structure;
     let batch = BatchInputs::from_rows(rows);
     for (arch, style) in design_points() {
         let point = format!("{}/{}", arch.name(), style.name());
         let design = arch.elaborate(qann, style);
-        if design.cycles() != closed_form_cycles(arch.name(), st) {
+        if design.cycles() != closed_form_cycles(arch.name(), qann) {
             return Err(format!(
                 "{point}: schedule cycles {} != closed form {}",
                 design.cycles(),
-                closed_form_cycles(arch.name(), st)
+                closed_form_cycles(arch.name(), qann)
             ));
         }
         let run = simulate_batch(&design, &batch);
-        if run.throughput_cycles != closed_form_throughput(arch.name(), st, rows.len()) {
+        if run.throughput_cycles != closed_form_throughput(arch.name(), qann, rows.len()) {
             return Err(format!(
                 "{point}: batch throughput {} != closed form {}",
                 run.throughput_cycles,
-                closed_form_throughput(arch.name(), st, rows.len())
+                closed_form_throughput(arch.name(), qann, rows.len())
             ));
         }
         for (s, row) in rows.iter().enumerate() {
@@ -289,6 +310,72 @@ fn all_architectures_agree_on_the_paper_benchmarks() {
         let qann = QuantizedAnn { structure: st, weights, biases, q, activations };
         let rows = corpus(&mut rng, qann.structure.inputs, 8);
         check_shrinking(1000 + i, &qann, &rows);
+    }
+}
+
+/// One random weight row with near-i32 magnitudes: the wide-bit-width
+/// regime the default corpus (|w| ≲ 2^q) never reaches. The values carry
+/// few CSD digits (a high base power plus a mid and a low term), so the
+/// MCM heuristics stay fast while the accumulator widths — and with them
+/// the digit-serial `B` — grow past 32 bits.
+fn wide_row(rng: &mut Rng, n: usize) -> Vec<i64> {
+    (0..n)
+        .map(|_| {
+            if rng.uniform() < 0.2 {
+                return 0; // keep some sparsity so sls/zero paths stay live
+            }
+            let base = 1i64 << (28 + rng.below(2));
+            let w = base + (1i64 << (8 + rng.below(12))) + rng.below(8) as i64;
+            if rng.uniform() < 0.5 {
+                -w
+            } else {
+                w
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn wide_bit_width_nets_exercise_the_cycle_model() {
+    // near-i32 weight magnitudes widen every accumulator far past the
+    // small-weight corpus, so the digit-serial closed form B·Σ(ι+1) is
+    // checked where B actually bites — while every design point stays
+    // bit-identical to the golden model (nets kept tiny: the MCM engine
+    // still solves 30-bit constants, just over small sets)
+    let mut rng = Rng::new(0xB16_B175);
+    for (inputs, neurons) in [(4usize, vec![2usize]), (3, vec![2, 2]), (2, vec![2, 2])] {
+        let structure = AnnStructure::new(inputs, &neurons);
+        let layers = structure.num_layers();
+        let mut activations = vec![Activation::HTanh; layers];
+        activations[layers - 1] = Activation::HSig;
+        let weights: Vec<Vec<Vec<i64>>> = (0..layers)
+            .map(|k| {
+                (0..structure.layer_outputs(k))
+                    .map(|_| wide_row(&mut rng, structure.layer_inputs(k)))
+                    .collect()
+            })
+            .collect();
+        let biases: Vec<Vec<i64>> = (0..layers)
+            .map(|k| {
+                (0..structure.layer_outputs(k)).map(|_| rng.below(1 << 12) as i64 - (1 << 11)).collect()
+            })
+            .collect();
+        let qann = QuantizedAnn { structure, weights, biases, q: 6, activations };
+        // the whole differential harness over the wide net: bit-identical
+        // outputs, closed-form cycles and batch throughput per point
+        let rows = corpus(&mut rng, qann.structure.inputs, 6);
+        check_shrinking(2000, &qann, &rows);
+        // and the bit widths really are wide: the serial word is far past
+        // the ≤ q+2 ≈ 9-bit accumulators of the small-weight corpus, so
+        // the digit-serial design pays for them in cycles
+        let b = serial_word_bits(&qann);
+        assert!(b >= 32, "near-i32 weights must widen the serial word (got B = {b})");
+        let d = simurg::hw::digit_serial::DigitSerial.elaborate(&qann, simurg::hw::Style::Mcm);
+        assert_eq!(d.cycles(), b * qann.structure.smac_neuron_cycles());
+        assert!(
+            d.cycles() >= 32 * qann.structure.smac_neuron_cycles(),
+            "wide operands must cost bit-cycles"
+        );
     }
 }
 

@@ -287,9 +287,10 @@ fn design_cost_reproduces_prerefactor_reports() {
     for structure in ["16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10"] {
         let q = qann(structure, 6, 5);
         for (arch, style) in design_points() {
-            if arch.name() == "pipelined" {
-                // post-refactor architecture: no pre-refactor golden exists;
-                // its conformance harness is rust/tests/arch_differential.rs
+            if matches!(arch.name(), "pipelined" | "digit_serial") {
+                // post-refactor architectures: no pre-refactor golden
+                // exists; their conformance harness is
+                // rust/tests/arch_differential.rs
                 continue;
             }
             let name = format!("{structure} {} {}", arch.name(), style.name());
@@ -307,7 +308,7 @@ fn design_cost_is_stable_under_requantization() {
     for q_bits in [4, 8] {
         let q = qann("16-16-10", q_bits, 23);
         for (arch, style) in design_points() {
-            if arch.name() == "pipelined" {
+            if matches!(arch.name(), "pipelined" | "digit_serial") {
                 continue; // no pre-refactor golden (see above)
             }
             let name = format!("q{q_bits} {} {}", arch.name(), style.name());
@@ -350,11 +351,13 @@ fn cycle_formulas_hold_for_every_design_point() {
         let st = &q.structure;
         for (arch, style) in design_points() {
             let d = arch.elaborate(&q, style);
+            let serial_bits = simurg::hw::digit_serial::serial_bits(&q) as usize;
             let expected = match arch.name() {
                 "parallel" => 1,
                 "pipelined" => st.num_layers() + 1,
                 "smac_neuron" => st.smac_neuron_cycles(),
                 "smac_ann" => st.smac_ann_cycles(),
+                "digit_serial" => serial_bits * st.smac_neuron_cycles(),
                 other => panic!("unknown architecture {other}"),
             };
             assert_eq!(d.cycles(), expected, "{structure} {} schedule", arch.name());

@@ -127,6 +127,43 @@ fn every_design_point_passes_the_structural_lint() {
 }
 
 #[test]
+fn digit_serial_multiplierless_styles_emit_no_multiplier() {
+    // the satellite pin for the fifth registry entry: the digit-serial
+    // datapath is serial shift-adds end to end, so its multiplierless
+    // style must never fall back to the `*` operator — products are taps
+    // of the embedded MCM graph muxed per neuron — while the bit-counter
+    // FSM (the cycle-model's B bit-cycles per step) is present in both
+    // styles
+    for structure in ["16-10", "16-16-10", "16-10-10-10"] {
+        let q = qann(structure, 6, 13);
+        let arch = simurg::hw::design::design_points()
+            .into_iter()
+            .map(|(a, _)| a)
+            .find(|a| a.name() == "digit_serial")
+            .expect("digit_serial is a registry entry");
+        for &style in arch.styles() {
+            let v = verilog::verilog(&arch.elaborate(&q, style), "lint_ds");
+            let point = format!("{structure} digit_serial/{}", style.name());
+            lint(&v, &point);
+            assert!(v.contains("bitcnt"), "{point}: bit-counter FSM missing");
+            if style == Style::Behavioral {
+                continue;
+            }
+            for line in code_lines(&v) {
+                assert!(
+                    !line.contains(" * "),
+                    "{point}: digit-serial multiplierless style emitted a `*`: {line}"
+                );
+            }
+            assert!(
+                v.lines().any(|l| l.contains("<<<")),
+                "{point}: shift-add taps must be present"
+            );
+        }
+    }
+}
+
+#[test]
 fn testbenches_pass_the_bracket_lint_too() {
     let ds = simurg::ann::dataset::Dataset::synthetic_with_sizes(5, 30, 8);
     let q = qann("16-10", 6, 9);
