@@ -9,9 +9,10 @@
 //!                                            acceptance check)
 //!
 //! Emits `BENCH_batch_netsim.json` (batched vs per-input throughput per
-//! design point, design-cache hit rate) and, on full runs,
-//! `BENCH_design_ir.json` (tuner pricing elaborate-once vs rebuild).
-//! Methodology: see README §Serving.
+//! design point, design-cache hit rate), `BENCH_serve_daemon.json`
+//! (daemon-coalesced concurrent serving vs per-request serving, both
+//! smoke and full), and, on full runs, `BENCH_design_ir.json` (tuner
+//! pricing elaborate-once vs rebuild). Methodology: see README §Serving.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -21,6 +22,8 @@ use simurg::ann::dataset::Dataset;
 use simurg::ann::model::{Ann, Init};
 use simurg::ann::quant::QuantizedAnn;
 use simurg::ann::structure::{Activation, AnnStructure};
+use simurg::hw::artifact::TieredDesignCache;
+use simurg::hw::daemon::{Daemon, DaemonConfig};
 use simurg::hw::design::{ArchKind, LayerPricer};
 use simurg::hw::netsim;
 use simurg::hw::serve::{self, BatchInputs};
@@ -30,7 +33,7 @@ use simurg::posttrain::{AccuracyEval, BatchEval, NativeEval};
 use simurg::runtime::{Artifacts, PjrtEval};
 use std::fmt::Write as _;
 use std::hint::black_box;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
     let st = AnnStructure::parse(structure).unwrap();
@@ -75,7 +78,7 @@ fn bench_batch_netsim(smoke: bool) {
     let mut entries = String::new();
     let mut headline = 0.0f64;
     for (arch, style) in points {
-        let design = serve::design_for(&qann, arch, style);
+        let design = serve::designs().design(&qann, arch, style);
         // bit-exactness first: the batch must match the per-input loop
         let run = serve::simulate_batch(&design, &inputs);
         for (s, row) in rows.iter().enumerate() {
@@ -118,12 +121,12 @@ fn bench_batch_netsim(smoke: bool) {
     // serving loop cache behavior: one design fetch per batch of 64 —
     // everything after the first fetch per scenario is a hit
     let batches = inputs.split(n.div_ceil(64));
-    let before = serve::cache_stats();
+    let before = serve::designs().stats();
     for b in &batches {
-        let d = serve::design_for(&qann, ArchKind::SmacNeuron, Style::Mcm);
+        let d = serve::designs().design(&qann, ArchKind::SmacNeuron, Style::Mcm);
         black_box(serve::simulate_batch(&d, b));
     }
-    let cache = serve::cache_stats().since(&before);
+    let cache = serve::designs().stats().since(&before);
     println!(
         "design cache over {} batches: {} lookups, {} hits ({:.1}% hit rate)",
         batches.len(),
@@ -137,8 +140,8 @@ fn bench_batch_netsim(smoke: bool) {
     // chain, so the modeled batch time (throughput cycles x clock period)
     // must beat the combinational design despite the stages + n fill cost
     let lib = simurg::hw::TechLib::tsmc40();
-    let comb = serve::design_for(&qann, ArchKind::Parallel, Style::Cmvm);
-    let pipe = serve::design_for(&qann, ArchKind::Pipelined, Style::Cmvm);
+    let comb = serve::designs().design(&qann, ArchKind::Parallel, Style::Cmvm);
+    let pipe = serve::designs().design(&qann, ArchKind::Pipelined, Style::Cmvm);
     let comb_run = serve::simulate_batch(&comb, &inputs);
     let pipe_run = serve::simulate_batch(&pipe, &inputs);
     let stages = qann.structure.num_layers();
@@ -157,8 +160,8 @@ fn bench_batch_netsim(smoke: bool) {
     // paper states, on the modeled figures of the standard net — the
     // serial datapath must be (much) smaller while paying for it in
     // bit-cycles of latency
-    let ds = serve::design_for(&qann, ArchKind::DigitSerial, Style::Behavioral);
-    let par_b = serve::design_for(&qann, ArchKind::Parallel, Style::Behavioral);
+    let ds = serve::designs().design(&qann, ArchKind::DigitSerial, Style::Behavioral);
+    let par_b = serve::designs().design(&qann, ArchKind::Parallel, Style::Behavioral);
     let ds_cost = ds.cost(&lib);
     let par_cost = par_b.cost(&lib);
     println!(
@@ -214,12 +217,79 @@ fn bench_batch_netsim(smoke: bool) {
     assert!(cache.hit_rate() > 0.5, "serving loop must hit the design cache");
 }
 
+/// The persistent serving daemon: the same pipelined request stream
+/// served per-request (`max_batch = 1`, the latency end of the dial)
+/// vs coalesced into SoA batches (`max_batch = 64`). Both sides run
+/// through the identical daemon machinery — queue, worker, response
+/// channels — so the ratio isolates what coalescing buys. Writes
+/// `BENCH_serve_daemon.json`; asserts the acceptance floor (coalesced
+/// concurrent serving >= 2x per-request serving).
+fn bench_serve_daemon(smoke: bool) {
+    let requests = if smoke { 256 } else { 1024 };
+    let qann = qann_for("16-16-10", 7);
+    let rows: Vec<Vec<i32>> = (0..requests)
+        .map(|i| (0..16).map(|j| ((i * 31 + j * 7) % 128) as i32).collect())
+        .collect();
+    println!(
+        "\n== serving daemon: coalesced vs per-request ({requests} single-sample requests) =="
+    );
+
+    let drive = |max_batch: usize| -> (f64, u64, u64, f64) {
+        let daemon = Daemon::with_cache(
+            DaemonConfig { max_batch, max_wait: Duration::from_micros(500), artifact_dir: None },
+            TieredDesignCache::isolated(None),
+        );
+        let dep = daemon.deploy("bench@v1", qann.clone(), ArchKind::SmacNeuron, Style::Mcm);
+        // warm: elaboration must not be on either side's clock
+        black_box(daemon.cache().design(&qann, ArchKind::SmacNeuron, Style::Mcm));
+        let t = Instant::now();
+        let pending: Vec<_> = rows.iter().map(|r| daemon.submit(dep, r)).collect();
+        for p in pending {
+            black_box(p.wait());
+        }
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let st = daemon.status();
+        let d = &st.deployments[0];
+        let out = (ms, d.batches, d.largest_batch, d.hit_rate());
+        daemon.shutdown();
+        out
+    };
+
+    let (per_request_ms, per_batches, _, _) = drive(1);
+    let (coalesced_ms, co_batches, co_largest, co_hit_rate) = drive(64);
+    assert_eq!(per_batches, requests as u64, "max_batch = 1 must serve per-request");
+    assert!(co_batches < requests as u64, "the coalesced side must share batches");
+    let speedup = per_request_ms / coalesced_ms.max(1e-9);
+    println!("per-request (max_batch 1)  {per_request_ms:>9.2} ms  ({per_batches} batches)");
+    println!(
+        "coalesced   (max_batch 64) {coalesced_ms:>9.2} ms  ({co_batches} batches, largest {co_largest}, \
+         design hit rate {:.1}%)  -> {speedup:.2}x",
+        100.0 * co_hit_rate
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_daemon\",\n  \"structure\": \"16-16-10\",\n  \
+         \"point\": \"smac_neuron/mcm\",\n  \"requests\": {requests},\n  \"smoke\": {smoke},\n  \
+         \"per_request_ms\": {per_request_ms:.3},\n  \"coalesced_ms\": {coalesced_ms:.3},\n  \
+         \"speedup\": {speedup:.3},\n  \"coalesced_batches\": {co_batches},\n  \
+         \"largest_batch\": {co_largest},\n  \"design_hit_rate\": {co_hit_rate:.4}\n}}\n"
+    );
+    std::fs::write("BENCH_serve_daemon.json", &json).expect("write BENCH_serve_daemon.json");
+    println!("wrote BENCH_serve_daemon.json");
+    assert!(
+        speedup >= 2.0,
+        "acceptance: daemon-coalesced concurrent serving must be >= 2x per-request serving \
+         (got {speedup:.2}x)"
+    );
+}
+
 fn main() {
     // `--smoke` (the CI bit-rot + acceptance check) runs only the batch
-    // section, on a reduced workload.
+    // and daemon sections, on a reduced workload.
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
         bench_batch_netsim(true);
+        bench_serve_daemon(true);
         return;
     }
 
@@ -290,6 +360,7 @@ fn main() {
     });
 
     bench_batch_netsim(false);
+    bench_serve_daemon(false);
 
     // == design IR: the tuner scoring path ==
     // A tuner candidate touches exactly one layer. Compare pricing the

@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         // the process-wide cache (elaborate once per design point), and
         // the whole test set runs as one SoA batch per design
         for arch in <dyn Architecture>::all() {
-            let design = serve::design_for(qann, arch.kind(), Style::Behavioral);
+            let design = serve::designs().design(qann, arch.kind(), Style::Behavioral);
             let r = design.cost(&lib);
             let correct = serve::simulate_batch(&design, &test_inputs).count_correct(&labels);
             println!(
@@ -51,6 +51,6 @@ fn main() -> anyhow::Result<()> {
         }
         println!();
     }
-    print!("{}", report::design_cache_summary(&serve::cache_stats()));
+    print!("{}", report::design_cache_summary(&serve::designs().stats()));
     Ok(())
 }

@@ -5,43 +5,137 @@
 use super::flow::FlowOutcome;
 use crate::ann::structure::AnnStructure;
 use crate::ann::train::Trainer;
+use crate::hw::artifact::{StoreStats, TierStats};
+use crate::hw::daemon::DaemonStatus;
 use crate::hw::serve::{self, CacheStats};
 use crate::hw::{Architecture, HwReport, Style, TechLib};
 use crate::mcm::EngineStats;
 use crate::posttrain::TuneResult;
 use std::fmt::Write as _;
 
-/// One-line MCM-engine cache report: how much of a sweep's constant-
-/// multiplication solve cost was answered from the shared cache. Emitted
-/// after every table/figure regeneration so sweep logs record the
-/// trajectory of the hot path.
-pub fn engine_summary(stats: &EngineStats) -> String {
-    format!(
-        "MCM engine: {} lookups, {} hits ({:.1}% hit rate), {} cached instances; \
-         {} ops solved fresh, {} ops served from cache\n",
-        stats.lookups(),
-        stats.hits,
-        100.0 * stats.hit_rate(),
-        stats.entries,
-        stats.ops_solved,
-        stats.ops_reused,
-    )
+/// Uniform rendering for every serving-stack stats source — the MCM
+/// engine, the in-memory design cache, the on-disk artifact tier, both
+/// tiers combined, and the daemon's deployment table all print through
+/// this one trait, so the CLI (`flow`, `sweep`, `serve status`) and the
+/// daemon report identically.
+pub trait Summary {
+    /// Newline-terminated report block (one line for the flat cache
+    /// stats, a table for the daemon status).
+    fn summary(&self) -> String;
 }
 
-/// One-line [`serve::DesignCache`] report, plumbed like
-/// [`engine_summary`]: how many elaborations the shared design cache
-/// answered from content-addressed lookups.
+impl Summary for EngineStats {
+    /// How much of a sweep's constant-multiplication solve cost was
+    /// answered from the shared engine cache.
+    fn summary(&self) -> String {
+        format!(
+            "MCM engine: {} lookups, {} hits ({:.1}% hit rate), {} cached instances; \
+             {} ops solved fresh, {} ops served from cache\n",
+            self.lookups(),
+            self.hits,
+            100.0 * self.hit_rate(),
+            self.entries,
+            self.ops_solved,
+            self.ops_reused,
+        )
+    }
+}
+
+impl Summary for CacheStats {
+    /// How many elaborations the in-memory design cache answered from
+    /// content-addressed lookups.
+    fn summary(&self) -> String {
+        format!(
+            "Design cache: {} lookups, {} hits ({:.1}% hit rate), {} elaborations, \
+             {} cached designs, {} evicted\n",
+            self.lookups(),
+            self.hits,
+            100.0 * self.hit_rate(),
+            self.misses,
+            self.entries,
+            self.evictions,
+        )
+    }
+}
+
+impl Summary for StoreStats {
+    /// The on-disk artifact tier: warm-restart hits and store health.
+    fn summary(&self) -> String {
+        format!(
+            "Artifact store: {} lookups, {} hits ({:.1}% hit rate), {} writes, \
+             {} artifacts on disk, {} corrupt skipped\n",
+            self.lookups(),
+            self.hits,
+            100.0 * self.hit_rate(),
+            self.writes,
+            self.entries,
+            self.errors,
+        )
+    }
+}
+
+impl Summary for TierStats {
+    /// Both design tiers, memory line first the way a fetch descends.
+    fn summary(&self) -> String {
+        let mut s = self.mem.summary();
+        if self.disk != StoreStats::default() {
+            s.push_str(&self.disk.summary());
+        }
+        s
+    }
+}
+
+impl Summary for DaemonStatus {
+    /// The deployment table plus both cache tiers — what `serve status`
+    /// prints and what the daemon reports after draining.
+    fn summary(&self) -> String {
+        let mut s = format!(
+            "Serving daemon: {} deployment(s), max batch {}, max wait {:?}\n",
+            self.deployments.len(),
+            self.max_batch,
+            self.max_wait,
+        );
+        if !self.deployments.is_empty() {
+            let _ = writeln!(
+                s,
+                "  {:<18}{:<22}{:>8}{:>9}{:>11}{:>14}{:>12}",
+                "deployment",
+                "design point",
+                "reqs",
+                "batches",
+                "mean batch",
+                "queue µs",
+                "design hits"
+            );
+            for d in &self.deployments {
+                let _ = writeln!(
+                    s,
+                    "  {:<18}{:<22}{:>8}{:>9}{:>11.1}{:>14.1}{:>11.0}%",
+                    d.name,
+                    format!("{}/{}", d.arch.name(), d.style.name()),
+                    d.requests,
+                    d.batches,
+                    d.mean_batch(),
+                    d.mean_queue_us(),
+                    100.0 * d.hit_rate(),
+                );
+            }
+        }
+        s.push_str(&self.tiers.summary());
+        s
+    }
+}
+
+/// One-line MCM-engine cache report ([`Summary`] on [`EngineStats`];
+/// kept as a named wrapper for the sweep/flow call sites).
+pub fn engine_summary(stats: &EngineStats) -> String {
+    stats.summary()
+}
+
+/// One-line [`serve::DesignCache`] report ([`Summary`] on
+/// [`CacheStats`]), plumbed like [`engine_summary`].
 pub fn design_cache_summary(stats: &CacheStats) -> String {
-    format!(
-        "Design cache: {} lookups, {} hits ({:.1}% hit rate), {} elaborations, \
-         {} cached designs, {} evicted\n",
-        stats.lookups(),
-        stats.hits,
-        100.0 * stats.hit_rate(),
-        stats.misses,
-        stats.entries,
-        stats.evictions,
-    )
+    stats.summary()
 }
 
 /// Which post-training result (if any) a figure prices.
@@ -109,7 +203,7 @@ pub fn hw_report_for(outcome: &FlowOutcome, spec: &FigureSpec, lib: &TechLib) ->
     let arch = <dyn Architecture>::by_name(spec.arch)
         .unwrap_or_else(|| panic!("unknown architecture {:?}", spec.arch));
     let style = Style::parse(spec.style).unwrap_or_else(|| panic!("unknown style {:?}", spec.style));
-    serve::design_for(qann, arch.kind(), style).cost(lib)
+    serve::designs().design(qann, arch.kind(), style).cost(lib)
 }
 
 fn find<'a>(
@@ -341,10 +435,61 @@ mod tests {
 
     #[test]
     fn design_cache_summary_renders() {
-        let s = design_cache_summary(&serve::cache_stats());
+        let s = design_cache_summary(&serve::designs().stats());
         assert!(s.contains("Design cache"));
         assert!(s.contains("hit rate"));
         assert!(s.contains("elaborations"));
+    }
+
+    #[test]
+    fn summary_trait_unifies_every_stats_source() {
+        // the named wrappers are the trait, verbatim
+        let engine = crate::mcm::engine::stats();
+        assert_eq!(engine_summary(&engine), engine.summary());
+        let cache = serve::designs().stats();
+        assert_eq!(design_cache_summary(&cache), cache.summary());
+        // a memory-only tier snapshot prints exactly the cache line —
+        // one code path, no disk noise
+        let tiers = TierStats { mem: cache, disk: StoreStats::default() };
+        assert_eq!(tiers.summary(), cache.summary());
+        // with a disk tier present, its line rides below
+        let disk = StoreStats { hits: 3, misses: 1, writes: 4, errors: 0, entries: 4 };
+        let both = TierStats { mem: cache, disk };
+        assert!(both.summary().starts_with(&cache.summary()));
+        assert!(both.summary().contains("Artifact store: 4 lookups"));
+        assert!(both.summary().contains("(75.0% hit rate)"));
+    }
+
+    #[test]
+    fn daemon_status_renders_the_deployment_table() {
+        use crate::hw::daemon::DeploymentStats;
+        use crate::hw::{ArchKind, Style};
+        let status = DaemonStatus {
+            deployments: vec![DeploymentStats {
+                name: "mnist@v3".into(),
+                arch: ArchKind::SmacNeuron,
+                style: Style::Mcm,
+                requests: 128,
+                batches: 4,
+                largest_batch: 64,
+                queue_ns: 128_000,
+                max_queue_ns: 9_000,
+                mem_hits: 3,
+                disk_hits: 1,
+                elaborations: 0,
+            }],
+            tiers: TierStats::default(),
+            max_batch: 64,
+            max_wait: std::time::Duration::from_millis(2),
+        };
+        let s = status.summary();
+        assert!(s.contains("1 deployment(s)"), "{s}");
+        assert!(s.contains("mnist@v3"), "{s}");
+        assert!(s.contains("smac_neuron/mcm"), "{s}");
+        assert!(s.contains("32.0"), "mean batch 128/4: {s}");
+        assert!(s.contains("100%"), "all four fetches were cache hits: {s}");
+        // the tier block prints through the same trait path
+        assert!(s.contains(&status.tiers.summary()), "{s}");
     }
 
     #[test]
@@ -357,11 +502,11 @@ mod tests {
         let outcomes = tiny_outcomes();
         let lib = TechLib::tsmc40();
         let spec = FigureSpec::for_fig(10).unwrap();
-        let before = serve::cache_stats();
+        let before = serve::designs().stats();
         let a = hw_report_for(&outcomes[0], &spec, &lib);
         let b = hw_report_for(&outcomes[0], &spec, &lib);
         assert_eq!(a, b);
-        assert!(serve::cache_stats().since(&before).lookups() >= 2);
+        assert!(serve::designs().stats().since(&before).lookups() >= 2);
     }
 
     #[test]

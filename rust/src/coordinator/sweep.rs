@@ -76,7 +76,7 @@ pub fn sweep_all_with_caches(
     cfg: &SweepConfig,
 ) -> Result<(Vec<FlowOutcome>, SweepStats)> {
     let before = engine::stats();
-    let designs_before = serve::cache_stats();
+    let designs_before = serve::designs().stats();
     let jobs: Vec<FlowConfig> = cfg
         .structures
         .iter()
@@ -121,7 +121,7 @@ pub fn sweep_all_with_caches(
         results.into_inner().unwrap().into_iter().map(Option::unwrap).collect();
     let stats = SweepStats {
         engine: engine::stats().since(&before),
-        designs: serve::cache_stats().since(&designs_before),
+        designs: serve::designs().stats().since(&designs_before),
     };
     Ok((outcomes, stats))
 }

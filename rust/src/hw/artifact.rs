@@ -1,0 +1,929 @@
+//! The on-disk design tier: a content-keyed artifact store of elaborated
+//! [`Design`]s behind the in-memory [`DesignCache`], so a warm daemon
+//! restart serves its first request without re-elaborating anything.
+//!
+//! - [`ArtifactStore`] persists fully elaborated designs (blocks, timing
+//!   paths, schedule, embedded solved adder graphs, layer plans) under a
+//!   **content key**: a 128-bit hash of the same canonical content the
+//!   in-memory [`DesignCache`] keys on — the full quantized net plus
+//!   (arch, style). The canonical key bytes are embedded in every
+//!   artifact and re-checked on load, so a hash collision can never
+//!   alias two designs; a corrupt or version-skewed file degrades to a
+//!   miss, never a panic.
+//! - [`TieredDesignCache`] composes the two tiers: memory → disk →
+//!   elaborate, inserting upward on the way back so the hot path stays a
+//!   lock-free-ish shard lookup. [`TierStats`] snapshots both tiers the
+//!   way [`CacheStats`] does for one.
+//!
+//! The wire format is a hand-rolled little-endian encoding (the build
+//! environment vendors no serde): a magic/version header, the canonical
+//! key bytes, then the design payload. Bump the `MAGIC` constant on any
+//! layout change — old artifacts then read as misses and re-elaborate.
+
+use super::design::{
+    ArchKind, Block, BlockKind, Design, LayerCompute, LayerPlan, McmRef, Schedule, Style,
+};
+use super::serve::{CacheStats, DesignCache};
+use crate::ann::quant::QuantizedAnn;
+use crate::ann::structure::{Activation, AnnStructure};
+use crate::mcm::{AdderGraph, Node, Op, Operand, OutputSpec};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Artifact magic + wire-format version. Decoders reject anything else.
+const MAGIC: &[u8; 8] = b"SIMURGD1";
+
+// ---------------------------------------------------------------------------
+// Wire encoding: explicit little-endian, length-prefixed vectors.
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    fn i64(&mut self, v: i64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.remaining() >= n, "truncated artifact ({} < {n} bytes)", self.remaining());
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// Length prefix, sanity-bounded by the bytes actually present (every
+    /// element of every vector costs at least one byte on the wire).
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()? as usize;
+        ensure!(n <= self.remaining(), "corrupt length {n} (only {} bytes left)", self.remaining());
+        Ok(n)
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+}
+
+fn arch_tag(a: ArchKind) -> u8 {
+    match a {
+        ArchKind::Parallel => 0,
+        ArchKind::Pipelined => 1,
+        ArchKind::SmacNeuron => 2,
+        ArchKind::SmacAnn => 3,
+        ArchKind::DigitSerial => 4,
+    }
+}
+
+fn arch_of(tag: u8) -> Result<ArchKind> {
+    Ok(match tag {
+        0 => ArchKind::Parallel,
+        1 => ArchKind::Pipelined,
+        2 => ArchKind::SmacNeuron,
+        3 => ArchKind::SmacAnn,
+        4 => ArchKind::DigitSerial,
+        t => bail!("unknown architecture tag {t}"),
+    })
+}
+
+fn style_tag(s: Style) -> u8 {
+    match s {
+        Style::Behavioral => 0,
+        Style::Cavm => 1,
+        Style::Cmvm => 2,
+        Style::Mcm => 3,
+    }
+}
+
+fn style_of(tag: u8) -> Result<Style> {
+    Ok(match tag {
+        0 => Style::Behavioral,
+        1 => Style::Cavm,
+        2 => Style::Cmvm,
+        3 => Style::Mcm,
+        t => bail!("unknown style tag {t}"),
+    })
+}
+
+fn activation_tag(a: Activation) -> u8 {
+    match a {
+        Activation::HTanh => 0,
+        Activation::HSig => 1,
+        Activation::ReLU => 2,
+        Activation::SatLin => 3,
+        Activation::Lin => 4,
+        Activation::Sigmoid => 5,
+        Activation::Tanh => 6,
+        Activation::Softmax => 7,
+    }
+}
+
+fn activation_of(tag: u8) -> Result<Activation> {
+    Ok(match tag {
+        0 => Activation::HTanh,
+        1 => Activation::HSig,
+        2 => Activation::ReLU,
+        3 => Activation::SatLin,
+        4 => Activation::Lin,
+        5 => Activation::Sigmoid,
+        6 => Activation::Tanh,
+        7 => Activation::Softmax,
+        t => bail!("unknown activation tag {t}"),
+    })
+}
+
+fn enc_operand(e: &mut Enc, o: Operand) {
+    match o {
+        Operand::Input(i) => {
+            e.u8(0);
+            e.usize(i);
+        }
+        Operand::Node(i) => {
+            e.u8(1);
+            e.usize(i);
+        }
+    }
+}
+
+fn dec_operand(d: &mut Dec) -> Result<Operand> {
+    let tag = d.u8()?;
+    let i = d.u64()? as usize;
+    Ok(match tag {
+        0 => Operand::Input(i),
+        1 => Operand::Node(i),
+        t => bail!("unknown operand tag {t}"),
+    })
+}
+
+fn enc_graph(e: &mut Enc, g: &AdderGraph) {
+    e.usize(g.num_inputs);
+    e.usize(g.nodes.len());
+    for n in &g.nodes {
+        enc_operand(e, n.a);
+        e.u32(n.sa);
+        e.u8(matches!(n.op, Op::Sub) as u8);
+        enc_operand(e, n.b);
+        e.u32(n.sb);
+    }
+    e.usize(g.outputs.len());
+    for o in &g.outputs {
+        enc_operand(e, o.src);
+        e.u32(o.shift);
+        e.bool(o.negate);
+        e.bool(o.is_zero);
+    }
+}
+
+fn dec_graph(d: &mut Dec) -> Result<AdderGraph> {
+    let num_inputs = d.u64()? as usize;
+    let n_nodes = d.len()?;
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let a = dec_operand(d)?;
+        let sa = d.u32()?;
+        let op = if d.u8()? != 0 { Op::Sub } else { Op::Add };
+        let b = dec_operand(d)?;
+        let sb = d.u32()?;
+        nodes.push(Node { a, sa, op, b, sb });
+    }
+    let n_outs = d.len()?;
+    let mut outputs = Vec::with_capacity(n_outs);
+    for _ in 0..n_outs {
+        outputs.push(OutputSpec {
+            src: dec_operand(d)?,
+            shift: d.u32()?,
+            negate: d.bool()?,
+            is_zero: d.bool()?,
+        });
+    }
+    Ok(AdderGraph { num_inputs, nodes, outputs })
+}
+
+fn enc_i64_vec(e: &mut Enc, v: &[i64]) {
+    e.usize(v.len());
+    for &x in v {
+        e.i64(x);
+    }
+}
+
+fn dec_i64_vec(d: &mut Dec) -> Result<Vec<i64>> {
+    let n = d.len()?;
+    (0..n).map(|_| d.i64()).collect()
+}
+
+fn enc_usize_vec(e: &mut Enc, v: &[usize]) {
+    e.usize(v.len());
+    for &x in v {
+        e.usize(x);
+    }
+}
+
+fn dec_usize_vec(d: &mut Dec) -> Result<Vec<usize>> {
+    let n = d.len()?;
+    (0..n).map(|_| Ok(d.u64()? as usize)).collect()
+}
+
+fn enc_qann(e: &mut Enc, q: &QuantizedAnn) {
+    e.usize(q.structure.inputs);
+    enc_usize_vec(e, &q.structure.neurons);
+    e.u32(q.q);
+    e.usize(q.activations.len());
+    for &a in &q.activations {
+        e.u8(activation_tag(a));
+    }
+    e.usize(q.weights.len());
+    for layer in &q.weights {
+        e.usize(layer.len());
+        for row in layer {
+            enc_i64_vec(e, row);
+        }
+    }
+    e.usize(q.biases.len());
+    for layer in &q.biases {
+        enc_i64_vec(e, layer);
+    }
+}
+
+fn dec_qann(d: &mut Dec) -> Result<QuantizedAnn> {
+    let inputs = d.u64()? as usize;
+    let neurons = dec_usize_vec(d)?;
+    ensure!(!neurons.is_empty(), "structure needs at least an output layer");
+    let structure = AnnStructure::new(inputs, &neurons);
+    let q = d.u32()?;
+    let n_acts = d.len()?;
+    let activations = (0..n_acts).map(|_| activation_of(d.u8()?)).collect::<Result<Vec<_>>>()?;
+    let n_layers = d.len()?;
+    let mut weights = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let rows = d.len()?;
+        weights.push((0..rows).map(|_| dec_i64_vec(d)).collect::<Result<Vec<_>>>()?);
+    }
+    let n_bias = d.len()?;
+    let biases = (0..n_bias).map(|_| dec_i64_vec(d)).collect::<Result<Vec<_>>>()?;
+    Ok(QuantizedAnn { structure, weights, biases, q, activations })
+}
+
+fn enc_block_kind(e: &mut Enc, k: &BlockKind) {
+    match k {
+        BlockKind::Adder { bits } => {
+            e.u8(0);
+            e.u32(*bits);
+        }
+        BlockKind::Multiplier { w_bits, x_bits } => {
+            e.u8(1);
+            e.u32(*w_bits);
+            e.u32(*x_bits);
+        }
+        BlockKind::Mux { n, bits } => {
+            e.u8(2);
+            e.usize(*n);
+            e.u32(*bits);
+        }
+        BlockKind::ConstantMux { n, bits } => {
+            e.u8(3);
+            e.usize(*n);
+            e.u32(*bits);
+        }
+        BlockKind::Register { bits } => {
+            e.u8(4);
+            e.u32(*bits);
+        }
+        BlockKind::Counter { n } => {
+            e.u8(5);
+            e.usize(*n);
+        }
+        BlockKind::ActivationUnit { acc_bits } => {
+            e.u8(6);
+            e.u32(*acc_bits);
+        }
+        BlockKind::ShiftAdds { graphs, input_ranges } => {
+            e.u8(7);
+            enc_usize_vec(e, graphs);
+            e.usize(input_ranges.len());
+            for &(lo, hi) in input_ranges {
+                e.i64(lo);
+                e.i64(hi);
+            }
+        }
+        BlockKind::SerialAdder { w_bits } => {
+            e.u8(8);
+            e.u32(*w_bits);
+        }
+        BlockKind::ShiftRegister { bits } => {
+            e.u8(9);
+            e.u32(*bits);
+        }
+        BlockKind::SerialShiftAdds { graphs } => {
+            e.u8(10);
+            enc_usize_vec(e, graphs);
+        }
+    }
+}
+
+fn dec_block_kind(d: &mut Dec) -> Result<BlockKind> {
+    Ok(match d.u8()? {
+        0 => BlockKind::Adder { bits: d.u32()? },
+        1 => BlockKind::Multiplier { w_bits: d.u32()?, x_bits: d.u32()? },
+        2 => BlockKind::Mux { n: d.u64()? as usize, bits: d.u32()? },
+        3 => BlockKind::ConstantMux { n: d.u64()? as usize, bits: d.u32()? },
+        4 => BlockKind::Register { bits: d.u32()? },
+        5 => BlockKind::Counter { n: d.u64()? as usize },
+        6 => BlockKind::ActivationUnit { acc_bits: d.u32()? },
+        7 => {
+            let graphs = dec_usize_vec(d)?;
+            let n = d.len()?;
+            let input_ranges =
+                (0..n).map(|_| Ok((d.i64()?, d.i64()?))).collect::<Result<Vec<_>>>()?;
+            BlockKind::ShiftAdds { graphs, input_ranges }
+        }
+        8 => BlockKind::SerialAdder { w_bits: d.u32()? },
+        9 => BlockKind::ShiftRegister { bits: d.u32()? },
+        10 => BlockKind::SerialShiftAdds { graphs: dec_usize_vec(d)? },
+        t => bail!("unknown block tag {t}"),
+    })
+}
+
+fn enc_schedule(e: &mut Enc, s: Schedule) {
+    match s {
+        Schedule::Combinational => e.u8(0),
+        Schedule::Pipelined { stages } => {
+            e.u8(1);
+            e.usize(stages);
+        }
+        Schedule::LayerSequential => e.u8(2),
+        Schedule::NeuronSequential => e.u8(3),
+        Schedule::DigitSerial { bits } => {
+            e.u8(4);
+            e.u32(bits);
+        }
+    }
+}
+
+fn dec_schedule(d: &mut Dec) -> Result<Schedule> {
+    Ok(match d.u8()? {
+        0 => Schedule::Combinational,
+        1 => Schedule::Pipelined { stages: d.u64()? as usize },
+        2 => Schedule::LayerSequential,
+        3 => Schedule::NeuronSequential,
+        4 => Schedule::DigitSerial { bits: d.u32()? },
+        t => bail!("unknown schedule tag {t}"),
+    })
+}
+
+fn enc_compute(e: &mut Enc, c: &LayerCompute) {
+    match c {
+        LayerCompute::Graphs(gis) => {
+            e.u8(0);
+            enc_usize_vec(e, gis);
+        }
+        LayerCompute::McmColumns(gis) => {
+            e.u8(1);
+            enc_usize_vec(e, gis);
+        }
+        LayerCompute::Mac { stored, sls, mcm } => {
+            e.u8(2);
+            e.usize(stored.len());
+            for row in stored {
+                enc_i64_vec(e, row);
+            }
+            e.usize(sls.len());
+            for &s in sls {
+                e.u32(s);
+            }
+            match mcm {
+                None => e.u8(0),
+                Some(r) => {
+                    e.u8(1);
+                    e.usize(r.graph);
+                    e.usize(r.offset);
+                }
+            }
+        }
+    }
+}
+
+fn dec_compute(d: &mut Dec) -> Result<LayerCompute> {
+    Ok(match d.u8()? {
+        0 => LayerCompute::Graphs(dec_usize_vec(d)?),
+        1 => LayerCompute::McmColumns(dec_usize_vec(d)?),
+        2 => {
+            let rows = d.len()?;
+            let stored = (0..rows).map(|_| dec_i64_vec(d)).collect::<Result<Vec<_>>>()?;
+            let n_sls = d.len()?;
+            let sls = (0..n_sls).map(|_| d.u32()).collect::<Result<Vec<_>>>()?;
+            let mcm = match d.u8()? {
+                0 => None,
+                1 => Some(McmRef { graph: d.u64()? as usize, offset: d.u64()? as usize }),
+                t => bail!("unknown mcm-ref tag {t}"),
+            };
+            LayerCompute::Mac { stored, sls, mcm }
+        }
+        t => bail!("unknown layer-compute tag {t}"),
+    })
+}
+
+/// Serialize an elaborated design to the artifact wire format (payload
+/// only; [`ArtifactStore::save`] wraps it in the header).
+fn encode_design(design: &Design) -> Vec<u8> {
+    let mut e = Enc(Vec::with_capacity(4096));
+    e.u8(arch_tag(design.arch));
+    e.u8(style_tag(design.style));
+    enc_qann(&mut e, &design.qann);
+    e.usize(design.graphs.len());
+    for g in &design.graphs {
+        enc_graph(&mut e, g);
+    }
+    e.usize(design.blocks.len());
+    for b in &design.blocks {
+        enc_block_kind(&mut e, &b.kind);
+        e.usize(b.count);
+        e.f64(b.fires);
+    }
+    e.usize(design.paths.len());
+    for p in &design.paths {
+        enc_usize_vec(&mut e, p);
+    }
+    enc_schedule(&mut e, design.schedule);
+    e.usize(design.layers.len());
+    for l in &design.layers {
+        e.usize(l.n_in);
+        e.usize(l.n_out);
+        e.u32(l.acc_bits);
+        e.i64(l.in_range.0);
+        e.i64(l.in_range.1);
+        enc_compute(&mut e, &l.compute);
+    }
+    e.usize(design.adder_ops);
+    e.0
+}
+
+fn decode_design(d: &mut Dec) -> Result<Design> {
+    let arch = arch_of(d.u8()?)?;
+    let style = style_of(d.u8()?)?;
+    let qann = dec_qann(d)?;
+    let n_graphs = d.len()?;
+    let graphs = (0..n_graphs).map(|_| dec_graph(d)).collect::<Result<Vec<_>>>()?;
+    let n_blocks = d.len()?;
+    let blocks = (0..n_blocks)
+        .map(|_| {
+            Ok(Block { kind: dec_block_kind(d)?, count: d.u64()? as usize, fires: d.f64()? })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let n_paths = d.len()?;
+    let paths = (0..n_paths).map(|_| dec_usize_vec(d)).collect::<Result<Vec<_>>>()?;
+    let schedule = dec_schedule(d)?;
+    let n_layers = d.len()?;
+    let layers = (0..n_layers)
+        .map(|_| {
+            Ok(LayerPlan {
+                n_in: d.u64()? as usize,
+                n_out: d.u64()? as usize,
+                acc_bits: d.u32()?,
+                in_range: (d.i64()?, d.i64()?),
+                compute: dec_compute(d)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let adder_ops = d.u64()? as usize;
+    Ok(Design { arch, style, qann, graphs, blocks, paths, schedule, layers, adder_ops })
+}
+
+// ---------------------------------------------------------------------------
+// Content keys.
+
+/// Canonical key bytes of a design point: the exact content the in-memory
+/// [`DesignCache`] keys on, in one deterministic encoding. Embedded in
+/// every artifact and compared on load, so the hashed filename can never
+/// alias two designs.
+fn content_key_bytes(qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Vec<u8> {
+    let mut e = Enc(Vec::with_capacity(512));
+    e.u8(arch_tag(arch));
+    e.u8(style_tag(style));
+    enc_qann(&mut e, qann);
+    e.0
+}
+
+/// Hex content key of a design point: FNV-1a over the canonical key
+/// bytes, widened to 128 bits — the artifact's filename stem and the
+/// identity the warm-restart tests compare.
+pub fn content_key(qann: &QuantizedAnn, arch: ArchKind, style: Style) -> String {
+    let bytes = content_key_bytes(qann, arch, style);
+    let mut h: u128 = 0x6c62272e07bb014262b821756295c58d; // FNV-1a 128 offset basis
+    for &b in &bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(0x0000000001000000000000000000013b); // FNV 128 prime
+    }
+    format!("{h:032x}")
+}
+
+// ---------------------------------------------------------------------------
+// The store.
+
+/// Cumulative counters of one [`ArtifactStore`], shaped like
+/// [`CacheStats`] so the report layer renders both tiers the same way.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// loads answered from disk
+    pub hits: u64,
+    /// loads that found no (readable) artifact
+    pub misses: u64,
+    /// artifacts written
+    pub writes: u64,
+    /// unreadable/corrupt/version-skewed files skipped (each also a miss)
+    pub errors: u64,
+    /// artifacts currently on disk
+    pub entries: usize,
+}
+
+impl StoreStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of loads answered from disk, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Content-keyed on-disk store of elaborated designs. Load/save never
+/// panic on I/O or format trouble: a bad artifact is a miss (counted in
+/// `errors`), and saves are atomic (temp file + rename) so a crashed
+/// writer can't leave a torn artifact behind.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    writes: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) the store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create artifact store {}", dir.display()))?;
+        Ok(ArtifactStore {
+            dir,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.design"))
+    }
+
+    /// Load the design of `qann` under (`arch`, `style`) if an artifact
+    /// with matching canonical content exists.
+    pub fn load(&self, qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Option<Arc<Design>> {
+        let key = content_key(qann, arch, style);
+        let path = self.path_of(&key);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match Self::decode_artifact(&bytes, &content_key_bytes(qann, arch, style)) {
+            Ok(design) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::new(design))
+            }
+            Err(_) => {
+                // corrupt, truncated or version-skewed: degrade to a miss
+                // and drop the file so the rewrite heals the store
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    fn decode_artifact(bytes: &[u8], want_key: &[u8]) -> Result<Design> {
+        let mut d = Dec::new(bytes);
+        ensure!(d.bytes(MAGIC.len())? == MAGIC, "bad artifact magic/version");
+        let key_len = d.len()?;
+        ensure!(d.bytes(key_len)? == want_key, "artifact content-key mismatch");
+        let design = decode_design(&mut d)?;
+        ensure!(d.remaining() == 0, "{} trailing bytes", d.remaining());
+        Ok(design)
+    }
+
+    /// Persist `design` under its content key (atomic: temp + rename).
+    /// I/O failure is reported but non-fatal to callers that treat the
+    /// store as a cache.
+    pub fn save(&self, design: &Design) -> Result<()> {
+        let key = content_key(&design.qann, design.arch, design.style);
+        let mut e = Enc(Vec::with_capacity(4096));
+        e.0.extend_from_slice(MAGIC);
+        let key_bytes = content_key_bytes(&design.qann, design.arch, design.style);
+        e.usize(key_bytes.len());
+        e.0.extend_from_slice(&key_bytes);
+        e.0.extend_from_slice(&encode_design(design));
+        let path = self.path_of(&key);
+        let tmp = self.dir.join(format!("{key}.tmp-{}", std::process::id()));
+        std::fs::write(&tmp, &e.0).with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("publish {}", path.display()))?;
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Snapshot of the cumulative counters (entries counted from disk).
+    pub fn stats(&self) -> StoreStats {
+        let entries = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| e.path().extension().is_some_and(|x| x == "design"))
+                    .count()
+            })
+            .unwrap_or(0);
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The tiered cache.
+
+/// Which tier answered a [`TieredDesignCache::fetch`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierHit {
+    /// in-memory [`DesignCache`] hit
+    Memory,
+    /// loaded from the on-disk [`ArtifactStore`] (warm restart)
+    Disk,
+    /// elaborated fresh (and written through to both tiers)
+    Elaborated,
+}
+
+/// Combined snapshot of both tiers.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierStats {
+    pub mem: CacheStats,
+    pub disk: StoreStats,
+}
+
+enum MemTier {
+    /// the process-wide cache every serving consumer shares
+    Global,
+    /// a private cache (isolation in tests; models a fresh process)
+    Owned(Box<DesignCache>),
+}
+
+/// Memory-over-disk design cache: lookups go memory → disk → elaborate,
+/// and results are inserted upward so the next process start (same
+/// artifact directory) skips elaboration entirely. This is the cache the
+/// serving daemon owns; one-shot consumers keep using the in-memory
+/// facade directly.
+pub struct TieredDesignCache {
+    mem: MemTier,
+    store: Option<ArtifactStore>,
+}
+
+impl TieredDesignCache {
+    /// The process-wide in-memory cache with no disk tier (the daemon's
+    /// default when no artifact directory is configured).
+    pub fn in_memory() -> TieredDesignCache {
+        TieredDesignCache { mem: MemTier::Global, store: None }
+    }
+
+    /// The process-wide in-memory cache backed by the artifact store at
+    /// `dir`.
+    pub fn with_store(dir: impl Into<PathBuf>) -> Result<TieredDesignCache> {
+        Ok(TieredDesignCache { mem: MemTier::Global, store: Some(ArtifactStore::open(dir)?) })
+    }
+
+    /// A private (non-global) memory tier over an optional store — models
+    /// a fresh daemon process in warm-restart tests without poking the
+    /// process-wide cache.
+    pub fn isolated(store: Option<ArtifactStore>) -> TieredDesignCache {
+        TieredDesignCache { mem: MemTier::Owned(Box::new(DesignCache::new())), store }
+    }
+
+    /// The in-memory tier.
+    pub fn mem(&self) -> &DesignCache {
+        match &self.mem {
+            MemTier::Global => DesignCache::global(),
+            MemTier::Owned(c) => c,
+        }
+    }
+
+    /// The on-disk tier, when configured.
+    pub fn store(&self) -> Option<&ArtifactStore> {
+        self.store.as_ref()
+    }
+
+    /// Fetch a design through the tiers, reporting which one answered.
+    pub fn fetch(
+        &self,
+        qann: &QuantizedAnn,
+        arch: ArchKind,
+        style: Style,
+    ) -> (Arc<Design>, TierHit) {
+        if let Some(d) = self.mem().get(qann, arch, style) {
+            return (d, TierHit::Memory);
+        }
+        if let Some(store) = &self.store {
+            if let Some(d) = store.load(qann, arch, style) {
+                // promote to the memory tier; an insert is not an
+                // elaboration, so the mem misses counter stays honest
+                self.mem().insert(qann, arch, style, d.clone());
+                return (d, TierHit::Disk);
+            }
+        }
+        let d = self.mem().design(qann, arch, style);
+        if let Some(store) = &self.store {
+            // write-through; a full disk is a degraded cache, not an error
+            let _ = store.save(&d);
+        }
+        (d, TierHit::Elaborated)
+    }
+
+    /// Fetch without tier attribution.
+    pub fn design(&self, qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
+        self.fetch(qann, arch, style).0
+    }
+
+    /// Snapshot of both tiers.
+    pub fn stats(&self) -> TierStats {
+        TierStats {
+            mem: self.mem().stats(),
+            disk: self.store.as_ref().map(|s| s.stats()).unwrap_or_default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::hw::design::{design_points, Architecture};
+    use crate::hw::TechLib;
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("simurg_artifact_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn codec_roundtrips_every_design_point() {
+        let q = qann("16-10-10", 6, 7);
+        for (a, s) in design_points() {
+            let d = a.elaborate(&q, s);
+            let bytes = encode_design(&d);
+            let back = decode_design(&mut Dec::new(&bytes)).unwrap();
+            assert_eq!(back, d, "{} {}", a.name(), s.name());
+        }
+    }
+
+    #[test]
+    fn content_keys_separate_content_and_design_points() {
+        let q1 = qann("16-10", 6, 1);
+        let mut q2 = q1.clone();
+        q2.weights[0][0][0] += 1;
+        let k = |q: &QuantizedAnn, a, s| content_key(q, a, s);
+        let base = k(&q1, ArchKind::Parallel, Style::Cmvm);
+        assert_eq!(base.len(), 32, "128-bit hex key");
+        assert_eq!(base, k(&q1, ArchKind::Parallel, Style::Cmvm), "deterministic");
+        assert_ne!(base, k(&q2, ArchKind::Parallel, Style::Cmvm), "weights key");
+        assert_ne!(base, k(&q1, ArchKind::Pipelined, Style::Cmvm), "arch keys");
+        assert_ne!(base, k(&q1, ArchKind::Parallel, Style::Behavioral), "style keys");
+    }
+
+    #[test]
+    fn corrupt_artifacts_degrade_to_misses_and_heal() {
+        let dir = tempdir("corrupt");
+        let store = ArtifactStore::open(&dir).unwrap();
+        let q = qann("16-10", 6, 3);
+        let d = crate::hw::parallel::Parallel.elaborate(&q, Style::Cmvm);
+        store.save(&d).unwrap();
+        // truncate the artifact behind the store's back
+        let key = content_key(&q, ArchKind::Parallel, Style::Cmvm);
+        let path = dir.join(format!("{key}.design"));
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.load(&q, ArchKind::Parallel, Style::Cmvm).is_none());
+        let s = store.stats();
+        assert_eq!((s.errors, s.misses, s.entries), (1, 1, 0), "{s:?}");
+        // the rewrite heals the store
+        store.save(&d).unwrap();
+        assert!(store.load(&q, ArchKind::Parallel, Style::Cmvm).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tiered_fetch_attributes_every_tier() {
+        let dir = tempdir("tiers");
+        let cache = TieredDesignCache::isolated(Some(ArtifactStore::open(&dir).unwrap()));
+        let q = qann("16-10", 6, 9);
+        let lib = TechLib::tsmc40();
+        let (d1, t1) = cache.fetch(&q, ArchKind::SmacNeuron, Style::Mcm);
+        assert_eq!(t1, TierHit::Elaborated);
+        let (d2, t2) = cache.fetch(&q, ArchKind::SmacNeuron, Style::Mcm);
+        assert_eq!(t2, TierHit::Memory);
+        assert!(Arc::ptr_eq(&d1, &d2));
+        // a fresh memory tier over the same store models a warm restart
+        let restarted = TieredDesignCache::isolated(Some(ArtifactStore::open(&dir).unwrap()));
+        let (d3, t3) = restarted.fetch(&q, ArchKind::SmacNeuron, Style::Mcm);
+        assert_eq!(t3, TierHit::Disk, "warm restart must not re-elaborate");
+        assert_eq!(*d3, *d1);
+        assert_eq!(d3.cost(&lib), d1.cost(&lib), "reloaded design prices identically");
+        let s = restarted.stats();
+        assert_eq!(s.mem.misses, 0, "no elaboration after restart: {s:?}");
+        assert_eq!(s.disk.hits, 1, "{s:?}");
+        // and the disk hit was promoted to memory
+        let (_, t4) = restarted.fetch(&q, ArchKind::SmacNeuron, Style::Mcm);
+        assert_eq!(t4, TierHit::Memory);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,554 @@
+//! The persistent serving daemon: a long-running front over the tiered
+//! design cache that **coalesces concurrent single-sample requests into
+//! SoA batches**, plus the deployment registry that maps model versions
+//! to design points and meters them.
+//!
+//! One-shot CLI serving rebuilt the process-wide caches per invocation;
+//! the ROADMAP's "millions of users" target needs them resident. The
+//! daemon is that residency:
+//!
+//! - **Coalescer.** Clients call [`Daemon::infer`] (blocking) or
+//!   [`Daemon::submit`] (pipelined) with one sample each. A worker thread
+//!   collects requests until either `max_batch` are queued or the oldest
+//!   has waited `max_wait` — the latency/throughput dial: `max_batch = 1`
+//!   degenerates to per-request serving, large `max_batch` with a small
+//!   `max_wait` turns PR 3's ≥3× batched-vs-per-input win into daemon
+//!   throughput. Coalesced groups run through
+//!   [`serve::simulate_batch`], so outputs are bit-identical to one
+//!   batched call over the same samples (`rust/tests/daemon.rs`).
+//! - **Deployment registry.** [`Daemon::deploy`] registers a
+//!   model-version → (arch, style) design point; every deployment keeps
+//!   live counters (requests, batches and their sizes, queue latency,
+//!   which cache tier answered its design fetches) surfaced through
+//!   [`Daemon::status`] the way `engine_summary`/`design_cache_summary`
+//!   are — and rendered by the same `coordinator::report::Summary` path.
+//! - **Tiered cache.** The daemon owns a
+//!   [`TieredDesignCache`]: the process-wide in-memory
+//!   [`DesignCache`](super::serve::DesignCache) optionally backed by a
+//!   content-keyed on-disk [`ArtifactStore`](super::artifact::ArtifactStore),
+//!   so a warm restart serves its first request without re-elaborating.
+//!
+//! ```
+//! use simurg::ann::quant::QuantizedAnn;
+//! use simurg::ann::structure::{Activation, AnnStructure};
+//! use simurg::hw::daemon::{argmax, Daemon, DaemonConfig};
+//! use simurg::hw::{ArchKind, Style};
+//!
+//! let qann = QuantizedAnn {
+//!     structure: AnnStructure::parse("2-2-1").unwrap(),
+//!     weights: vec![vec![vec![20, -24], vec![5, 0]], vec![vec![3, -6]]],
+//!     biases: vec![vec![10, -10], vec![0]],
+//!     q: 4,
+//!     activations: vec![Activation::HTanh, Activation::HSig],
+//! };
+//! let daemon = Daemon::new(DaemonConfig::default()).unwrap();
+//! let dep = daemon.deploy("demo@v1", qann, ArchKind::SmacNeuron, Style::Behavioral);
+//! let out = daemon.infer(dep, &[64, 32]);
+//! assert_eq!(out.len(), 1);
+//! assert_eq!(argmax(&out), 0);
+//! let status = daemon.status();
+//! assert_eq!(status.deployments[0].requests, 1);
+//! daemon.shutdown();
+//! ```
+
+use super::artifact::{TierHit, TieredDesignCache};
+use super::design::{ArchKind, Architecture, Style};
+use super::serve::{self, BatchInputs};
+use crate::ann::quant::QuantizedAnn;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// The coalescing knobs and the optional on-disk tier.
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// dispatch as soon as this many requests are queued (1 = per-request
+    /// serving, the latency end of the dial)
+    pub max_batch: usize,
+    /// dispatch no later than this after the oldest queued request
+    /// arrived (0 = dispatch immediately, coalescing only what is
+    /// already queued)
+    pub max_wait: Duration,
+    /// artifact-store directory for the on-disk design tier; `None`
+    /// serves from the in-memory tier only
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> DaemonConfig {
+        DaemonConfig { max_batch: 64, max_wait: Duration::from_millis(2), artifact_dir: None }
+    }
+}
+
+/// Handle to a registered deployment (index into the registry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeploymentId(usize);
+
+/// One registered model version pinned to a design point, with its live
+/// counters. Counters are atomics: the worker writes them while
+/// [`Daemon::status`] snapshots.
+struct Deployment {
+    name: String,
+    qann: QuantizedAnn,
+    arch: ArchKind,
+    style: Style,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    largest_batch: AtomicU64,
+    queue_ns: AtomicU64,
+    max_queue_ns: AtomicU64,
+    mem_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    elaborations: AtomicU64,
+}
+
+/// Point-in-time snapshot of one deployment's counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentStats {
+    pub name: String,
+    pub arch: ArchKind,
+    pub style: Style,
+    /// single-sample requests served
+    pub requests: u64,
+    /// coalesced batches dispatched
+    pub batches: u64,
+    /// largest coalesced batch observed
+    pub largest_batch: u64,
+    /// total time requests spent queued before dispatch
+    pub queue_ns: u64,
+    pub max_queue_ns: u64,
+    /// design fetches answered by the in-memory tier
+    pub mem_hits: u64,
+    /// design fetches answered by the on-disk tier (warm restarts)
+    pub disk_hits: u64,
+    /// design fetches that elaborated
+    pub elaborations: u64,
+}
+
+impl DeploymentStats {
+    /// Mean coalesced batch size — the direct readout of the dial: 1.0
+    /// means no coalescing happened, `max_batch` means saturation.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn mean_queue_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.queue_ns as f64 / self.requests as f64 / 1e3
+        }
+    }
+
+    pub fn design_fetches(&self) -> u64 {
+        self.mem_hits + self.disk_hits + self.elaborations
+    }
+
+    /// Fraction of design fetches answered by either cache tier.
+    pub fn hit_rate(&self) -> f64 {
+        if self.design_fetches() == 0 {
+            0.0
+        } else {
+            (self.mem_hits + self.disk_hits) as f64 / self.design_fetches() as f64
+        }
+    }
+}
+
+/// Everything [`Daemon::status`] reports: the deployment table plus both
+/// cache tiers — the daemon-side counterpart of the CLI cache summaries.
+#[derive(Debug, Clone)]
+pub struct DaemonStatus {
+    pub deployments: Vec<DeploymentStats>,
+    pub tiers: super::artifact::TierStats,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+/// One queued single-sample request.
+struct Pending {
+    deployment: usize,
+    input: Vec<i32>,
+    enqueued: Instant,
+    tx: mpsc::Sender<Vec<i32>>,
+}
+
+struct Inner {
+    cfg: DaemonConfig,
+    cache: TieredDesignCache,
+    deployments: Mutex<Vec<Arc<Deployment>>>,
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// An in-flight request handle from [`Daemon::submit`]; [`wait`]
+/// blocks for the output vector. Submitting several before waiting
+/// pipelines a client's requests into the same coalescing window.
+///
+/// [`wait`]: PendingOutput::wait
+pub struct PendingOutput {
+    rx: mpsc::Receiver<Vec<i32>>,
+}
+
+impl PendingOutput {
+    /// Block until the coalescer serves this request.
+    pub fn wait(self) -> Vec<i32> {
+        self.rx.recv().expect("serving daemon worker died")
+    }
+}
+
+/// The persistent serving daemon (see module docs). Shuts down — serving
+/// every queued request first — on [`Daemon::shutdown`] or drop.
+pub struct Daemon {
+    inner: Arc<Inner>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Daemon {
+    /// Start a daemon owning the process-wide design cache, with the
+    /// on-disk tier at `cfg.artifact_dir` when configured.
+    pub fn new(cfg: DaemonConfig) -> Result<Daemon> {
+        let cache = match &cfg.artifact_dir {
+            Some(dir) => TieredDesignCache::with_store(dir)?,
+            None => TieredDesignCache::in_memory(),
+        };
+        Ok(Daemon::with_cache(cfg, cache))
+    }
+
+    /// Start a daemon over an explicit tiered cache (isolation in tests:
+    /// [`TieredDesignCache::isolated`] models a fresh process).
+    pub fn with_cache(cfg: DaemonConfig, cache: TieredDesignCache) -> Daemon {
+        let inner = Arc::new(Inner {
+            cfg,
+            cache,
+            deployments: Mutex::new(Vec::new()),
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let worker_inner = inner.clone();
+        let worker = std::thread::Builder::new()
+            .name("simurg-serve".into())
+            .spawn(move || worker_loop(&worker_inner))
+            .expect("spawn serving worker");
+        Daemon { inner, worker: Mutex::new(Some(worker)) }
+    }
+
+    /// Register a model version under a design point. The design point is
+    /// validated against the architecture registry here, so the worker
+    /// can never hit an unsupported elaboration.
+    pub fn deploy(
+        &self,
+        name: impl Into<String>,
+        qann: QuantizedAnn,
+        arch: ArchKind,
+        style: Style,
+    ) -> DeploymentId {
+        let supported = <dyn Architecture>::by_name(arch.name())
+            .map(|a| a.styles().contains(&style))
+            .unwrap_or(false);
+        assert!(supported, "{} has no {} style", arch.name(), style.name());
+        let dep = Arc::new(Deployment {
+            name: name.into(),
+            qann,
+            arch,
+            style,
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            largest_batch: AtomicU64::new(0),
+            queue_ns: AtomicU64::new(0),
+            max_queue_ns: AtomicU64::new(0),
+            mem_hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            elaborations: AtomicU64::new(0),
+        });
+        let mut deps = self.inner.deployments.lock().unwrap();
+        deps.push(dep);
+        DeploymentId(deps.len() - 1)
+    }
+
+    /// Enqueue one inference without blocking; the result arrives on the
+    /// returned handle once a coalesced batch containing it runs.
+    pub fn submit(&self, id: DeploymentId, input: &[i32]) -> PendingOutput {
+        let deps = self.inner.deployments.lock().unwrap();
+        let dep = deps.get(id.0).expect("unknown deployment id");
+        assert_eq!(
+            input.len(),
+            dep.qann.structure.inputs,
+            "input arity mismatch for deployment {:?}",
+            dep.name
+        );
+        drop(deps);
+        assert!(!self.inner.shutdown.load(Ordering::SeqCst), "daemon is shut down");
+        let (tx, rx) = mpsc::channel();
+        let pending =
+            Pending { deployment: id.0, input: input.to_vec(), enqueued: Instant::now(), tx };
+        self.inner.queue.lock().unwrap().push_back(pending);
+        self.inner.cv.notify_all();
+        PendingOutput { rx }
+    }
+
+    /// One blocking single-sample inference: enqueue, coalesce, return
+    /// the output neuron values.
+    pub fn infer(&self, id: DeploymentId, input: &[i32]) -> Vec<i32> {
+        self.submit(id, input).wait()
+    }
+
+    /// Snapshot the deployment table and both cache tiers.
+    pub fn status(&self) -> DaemonStatus {
+        let deployments = self
+            .inner
+            .deployments
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|d| DeploymentStats {
+                name: d.name.clone(),
+                arch: d.arch,
+                style: d.style,
+                requests: d.requests.load(Ordering::Relaxed),
+                batches: d.batches.load(Ordering::Relaxed),
+                largest_batch: d.largest_batch.load(Ordering::Relaxed),
+                queue_ns: d.queue_ns.load(Ordering::Relaxed),
+                max_queue_ns: d.max_queue_ns.load(Ordering::Relaxed),
+                mem_hits: d.mem_hits.load(Ordering::Relaxed),
+                disk_hits: d.disk_hits.load(Ordering::Relaxed),
+                elaborations: d.elaborations.load(Ordering::Relaxed),
+            })
+            .collect();
+        DaemonStatus {
+            deployments,
+            tiers: self.inner.cache.stats(),
+            max_batch: self.inner.cfg.max_batch,
+            max_wait: self.inner.cfg.max_wait,
+        }
+    }
+
+    /// The daemon's tiered cache (warm-restart inspection).
+    pub fn cache(&self) -> &TieredDesignCache {
+        &self.inner.cache
+    }
+
+    /// Stop accepting requests, serve everything still queued, and join
+    /// the worker. Idempotent.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// First-index argmax over a served output vector — the hardware
+/// comparator tree's tie-break, for clients classifying from
+/// [`Daemon::infer`] results (matches [`serve::BatchRun::argmax`]).
+pub fn argmax(outputs: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (m, &v) in outputs.iter().enumerate().skip(1) {
+        if v > outputs[best] {
+            best = m;
+        }
+    }
+    best
+}
+
+/// The coalescing loop: wait for requests, give the batch `max_wait` to
+/// fill (or dispatch early at `max_batch`), then run one SoA
+/// [`serve::simulate_batch`] per (deployment × `max_batch` chunk) and
+/// fan the outputs back out.
+fn worker_loop(inner: &Inner) {
+    loop {
+        let drained: Vec<Pending> = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if q.is_empty() {
+                    if inner.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    q = inner.cv.wait(q).unwrap();
+                    continue;
+                }
+                if q.len() >= inner.cfg.max_batch || inner.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let age = q.front().expect("nonempty").enqueued.elapsed();
+                if age >= inner.cfg.max_wait {
+                    break;
+                }
+                let (guard, _timeout) =
+                    inner.cv.wait_timeout(q, inner.cfg.max_wait - age).unwrap();
+                q = guard;
+            }
+            q.drain(..).collect()
+        };
+
+        // group by deployment, preserving arrival order within a group
+        let deps = inner.deployments.lock().unwrap().clone();
+        let mut groups: Vec<Vec<Pending>> = (0..deps.len()).map(|_| Vec::new()).collect();
+        for p in drained {
+            groups[p.deployment].push(p);
+        }
+        let dispatched = Instant::now();
+        for (di, group) in groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let dep = &deps[di];
+            for chunk in group.chunks(inner.cfg.max_batch) {
+                let (design, hit) = inner.cache.fetch(&dep.qann, dep.arch, dep.style);
+                match hit {
+                    TierHit::Memory => dep.mem_hits.fetch_add(1, Ordering::Relaxed),
+                    TierHit::Disk => dep.disk_hits.fetch_add(1, Ordering::Relaxed),
+                    TierHit::Elaborated => dep.elaborations.fetch_add(1, Ordering::Relaxed),
+                };
+                let rows: Vec<&[i32]> = chunk.iter().map(|p| p.input.as_slice()).collect();
+                let run = serve::simulate_batch(&design, &BatchInputs::from_rows(&rows));
+                dep.requests.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                dep.batches.fetch_add(1, Ordering::Relaxed);
+                dep.largest_batch.fetch_max(chunk.len() as u64, Ordering::Relaxed);
+                for (s, p) in chunk.iter().enumerate() {
+                    let waited = dispatched.saturating_duration_since(p.enqueued).as_nanos() as u64;
+                    dep.queue_ns.fetch_add(waited, Ordering::Relaxed);
+                    dep.max_queue_ns.fetch_max(waited, Ordering::Relaxed);
+                    // a dropped PendingOutput just means the client went
+                    // away; serving the rest of the batch is unaffected
+                    let _ = p.tx.send(run.sample_outputs(s));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    fn isolated_daemon(cfg: DaemonConfig) -> Daemon {
+        Daemon::with_cache(cfg, TieredDesignCache::isolated(None))
+    }
+
+    #[test]
+    fn single_request_roundtrip_matches_simulate_batch() {
+        let q = qann("16-10", 6, 5);
+        let daemon = isolated_daemon(DaemonConfig::default());
+        let dep = daemon.deploy("m@1", q.clone(), ArchKind::SmacNeuron, Style::Behavioral);
+        let row: Vec<i32> = (0..16).map(|i| (i * 9) % 128).collect();
+        let out = daemon.infer(dep, &row);
+        let design = daemon.cache().design(&q, ArchKind::SmacNeuron, Style::Behavioral);
+        let want = serve::simulate_batch(&design, &BatchInputs::from_rows(&[&row[..]]));
+        assert_eq!(out, want.sample_outputs(0));
+        let st = daemon.status();
+        assert_eq!(st.deployments[0].requests, 1);
+        assert_eq!(st.deployments[0].batches, 1);
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn max_batch_one_degenerates_to_per_request_serving() {
+        // the latency end of the dial: every request is its own batch
+        let q = qann("16-10", 6, 6);
+        let daemon = isolated_daemon(DaemonConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(50),
+            artifact_dir: None,
+        });
+        let dep = daemon.deploy("m@1", q, ArchKind::SmacNeuron, Style::Behavioral);
+        let pending: Vec<_> = (0..7).map(|i| daemon.submit(dep, &[i * 3; 16])).collect();
+        for p in pending {
+            assert_eq!(p.wait().len(), 10);
+        }
+        let st = daemon.status();
+        assert_eq!(st.deployments[0].requests, 7);
+        assert_eq!(st.deployments[0].batches, 7, "max_batch = 1 must not coalesce");
+        assert_eq!(st.deployments[0].largest_batch, 1);
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn pipelined_submissions_coalesce() {
+        // submit a window before waiting: the worker must fold the queue
+        // into (far) fewer batches than requests
+        let q = qann("16-10", 6, 8);
+        let daemon = isolated_daemon(DaemonConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(20),
+            artifact_dir: None,
+        });
+        let dep = daemon.deploy("m@1", q, ArchKind::SmacNeuron, Style::Behavioral);
+        let pending: Vec<_> = (0..32).map(|i| daemon.submit(dep, &[(i * 5) % 128; 16])).collect();
+        for p in pending {
+            p.wait();
+        }
+        let st = daemon.status();
+        assert_eq!(st.deployments[0].requests, 32);
+        assert!(
+            st.deployments[0].batches < 32,
+            "a pipelined window must coalesce: {} batches",
+            st.deployments[0].batches
+        );
+        assert!(st.deployments[0].largest_batch >= 2);
+        assert!(st.deployments[0].mean_batch() > 1.0);
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn shutdown_serves_the_queue_and_drop_is_clean() {
+        let q = qann("16-10", 6, 11);
+        let daemon = isolated_daemon(DaemonConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(200),
+            artifact_dir: None,
+        });
+        let dep = daemon.deploy("m@1", q, ArchKind::SmacAnn, Style::Behavioral);
+        let pending: Vec<_> = (0..5).map(|i| daemon.submit(dep, &[i; 16])).collect();
+        // shutdown before max_wait elapses: the worker must still serve
+        // everything queued
+        daemon.shutdown();
+        for p in pending {
+            assert_eq!(p.wait().len(), 10);
+        }
+        assert_eq!(daemon.status().deployments[0].requests, 5);
+        daemon.shutdown(); // idempotent
+    }
+
+    #[test]
+    #[should_panic(expected = "has no")]
+    fn deploy_rejects_unsupported_design_points() {
+        let daemon = isolated_daemon(DaemonConfig::default());
+        daemon.deploy("bad", qann("16-10", 6, 1), ArchKind::Parallel, Style::Mcm);
+    }
+
+    #[test]
+    fn argmax_uses_the_first_index_tie_break() {
+        assert_eq!(argmax(&[3, 7, 7, 1]), 1);
+        assert_eq!(argmax(&[9]), 0);
+        assert_eq!(argmax(&[-5, -5]), 0);
+    }
+}

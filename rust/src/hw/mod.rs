@@ -12,8 +12,15 @@
 //! ([`Design::cost`] → [`HwReport`]), cycle-accurate simulation
 //! ([`netsim::simulate`]) and Verilog ([`verilog::verilog`]) are all
 //! derived from that same value.
+//!
+//! Designs are served, not rebuilt: [`designs()`] is the facade over the
+//! process-wide [`DesignCache`], [`artifact`] adds the content-keyed
+//! on-disk tier beneath it, and [`daemon`] is the persistent serving
+//! front that coalesces concurrent requests into SoA batches over both.
 
+pub mod artifact;
 pub mod blocks;
+pub mod daemon;
 pub mod design;
 pub mod digit_serial;
 pub mod gates;
@@ -26,10 +33,12 @@ pub mod smac_ann;
 pub mod smac_neuron;
 pub mod verilog;
 
+pub use artifact::{ArtifactStore, StoreStats, TierHit, TierStats, TieredDesignCache};
+pub use daemon::{Daemon, DaemonConfig, DaemonStatus, DeploymentId, DeploymentStats};
 pub use design::{ArchKind, Architecture, Design, Schedule, Style};
 pub use gates::TechLib;
 pub use report::HwReport;
-pub use serve::{simulate_batch, BatchInputs, BatchRun, CacheStats, DesignCache};
+pub use serve::{designs, simulate_batch, BatchInputs, BatchRun, CacheStats, DesignCache};
 
 use crate::mcm::{AdderGraph, Operand};
 use blocks::BlockCost;

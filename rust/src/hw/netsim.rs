@@ -230,7 +230,7 @@ pub struct ParallelNet {
 
 impl ParallelNet {
     pub fn new(qann: &QuantizedAnn, style: MultStyle) -> ParallelNet {
-        ParallelNet { design: serve::design_for(qann, ArchKind::Parallel, style) }
+        ParallelNet { design: serve::designs().design(qann, ArchKind::Parallel, style) }
     }
 
     pub fn design(&self) -> &Design {
@@ -251,13 +251,13 @@ pub fn run_parallel(qann: &QuantizedAnn, style: MultStyle, input: &[i32]) -> Sim
 /// [`serve::DesignCache`]: the first call for a given net elaborates, every
 /// later call is a lookup (regression-pinned in `rust/tests/design_cache.rs`).
 pub fn run_smac_neuron(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
-    simulate(&serve::design_for(qann, ArchKind::SmacNeuron, Style::Behavioral), input)
+    simulate(&serve::designs().design(qann, ArchKind::SmacNeuron, Style::Behavioral), input)
 }
 
 /// One-shot SMAC_ANN run, served from the process-wide
 /// [`serve::DesignCache`] like [`run_smac_neuron`].
 pub fn run_smac_ann(qann: &QuantizedAnn, input: &[i32]) -> SimRun {
-    simulate(&serve::design_for(qann, ArchKind::SmacAnn, Style::Behavioral), input)
+    simulate(&serve::designs().design(qann, ArchKind::SmacAnn, Style::Behavioral), input)
 }
 
 #[cfg(test)]

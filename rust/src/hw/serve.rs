@@ -479,7 +479,7 @@ pub fn hardware_accuracy_batch(qann: &QuantizedAnn, samples: &[Sample]) -> f64 {
     }
     let inputs = BatchInputs::from_samples(samples);
     let labels: Vec<u8> = samples.iter().map(|s| s.label).collect();
-    let design = design_for(qann, ArchKind::SmacNeuron, Style::Behavioral);
+    let design = designs().design(qann, ArchKind::SmacNeuron, Style::Behavioral);
     let correct = simulate_batch(&design, &inputs).count_correct(&labels);
     100.0 * correct as f64 / samples.len() as f64
 }
@@ -625,6 +625,35 @@ impl DesignCache {
         d
     }
 
+    /// Lookup-only fetch: a hit counts as a hit, a miss counts nothing
+    /// (no elaboration) — the composition point the tiered cache
+    /// ([`crate::hw::artifact::TieredDesignCache`]) probes the memory
+    /// tier through before falling to disk.
+    pub fn get(&self, qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Option<Arc<Design>> {
+        self.lookup(&DesignKey::of(qann, arch, style))
+    }
+
+    /// Insert an externally produced design (e.g. one reloaded from the
+    /// on-disk artifact tier) under its content key, honoring the FIFO
+    /// capacity bound. Not an elaboration: the miss counter — documented
+    /// as `misses == elaborations` — is untouched. First insert wins on a
+    /// race, like [`DesignCache::design`].
+    pub fn insert(&self, qann: &QuantizedAnn, arch: ArchKind, style: Style, design: Arc<Design>) {
+        let key = DesignKey::of(qann, arch, style);
+        let mut shard = lock_shard(self.shard(&key));
+        if shard.map.contains_key(&key) {
+            return;
+        }
+        while shard.order.len() >= SHARD_CAP {
+            if let Some(old) = shard.order.pop_front() {
+                shard.map.remove(&old);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.order.push_back(key.clone());
+        shard.map.insert(key, design);
+    }
+
     fn elaborate(&self, qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
         let a = <dyn Architecture>::by_name(arch.name()).expect("registry covers every ArchKind");
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -694,20 +723,49 @@ impl DesignCache {
     }
 }
 
+/// The serving facade: the one process-wide [`DesignCache`] every
+/// consumer fetches designs, stats and resets through — re-exported as
+/// [`crate::hw::designs`]. The free-function wrappers that used to
+/// shadow its methods (`design_for`, `design_for_ephemeral`,
+/// `cache_stats`) are deprecated shims over this facade.
+///
+/// ```
+/// use simurg::ann::quant::QuantizedAnn;
+/// use simurg::ann::structure::{Activation, AnnStructure};
+/// use simurg::hw::{designs, ArchKind, Style};
+///
+/// let qann = QuantizedAnn {
+///     structure: AnnStructure::parse("2-1").unwrap(),
+///     weights: vec![vec![vec![20, -24]]],
+///     biases: vec![vec![10]],
+///     q: 4,
+///     activations: vec![Activation::HSig],
+/// };
+/// let d = designs().design(&qann, ArchKind::SmacNeuron, Style::Behavioral);
+/// assert_eq!(d.arch, ArchKind::SmacNeuron);
+/// assert!(designs().stats().lookups() >= 1);
+/// ```
+pub fn designs() -> &'static DesignCache {
+    DesignCache::global()
+}
+
 /// Fetch a design through the process-wide cache.
+#[deprecated(since = "0.2.0", note = "use the facade: `hw::designs().design(..)`")]
 pub fn design_for(qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
-    DesignCache::global().design(qann, arch, style)
+    designs().design(qann, arch, style)
 }
 
 /// Fetch through the process-wide cache without populating it on a miss
 /// (see [`DesignCache::design_ephemeral`]).
+#[deprecated(since = "0.2.0", note = "use the facade: `hw::designs().design_ephemeral(..)`")]
 pub fn design_for_ephemeral(qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
-    DesignCache::global().design_ephemeral(qann, arch, style)
+    designs().design_ephemeral(qann, arch, style)
 }
 
 /// Counters of the process-wide cache.
+#[deprecated(since = "0.2.0", note = "use the facade: `hw::designs().stats()`")]
 pub fn cache_stats() -> CacheStats {
-    DesignCache::global().stats()
+    designs().stats()
 }
 
 #[cfg(test)]
@@ -767,7 +825,7 @@ mod tests {
     #[test]
     fn batch_matches_per_input_on_one_design() {
         let q = qann("16-16-10", 6, 11);
-        let d = design_for(&q, ArchKind::SmacNeuron, Style::Mcm);
+        let d = designs().design(&q, ArchKind::SmacNeuron, Style::Mcm);
         let rows = random_rows(33, 16, 2);
         let run = simulate_batch(&d, &BatchInputs::from_rows(&rows));
         for (s, row) in rows.iter().enumerate() {
@@ -796,7 +854,7 @@ mod tests {
         let rows = random_rows(33, 16, 6);
         let batch = BatchInputs::from_rows(&rows);
         for style in [Style::Behavioral, Style::Cavm, Style::Cmvm, Style::Mcm] {
-            let d = design_for(&q, ArchKind::Pipelined, style);
+            let d = designs().design(&q, ArchKind::Pipelined, style);
             let run = simulate_batch(&d, &batch);
             assert_eq!(run.cycles, 3, "2 stages + 1 latency");
             assert_eq!(run.throughput_cycles, 2 + rows.len(), "fill once, then 1/cycle");
@@ -885,10 +943,46 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_still_compile_and_route_through_the_facade() {
+        // one-release compatibility contract: the pre-facade free
+        // functions stay callable and answer from the same global cache
+        let q = qann("16-10", 6, 73);
+        let a = design_for(&q, ArchKind::SmacNeuron, Style::Behavioral);
+        let b = designs().design(&q, ArchKind::SmacNeuron, Style::Behavioral);
+        assert!(Arc::ptr_eq(&a, &b), "shim and facade share the global cache");
+        let c = design_for_ephemeral(&q, ArchKind::SmacNeuron, Style::Behavioral);
+        assert_eq!(*a, *c);
+        assert_eq!(cache_stats(), designs().stats());
+    }
+
+    #[test]
+    fn get_and_insert_compose_without_counting_elaborations() {
+        // the tiered cache's composition points: get() counts hits only,
+        // insert() counts nothing (not an elaboration)
+        let cache = DesignCache::new();
+        let q = qann("16-10", 6, 74);
+        assert!(cache.get(&q, ArchKind::Parallel, Style::Cmvm).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "a bare get-miss counts nothing: {s:?}");
+        let arch = <dyn Architecture>::by_name("parallel").unwrap();
+        let d = Arc::new(arch.elaborate(&q, Style::Cmvm));
+        cache.insert(&q, ArchKind::Parallel, Style::Cmvm, d.clone());
+        let got = cache.get(&q, ArchKind::Parallel, Style::Cmvm).unwrap();
+        assert!(Arc::ptr_eq(&got, &d));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 0, 1), "{s:?}");
+        // double insert keeps the first value
+        let d2 = Arc::new(arch.elaborate(&q, Style::Cmvm));
+        cache.insert(&q, ArchKind::Parallel, Style::Cmvm, d2);
+        assert!(Arc::ptr_eq(&cache.get(&q, ArchKind::Parallel, Style::Cmvm).unwrap(), &d));
+    }
+
+    #[test]
     fn count_correct_matches_the_golden_tie_break() {
         let q = qann("16-10", 6, 23);
         let rows = random_rows(40, 16, 8);
-        let d = design_for(&q, ArchKind::SmacAnn, Style::Behavioral);
+        let d = designs().design(&q, ArchKind::SmacAnn, Style::Behavioral);
         let run = simulate_batch(&d, &BatchInputs::from_rows(&rows));
         let labels: Vec<u8> =
             rows.iter().map(|r| crate::ann::sim::predict(&q, r) as u8).collect();

@@ -3,43 +3,54 @@
 //!   simurg table <1|2|3|4>            regenerate a paper table
 //!   simurg figure <10..18|all>        regenerate a paper figure (+CSV)
 //!   simurg flow    --structure 16-16-10 --trainer zaal [--eval pjrt]
-//!   simurg serve   --structure 16-16-10 --trainer zaal [--batch 64] [--split test]
+//!   simurg serve once   --structure 16-16-10 [--batch 64] [--split test]
+//!   simurg serve start  --clients 8 [--max-batch 64] [--artifacts DIR]
+//!   simurg serve status [--artifacts DIR]
 //!   simurg train   --structure 16-10 --trainer zaal --backend pjrt
 //!   simurg verilog --structure 16-10 --trainer zaal --arch parallel --style cmvm --out out/
 //!   simurg archs                      list registered (architecture x style) design points
 //!   simurg mcm     --constants 11,3,5,13 [--alg dbr|cse|exact|engine]
 //!
-//! Common flags: --runs N --seed N --threads N --data-dir DIR --out DIR
+//! Common flags: --runs N --seed N --threads N --data-dir DIR --out DIR.
+//! Every command declares its flag set; a typo'd flag is rejected with a
+//! "did you mean" suggestion instead of being silently ignored.
 
 use anyhow::{bail, Context, Result};
 use simurg::ann::dataset::Dataset;
 use simurg::ann::structure::AnnStructure;
 use simurg::ann::train::Trainer;
 use simurg::coordinator::flow::{run_flow, FlowConfig};
-use simurg::coordinator::report;
+use simurg::coordinator::report::{self, Summary};
 use simurg::coordinator::sweep::{sweep_all_with_caches, SweepConfig};
+use simurg::hw::daemon::{argmax, Daemon, DaemonConfig};
 use simurg::hw::serve::{self, BatchInputs};
-use simurg::hw::{verilog, Architecture, Style, TechLib};
+use simurg::hw::{verilog, ArchKind, Architecture, Style, TechLib};
 use simurg::mcm::{cse, dbr, engine, optimize_mcm, Effort, LinearTargets, Tier};
 use simurg::posttrain::AccuracyEval;
 use simurg::runtime::{Artifacts, PjrtEval, PjrtTrainer};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 /// Minimal `--flag value` argument map (no external CLI dependency — the
-/// build environment vendors only the xla closure).
+/// build environment vendors only the xla closure). Each command passes
+/// its allowed flag set; anything else is a parse error with a
+/// "did you mean" suggestion.
 struct Args {
     positional: Vec<String>,
     flags: HashMap<String, String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Args {
+    fn parse(argv: &[String], allowed: &[&str]) -> Result<Args> {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut i = 0;
         while i < argv.len() {
             if let Some(name) = argv[i].strip_prefix("--") {
+                if !allowed.contains(&name) {
+                    bail!("unknown flag --{name}{}", suggest_flag(name, allowed));
+                }
                 if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                     flags.insert(name.to_string(), argv[i + 1].clone());
                     i += 2;
@@ -52,7 +63,7 @@ impl Args {
                 i += 1;
             }
         }
-        Args { positional, flags }
+        Ok(Args { positional, flags })
     }
 
     fn get(&self, name: &str) -> Option<&str> {
@@ -63,6 +74,35 @@ impl Args {
         match self.get(name) {
             Some(v) => v.parse().with_context(|| format!("--{name} {v:?}")),
             None => Ok(default),
+        }
+    }
+}
+
+/// Edit distance for the unknown-flag suggestion.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.chars().enumerate() {
+        let mut cur = Vec::with_capacity(b.len() + 1);
+        cur.push(i + 1);
+        for (j, &cb) in b.iter().enumerate() {
+            let subst = prev[j] + usize::from(ca != cb);
+            cur.push(subst.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// "(did you mean --X?)" when a near-miss exists, else the flag list.
+fn suggest_flag(got: &str, allowed: &[&str]) -> String {
+    let near = allowed.iter().map(|&a| (levenshtein(got, a), a)).min().filter(|&(d, _)| d <= 3);
+    match near {
+        Some((_, a)) => format!(" (did you mean --{a}?)"),
+        None if allowed.is_empty() => " (this command takes no flags)".to_string(),
+        None => {
+            let list: Vec<String> = allowed.iter().map(|a| format!("--{a}")).collect();
+            format!(" (flags: {})", list.join(" "))
         }
     }
 }
@@ -138,7 +178,7 @@ fn cmd_figure(args: &Args) -> Result<()> {
     }
     // figure pricing itself re-solves heavily; report the process totals
     print!("{}", report::engine_summary(&engine::stats()));
-    print!("{}", report::design_cache_summary(&serve::cache_stats()));
+    print!("{}", report::design_cache_summary(&serve::designs().stats()));
     Ok(())
 }
 
@@ -213,15 +253,58 @@ fn cmd_flow(args: &Args) -> Result<()> {
         o.tuned_smac_ann.adder_ops
     );
     print!("  {}", report::engine_summary(&engine::stats()));
-    print!("  {}", report::design_cache_summary(&serve::cache_stats()));
+    print!("  {}", report::design_cache_summary(&serve::designs().stats()));
     Ok(())
 }
 
-/// Batched many-scenario serving: push a whole data split through every
-/// (architecture × style) design point for every tuning scenario of one
-/// experiment, in batches, reporting accuracy, cycles, throughput and
-/// how much elaboration the design cache amortized.
-fn cmd_serve(args: &Args) -> Result<()> {
+const SERVE_USAGE: &str = "usage: simurg serve <once|start|status> [flags]
+  once      one batched many-scenario sweep: every tuning scenario x
+            design point over --split test|validation in batches of
+            --batch N (default 64), then exit
+  start     bring up the persistent serving daemon, register the tuning
+            scenarios as deployments, and drive --clients N concurrent
+            single-sample clients (default 8) over --requests N test
+            samples; --max-batch N / --max-wait-us N tune the coalescer,
+            --artifacts DIR enables the on-disk design tier
+  status    print the deployment/cache status tables a daemon over
+            --artifacts DIR would start from (warm tier inspection)";
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let Some(verb) = rest.first().filter(|v| !v.starts_with("--")).cloned() else {
+        bail!("missing serve verb\n{SERVE_USAGE}");
+    };
+    let rest = &rest[1..];
+    match verb.as_str() {
+        "once" => cmd_serve_once(&Args::parse(
+            rest,
+            &["structure", "trainer", "runs", "seed", "data-dir", "data-seed", "batch", "split"],
+        )?),
+        "start" => cmd_serve_start(&Args::parse(
+            rest,
+            &[
+                "structure",
+                "trainer",
+                "runs",
+                "seed",
+                "data-dir",
+                "data-seed",
+                "clients",
+                "requests",
+                "max-batch",
+                "max-wait-us",
+                "artifacts",
+            ],
+        )?),
+        "status" => cmd_serve_status(&Args::parse(rest, &["artifacts"])?),
+        other => bail!("unknown serve verb {other:?}\n{SERVE_USAGE}"),
+    }
+}
+
+/// `serve once` — batched many-scenario serving: push a whole data split
+/// through every (architecture × style) design point for every tuning
+/// scenario of one experiment, in batches, reporting accuracy, cycles,
+/// throughput and how much elaboration the design cache amortized.
+fn cmd_serve_once(args: &Args) -> Result<()> {
     let data = dataset(args);
     let mut cfg = FlowConfig::new(parse_structure(args)?, parse_trainer(args)?);
     cfg.runs = args.get_usize("runs", 1)?;
@@ -258,16 +341,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "{:<20}{:<22}{:>10}{:>10}{:>14}",
         "scenario", "design point", "acc %", "cycles", "samples/s"
     );
-    let before = serve::cache_stats();
+    let before = serve::designs().stats();
     for (name, qann) in &scenarios {
         for (arch, style) in simurg::hw::design::design_points() {
-            let t = std::time::Instant::now();
+            let t = Instant::now();
             let mut correct = 0usize;
             let mut cycles = 0usize;
             let mut offset = 0usize;
             for b in &batches {
                 // fetched per batch: every batch after the first is a hit
-                let design = serve::design_for(qann, arch.kind(), style);
+                let design = serve::designs().design(qann, arch.kind(), style);
                 let run = serve::simulate_batch(&design, b);
                 cycles = run.cycles;
                 correct += run.count_correct(&labels[offset..offset + b.len()]);
@@ -285,8 +368,101 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
     }
-    print!("{}", report::design_cache_summary(&serve::cache_stats().since(&before)));
+    print!("{}", report::design_cache_summary(&serve::designs().stats().since(&before)));
     print!("{}", report::engine_summary(&engine::stats()));
+    Ok(())
+}
+
+/// `serve start` — the persistent daemon: register the tuning scenarios
+/// as deployments, then hammer each with concurrent single-sample
+/// clients whose requests the daemon coalesces into SoA batches. Ends by
+/// printing the per-deployment counter table and both cache tiers
+/// through the one [`Summary`] path.
+fn cmd_serve_start(args: &Args) -> Result<()> {
+    let data = dataset(args);
+    let mut cfg = FlowConfig::new(parse_structure(args)?, parse_trainer(args)?);
+    cfg.runs = args.get_usize("runs", 1)?;
+    cfg.seed = args.get_usize("seed", 1)? as u64;
+    let o = run_flow(&data, &cfg, None)?;
+
+    let dcfg = DaemonConfig {
+        max_batch: args.get_usize("max-batch", 64)?.max(1),
+        max_wait: Duration::from_micros(args.get_usize("max-wait-us", 2000)? as u64),
+        artifact_dir: args.get("artifacts").map(PathBuf::from),
+    };
+    let daemon = Daemon::new(dcfg)?;
+    let clients = args.get_usize("clients", 8)?.max(1);
+    let requests = args.get_usize("requests", 256)?.max(1);
+    let samples = &data.test[..requests.min(data.test.len())];
+
+    // one deployment per tuning scenario, each pinned to its natural
+    // multiplierless design point
+    let deployments = [
+        ("untuned@parallel", &o.quant.qann, ArchKind::Parallel, Style::Cmvm),
+        ("tuned@parallel", &o.tuned_parallel.qann, ArchKind::Parallel, Style::Cmvm),
+        ("tuned@smac_neuron", &o.tuned_smac_neuron.qann, ArchKind::SmacNeuron, Style::Mcm),
+        ("tuned@smac_ann", &o.tuned_smac_ann.qann, ArchKind::SmacAnn, Style::Mcm),
+    ];
+    println!(
+        "daemon up (max batch {}, max wait {:?}): {} deployments, {clients} clients x {} single-sample requests each",
+        daemon.status().max_batch,
+        daemon.status().max_wait,
+        deployments.len(),
+        samples.len(),
+    );
+    println!("{:<22}{:>10}{:>14}", "deployment", "acc %", "samples/s");
+    for (name, qann, arch, style) in deployments {
+        let id = daemon.deploy(name, qann.clone(), arch, style);
+        let t = Instant::now();
+        let correct: usize = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let daemon = &daemon;
+                    scope.spawn(move || {
+                        samples
+                            .iter()
+                            .skip(c)
+                            .step_by(clients)
+                            .filter(|s| {
+                                let out = daemon.infer(id, &s.features_q7());
+                                argmax(&out) == s.label as usize
+                            })
+                            .count()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let secs = t.elapsed().as_secs_f64();
+        println!(
+            "{:<22}{:>10.2}{:>14.0}",
+            name,
+            100.0 * correct as f64 / samples.len().max(1) as f64,
+            samples.len() as f64 / secs.max(1e-12),
+        );
+    }
+    print!("{}", daemon.status().summary());
+    print!("{}", report::engine_summary(&engine::stats()));
+    daemon.shutdown();
+    Ok(())
+}
+
+/// `serve status` — the tables a daemon over `--artifacts DIR` starts
+/// from: the (empty) deployment registry, the process-wide memory tier
+/// and the artifact store's on-disk inventory.
+fn cmd_serve_status(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let daemon = Daemon::new(DaemonConfig {
+        artifact_dir: Some(PathBuf::from(dir)),
+        ..DaemonConfig::default()
+    })?;
+    let status = daemon.status();
+    println!(
+        "artifact store {dir}: {} design artifact(s) on disk",
+        status.tiers.disk.entries
+    );
+    print!("{}", status.summary());
+    daemon.shutdown();
     Ok(())
 }
 
@@ -424,9 +600,10 @@ usage: simurg <table|figure|flow|serve|train|verilog|archs|mcm> [flags]
   table <1|2|3|4>           regenerate a paper table
   figure <10..18|all>       regenerate a paper figure (+ CSV in --out)
   flow                      full flow for one --structure/--trainer
-  serve                     batched many-scenario serving: every tuning
-                            scenario x design point over --split test|validation
-                            in batches of --batch N (default 64)
+  serve <once|start|status> serving: one batched sweep (`once`), the
+                            persistent coalescing daemon (`start`), or
+                            the warm-tier status tables (`status`);
+                            `simurg serve` shows the per-verb flags
   train                     train via --backend pjrt|native
   verilog                   emit Verilog + testbench + synthesis script
                             for --arch ARCH --style STYLE (see `archs`)
@@ -434,7 +611,8 @@ usage: simurg <table|figure|flow|serve|train|verilog|archs|mcm> [flags]
   mcm                       optimize --constants with --alg dbr|cse|exact|engine
 flags: --structure 16-16-10 --trainer zaal|pytorch|matlab --runs N --seed N
        --threads N --data-dir DIR --data-seed N --out DIR --eval native|pjrt
-       --batch N --split test|validation"
+unknown flags are rejected with a suggestion; each command accepts only
+its declared set"
 }
 
 fn main() -> Result<()> {
@@ -443,20 +621,94 @@ fn main() -> Result<()> {
         println!("{}", usage());
         return Ok(());
     };
-    let args = Args::parse(&argv[1..]);
+    let rest = &argv[1..];
     match cmd.as_str() {
-        "table" => cmd_table(&args),
-        "figure" => cmd_figure(&args),
-        "flow" => cmd_flow(&args),
-        "serve" => cmd_serve(&args),
-        "train" => cmd_train(&args),
-        "verilog" => cmd_verilog(&args),
+        "table" => cmd_table(&Args::parse(
+            rest,
+            &["runs", "seed", "threads", "structures", "data-dir", "data-seed", "out"],
+        )?),
+        "figure" => cmd_figure(&Args::parse(
+            rest,
+            &["runs", "seed", "threads", "structures", "data-dir", "data-seed", "out"],
+        )?),
+        "flow" => cmd_flow(&Args::parse(
+            rest,
+            &["structure", "trainer", "runs", "seed", "data-dir", "data-seed", "eval"],
+        )?),
+        "serve" => cmd_serve(rest),
+        "train" => cmd_train(&Args::parse(
+            rest,
+            &["structure", "trainer", "backend", "epochs", "seed", "data-dir", "data-seed"],
+        )?),
+        "verilog" => cmd_verilog(&Args::parse(
+            rest,
+            &[
+                "structure",
+                "trainer",
+                "runs",
+                "seed",
+                "data-dir",
+                "data-seed",
+                "arch",
+                "style",
+                "out",
+            ],
+        )?),
         "archs" => cmd_archs(),
-        "mcm" => cmd_mcm(&args),
+        "mcm" => cmd_mcm(&Args::parse(rest, &["constants", "alg"])?),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
             Ok(())
         }
         other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_accepts_declared_flags_and_positionals() {
+        let a = Args::parse(&argv(&["3", "--runs", "2", "--out", "r/"]), &["runs", "out"]).unwrap();
+        assert_eq!(a.positional, vec!["3"]);
+        assert_eq!(a.get("runs"), Some("2"));
+        assert_eq!(a.get_usize("runs", 9).unwrap(), 2);
+        assert_eq!(a.get_usize("seed", 9).unwrap(), 9, "absent flag falls back");
+    }
+
+    #[test]
+    fn parse_rejects_typos_with_a_suggestion() {
+        let err = Args::parse(&argv(&["--structrue", "16-10"]), &["structure", "trainer"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown flag --structrue"), "{err}");
+        assert!(err.contains("did you mean --structure?"), "{err}");
+        // far from everything: list the declared set instead of guessing
+        let err = Args::parse(&argv(&["--zzzzzzzzz"]), &["structure", "trainer"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("flags: --structure --trainer"), "{err}");
+    }
+
+    #[test]
+    fn levenshtein_distances() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("structrue", "structure"), 2);
+        assert_eq!(levenshtein("batch", "max-batch"), 4);
+    }
+
+    #[test]
+    fn serve_requires_a_verb() {
+        let err = cmd_serve(&argv(&["--batch", "64"])).unwrap_err().to_string();
+        assert!(err.contains("missing serve verb"), "{err}");
+        assert!(err.contains("once"), "{err}");
+        let err = cmd_serve(&argv(&["resume"])).unwrap_err().to_string();
+        assert!(err.contains("unknown serve verb"), "{err}");
     }
 }

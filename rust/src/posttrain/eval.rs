@@ -163,7 +163,7 @@ impl AccuracyEval for BatchEval {
         // ephemeral fetch: tuner candidates are one-shot content, so a
         // miss must not churn the shared cache; recurring nets (the
         // untuned starting point every tuner scores first) still hit
-        let design = serve::design_for_ephemeral(qann, self.arch, self.style);
+        let design = serve::designs().design_ephemeral(qann, self.arch, self.style);
         let correct: usize = if self.chunks.len() <= 1 {
             Self::correct_in(&design, &self.chunks[0])
         } else {

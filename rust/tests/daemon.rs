@@ -1,0 +1,192 @@
+//! The serving-daemon contract: concurrent single-sample clients are
+//! coalesced into SoA batches whose outputs are bit-identical to one
+//! `simulate_batch` call, the deployment registry meters every request,
+//! and the artifact store round-trips designs so a warm restart serves
+//! its first request without re-elaborating. Everything here runs on
+//! isolated (non-global) cache tiers so counter assertions cannot race
+//! with sibling tests.
+
+use simurg::ann::model::{Ann, Init};
+use simurg::ann::quant::QuantizedAnn;
+use simurg::ann::structure::{Activation, AnnStructure};
+use simurg::hw::artifact::{content_key, ArtifactStore, TierHit, TieredDesignCache};
+use simurg::hw::daemon::{Daemon, DaemonConfig};
+use simurg::hw::design::{ArchKind, Style};
+use simurg::hw::serve::{simulate_batch, BatchInputs};
+use simurg::hw::TechLib;
+use simurg::num::Rng;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+    let st = AnnStructure::parse(structure).unwrap();
+    let layers = st.num_layers();
+    let mut acts = vec![Activation::HTanh; layers];
+    acts[layers - 1] = Activation::HSig;
+    let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+    QuantizedAnn::quantize(&ann, q, &acts)
+}
+
+fn tempdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("simurg_daemon_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn row(i: usize, features: usize) -> Vec<i32> {
+    (0..features).map(|j| ((i * 31 + j * 7) % 128) as i32).collect()
+}
+
+#[test]
+fn concurrent_clients_match_one_simulate_batch_across_design_points() {
+    // the tentpole equivalence: N concurrent single-sample clients,
+    // coalesced by the daemon, must be bit-identical to one SoA batch —
+    // on at least three design points spanning the registry
+    let q = qann("16-10-10", 6, 42);
+    let points = [
+        (ArchKind::Parallel, Style::Cmvm),
+        (ArchKind::SmacNeuron, Style::Mcm),
+        (ArchKind::SmacAnn, Style::Behavioral),
+        (ArchKind::DigitSerial, Style::Mcm),
+    ];
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 4;
+    for (arch, style) in points {
+        let cfg = DaemonConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+            artifact_dir: None,
+        };
+        let daemon = Daemon::with_cache(cfg, TieredDesignCache::isolated(None));
+        let dep = daemon.deploy("equiv@v1", q.clone(), arch, style);
+        let got = Mutex::new(vec![Vec::new(); CLIENTS * PER_CLIENT]);
+        std::thread::scope(|scope| {
+            for c in 0..CLIENTS {
+                let daemon = &daemon;
+                let got = &got;
+                scope.spawn(move || {
+                    for k in 0..PER_CLIENT {
+                        let i = c * PER_CLIENT + k;
+                        let out = daemon.infer(dep, &row(i, 16));
+                        got.lock().unwrap()[i] = out;
+                    }
+                });
+            }
+        });
+        let rows: Vec<Vec<i32>> = (0..CLIENTS * PER_CLIENT).map(|i| row(i, 16)).collect();
+        let design = daemon.cache().design(&q, arch, style);
+        let want = simulate_batch(&design, &BatchInputs::from_rows(&rows));
+        let got = got.into_inner().unwrap();
+        for (i, g) in got.iter().enumerate() {
+            assert_eq!(
+                g,
+                &want.sample_outputs(i),
+                "{}/{} sample {i} diverged from the SoA batch",
+                arch.name(),
+                style.name()
+            );
+        }
+        // the design was fetched per coalesced chunk but elaborated once
+        let st = daemon.status();
+        assert_eq!(st.deployments[0].requests, (CLIENTS * PER_CLIENT) as u64);
+        assert_eq!(st.deployments[0].elaborations, 1, "{:?}", st.deployments[0]);
+        assert_eq!(st.tiers.mem.misses, 1, "{:?}", st.tiers.mem);
+        daemon.shutdown();
+    }
+}
+
+#[test]
+fn coalescing_counters_see_shared_batches() {
+    // with blocking clients the batch size is capped by the client
+    // count, but 16 clients against a 10ms window must coalesce: far
+    // fewer batches than requests, and a largest batch > 1
+    let q = qann("16-10", 6, 77);
+    let daemon = Daemon::with_cache(
+        DaemonConfig { max_batch: 64, max_wait: Duration::from_millis(10), artifact_dir: None },
+        TieredDesignCache::isolated(None),
+    );
+    let dep = daemon.deploy("coalesce@v1", q, ArchKind::SmacNeuron, Style::Mcm);
+    const CLIENTS: usize = 16;
+    const PER_CLIENT: usize = 8;
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let daemon = &daemon;
+            scope.spawn(move || {
+                for k in 0..PER_CLIENT {
+                    let out = daemon.infer(dep, &row(c * PER_CLIENT + k, 16));
+                    assert_eq!(out.len(), 10);
+                }
+            });
+        }
+    });
+    let st = daemon.status();
+    let d = &st.deployments[0];
+    assert_eq!(d.requests, (CLIENTS * PER_CLIENT) as u64);
+    assert!(d.batches < d.requests, "no coalescing at all: {d:?}");
+    assert!(d.largest_batch > 1, "{d:?}");
+    assert!(d.largest_batch <= 64, "{d:?}");
+    assert!(d.mean_batch() > 1.0, "{d:?}");
+    assert!(d.hit_rate() > 0.0, "later chunks must hit the memory tier: {d:?}");
+    daemon.shutdown();
+}
+
+#[test]
+fn artifact_store_roundtrip_same_key_same_cost() {
+    // persist → drop cache → reload: same content key, same Design::cost
+    let dir = tempdir("roundtrip");
+    let q = qann("16-16-10", 7, 5);
+    let lib = TechLib::tsmc40();
+    let (arch, style) = (ArchKind::SmacNeuron, Style::Mcm);
+
+    let first = TieredDesignCache::isolated(Some(ArtifactStore::open(&dir).unwrap()));
+    let (d1, t1) = first.fetch(&q, arch, style);
+    assert_eq!(t1, TierHit::Elaborated);
+    let key1 = content_key(&q, arch, style);
+    let cost1 = d1.cost(&lib);
+    drop(first); // the memory tier dies with the process
+
+    let reloaded = TieredDesignCache::isolated(Some(ArtifactStore::open(&dir).unwrap()));
+    let (d2, t2) = reloaded.fetch(&q, arch, style);
+    assert_eq!(t2, TierHit::Disk, "reload must come from the artifact store");
+    assert_eq!(*d2, *d1, "reloaded design is content-identical");
+    assert_eq!(content_key(&d2.qann, d2.arch, d2.style), key1, "same content key");
+    assert_eq!(d2.cost(&lib), cost1, "same Design::cost");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_restart_serves_first_request_without_elaborating() {
+    // the acceptance criterion: daemon #1 populates the artifact store;
+    // daemon #2 (fresh memory tier, same store — a restarted process)
+    // serves its first request from disk, with the hit counted in the
+    // on-disk tier's stats and zero elaborations anywhere
+    let dir = tempdir("warmstart");
+    let q = qann("16-10", 6, 13);
+    let point = (ArchKind::SmacAnn, Style::Mcm);
+    let sample = row(3, 16);
+
+    let cold = Daemon::with_cache(
+        DaemonConfig::default(),
+        TieredDesignCache::isolated(Some(ArtifactStore::open(&dir).unwrap())),
+    );
+    let dep = cold.deploy("mnist@v1", q.clone(), point.0, point.1);
+    let out_cold = cold.infer(dep, &sample);
+    assert_eq!(cold.status().deployments[0].elaborations, 1);
+    cold.shutdown();
+
+    let warm = Daemon::with_cache(
+        DaemonConfig::default(),
+        TieredDesignCache::isolated(Some(ArtifactStore::open(&dir).unwrap())),
+    );
+    let dep = warm.deploy("mnist@v1", q, point.0, point.1);
+    let out_warm = warm.infer(dep, &sample);
+    assert_eq!(out_warm, out_cold, "a warm restart serves identical outputs");
+    let st = warm.status();
+    assert_eq!(st.deployments[0].elaborations, 0, "{:?}", st.deployments[0]);
+    assert_eq!(st.deployments[0].disk_hits, 1, "{:?}", st.deployments[0]);
+    assert_eq!(st.tiers.mem.misses, 0, "no elaboration after restart: {:?}", st.tiers.mem);
+    assert_eq!(st.tiers.disk.hits, 1, "{:?}", st.tiers.disk);
+    warm.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

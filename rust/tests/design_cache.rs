@@ -106,13 +106,13 @@ fn netsim_wrappers_elaborate_once_per_key() {
     let q = qann("16-16-10", 7, 987654);
     let x = vec![33i32; 16];
 
-    let before = serve::cache_stats();
+    let before = serve::designs().stats();
     let a1 = netsim::run_smac_neuron(&q, &x);
-    let first = serve::cache_stats().since(&before);
+    let first = serve::designs().stats().since(&before);
     assert_eq!(first.misses, 1, "first call elaborates: {first:?}");
 
     let a2 = netsim::run_smac_neuron(&q, &x);
-    let warm = serve::cache_stats().since(&before);
+    let warm = serve::designs().stats().since(&before);
     assert_eq!(warm.misses, 1, "second call must not re-elaborate: {warm:?}");
     assert_eq!(warm.hits, first.hits + 1, "{warm:?}");
     assert_eq!(a1, a2);
@@ -124,7 +124,7 @@ fn netsim_wrappers_elaborate_once_per_key() {
     let p1 = netsim::run_parallel(&q, Style::Cmvm, &x);
     let p2 = netsim::run_parallel(&q, Style::Cmvm, &x);
     assert_eq!(p1, p2);
-    let total = serve::cache_stats().since(&before);
+    let total = serve::designs().stats().since(&before);
     assert_eq!(total.misses, 3, "one elaboration per distinct key: {total:?}");
     assert_eq!(total.hits, first.hits + 3, "{total:?}");
 
