@@ -4,15 +4,18 @@
 //! cycle-accurate simulator.
 //!
 //!   cargo bench --bench hot_paths            full run
-//!   cargo bench --bench hot_paths -- --smoke batch section only, reduced
+//!   cargo bench --bench hot_paths -- --smoke batch, daemon and pricing
+//!                                            sections only, reduced
 //!                                            workload (the CI bit-rot +
 //!                                            acceptance check)
 //!
 //! Emits `BENCH_batch_netsim.json` (batched vs per-input throughput per
-//! design point, design-cache hit rate), `BENCH_serve_daemon.json`
-//! (daemon-coalesced concurrent serving vs per-request serving, both
-//! smoke and full), and, on full runs, `BENCH_design_ir.json` (tuner
-//! pricing elaborate-once vs rebuild). Methodology: see README §Serving.
+//! design point, sharded vs scalar batch execution, design-cache hit
+//! rate), `BENCH_serve_daemon.json` (daemon-coalesced concurrent serving
+//! vs per-request serving, both smoke and full), and `BENCH_design_ir.json`
+//! (incremental block-cost pricing vs the full cost walk; full runs add
+//! the tuner adder-ops elaborate-once vs rebuild comparison).
+//! Methodology: see README §Serving.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -26,7 +29,7 @@ use simurg::hw::artifact::TieredDesignCache;
 use simurg::hw::daemon::{Daemon, DaemonConfig};
 use simurg::hw::design::{ArchKind, LayerPricer};
 use simurg::hw::netsim;
-use simurg::hw::serve::{self, BatchInputs};
+use simurg::hw::serve::{self, BatchInputs, ServeConfig};
 use simurg::hw::{Architecture, Style};
 use simurg::num::Rng;
 use simurg::posttrain::{AccuracyEval, BatchEval, NativeEval};
@@ -50,7 +53,9 @@ fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
 /// digit-serial mcm route (bit-serial cycle accounting over the same MAC
 /// program). Writes `BENCH_batch_netsim.json`; asserts the acceptance
 /// criteria (>= 3x batched throughput on the mcm serving path at batch
-/// >= 64; digit-serial modeled area below combinational parallel).
+/// >= 64; sharded batch execution >= 2x the scalar loop at large batches
+/// when >= 4 worker threads are available; digit-serial modeled area
+/// below combinational parallel).
 fn bench_batch_netsim(smoke: bool) {
     let data = if smoke {
         Dataset::synthetic_with_sizes(42, 300, 64)
@@ -118,6 +123,40 @@ fn bench_batch_netsim(smoke: bool) {
         );
     }
 
+    // sharded batch execution vs the single-thread scalar loop, on a
+    // batch large enough to clear the shard threshold: same design, same
+    // SoA inputs, split into per-thread sample ranges and merged back
+    // bit-identically (pinned by tests/batch_equivalence.rs)
+    let threads = serve::serve_threads();
+    let big_n = if smoke { 4096 } else { 16384 };
+    let big_rows: Vec<Vec<i32>> = (0..big_n)
+        .map(|i| (0..16).map(|j| ((i * 31 + j * 7) % 256) as i32 - 128).collect())
+        .collect();
+    let big = BatchInputs::from_rows(&big_rows);
+    let design = serve::designs().design(&qann, ArchKind::SmacNeuron, Style::Mcm);
+    let scalar_cfg = ServeConfig { threads: 1, shard_min: usize::MAX };
+    let sharded_cfg = ServeConfig::default();
+    let scalar_run = serve::simulate_batch_with(&design, &big, &scalar_cfg);
+    let sharded_run = serve::simulate_batch_with(&design, &big, &sharded_cfg);
+    assert_eq!(sharded_run, scalar_run, "sharded batch must be bit-identical to scalar");
+    let t = Instant::now();
+    for _ in 0..reps {
+        black_box(serve::simulate_batch_with(&design, &big, &scalar_cfg));
+    }
+    let scalar_ms = t.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    let t = Instant::now();
+    for _ in 0..reps {
+        black_box(serve::simulate_batch_with(&design, &big, &sharded_cfg));
+    }
+    let sharded_ms = t.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    let shard_speedup = scalar_ms / sharded_ms.max(1e-9);
+    println!(
+        "sharded batch (smac_neuron/mcm, batch = {big_n}, {threads} threads): \
+         scalar {scalar_ms:.2} ms  sharded {sharded_ms:.2} ms  ({shard_speedup:.2}x, \
+         {:.2} Msamples/s)",
+        big_n as f64 / (sharded_ms / 1e3) / 1e6
+    );
+
     // serving loop cache behavior: one design fetch per batch of 64 —
     // everything after the first fetch per scenario is a hit
     let batches = inputs.split(n.div_ceil(64));
@@ -184,6 +223,9 @@ fn bench_batch_netsim(smoke: bool) {
          \"pipe_throughput_cycles\": {}, \"comb_throughput_cycles\": {}}},\n  \
          \"digit_serial_vs_parallel\": {{\"ds_area_um2\": {:.3}, \"par_area_um2\": {:.3}, \
          \"ds_latency_ns\": {:.3}, \"par_latency_ns\": {:.3}, \"ds_cycles\": {}}},\n  \
+         \"sharded\": {{\"batch\": {big_n}, \"threads\": {threads}, \
+         \"scalar_ms\": {scalar_ms:.3}, \"sharded_ms\": {sharded_ms:.3}, \
+         \"speedup\": {shard_speedup:.3}}},\n  \
          \"cache\": {{\"lookups\": {}, \"hits\": {}, \"hit_rate\": {:.4}}}\n}}\n",
         pipe_run.throughput_cycles,
         comb_run.throughput_cycles,
@@ -215,6 +257,15 @@ fn bench_batch_netsim(smoke: bool) {
         par_cost.area_um2
     );
     assert!(cache.hit_rate() > 0.5, "serving loop must hit the design cache");
+    if threads >= 4 {
+        assert!(
+            shard_speedup >= 2.0,
+            "acceptance: sharded batch execution must be >= 2x the scalar loop at batch \
+             {big_n} on {threads} threads (got {shard_speedup:.2}x)"
+        );
+    } else {
+        println!("(sharded >= 2x floor skipped: only {threads} worker threads available)");
+    }
 }
 
 /// The persistent serving daemon: the same pipelined request stream
@@ -236,7 +287,12 @@ fn bench_serve_daemon(smoke: bool) {
 
     let drive = |max_batch: usize| -> (f64, u64, u64, f64) {
         let daemon = Daemon::with_cache(
-            DaemonConfig { max_batch, max_wait: Duration::from_micros(500), artifact_dir: None },
+            DaemonConfig {
+                max_batch,
+                max_wait: Duration::from_micros(500),
+                artifact_dir: None,
+                ..DaemonConfig::default()
+            },
             TieredDesignCache::isolated(None),
         );
         let dep = daemon.deploy("bench@v1", qann.clone(), ArchKind::SmacNeuron, Style::Mcm);
@@ -283,13 +339,91 @@ fn bench_serve_daemon(smoke: bool) {
     );
 }
 
+/// Incremental full-cost pricing (the tuner's accept loop): one weight
+/// edit per candidate along a trajectory of accepted edits, priced via
+/// `LayerPricer::block_cost` — only the fragment whose content key the
+/// edit turned is re-elaborated, untouched layers fold in from the
+/// per-layer cost cache — vs re-elaborating the design and walking
+/// `Design::cost` per candidate. Returns the JSON object embedded in
+/// `BENCH_design_ir.json`; asserts the acceptance floor (incremental
+/// pricing >= 5x the full walk).
+fn bench_incremental_pricing(smoke: bool) -> String {
+    let lib = simurg::hw::TechLib::tsmc40();
+    let evals = if smoke { 60 } else { 300 };
+    let structure = "16-16-16-16-16-16-16-10";
+    let base = qann_for(structure, 3);
+    let layers = base.structure.num_layers();
+    println!("\n== incremental pricing: block-cost cache vs full cost walk ({structure}) ==");
+
+    // a trajectory of accepted single-weight edits: consecutive states
+    // differ in exactly one layer, the regime the per-layer cost cache
+    // is built for
+    let mut states = Vec::with_capacity(evals);
+    let mut q = base.clone();
+    for i in 0..evals {
+        let k = i % layers;
+        let m = i % q.structure.layer_outputs(k);
+        let n = i % q.structure.layer_inputs(k);
+        q.weights[k][m][n] += 1 + (i as i64 % 3);
+        states.push(q.clone());
+    }
+    let engine = <dyn Architecture>::by_name("parallel").expect("parallel is a registry entry");
+    // warm the MCM engine on every state so both sides measure pricing
+    // overhead, not first-solve cost
+    for s in &states {
+        black_box(engine.elaborate(s, Style::Cmvm).cost(&lib));
+    }
+
+    let t = Instant::now();
+    let (mut full_area, mut full_fj) = (0.0f64, 0.0f64);
+    for s in &states {
+        let r = engine.elaborate(s, Style::Cmvm).cost(&lib);
+        full_area += r.area_um2;
+        full_fj += r.energy_pj * 1e3;
+    }
+    let full_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    let t = Instant::now();
+    let mut pricer = LayerPricer::new(ArchKind::Parallel, Style::Cmvm);
+    let (mut inc_area, mut inc_fj) = (0.0f64, 0.0f64);
+    for s in &states {
+        let (area, energy_fj) = pricer.block_cost(s, &lib);
+        inc_area += area;
+        inc_fj += energy_fj;
+    }
+    let inc_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+    assert!(rel(inc_area, full_area) < 1e-6, "area drift: {inc_area} vs {full_area}");
+    assert!(rel(inc_fj, full_fj) < 1e-6, "energy drift: {inc_fj} vs {full_fj}");
+    let speedup = full_ms / inc_ms.max(1e-9);
+    println!("full walk    {full_ms:>10.2} ms  ({evals} candidate evals)");
+    println!("incremental  {inc_ms:>10.2} ms  ({speedup:.2}x)");
+    assert!(
+        speedup >= 5.0,
+        "acceptance: incremental block-cost pricing must be >= 5x the full cost walk \
+         (got {speedup:.2}x)"
+    );
+    format!(
+        "{{\"structure\": \"{structure}\", \"candidate_evals\": {evals}, \
+         \"full_walk_ms\": {full_ms:.3}, \"incremental_ms\": {inc_ms:.3}, \
+         \"speedup\": {speedup:.3}, \"area_checksum_um2\": {full_area:.3}}}"
+    )
+}
+
 fn main() {
-    // `--smoke` (the CI bit-rot + acceptance check) runs only the batch
-    // and daemon sections, on a reduced workload.
+    // `--smoke` (the CI bit-rot + acceptance check) runs only the batch,
+    // daemon and incremental-pricing sections, on a reduced workload.
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
         bench_batch_netsim(true);
         bench_serve_daemon(true);
+        let inc = bench_incremental_pricing(true);
+        let json = format!(
+            "{{\n  \"bench\": \"design_ir\",\n  \"smoke\": true,\n  \"incremental\": {inc}\n}}\n"
+        );
+        std::fs::write("BENCH_design_ir.json", &json).expect("write BENCH_design_ir.json");
+        println!("wrote BENCH_design_ir.json");
         return;
     }
 
@@ -361,6 +495,7 @@ fn main() {
 
     bench_batch_netsim(false);
     bench_serve_daemon(false);
+    let inc = bench_incremental_pricing(false);
 
     // == design IR: the tuner scoring path ==
     // A tuner candidate touches exactly one layer. Compare pricing the
@@ -423,7 +558,8 @@ fn main() {
          \"candidate_evals\": {EVALS},\n  \"rebuild_per_eval_ms\": {rebuild_ms:.3},\n  \
          \"elaborate_once_ms\": {cached_ms:.3},\n  \"speedup\": {speedup:.3},\n  \
          \"cost_reelaborate_ms\": {reelab_ms:.4},\n  \"cost_walk_ms\": {walk_ms:.4},\n  \
-         \"adder_ops_checksum\": {ops_cached}\n}}\n"
+         \"adder_ops_checksum\": {ops_cached},\n  \"smoke\": false,\n  \
+         \"incremental\": {inc}\n}}\n"
     );
     std::fs::write("BENCH_design_ir.json", &json).expect("write BENCH_design_ir.json");
     println!("wrote BENCH_design_ir.json");

@@ -141,17 +141,24 @@ pub fn run_flow(data: &Dataset, cfg: &FlowConfig, ev: Option<&dyn AccuracyEval>)
         None => {
             let qann = &quant.qann;
             let validation = &data.validation;
+            // three concurrent tuners: divide the serve-side thread dial
+            // among them so their sharded evaluators don't oversubscribe
+            // the machine
+            let cfg = serve::ServeConfig {
+                threads: (serve::serve_threads() / 3).max(1),
+                ..serve::ServeConfig::default()
+            };
             std::thread::scope(|scope| {
                 let par = scope.spawn(move || {
-                    let ev = BatchEval::new(validation);
+                    let ev = BatchEval::with_config(validation, cfg);
                     tune_parallel(qann, &ev)
                 });
                 let sn = scope.spawn(move || {
-                    let ev = BatchEval::new(validation);
+                    let ev = BatchEval::with_config(validation, cfg);
                     tune_smac(qann, &ev, SlsScope::PerNeuron)
                 });
                 let sa = scope.spawn(move || {
-                    let ev = BatchEval::new(validation);
+                    let ev = BatchEval::with_config(validation, cfg);
                     tune_smac(qann, &ev, SlsScope::WholeAnn)
                 });
                 (par.join().unwrap(), sn.join().unwrap(), sa.join().unwrap())

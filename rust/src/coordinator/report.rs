@@ -63,12 +63,13 @@ impl Summary for StoreStats {
     fn summary(&self) -> String {
         format!(
             "Artifact store: {} lookups, {} hits ({:.1}% hit rate), {} writes, \
-             {} artifacts on disk, {} corrupt skipped\n",
+             {} artifacts on disk, {} evicted, {} corrupt skipped\n",
             self.lookups(),
             self.hits,
             100.0 * self.hit_rate(),
             self.writes,
             self.entries,
+            self.evictions,
             self.errors,
         )
     }
@@ -453,11 +454,12 @@ mod tests {
         let tiers = TierStats { mem: cache, disk: StoreStats::default() };
         assert_eq!(tiers.summary(), cache.summary());
         // with a disk tier present, its line rides below
-        let disk = StoreStats { hits: 3, misses: 1, writes: 4, errors: 0, entries: 4 };
+        let disk = StoreStats { hits: 3, misses: 1, writes: 4, errors: 0, evictions: 2, entries: 4 };
         let both = TierStats { mem: cache, disk };
         assert!(both.summary().starts_with(&cache.summary()));
         assert!(both.summary().contains("Artifact store: 4 lookups"));
         assert!(both.summary().contains("(75.0% hit rate)"));
+        assert!(both.summary().contains("2 evicted"));
     }
 
     #[test]

@@ -39,7 +39,9 @@ impl Default for SweepConfig {
             trainers: Trainer::all().to_vec(),
             runs: 3,
             seed: 1,
-            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            // the shared serve-side dial (SIMURG_SERVE_THREADS), so one
+            // knob governs sweep workers and batch shards alike
+            threads: serve::serve_threads(),
             weights_dir: Some(super::flow::default_weights_dir()),
         }
     }

@@ -590,6 +590,8 @@ pub struct StoreStats {
     pub writes: u64,
     /// unreadable/corrupt/version-skewed files skipped (each also a miss)
     pub errors: u64,
+    /// artifacts evicted by the size bounds (LRU by mtime)
+    pub evictions: u64,
     /// artifacts currently on disk
     pub entries: usize,
 }
@@ -613,26 +615,50 @@ impl StoreStats {
 /// panic on I/O or format trouble: a bad artifact is a miss (counted in
 /// `errors`), and saves are atomic (temp file + rename) so a crashed
 /// writer can't leave a torn artifact behind.
+///
+/// A store opened through [`ArtifactStore::open_bounded`] enforces size
+/// bounds after every save: while over `max_entries` artifacts or
+/// `max_bytes` total artifact bytes, the least-recently-used files go
+/// first (LRU by mtime — a load hit touches the artifact, a save stamps
+/// it fresh). [`StoreStats::evictions`] counts the removals.
 pub struct ArtifactStore {
     dir: PathBuf,
+    /// eviction bounds; `usize::MAX` / `u64::MAX` mean unbounded
+    max_entries: usize,
+    max_bytes: u64,
     hits: AtomicU64,
     misses: AtomicU64,
     writes: AtomicU64,
     errors: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl ArtifactStore {
-    /// Open (creating if needed) the store rooted at `dir`.
+    /// Open (creating if needed) the store rooted at `dir`, unbounded.
     pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        ArtifactStore::open_bounded(dir, usize::MAX, u64::MAX)
+    }
+
+    /// Open (creating if needed) the store rooted at `dir`, evicting
+    /// LRU artifacts whenever a save leaves more than `max_entries`
+    /// files or `max_bytes` total bytes on disk.
+    pub fn open_bounded(
+        dir: impl Into<PathBuf>,
+        max_entries: usize,
+        max_bytes: u64,
+    ) -> Result<ArtifactStore> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("create artifact store {}", dir.display()))?;
         Ok(ArtifactStore {
             dir,
+            max_entries,
+            max_bytes,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             writes: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         })
     }
 
@@ -659,6 +685,12 @@ impl ArtifactStore {
         match Self::decode_artifact(&bytes, &content_key_bytes(qann, arch, style)) {
             Ok(design) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                // refresh the artifact's mtime so the eviction policy sees
+                // the hit (best-effort: a read-only store still serves)
+                let _ = std::fs::File::options()
+                    .write(true)
+                    .open(&path)
+                    .and_then(|f| f.set_modified(std::time::SystemTime::now()));
                 Some(Arc::new(design))
             }
             Err(_) => {
@@ -698,7 +730,39 @@ impl ArtifactStore {
         std::fs::write(&tmp, &e.0).with_context(|| format!("write {}", tmp.display()))?;
         std::fs::rename(&tmp, &path).with_context(|| format!("publish {}", path.display()))?;
         self.writes.fetch_add(1, Ordering::Relaxed);
+        self.enforce_bounds();
         Ok(())
+    }
+
+    /// Evict least-recently-used artifacts (oldest mtime first) until the
+    /// store is within both size bounds. Best-effort: unreadable metadata
+    /// or a lost remove race simply skips the file.
+    fn enforce_bounds(&self) {
+        if self.max_entries == usize::MAX && self.max_bytes == u64::MAX {
+            return;
+        }
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return };
+        let mut files: Vec<(std::time::SystemTime, u64, PathBuf)> = rd
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "design"))
+            .filter_map(|e| {
+                let md = e.metadata().ok()?;
+                Some((md.modified().ok()?, md.len(), e.path()))
+            })
+            .collect();
+        files.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut count = files.len();
+        let mut bytes: u64 = files.iter().map(|&(_, len, _)| len).sum();
+        for (_, len, path) in files {
+            if count <= self.max_entries && bytes <= self.max_bytes {
+                break;
+            }
+            if std::fs::remove_file(&path).is_ok() {
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            count -= 1;
+            bytes = bytes.saturating_sub(len);
+        }
     }
 
     /// Snapshot of the cumulative counters (entries counted from disk).
@@ -715,6 +779,7 @@ impl ArtifactStore {
             misses: self.misses.load(Ordering::Relaxed),
             writes: self.writes.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
             entries,
         }
     }
@@ -898,6 +963,55 @@ mod tests {
         // the rewrite heals the store
         store.save(&d).unwrap();
         assert!(store.load(&q, ArchKind::Parallel, Style::Cmvm).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bounded_store_evicts_lru_by_mtime() {
+        let dir = tempdir("evict");
+        let store = ArtifactStore::open_bounded(&dir, 2, u64::MAX).unwrap();
+        let pause = || std::thread::sleep(std::time::Duration::from_millis(20));
+        let q1 = qann("16-10", 6, 1);
+        let q2 = qann("16-10", 6, 2);
+        let q3 = qann("16-10", 6, 3);
+        let design = |q: &QuantizedAnn| crate::hw::parallel::Parallel.elaborate(q, Style::Cmvm);
+        store.save(&design(&q1)).unwrap();
+        pause();
+        store.save(&design(&q2)).unwrap();
+        pause();
+        // touching q1 through a load makes q2 the least recently used
+        assert!(store.load(&q1, ArchKind::Parallel, Style::Cmvm).is_some());
+        pause();
+        store.save(&design(&q3)).unwrap();
+        let s = store.stats();
+        assert_eq!((s.entries, s.evictions), (2, 1), "{s:?}");
+        assert!(store.load(&q1, ArchKind::Parallel, Style::Cmvm).is_some(), "recently used survives");
+        assert!(store.load(&q2, ArchKind::Parallel, Style::Cmvm).is_none(), "LRU artifact evicted");
+        assert!(store.load(&q3, ArchKind::Parallel, Style::Cmvm).is_some(), "fresh write survives");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn byte_bound_evicts_and_unbounded_store_never_does() {
+        let dir = tempdir("bytes");
+        // learn one artifact's size through an unbounded store
+        let unbounded = ArtifactStore::open(&dir).unwrap();
+        let q1 = qann("16-10", 6, 5);
+        let d1 = crate::hw::parallel::Parallel.elaborate(&q1, Style::Cmvm);
+        unbounded.save(&d1).unwrap();
+        let key = content_key(&q1, ArchKind::Parallel, Style::Cmvm);
+        let size = std::fs::metadata(dir.join(format!("{key}.design"))).unwrap().len();
+        assert_eq!(unbounded.stats().evictions, 0, "open() is unbounded");
+
+        // a byte bound below two artifacts keeps only the newest
+        let store = ArtifactStore::open_bounded(&dir, usize::MAX, size + size / 2).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let q2 = qann("16-10", 6, 6);
+        store.save(&crate::hw::parallel::Parallel.elaborate(&q2, Style::Cmvm)).unwrap();
+        let s = store.stats();
+        assert_eq!((s.entries, s.evictions), (1, 1), "{s:?}");
+        assert!(store.load(&q2, ArchKind::Parallel, Style::Cmvm).is_some());
+        assert!(store.load(&q1, ArchKind::Parallel, Style::Cmvm).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

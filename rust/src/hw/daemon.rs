@@ -76,11 +76,20 @@ pub struct DaemonConfig {
     /// artifact-store directory for the on-disk design tier; `None`
     /// serves from the in-memory tier only
     pub artifact_dir: Option<PathBuf>,
+    /// sharded-interpreter dial for the worker's coalesced batches
+    /// ([`serve::simulate_batch_with`]); defaults to the process-wide
+    /// serve threads
+    pub serve: serve::ServeConfig,
 }
 
 impl Default for DaemonConfig {
     fn default() -> DaemonConfig {
-        DaemonConfig { max_batch: 64, max_wait: Duration::from_millis(2), artifact_dir: None }
+        DaemonConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            artifact_dir: None,
+            serve: serve::ServeConfig::default(),
+        }
     }
 }
 
@@ -369,8 +378,9 @@ pub fn argmax(outputs: &[i32]) -> usize {
 
 /// The coalescing loop: wait for requests, give the batch `max_wait` to
 /// fill (or dispatch early at `max_batch`), then run one SoA
-/// [`serve::simulate_batch`] per (deployment × `max_batch` chunk) and
-/// fan the outputs back out.
+/// [`serve::simulate_batch_with`] per (deployment × `max_batch` chunk) —
+/// sharded over scoped threads when the chunk clears the serve dial —
+/// and fan the outputs back out.
 fn worker_loop(inner: &Inner) {
     loop {
         let drained: Vec<Pending> = {
@@ -417,7 +427,8 @@ fn worker_loop(inner: &Inner) {
                     TierHit::Elaborated => dep.elaborations.fetch_add(1, Ordering::Relaxed),
                 };
                 let rows: Vec<&[i32]> = chunk.iter().map(|p| p.input.as_slice()).collect();
-                let run = serve::simulate_batch(&design, &BatchInputs::from_rows(&rows));
+                let run =
+                    serve::simulate_batch_with(&design, &BatchInputs::from_rows(&rows), &inner.cfg.serve);
                 dep.requests.fetch_add(chunk.len() as u64, Ordering::Relaxed);
                 dep.batches.fetch_add(1, Ordering::Relaxed);
                 dep.largest_batch.fetch_max(chunk.len() as u64, Ordering::Relaxed);
@@ -478,6 +489,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::from_millis(50),
             artifact_dir: None,
+            ..DaemonConfig::default()
         });
         let dep = daemon.deploy("m@1", q, ArchKind::SmacNeuron, Style::Behavioral);
         let pending: Vec<_> = (0..7).map(|i| daemon.submit(dep, &[i * 3; 16])).collect();
@@ -500,6 +512,7 @@ mod tests {
             max_batch: 64,
             max_wait: Duration::from_millis(20),
             artifact_dir: None,
+            ..DaemonConfig::default()
         });
         let dep = daemon.deploy("m@1", q, ArchKind::SmacNeuron, Style::Behavioral);
         let pending: Vec<_> = (0..32).map(|i| daemon.submit(dep, &[(i * 5) % 128; 16])).collect();
@@ -525,6 +538,7 @@ mod tests {
             max_batch: 64,
             max_wait: Duration::from_millis(200),
             artifact_dir: None,
+            ..DaemonConfig::default()
         });
         let dep = daemon.deploy("m@1", q, ArchKind::SmacAnn, Style::Behavioral);
         let pending: Vec<_> = (0..5).map(|i| daemon.submit(dep, &[i; 16])).collect();

@@ -372,6 +372,23 @@ impl DesignBuilder {
         self.layers.push(plan);
     }
 
+    /// Gate-level (area, energy-per-inference) of the blocks described so
+    /// far — the fragment pricer behind [`LayerPricer::block_cost`]: a
+    /// per-layer fragment built through
+    /// [`Architecture::elaborate_layer_blocks`] is priced without
+    /// finishing a [`Design`] or walking timing paths (paths only affect
+    /// the clock, which fragment deltas don't re-estimate).
+    pub fn fragment_cost(&self, lib: &TechLib) -> (f64, f64) {
+        let mut area = 0.0f64;
+        let mut energy = 0.0f64;
+        for b in &self.blocks {
+            let u = b.kind.unit(lib, &self.graphs);
+            area += u.area * b.count as f64;
+            energy += u.energy * b.count as f64 * b.fires;
+        }
+        (area, energy)
+    }
+
     pub fn finish(self, qann: &QuantizedAnn) -> Design {
         Design {
             arch: self.arch,
@@ -404,6 +421,18 @@ pub trait Architecture: Sync {
     /// Elaborate `qann` under `style`. Panics on an unsupported style;
     /// data-driven consumers iterate [`Architecture::styles`] instead.
     fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design;
+
+    /// Emit only layer `k`'s datapath blocks (plus any whole-design
+    /// prologue/epilogue blocks owned by that layer: the parallel output
+    /// register at the last layer, the pipelined input register bank at
+    /// layer 0, the whole of SMAC_ANN at layer 0) into `b`. Summed over
+    /// every `k`, the emitted blocks are exactly those of
+    /// [`Architecture::elaborate`] — the pin
+    /// `fragment_costs_sum_to_the_full_cost_walk` asserts the area and
+    /// energy of the fragments against the full [`Design::cost`] walk for
+    /// every design point. [`LayerPricer::block_cost`] prices candidates
+    /// through this, re-emitting only the layers whose content changed.
+    fn elaborate_layer_blocks(&self, b: &mut DesignBuilder, qann: &QuantizedAnn, k: usize, style: Style);
 }
 
 impl dyn Architecture {
@@ -534,20 +563,67 @@ fn layer_key(arch: ArchKind, qann: &QuantizedAnn, k: usize) -> u64 {
     h.finish()
 }
 
-/// Cached per-layer pricer of the tuners' add/sub-op metric: each call
-/// re-solves only the layers whose weights changed since the previous
+/// Content key of layer `k`'s *block fragment* — richer than
+/// [`layer_key`] because gate-level cost depends on more than the
+/// constant-multiplication instances: accumulator widths take in biases,
+/// input ranges take in `q` and the previous layer's activation, and the
+/// globally-coupled architectures (SMAC_ANN's whole-net factoring, the
+/// digit-serial design-wide bit count `B`) make every layer's fragment a
+/// function of the whole net's weights and biases.
+fn cost_key(arch: ArchKind, qann: &QuantizedAnn, k: usize) -> u64 {
+    let mut h = crate::num::fxhash::FxHasher::default();
+    h.write_u32(qann.q);
+    for &a in &qann.activations {
+        h.write_u8(a as u8);
+    }
+    let mut add_layer = |j: usize| {
+        for row in &qann.weights[j] {
+            h.write_usize(row.len());
+            for &w in row {
+                h.write_u64(w as u64);
+            }
+        }
+        for &b in &qann.biases[j] {
+            h.write_u64(b as u64);
+        }
+    };
+    match arch {
+        ArchKind::SmacAnn | ArchKind::DigitSerial => {
+            (0..qann.structure.num_layers()).for_each(&mut add_layer)
+        }
+        _ => add_layer(k),
+    }
+    h.finish()
+}
+
+/// Cached per-layer pricer of the tuner metrics: each call re-solves (or
+/// re-prices) only the layers whose content changed since the previous
 /// call; untouched layers are answered from the local cache without even
-/// canonicalizing an engine instance.
+/// canonicalizing an engine instance. Two independently keyed caches:
+/// [`LayerPricer::adder_ops`] over the constant-multiplication instances
+/// (weights only), and [`LayerPricer::block_cost`] over per-layer
+/// [`BlockCost`] fragment sums (full cost-relevant content), so tuners
+/// price area/energy deltas per candidate without re-walking
+/// [`Design::cost`].
 pub struct LayerPricer {
     arch: ArchKind,
     style: Style,
     keys: Vec<Option<u64>>,
     ops: Vec<usize>,
+    cost_keys: Vec<Option<u64>>,
+    costs: Vec<(f64, f64)>,
 }
 
 impl LayerPricer {
     pub fn new(arch: ArchKind, style: Style) -> LayerPricer {
-        LayerPricer { arch, style, keys: Vec::new(), ops: Vec::new() }
+        LayerPricer {
+            arch,
+            style,
+            keys: Vec::new(),
+            ops: Vec::new(),
+            cost_keys: Vec::new(),
+            costs: Vec::new(),
+        }
     }
 
     /// Total add/sub operations of `qann`'s constant-multiplication
@@ -570,6 +646,35 @@ impl LayerPricer {
             }
         }
         self.ops.iter().sum()
+    }
+
+    /// Total (area, energy-per-inference) of `qann`'s elaborated design
+    /// under this pricer's (architecture, style), summed from cached
+    /// per-layer [`BlockCost`] fragments: only the layers whose
+    /// cost-relevant content ([`cost_key`]) changed since the previous
+    /// call re-elaborate their block fragment
+    /// ([`Architecture::elaborate_layer_blocks`]); untouched layers are
+    /// answered from the local cache. Equal (to float-summation order) to
+    /// elaborating the full design and walking [`Design::cost`] — pinned
+    /// by `fragment_costs_sum_to_the_full_cost_walk`. Panics like
+    /// [`Architecture::elaborate`] on an unsupported design point.
+    pub fn block_cost(&mut self, qann: &QuantizedAnn, lib: &TechLib) -> (f64, f64) {
+        let arch = <dyn Architecture>::by_name(self.arch.name()).expect("registry covers every ArchKind");
+        let n = qann.structure.num_layers();
+        self.cost_keys.resize(n, None);
+        self.costs.resize(n, (0.0, 0.0));
+        for k in 0..n {
+            let key = cost_key(self.arch, qann, k);
+            if self.cost_keys[k] != Some(key) {
+                // the builder's schedule is irrelevant to fragment pricing
+                // (it only shapes the finished Design's cycle model)
+                let mut b = DesignBuilder::new(self.arch, self.style, Schedule::Combinational);
+                arch.elaborate_layer_blocks(&mut b, qann, k, self.style);
+                self.costs[k] = b.fragment_cost(lib);
+                self.cost_keys[k] = Some(key);
+            }
+        }
+        self.costs.iter().fold((0.0, 0.0), |(a, e), &(fa, fe)| (a + fa, e + fe))
     }
 }
 
@@ -713,5 +818,71 @@ mod tests {
         assert!(b > 0);
         // pricing the original again restores the original total
         assert_eq!(pricer.adder_ops(&q), a);
+    }
+
+    #[test]
+    fn fragment_costs_sum_to_the_full_cost_walk() {
+        // the anti-drift pin of the incremental cost pricer: per-layer
+        // fragments emitted by elaborate_layer_blocks must sum (in area
+        // and in energy, to float-summation order) to the full
+        // Design::cost walk, for every design point in the registry
+        let q = qann("16-16-10", 6, 23);
+        let lib = TechLib::tsmc40();
+        for (arch, style) in design_points() {
+            let r = arch.elaborate(&q, style).cost(&lib);
+            let (area, energy_fj) = LayerPricer::new(arch.kind(), style).block_cost(&q, &lib);
+            let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+            assert!(
+                rel(area, r.area_um2) < 1e-9,
+                "{} {}: fragment area {area} != cost walk {}",
+                arch.name(),
+                style.name(),
+                r.area_um2
+            );
+            // HwReport stores pJ; the fragment pricer sums the raw fJ
+            assert!(
+                rel(energy_fj, r.energy_pj * 1000.0) < 1e-9,
+                "{} {}: fragment energy {energy_fj} fJ != cost walk {} pJ",
+                arch.name(),
+                style.name(),
+                r.energy_pj
+            );
+        }
+    }
+
+    #[test]
+    fn block_cost_reprices_only_touched_layers() {
+        let q = qann("16-10-10", 6, 25);
+        let lib = TechLib::tsmc40();
+        let mut pricer = LayerPricer::new(ArchKind::Parallel, Style::Cmvm);
+        let c = pricer.block_cost(&q, &lib);
+        assert!(c.0 > 0.0 && c.1 > 0.0);
+        assert_eq!(pricer.block_cost(&q, &lib), c, "no change, cached total");
+
+        // a weight edit in layer 1 must invalidate only layer 1's fragment
+        let mut q2 = q.clone();
+        q2.weights[1][0][0] = 0;
+        let c2 = pricer.block_cost(&q2, &lib);
+        assert_eq!(pricer.cost_keys[0], Some(cost_key(ArchKind::Parallel, &q, 0)), "layer 0 untouched");
+        assert_ne!(pricer.cost_keys[1], Some(cost_key(ArchKind::Parallel, &q, 1)));
+        assert_eq!(c2, LayerPricer::new(ArchKind::Parallel, Style::Cmvm).block_cost(&q2, &lib));
+
+        // a bias edit must invalidate too — cost keys are richer than the
+        // weights-only adder-op keys
+        let mut q3 = q.clone();
+        q3.biases[0][0] += 1;
+        pricer.block_cost(&q3, &lib);
+        assert_ne!(pricer.cost_keys[0], Some(cost_key(ArchKind::Parallel, &q, 0)));
+
+        // pricing the original again restores the original total
+        assert_eq!(pricer.block_cost(&q, &lib), c);
+
+        // the globally-coupled serial design keys every layer on the whole
+        // net: a single-layer edit invalidates every fragment
+        let mut serial = LayerPricer::new(ArchKind::DigitSerial, Style::Behavioral);
+        serial.block_cost(&q, &lib);
+        let keys = serial.cost_keys.clone();
+        serial.block_cost(&q2, &lib);
+        assert!(serial.cost_keys.iter().zip(&keys).all(|(a, b)| a != b), "whole-net keys all turn");
     }
 }

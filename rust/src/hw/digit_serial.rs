@@ -83,79 +83,85 @@ impl Architecture for DigitSerial {
     }
 
     fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
-        let st = &qann.structure;
         let bits = serial_bits(qann);
         let mut b = DesignBuilder::new(ArchKind::DigitSerial, style, Schedule::DigitSerial { bits });
-
-        for k in 0..st.num_layers() {
-            let n_in = st.layer_inputs(k);
-            let n_out = st.layer_outputs(k);
-            let in_range = report::layer_input_range(qann, k);
-            let acc_bits = report::layer_acc_bits(qann, k);
-            // broadcasts: ι_k MAC steps + 1 bias/activate step; the serial
-            // datapath is active for every bit-cycle of each broadcast
-            let broadcasts = (n_in + 1) as f64;
-            let bit_cycles = broadcasts * bits as f64;
-
-            // shared per-layer control: input counter + the bit-counter
-            // FSM sequencing B bit-cycles per broadcast + broadcast mux
-            let control = b.block(BlockKind::Counter { n: n_in + 1 }, 1, bit_cycles);
-            let bit_fsm = b.block(BlockKind::Counter { n: bits as usize }, 1, bit_cycles);
-            let in_mux = b.block(BlockKind::Mux { n: n_in, bits: 8 }, 1, broadcasts);
-            b.path(vec![control]);
-            b.path(vec![bit_fsm]);
-
-            // weights are stored factored by each neuron's smallest left
-            // shift, exactly as in SMAC_NEURON; the back-shift is wiring
-            let (stored, sls) = design::stored_layer(qann, k);
-
-            let mcm = match style {
-                Style::Behavioral => {
-                    for row in &stored {
-                        let w_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1);
-                        let w_mux = b.block(BlockKind::ConstantMux { n: n_in, bits: w_bits }, 1, broadcasts);
-                        // the bias add rides the serial slice during the
-                        // +1 broadcast, so no separate word-wide adder
-                        let ser = b.block(BlockKind::SerialAdder { w_bits }, 1, bit_cycles);
-                        let acc = b.block(BlockKind::ShiftRegister { bits: acc_bits }, 1, bit_cycles);
-                        b.block(BlockKind::ActivationUnit { acc_bits }, 1, broadcasts);
-                        b.block(BlockKind::Register { bits: 8 }, 1, broadcasts); // out reg
-                        b.path(vec![in_mux, w_mux, ser, acc]);
-                    }
-                    None
-                }
-                Style::Mcm => {
-                    // the SMAC_NEURON product instance (kept in lock-step
-                    // with LayerPricer::layer_instances), realized as a
-                    // serial shift-adds network
-                    let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
-                    let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
-                    let net = b.block(BlockKind::SerialShiftAdds { graphs: vec![gi] }, 1, bit_cycles);
-                    for _ in &stored {
-                        // products arrive bit-serially, so the per-neuron
-                        // product mux and accumulating slice are 1 bit wide
-                        let p_mux = b.block(BlockKind::Mux { n: n_in, bits: 1 }, 1, broadcasts);
-                        let ser = b.block(BlockKind::SerialAdder { w_bits: 1 }, 1, bit_cycles);
-                        let acc = b.block(BlockKind::ShiftRegister { bits: acc_bits }, 1, bit_cycles);
-                        b.block(BlockKind::ActivationUnit { acc_bits }, 1, broadcasts);
-                        b.block(BlockKind::Register { bits: 8 }, 1, broadcasts); // out reg
-                        b.path(vec![net, p_mux, ser, acc]);
-                    }
-                    Some(McmRef { graph: gi, offset: 0 })
-                }
-                other => panic!("digit_serial has no {} style", other.name()),
-            };
-
-            b.layer(LayerPlan {
-                n_in,
-                n_out,
-                acc_bits,
-                in_range,
-                compute: LayerCompute::Mac { stored, sls, mcm },
-            });
+        for k in 0..qann.structure.num_layers() {
+            self.elaborate_layer_blocks(&mut b, qann, k, style);
         }
-
         b.finish(qann)
+    }
+
+    fn elaborate_layer_blocks(&self, b: &mut DesignBuilder, qann: &QuantizedAnn, k: usize, style: Style) {
+        let st = &qann.structure;
+        // the design-wide serial word length couples every layer's blocks
+        // to the worst layer — which is why the pricer's cost key hashes
+        // all layers for this architecture
+        let bits = serial_bits(qann);
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let in_range = report::layer_input_range(qann, k);
+        let acc_bits = report::layer_acc_bits(qann, k);
+        // broadcasts: ι_k MAC steps + 1 bias/activate step; the serial
+        // datapath is active for every bit-cycle of each broadcast
+        let broadcasts = (n_in + 1) as f64;
+        let bit_cycles = broadcasts * bits as f64;
+
+        // shared per-layer control: input counter + the bit-counter
+        // FSM sequencing B bit-cycles per broadcast + broadcast mux
+        let control = b.block(BlockKind::Counter { n: n_in + 1 }, 1, bit_cycles);
+        let bit_fsm = b.block(BlockKind::Counter { n: bits as usize }, 1, bit_cycles);
+        let in_mux = b.block(BlockKind::Mux { n: n_in, bits: 8 }, 1, broadcasts);
+        b.path(vec![control]);
+        b.path(vec![bit_fsm]);
+
+        // weights are stored factored by each neuron's smallest left
+        // shift, exactly as in SMAC_NEURON; the back-shift is wiring
+        let (stored, sls) = design::stored_layer(qann, k);
+
+        let mcm = match style {
+            Style::Behavioral => {
+                for row in &stored {
+                    let w_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1);
+                    let w_mux = b.block(BlockKind::ConstantMux { n: n_in, bits: w_bits }, 1, broadcasts);
+                    // the bias add rides the serial slice during the
+                    // +1 broadcast, so no separate word-wide adder
+                    let ser = b.block(BlockKind::SerialAdder { w_bits }, 1, bit_cycles);
+                    let acc = b.block(BlockKind::ShiftRegister { bits: acc_bits }, 1, bit_cycles);
+                    b.block(BlockKind::ActivationUnit { acc_bits }, 1, broadcasts);
+                    b.block(BlockKind::Register { bits: 8 }, 1, broadcasts); // out reg
+                    b.path(vec![in_mux, w_mux, ser, acc]);
+                }
+                None
+            }
+            Style::Mcm => {
+                // the SMAC_NEURON product instance (kept in lock-step
+                // with LayerPricer::layer_instances), realized as a
+                // serial shift-adds network
+                let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
+                let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
+                let net = b.block(BlockKind::SerialShiftAdds { graphs: vec![gi] }, 1, bit_cycles);
+                for _ in &stored {
+                    // products arrive bit-serially, so the per-neuron
+                    // product mux and accumulating slice are 1 bit wide
+                    let p_mux = b.block(BlockKind::Mux { n: n_in, bits: 1 }, 1, broadcasts);
+                    let ser = b.block(BlockKind::SerialAdder { w_bits: 1 }, 1, bit_cycles);
+                    let acc = b.block(BlockKind::ShiftRegister { bits: acc_bits }, 1, bit_cycles);
+                    b.block(BlockKind::ActivationUnit { acc_bits }, 1, broadcasts);
+                    b.block(BlockKind::Register { bits: 8 }, 1, broadcasts); // out reg
+                    b.path(vec![net, p_mux, ser, acc]);
+                }
+                Some(McmRef { graph: gi, offset: 0 })
+            }
+            other => panic!("digit_serial has no {} style", other.name()),
+        };
+
+        b.layer(LayerPlan {
+            n_in,
+            n_out,
+            acc_bits,
+            in_range,
+            compute: LayerCompute::Mac { stored, sls, mcm },
+        });
     }
 }
 

@@ -38,7 +38,10 @@ pub use daemon::{Daemon, DaemonConfig, DaemonStatus, DeploymentId, DeploymentSta
 pub use design::{ArchKind, Architecture, Design, Schedule, Style};
 pub use gates::TechLib;
 pub use report::HwReport;
-pub use serve::{designs, simulate_batch, BatchInputs, BatchRun, CacheStats, DesignCache};
+pub use serve::{
+    designs, fanout_threads, serve_threads, simulate_batch, simulate_batch_with, BatchInputs,
+    BatchRun, CacheStats, DesignCache, ServeConfig,
+};
 
 use crate::mcm::{AdderGraph, Operand};
 use blocks::BlockCost;

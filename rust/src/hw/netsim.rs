@@ -14,6 +14,12 @@
 //!
 //! Elaborate once, evaluate many: build the [`Design`] a single time and
 //! run the whole test set through it — the graphs are fixed hardware.
+//! For throughput work, [`crate::hw::serve::simulate_batch`] runs the
+//! same schedule over an SoA batch with stride-1 lane kernels (an `i64`
+//! fast path when the certified accumulator widths permit, `i128`
+//! otherwise) and shards large batches across worker threads; this
+//! per-input interpreter stays the bit-exactness referee those kernels
+//! are tested against.
 //!
 //! ```
 //! use simurg::ann::quant::QuantizedAnn;

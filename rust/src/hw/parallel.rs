@@ -57,6 +57,37 @@ pub(super) fn solve_layer_graphs(
     }
 }
 
+/// Emit layer `k`'s datapath blocks (constant-multiplication network,
+/// bias adders, activation units) into `b`; returns the combinational
+/// chain segment and the layer plan. One emission path shared by
+/// [`Architecture::elaborate`] and
+/// [`Architecture::elaborate_layer_blocks`] so the fragment pricer can
+/// never drift from the elaborated design.
+fn layer_blocks(
+    b: &mut DesignBuilder,
+    qann: &QuantizedAnn,
+    k: usize,
+    style: Style,
+) -> (Vec<usize>, LayerPlan) {
+    let st = &qann.structure;
+    let n_in = st.layer_inputs(k);
+    let n_out = st.layer_outputs(k);
+    let in_range = report::layer_input_range(qann, k);
+    let ranges = vec![in_range; n_in];
+    let acc_bits = report::layer_acc_bits(qann, k);
+
+    // constant-multiplication network realizing the inner products
+    let gis: Vec<usize> = solve_layer_graphs(b, qann, k, style, "parallel");
+    let net = b.block(BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges }, 1, 1.0);
+
+    // bias adder + activation per neuron
+    let bias = b.block(BlockKind::Adder { bits: acc_bits }, n_out, 1.0);
+    let act = b.block(BlockKind::ActivationUnit { acc_bits }, n_out, 1.0);
+
+    let plan = LayerPlan { n_in, n_out, acc_bits, in_range, compute: LayerCompute::Graphs(gis) };
+    (vec![net, bias, act], plan)
+}
+
 impl Architecture for Parallel {
     fn kind(&self) -> ArchKind {
         ArchKind::Parallel
@@ -74,22 +105,9 @@ impl Architecture for Parallel {
         let mut chain: Vec<usize> = Vec::new();
 
         for k in 0..st.num_layers() {
-            let n_in = st.layer_inputs(k);
-            let n_out = st.layer_outputs(k);
-            let in_range = report::layer_input_range(qann, k);
-            let ranges = vec![in_range; n_in];
-            let acc_bits = report::layer_acc_bits(qann, k);
-
-            // constant-multiplication network realizing the inner products
-            let gis: Vec<usize> = solve_layer_graphs(&mut b, qann, k, style, "parallel");
-            let net = b.block(BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges }, 1, 1.0);
-
-            // bias adder + activation per neuron
-            let bias = b.block(BlockKind::Adder { bits: acc_bits }, n_out, 1.0);
-            let act = b.block(BlockKind::ActivationUnit { acc_bits }, n_out, 1.0);
-            chain.extend([net, bias, act]);
-
-            b.layer(LayerPlan { n_in, n_out, acc_bits, in_range, compute: LayerCompute::Graphs(gis) });
+            let (segment, plan) = layer_blocks(&mut b, qann, k, style);
+            chain.extend(segment);
+            b.layer(plan);
         }
 
         // output registers (paper Sec. VII)
@@ -101,6 +119,15 @@ impl Architecture for Parallel {
         chain.push(out_reg);
         b.path(chain);
         b.finish(qann)
+    }
+
+    fn elaborate_layer_blocks(&self, b: &mut DesignBuilder, qann: &QuantizedAnn, k: usize, style: Style) {
+        let (_, plan) = layer_blocks(b, qann, k, style);
+        b.layer(plan);
+        // the output register epilogue rides the last layer's fragment
+        if k + 1 == qann.structure.num_layers() {
+            b.block(BlockKind::Register { bits: 8 }, qann.structure.layer_outputs(k), 1.0);
+        }
     }
 }
 

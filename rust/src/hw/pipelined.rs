@@ -53,75 +53,79 @@ impl Architecture for PipelinedParallel {
     }
 
     fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
-        let st = &qann.structure;
-        let stages = st.num_layers();
+        let stages = qann.structure.num_layers();
         let mut b = DesignBuilder::new(ArchKind::Pipelined, style, Schedule::Pipelined { stages });
-
-        // registered input stage (stage 0 of the pipe)
-        b.block(BlockKind::Register { bits: 8 }, st.inputs, 1.0);
-
         for k in 0..stages {
-            let n_in = st.layer_inputs(k);
-            let n_out = st.layer_outputs(k);
-            let in_range = report::layer_input_range(qann, k);
-            let acc_bits = report::layer_acc_bits(qann, k);
+            self.elaborate_layer_blocks(&mut b, qann, k, style);
+        }
+        b.finish(qann)
+    }
 
-            // the stage's register-to-register path: constant-mult network,
-            // (mcm only) per-neuron adder tree, bias, activation, stage reg
-            let mut path: Vec<usize> = Vec::new();
-
-            let compute = match style {
-                Style::Mcm => {
-                    // one single-input MCM product graph per input column,
-                    // instances shared with the tuner pricer
-                    let gis: Vec<usize> = design::mcm_column_instances(qann, k)
-                        .iter()
-                        .map(|(t, tier)| b.solved(t, *tier))
-                        .collect();
-                    let net = b.block(
-                        BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: vec![in_range] },
-                        1,
-                        1.0,
-                    );
-                    // per-neuron adder trees summing the column products:
-                    // n_in - 1 adders per neuron, log2-depth on the path
-                    let tree = b.block(
-                        BlockKind::Adder { bits: acc_bits },
-                        n_out * n_in.saturating_sub(1),
-                        1.0,
-                    );
-                    path.push(net);
-                    for _ in 0..tree_depth(n_in) {
-                        path.push(tree);
-                    }
-                    LayerCompute::McmColumns(gis)
-                }
-                _ => {
-                    // graph styles shared verbatim with the combinational design
-                    let gis = parallel::solve_layer_graphs(&mut b, qann, k, style, "pipelined");
-                    let ranges = vec![in_range; n_in];
-                    let net = b.block(
-                        BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges },
-                        1,
-                        1.0,
-                    );
-                    path.push(net);
-                    LayerCompute::Graphs(gis)
-                }
-            };
-
-            // bias adder + activation per neuron, then the stage register
-            // bank (the last bank is the output register)
-            let bias = b.block(BlockKind::Adder { bits: acc_bits }, n_out, 1.0);
-            let act = b.block(BlockKind::ActivationUnit { acc_bits }, n_out, 1.0);
-            let reg = b.block(BlockKind::Register { bits: 8 }, n_out, 1.0);
-            path.extend([bias, act, reg]);
-            b.path(path);
-
-            b.layer(LayerPlan { n_in, n_out, acc_bits, in_range, compute });
+    fn elaborate_layer_blocks(&self, b: &mut DesignBuilder, qann: &QuantizedAnn, k: usize, style: Style) {
+        let st = &qann.structure;
+        if k == 0 {
+            // registered input stage (stage 0 of the pipe)
+            b.block(BlockKind::Register { bits: 8 }, st.inputs, 1.0);
         }
 
-        b.finish(qann)
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let in_range = report::layer_input_range(qann, k);
+        let acc_bits = report::layer_acc_bits(qann, k);
+
+        // the stage's register-to-register path: constant-mult network,
+        // (mcm only) per-neuron adder tree, bias, activation, stage reg
+        let mut path: Vec<usize> = Vec::new();
+
+        let compute = match style {
+            Style::Mcm => {
+                // one single-input MCM product graph per input column,
+                // instances shared with the tuner pricer
+                let gis: Vec<usize> = design::mcm_column_instances(qann, k)
+                    .iter()
+                    .map(|(t, tier)| b.solved(t, *tier))
+                    .collect();
+                let net = b.block(
+                    BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: vec![in_range] },
+                    1,
+                    1.0,
+                );
+                // per-neuron adder trees summing the column products:
+                // n_in - 1 adders per neuron, log2-depth on the path
+                let tree = b.block(
+                    BlockKind::Adder { bits: acc_bits },
+                    n_out * n_in.saturating_sub(1),
+                    1.0,
+                );
+                path.push(net);
+                for _ in 0..tree_depth(n_in) {
+                    path.push(tree);
+                }
+                LayerCompute::McmColumns(gis)
+            }
+            _ => {
+                // graph styles shared verbatim with the combinational design
+                let gis = parallel::solve_layer_graphs(b, qann, k, style, "pipelined");
+                let ranges = vec![in_range; n_in];
+                let net = b.block(
+                    BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges },
+                    1,
+                    1.0,
+                );
+                path.push(net);
+                LayerCompute::Graphs(gis)
+            }
+        };
+
+        // bias adder + activation per neuron, then the stage register
+        // bank (the last bank is the output register)
+        let bias = b.block(BlockKind::Adder { bits: acc_bits }, n_out, 1.0);
+        let act = b.block(BlockKind::ActivationUnit { acc_bits }, n_out, 1.0);
+        let reg = b.block(BlockKind::Register { bits: 8 }, n_out, 1.0);
+        path.extend([bias, act, reg]);
+        b.path(path);
+
+        b.layer(LayerPlan { n_in, n_out, acc_bits, in_range, compute });
     }
 }
 

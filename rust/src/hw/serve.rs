@@ -8,13 +8,22 @@
 //!
 //! - [`simulate_batch`] runs a whole [`BatchInputs`] through one design in
 //!   structure-of-arrays layout. Every schedule step is executed once per
-//!   *inference*, with an inner loop over the batch, so the interpreter's
-//!   dispatch (block walk, graph-node walk, product routing) is amortized
-//!   across samples instead of being paid per sample. The MCM product
-//!   graphs of the SMAC styles are linear in their single input, so they
-//!   are evaluated **once per weight per batch** (at x = 1) and scaled per
-//!   sample — bit-identical to the per-input route, pinned by
-//!   `rust/tests/batch_equivalence.rs`;
+//!   *inference*, with a stride-1 inner loop over the batch, so the
+//!   interpreter's dispatch (block walk, graph-node walk, product routing)
+//!   is amortized across samples instead of being paid per sample. The
+//!   inner loops run an `i64` fast lane whenever a per-layer width
+//!   certificate proves the accumulators fit, falling back to `i128` only
+//!   when they cannot. The MCM product graphs of the SMAC styles are
+//!   linear in their single input, so they are evaluated **once per
+//!   weight per batch** (at x = 1) and hoisted into pre-shifted `i64`
+//!   coefficients streamed per sample — bit-identical to the per-input
+//!   route, pinned by `rust/tests/batch_equivalence.rs`;
+//! - [`simulate_batch_with`] additionally shards a large batch into
+//!   contiguous per-thread sample ranges *within* one design (scoped
+//!   threads; count from the [`ServeConfig`] dial / `SIMURG_SERVE_THREADS`)
+//!   and merges the per-shard [`BatchRun`]s bit-identically — the
+//!   schedules are data-independent, so every shard reports the same
+//!   cycle counts and the merge is a pure sample-range concatenation;
 //! - [`DesignCache`] is a process-wide, sharded, content-addressed cache
 //!   in front of [`Architecture::elaborate`], keyed like [`mcm::engine`]:
 //!   the full quantized content (structure, weights, biases, q,
@@ -49,8 +58,9 @@
 //!
 //! [`mcm::engine`]: crate::mcm::engine
 
-use super::design::{Architecture, ArchKind, Design, LayerCompute, Schedule, Style};
+use super::design::{Architecture, ArchKind, Design, LayerCompute, LayerPlan, Schedule, Style};
 use super::netsim::step_cycles;
+use super::report;
 use crate::ann::dataset::Sample;
 use crate::ann::quant::QuantizedAnn;
 use crate::ann::sim::activate;
@@ -196,10 +206,128 @@ impl BatchRun {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The serve-side thread dial.
+
+/// Batches below this many samples stay on the scalar path by default:
+/// the per-shard spawn/merge overhead needs a few hundred samples of
+/// inner-loop work to amortize.
+pub const SHARD_MIN_SAMPLES: usize = 256;
+
+/// Work threshold (samples × weights) below which [`fanout_threads`]
+/// stays single-threaded — the same amortization floor the evaluators
+/// used to hardcode.
+pub const FANOUT_MIN_WORK: usize = 64_000;
+
+/// The intra-design execution dial of [`simulate_batch_with`]: how many
+/// scoped threads one batched run may shard across, and the batch size
+/// below which sharding is not worth its overhead. [`Default`] reads the
+/// process-wide [`serve_threads`] dial, so every consumer (the daemon
+/// worker, the batch evaluators, the CLI) shares one core budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// upper bound on shards (and threads) for one batched run; 1 forces
+    /// the scalar path
+    pub threads: usize,
+    /// batches smaller than this run scalar regardless of `threads`
+    pub shard_min: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { threads: serve_threads(), shard_min: SHARD_MIN_SAMPLES }
+    }
+}
+
+/// The process-wide serve-side thread count: `SIMURG_SERVE_THREADS` when
+/// set to a positive integer, else the machine's available parallelism
+/// capped at 8. Read once per process — every layer that fans out
+/// (sharded serving, evaluator chunking, sweep workers) derives from this
+/// single dial so they cannot double-subscribe cores.
+pub fn serve_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("SIMURG_SERVE_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map_or(1, |p| p.get()).min(8)
+            })
+    })
+}
+
+/// Shared fan-out policy for work-sized evaluation: single-threaded below
+/// [`FANOUT_MIN_WORK`] units of work (samples × weights), the
+/// [`serve_threads`] dial above it.
+pub fn fanout_threads(work: usize) -> usize {
+    if work >= FANOUT_MIN_WORK {
+        serve_threads()
+    } else {
+        1
+    }
+}
+
 /// Interpret one inference of `design` for every sample of `inputs`,
 /// bit-identical (outputs and cycle count) to running each sample through
-/// [`crate::hw::netsim::simulate`].
+/// [`crate::hw::netsim::simulate`]. Shards large batches per the default
+/// [`ServeConfig`]; see [`simulate_batch_with`].
 pub fn simulate_batch(design: &Design, inputs: &BatchInputs) -> BatchRun {
+    simulate_batch_with(design, inputs, &ServeConfig::default())
+}
+
+/// [`simulate_batch`] with an explicit [`ServeConfig`]: splits the batch
+/// into at most `cfg.threads` contiguous sample ranges, runs each through
+/// the scalar interpreter on a scoped thread, and merges the shard runs.
+///
+/// The merge is bit-identical to the scalar path by construction: shards
+/// are contiguous [`BatchInputs::split`] ranges concatenated back in
+/// order per output neuron, and the schedules are data-independent so
+/// every shard reports identical per-inference cycle counts
+/// (`debug_assert`ed); only the whole-batch `throughput_cycles` is
+/// recomputed for the full batch length.
+pub fn simulate_batch_with(design: &Design, inputs: &BatchInputs, cfg: &ServeConfig) -> BatchRun {
+    let n = inputs.len();
+    let shards = if n >= cfg.shard_min.max(2) { cfg.threads.min(n).max(1) } else { 1 };
+    if shards <= 1 {
+        return simulate_batch_scalar(design, inputs);
+    }
+    let parts = inputs.split(shards);
+    let runs: Vec<BatchRun> = std::thread::scope(|scope| {
+        let handles: Vec<_> = parts
+            .iter()
+            .map(|part| scope.spawn(move || simulate_batch_scalar(design, part)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("batch shard panicked")).collect()
+    });
+    let first = &runs[0];
+    let n_outputs = first.n_outputs;
+    let cycles = first.cycles;
+    debug_assert!(
+        runs.iter().all(|r| r.cycles == cycles && r.n_outputs == n_outputs),
+        "data-independent schedules must agree across shards"
+    );
+    let mut outputs = vec![0i32; n_outputs * n];
+    let mut off = 0usize;
+    for r in &runs {
+        for m in 0..n_outputs {
+            outputs[m * n + off..m * n + off + r.len]
+                .copy_from_slice(&r.outputs[m * r.len..(m + 1) * r.len]);
+        }
+        off += r.len;
+    }
+    debug_assert_eq!(off, n, "shards must partition the batch");
+    BatchRun {
+        outputs,
+        n_outputs,
+        len: n,
+        cycles,
+        throughput_cycles: design.schedule.throughput_cycles(&design.qann.structure, n),
+    }
+}
+
+/// The single-threaded batch interpreter every shard runs.
+fn simulate_batch_scalar(design: &Design, inputs: &BatchInputs) -> BatchRun {
     // an empty batch carries no feature count; every step degrades to a
     // zero-length inner loop and only the cycle program runs
     assert!(
@@ -219,19 +347,48 @@ pub fn simulate_batch(design: &Design, inputs: &BatchInputs) -> BatchRun {
     }
 }
 
+/// Lane element of the SoA kernels: the two accumulator carriers the
+/// interpreter runs at. The hot loops are generic over this so the `i64`
+/// fast lane and the `i128` wide lane compile to the same stride-1
+/// iterator forms (the narrow one autovectorizes).
+trait Lane:
+    Copy
+    + Default
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Shl<u32, Output = Self>
+    + std::ops::Neg<Output = Self>
+{
+    /// Back to the activation domain — truncating for the wide lane,
+    /// exactly like the per-input interpreter's `y as i64`.
+    fn to_i64(self) -> i64;
+}
+
+impl Lane for i64 {
+    fn to_i64(self) -> i64 {
+        self
+    }
+}
+
+impl Lane for i128 {
+    fn to_i64(self) -> i64 {
+        self as i64
+    }
+}
+
 /// SoA evaluation of an adder graph: `xs[k * n + s]` is input `k` of
 /// sample `s`; returns `out[j * n + s]` for output `j`. Each node is
-/// dispatched once with an inner loop over the batch.
-fn eval_graph_batch(g: &AdderGraph, xs: &[i128], n: usize) -> Vec<i128> {
+/// dispatched once with a stride-1 inner loop over the batch.
+fn eval_graph_batch<T: Lane>(g: &AdderGraph, xs: &[T], n: usize) -> Vec<T> {
     debug_assert_eq!(xs.len(), g.num_inputs * n);
-    let mut vals = vec![0i128; g.nodes.len() * n];
+    let mut vals = vec![T::default(); g.nodes.len() * n];
     for (i, node) in g.nodes.iter().enumerate() {
         let (done, rest) = vals.split_at_mut(i * n);
-        let a: &[i128] = match node.a {
+        let a: &[T] = match node.a {
             Operand::Input(k) => &xs[k * n..(k + 1) * n],
             Operand::Node(j) => &done[j * n..(j + 1) * n],
         };
-        let b: &[i128] = match node.b {
+        let b: &[T] = match node.b {
             Operand::Input(k) => &xs[k * n..(k + 1) * n],
             Operand::Node(j) => &done[j * n..(j + 1) * n],
         };
@@ -249,12 +406,12 @@ fn eval_graph_batch(g: &AdderGraph, xs: &[i128], n: usize) -> Vec<i128> {
             }
         }
     }
-    let mut out = vec![0i128; g.outputs.len() * n];
+    let mut out = vec![T::default(); g.outputs.len() * n];
     for (j, o) in g.outputs.iter().enumerate() {
         if o.is_zero {
             continue;
         }
-        let src: &[i128] = match o.src {
+        let src: &[T] = match o.src {
             Operand::Input(k) => &xs[k * n..(k + 1) * n],
             Operand::Node(i) => &vals[i * n..(i + 1) * n],
         };
@@ -267,53 +424,115 @@ fn eval_graph_batch(g: &AdderGraph, xs: &[i128], n: usize) -> Vec<i128> {
     out
 }
 
+/// 62-bit certificate for the `i64` fast lane of a feedforward graph
+/// layer: exact interval propagation over the graph's nodes (widened to
+/// cover both signs of the layer's declared input range), plus the worst
+/// output back-shift, must fit an `i64` with headroom. When it does, the
+/// narrow lane computes exactly what the wide lane would truncate to.
+fn graph_fits_i64(g: &AdderGraph, in_range: (i64, i64)) -> bool {
+    let m = in_range.1.max(-in_range.0).max(127);
+    let ranges = g.node_range(&vec![(-m - 1, m); g.num_inputs]);
+    let node_bits = ranges.iter().map(|&(lo, hi)| report::range_bits(lo, hi)).max().unwrap_or(0);
+    let out_shift = g.outputs.iter().map(|o| o.shift).max().unwrap_or(0);
+    node_bits + out_shift <= 62
+}
+
+/// One feedforward layer's pre-bias inner products through its embedded
+/// graphs, in lane `T`: a single CMVM/behavioral graph, or one CAVM
+/// graph per neuron over the same inputs.
+fn eval_layer_graphs<T: Lane>(
+    design: &Design,
+    gis: &[usize],
+    cur: &[T],
+    n: usize,
+    n_out: usize,
+) -> Vec<T> {
+    if gis.len() == 1 {
+        eval_graph_batch(&design.graphs[gis[0]], cur, n)
+    } else {
+        let mut inner = vec![T::default(); n_out * n];
+        for (m, &gi) in gis.iter().enumerate() {
+            let o = eval_graph_batch(&design.graphs[gi], cur, n);
+            inner[m * n..(m + 1) * n].copy_from_slice(&o[..n]);
+        }
+        inner
+    }
+}
+
 /// Feedforward schedules (combinational and pipelined), batched: every
-/// embedded adder graph's nodes ripple once per batch (inner loop over
-/// samples), then bias and activation. The per-input-column MCM graphs of
-/// the pipelined `mcm` style are single-input and linear, so each column
-/// is evaluated **once per batch** at x = 1 and scaled per sample — the
-/// same unit-product linearity the MAC schedules exploit.
+/// embedded adder graph's nodes ripple once per batch (stride-1 inner
+/// loop over samples), then bias and activation. Activations are 8-bit,
+/// so the carrier between layers is always an exact `i64`; each layer's
+/// inner products run the `i64` fast lane when the width certificate
+/// holds ([`graph_fits_i64`] for graph layers, `acc_bits <= 62` for the
+/// column-MCM layers) and the truncating `i128` lane otherwise. The
+/// per-input-column MCM graphs of the pipelined `mcm` style are
+/// single-input and linear, so each column is evaluated **once per
+/// batch** at x = 1 and its unit products streamed per sample — the same
+/// linearity the MAC schedules exploit.
 fn batch_feedforward(design: &Design, inputs: &BatchInputs) -> BatchRun {
     let qann = &design.qann;
     let n = inputs.len();
     // current layer activations, SoA: cur[i * n + s]
-    let mut cur: Vec<i128> = Vec::with_capacity(inputs.features() * n);
+    let mut cur: Vec<i64> = Vec::with_capacity(inputs.features() * n);
     for i in 0..inputs.features() {
-        cur.extend(inputs.feature(i).iter().map(|&x| x as i128));
+        cur.extend(inputs.feature(i).iter().map(|&x| x as i64));
     }
     let mut n_cur = inputs.features();
     for (k, layer) in design.layers.iter().enumerate() {
-        let inner: Vec<i128> = match &layer.compute {
+        // pre-bias inner products, truncated to the activation domain at
+        // exactly the point the per-input interpreter truncates (`y as i64`)
+        let inner: Vec<i64> = match &layer.compute {
             LayerCompute::Graphs(gis) => {
-                if gis.len() == 1 {
-                    eval_graph_batch(&design.graphs[gis[0]], &cur, n)
+                if gis.iter().all(|&gi| graph_fits_i64(&design.graphs[gi], layer.in_range)) {
+                    eval_layer_graphs::<i64>(design, gis, &cur, n, layer.n_out)
                 } else {
-                    // CAVM: one single-output graph per neuron over the same inputs
-                    let mut inner = vec![0i128; layer.n_out * n];
-                    for (m, &gi) in gis.iter().enumerate() {
-                        let o = eval_graph_batch(&design.graphs[gi], &cur, n);
-                        inner[m * n..(m + 1) * n].copy_from_slice(&o[..n]);
-                    }
-                    inner
+                    let wide: Vec<i128> = cur.iter().map(|&v| v as i128).collect();
+                    eval_layer_graphs::<i128>(design, gis, &wide, n, layer.n_out)
+                        .into_iter()
+                        .map(Lane::to_i64)
+                        .collect()
                 }
             }
             LayerCompute::McmColumns(gis) => {
-                let mut inner = vec![0i128; layer.n_out * n];
-                for (i, &gi) in gis.iter().enumerate() {
-                    // unit products of column i: w[m][i] per neuron m
-                    let units = design.graphs[gi].eval(&[1]);
-                    let xs = &cur[i * n..(i + 1) * n];
-                    for (m, &u) in units.iter().enumerate() {
-                        if u == 0 {
-                            continue;
-                        }
-                        let dst = &mut inner[m * n..(m + 1) * n];
-                        for (d, &x) in dst.iter_mut().zip(xs) {
-                            *d += u * x;
+                // column accumulate: every term's interval contains 0, so
+                // partial sums stay inside the layer's certified
+                // accumulator interval — i64-exact whenever acc_bits fits
+                if layer.acc_bits <= 62 {
+                    let mut inner = vec![0i64; layer.n_out * n];
+                    for (i, &gi) in gis.iter().enumerate() {
+                        // unit products of column i: w[m][i] per neuron m
+                        let units = design.graphs[gi].eval(&[1]);
+                        let xs = &cur[i * n..(i + 1) * n];
+                        for (m, &u) in units.iter().enumerate() {
+                            if u == 0 {
+                                continue;
+                            }
+                            let u = u as i64;
+                            let dst = &mut inner[m * n..(m + 1) * n];
+                            for (d, &x) in dst.iter_mut().zip(xs) {
+                                *d += u * x;
+                            }
                         }
                     }
+                    inner
+                } else {
+                    let mut inner = vec![0i128; layer.n_out * n];
+                    for (i, &gi) in gis.iter().enumerate() {
+                        let units = design.graphs[gi].eval(&[1]);
+                        let xs = &cur[i * n..(i + 1) * n];
+                        for (m, &u) in units.iter().enumerate() {
+                            if u == 0 {
+                                continue;
+                            }
+                            let dst = &mut inner[m * n..(m + 1) * n];
+                            for (d, &x) in dst.iter_mut().zip(xs) {
+                                *d += u * x as i128;
+                            }
+                        }
+                    }
+                    inner.into_iter().map(Lane::to_i64).collect()
                 }
-                inner
             }
             LayerCompute::Mac { .. } => panic!("feedforward schedules are graph-computed"),
         };
@@ -323,7 +542,7 @@ fn batch_feedforward(design: &Design, inputs: &BatchInputs) -> BatchRun {
             cur.extend(
                 inner[m * n..(m + 1) * n]
                     .iter()
-                    .map(|&y| activate(qann.activations[k], y as i64 + b, qann.q) as i128),
+                    .map(|&y| activate(qann.activations[k], y + b, qann.q) as i64),
             );
         }
         n_cur = layer.n_out;
@@ -338,40 +557,41 @@ fn batch_feedforward(design: &Design, inputs: &BatchInputs) -> BatchRun {
     }
 }
 
-/// Per-weight unit products of a MAC layer's MCM graph: the graph has one
-/// input and is linear, so `eval(x)[j] == eval(1)[j] * x` exactly — one
-/// graph evaluation serves every sample of the batch.
-fn unit_products(design: &Design, compute: &LayerCompute) -> Option<Vec<i128>> {
-    let LayerCompute::Mac { mcm, .. } = compute else {
-        return None;
-    };
-    mcm.as_ref().map(|r| design.graphs[r.graph].eval(&[1]))
-}
-
-/// Product of stored weight (m, i) with broadcast value `x`: routed
-/// through the unit products when the style is multiplierless, multiplied
-/// directly otherwise — value-identical to `netsim::mac_product`.
-#[inline]
-fn batch_product(
-    compute: &LayerCompute,
-    units: &Option<Vec<i128>>,
-    m: usize,
-    i: usize,
-    x: i64,
-) -> i64 {
-    let LayerCompute::Mac { stored, mcm, .. } = compute else {
+/// Per-layer MAC coefficients hoisted out of the streaming loops:
+/// `coefs[m * n_in + i]` is stored weight (m, i) — routed through the MCM
+/// product graph's unit products when the style is multiplierless (the
+/// graph has one input and is linear, so `eval(x)[j] == eval(1)[j] * x`
+/// exactly) — pre-shifted by the neuron's smallest left shift. Exact in
+/// `i64`: the stored weights are the original weights with their trailing
+/// zeros factored out, so `(c << sl)` reconstructs `w` and
+/// `(c * x) << sl == (c << sl) * x` — value-identical to
+/// `netsim::mac_product` followed by the back-shift.
+fn mac_coefs(design: &Design, layer: &LayerPlan) -> Vec<i64> {
+    let LayerCompute::Mac { stored, sls, mcm } = &layer.compute else {
         panic!("MAC schedules need MAC layers");
     };
-    match (units, mcm) {
-        (Some(u), Some(r)) => (u[r.offset + m * stored[m].len() + i] * x as i128) as i64,
-        _ => stored[m][i] * x,
+    let units = mcm.as_ref().map(|r| (design.graphs[r.graph].eval(&[1]), r.offset));
+    let mut coefs = vec![0i64; layer.n_out * layer.n_in];
+    for (m, row) in stored.iter().enumerate() {
+        for (i, &w) in row.iter().enumerate() {
+            let c = match &units {
+                Some((u, off)) => u[off + m * row.len() + i] as i64,
+                None => w,
+            };
+            coefs[m * layer.n_in + i] = c << sls[m];
+        }
     }
+    coefs
 }
 
 /// SMAC_NEURON schedule, batched: ι_k MAC steps + 1 bias/activate step
-/// per layer, each step streaming over the batch. A step costs one cycle
-/// word-parallel and `bits` bit-cycles under the digit-serial schedule
-/// ([`step_cycles`]), mirroring the per-input interpreter exactly.
+/// per layer, each step a stride-1 stream over the batch with the layer's
+/// pre-shifted [`mac_coefs`]. A step costs one cycle word-parallel and
+/// `bits` bit-cycles under the digit-serial schedule ([`step_cycles`]):
+/// the serial datapath's B bit-slices per broadcast are arithmetically
+/// one word-wide add, so the bit-sliced inner loop collapses to the same
+/// kernel with the cycle counter stretched — mirroring the per-input
+/// interpreter exactly.
 fn batch_layer_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
     let qann = &design.qann;
     let n = inputs.len();
@@ -382,20 +602,20 @@ fn batch_layer_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
         cur.extend(inputs.feature(i).iter().map(|&x| x as i64));
     }
     for (k, layer) in design.layers.iter().enumerate() {
-        let LayerCompute::Mac { sls, .. } = &layer.compute else {
-            panic!("MAC schedules need MAC layers");
-        };
-        let units = unit_products(design, &layer.compute);
+        let coefs = mac_coefs(design, layer);
         let mut acc = vec![0i64; layer.n_out * n];
         for i in 0..layer.n_in {
             let xs = &cur[i * n..(i + 1) * n];
             for m in 0..layer.n_out {
-                let dst = &mut acc[m * n..(m + 1) * n];
-                let sl = sls[m];
-                for (d, &x) in dst.iter_mut().zip(xs) {
-                    *d += batch_product(&layer.compute, &units, m, i, x) << sl;
+                let c = coefs[m * layer.n_in + i];
+                if c != 0 {
+                    let dst = &mut acc[m * n..(m + 1) * n];
+                    for (d, &x) in dst.iter_mut().zip(xs) {
+                        *d += c * x;
+                    }
                 }
             }
+            // the broadcast costs its cycles whether or not a weight is zero
             cycles += step;
         }
         cur.clear();
@@ -431,21 +651,20 @@ fn batch_neuron_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
         regs.extend(inputs.feature(i).iter().map(|&x| x as i64));
     }
     for (k, layer) in design.layers.iter().enumerate() {
-        let LayerCompute::Mac { sls, .. } = &layer.compute else {
-            panic!("MAC schedules need MAC layers");
-        };
-        let units = unit_products(design, &layer.compute);
+        let coefs = mac_coefs(design, layer);
         let mut next = vec![0i64; layer.n_out * n];
         for m in 0..layer.n_out {
             let dst = &mut next[m * n..(m + 1) * n];
-            let sl = sls[m];
+            let row = &coefs[m * layer.n_in..(m + 1) * layer.n_in];
             let mut acc = vec![0i64; n];
-            for i in 0..layer.n_in {
-                let xs = &regs[i * n..(i + 1) * n];
-                for (a, &x) in acc.iter_mut().zip(xs) {
-                    *a += batch_product(&layer.compute, &units, m, i, x) << sl;
+            for (i, &c) in row.iter().enumerate() {
+                if c != 0 {
+                    let xs = &regs[i * n..(i + 1) * n];
+                    for (a, &x) in acc.iter_mut().zip(xs) {
+                        *a += c * x;
+                    }
                 }
-                cycles += 1; // one MAC per cycle
+                cycles += 1; // one MAC per cycle, zero weight or not
             }
             let b = qann.biases[k][m];
             cycles += 1; // bias cycle
@@ -725,9 +944,7 @@ impl DesignCache {
 
 /// The serving facade: the one process-wide [`DesignCache`] every
 /// consumer fetches designs, stats and resets through — re-exported as
-/// [`crate::hw::designs`]. The free-function wrappers that used to
-/// shadow its methods (`design_for`, `design_for_ephemeral`,
-/// `cache_stats`) are deprecated shims over this facade.
+/// [`crate::hw::designs`].
 ///
 /// ```
 /// use simurg::ann::quant::QuantizedAnn;
@@ -747,25 +964,6 @@ impl DesignCache {
 /// ```
 pub fn designs() -> &'static DesignCache {
     DesignCache::global()
-}
-
-/// Fetch a design through the process-wide cache.
-#[deprecated(since = "0.2.0", note = "use the facade: `hw::designs().design(..)`")]
-pub fn design_for(qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
-    designs().design(qann, arch, style)
-}
-
-/// Fetch through the process-wide cache without populating it on a miss
-/// (see [`DesignCache::design_ephemeral`]).
-#[deprecated(since = "0.2.0", note = "use the facade: `hw::designs().design_ephemeral(..)`")]
-pub fn design_for_ephemeral(qann: &QuantizedAnn, arch: ArchKind, style: Style) -> Arc<Design> {
-    designs().design_ephemeral(qann, arch, style)
-}
-
-/// Counters of the process-wide cache.
-#[deprecated(since = "0.2.0", note = "use the facade: `hw::designs().stats()`")]
-pub fn cache_stats() -> CacheStats {
-    designs().stats()
 }
 
 #[cfg(test)]
@@ -833,6 +1031,51 @@ mod tests {
             assert_eq!(run.sample_outputs(s), per.outputs);
             assert_eq!(run.cycles, per.cycles);
         }
+    }
+
+    #[test]
+    fn sharded_run_is_bit_identical_to_scalar() {
+        let q = qann("16-16-10", 6, 17);
+        let rows = random_rows(103, 16, 4);
+        let batch = BatchInputs::from_rows(&rows);
+        for (a, s) in design_points() {
+            let d = a.elaborate(&q, s);
+            let scalar = simulate_batch_with(&d, &batch, &ServeConfig { threads: 1, shard_min: 0 });
+            for threads in [2, 3, 8] {
+                let cfg = ServeConfig { threads, shard_min: 0 };
+                let sharded = simulate_batch_with(&d, &batch, &cfg);
+                assert_eq!(sharded, scalar, "{} {} x{threads} threads", a.name(), s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn small_batches_stay_scalar_and_the_dial_is_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.threads >= 1);
+        assert_eq!(cfg.shard_min, SHARD_MIN_SAMPLES);
+        assert_eq!(serve_threads(), ServeConfig::default().threads, "dial is process-wide");
+        // below the shard floor the sharded entry point takes the scalar
+        // path (same value either way — this pins that it doesn't panic
+        // on tiny and empty batches with aggressive thread counts)
+        let q = qann("16-10", 6, 61);
+        let d = designs().design(&q, ArchKind::SmacNeuron, Style::Behavioral);
+        let cfg = ServeConfig { threads: 7, shard_min: SHARD_MIN_SAMPLES };
+        for n in [0usize, 1, 3] {
+            let rows = random_rows(n, 16, 1);
+            let batch = BatchInputs::from_rows(&rows);
+            let run = simulate_batch_with(&d, &batch, &cfg);
+            assert_eq!(run.len, n);
+            assert_eq!(run, simulate_batch_with(&d, &batch, &ServeConfig { threads: 1, shard_min: 0 }));
+        }
+    }
+
+    #[test]
+    fn fanout_policy_derives_from_the_shared_dial() {
+        assert_eq!(fanout_threads(0), 1);
+        assert_eq!(fanout_threads(FANOUT_MIN_WORK - 1), 1);
+        assert_eq!(fanout_threads(FANOUT_MIN_WORK), serve_threads());
+        assert_eq!(fanout_threads(usize::MAX), serve_threads());
     }
 
     #[test]
@@ -940,20 +1183,6 @@ mod tests {
         assert_eq!(*a, *b, "ephemeral elaboration is the same design");
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 2, 1), "{s:?}");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_still_compile_and_route_through_the_facade() {
-        // one-release compatibility contract: the pre-facade free
-        // functions stay callable and answer from the same global cache
-        let q = qann("16-10", 6, 73);
-        let a = design_for(&q, ArchKind::SmacNeuron, Style::Behavioral);
-        let b = designs().design(&q, ArchKind::SmacNeuron, Style::Behavioral);
-        assert!(Arc::ptr_eq(&a, &b), "shim and facade share the global cache");
-        let c = design_for_ephemeral(&q, ArchKind::SmacNeuron, Style::Behavioral);
-        assert_eq!(*a, *c);
-        assert_eq!(cache_stats(), designs().stats());
     }
 
     #[test]

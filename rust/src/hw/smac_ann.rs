@@ -33,112 +33,133 @@ impl Architecture for SmacAnn {
     }
 
     fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
-        let st = &qann.structure;
-        let layers = st.num_layers();
         let mut b = DesignBuilder::new(ArchKind::SmacAnn, style, Schedule::NeuronSequential);
-
-        // global sls over ALL weights (the Sec. IV-C whole-ANN variant):
-        // the single multiplier operates on stored weights c = w >> sls
-        let sls = design::global_sls(qann);
-        let stored_bits = qann
-            .weights
-            .iter()
-            .flat_map(|l| l.iter().flatten())
-            .map(|&w| signed_bitwidth(w >> sls))
-            .max()
-            .unwrap_or(1);
-
-        // accumulator sized by the worst layer
-        let acc_bits = (0..layers).map(|k| report::layer_acc_bits(qann, k)).max().unwrap_or(1);
-
-        let max_inputs = (0..layers).map(|k| st.layer_inputs(k)).max().unwrap();
-        let max_outputs = (0..layers).map(|k| st.layer_outputs(k)).max().unwrap();
-        let total_weights = st.total_weights();
-        let total_biases = st.total_neurons();
-
-        // everything is active every cycle — the energy disadvantage the
-        // paper reports for SMAC_ANN; the activation and the layer-output
-        // registers fire once per neuron, i.e. cycles / max_inputs times
-        let cycles = Schedule::NeuronSequential.cycles(st) as f64;
-        let per_neuron = cycles / max_inputs as f64;
-
-        // control: three counters (paper Fig. 7)
-        b.block(BlockKind::Counter { n: layers.max(2) }, 1, cycles);
-        b.block(BlockKind::Counter { n: max_inputs + 2 }, 1, cycles);
-        b.block(BlockKind::Counter { n: max_outputs }, 1, cycles);
-
-        // input mux over primary inputs and the layer-output feedback
-        // registers; weight and bias storage as hardwired-constant muxes
-        let in_mux = b.block(BlockKind::Mux { n: st.inputs + max_outputs, bits: 8 }, 1, cycles);
-        let w_mux = b.block(BlockKind::ConstantMux { n: total_weights, bits: stored_bits }, 1, cycles);
-        b.block(BlockKind::ConstantMux { n: total_biases, bits: acc_bits }, 1, cycles);
-
-        let (mult_chain, mcm_graph): (Vec<usize>, Option<usize>) = match style {
-            Style::Behavioral => {
-                let m = b.block(BlockKind::Multiplier { w_bits: stored_bits, x_bits: 8 }, 1, cycles);
-                (vec![m], None)
-            }
-            Style::Mcm => {
-                // one MCM block over every stored weight of the ANN (paper
-                // Sec. V-B notes this replaces one multiplier with a large
-                // adder network and usually *increases* complexity)
-                let consts: Vec<i64> = qann
-                    .weights
-                    .iter()
-                    .flat_map(|l| l.iter().flatten().map(|&w| w >> sls))
-                    .collect();
-                let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
-                let mcm = b.block(
-                    BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![(-128, 127)] },
-                    1,
-                    cycles,
-                );
-                // product mux selecting among all distinct products
-                let p_mux = b.block(BlockKind::Mux { n: total_weights, bits: stored_bits + 8 }, 1, cycles);
-                (vec![mcm, p_mux], Some(gi))
-            }
-            other => panic!("smac_ann has no {} style", other.name()),
-        };
-
-        let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, cycles);
-        let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, cycles);
-        b.block(BlockKind::ActivationUnit { acc_bits }, 1, per_neuron);
-        // layer-output holding registers (max η words of 8 bits)
-        b.block(BlockKind::Register { bits: 8 }, max_outputs, per_neuron);
-
-        let mut path_in = vec![in_mux];
-        path_in.extend(&mult_chain);
-        path_in.extend([acc, reg]);
-        b.path(path_in);
-        let mut path_w = vec![w_mux];
-        path_w.extend(&mult_chain);
-        path_w.extend([acc, reg]);
-        b.path(path_w);
-
-        // per-layer plans: the single MAC walks the layers in sequence;
-        // the whole-net product graph (if any) is indexed at each layer's
-        // flattened weight offset
-        let mut offset = 0usize;
-        for k in 0..layers {
-            let n_in = st.layer_inputs(k);
-            let n_out = st.layer_outputs(k);
-            let stored: Vec<Vec<i64>> =
-                qann.weights[k].iter().map(|row| row.iter().map(|&w| w >> sls).collect()).collect();
-            b.layer(LayerPlan {
-                n_in,
-                n_out,
-                acc_bits,
-                in_range: report::layer_input_range(qann, k),
-                compute: LayerCompute::Mac {
-                    stored,
-                    sls: vec![sls; n_out],
-                    mcm: mcm_graph.map(|graph| McmRef { graph, offset }),
-                },
-            });
-            offset += n_in * n_out;
+        for k in 0..qann.structure.num_layers() {
+            self.elaborate_layer_blocks(&mut b, qann, k, style);
         }
-
         b.finish(qann)
+    }
+
+    fn elaborate_layer_blocks(&self, b: &mut DesignBuilder, qann: &QuantizedAnn, k: usize, style: Style) {
+        // the single shared MAC serves every layer, so the whole net is one
+        // indivisible fragment: it rides layer 0 and later layers add no
+        // blocks of their own (their cost keys still hash all layers, so
+        // any weight edit re-prices the fragment)
+        if k != 0 {
+            return;
+        }
+        net_blocks(b, qann, style);
+    }
+}
+
+/// Emit the entire SMAC_ANN datapath (control, muxes, the shared MAC,
+/// both clock paths and every layer plan) into `b`. One emission path
+/// shared by [`Architecture::elaborate`] and
+/// [`Architecture::elaborate_layer_blocks`] so the fragment pricer can
+/// never drift from the elaborated design.
+fn net_blocks(b: &mut DesignBuilder, qann: &QuantizedAnn, style: Style) {
+    let st = &qann.structure;
+    let layers = st.num_layers();
+
+    // global sls over ALL weights (the Sec. IV-C whole-ANN variant):
+    // the single multiplier operates on stored weights c = w >> sls
+    let sls = design::global_sls(qann);
+    let stored_bits = qann
+        .weights
+        .iter()
+        .flat_map(|l| l.iter().flatten())
+        .map(|&w| signed_bitwidth(w >> sls))
+        .max()
+        .unwrap_or(1);
+
+    // accumulator sized by the worst layer
+    let acc_bits = (0..layers).map(|k| report::layer_acc_bits(qann, k)).max().unwrap_or(1);
+
+    let max_inputs = (0..layers).map(|k| st.layer_inputs(k)).max().unwrap();
+    let max_outputs = (0..layers).map(|k| st.layer_outputs(k)).max().unwrap();
+    let total_weights = st.total_weights();
+    let total_biases = st.total_neurons();
+
+    // everything is active every cycle — the energy disadvantage the
+    // paper reports for SMAC_ANN; the activation and the layer-output
+    // registers fire once per neuron, i.e. cycles / max_inputs times
+    let cycles = Schedule::NeuronSequential.cycles(st) as f64;
+    let per_neuron = cycles / max_inputs as f64;
+
+    // control: three counters (paper Fig. 7)
+    b.block(BlockKind::Counter { n: layers.max(2) }, 1, cycles);
+    b.block(BlockKind::Counter { n: max_inputs + 2 }, 1, cycles);
+    b.block(BlockKind::Counter { n: max_outputs }, 1, cycles);
+
+    // input mux over primary inputs and the layer-output feedback
+    // registers; weight and bias storage as hardwired-constant muxes
+    let in_mux = b.block(BlockKind::Mux { n: st.inputs + max_outputs, bits: 8 }, 1, cycles);
+    let w_mux = b.block(BlockKind::ConstantMux { n: total_weights, bits: stored_bits }, 1, cycles);
+    b.block(BlockKind::ConstantMux { n: total_biases, bits: acc_bits }, 1, cycles);
+
+    let (mult_chain, mcm_graph): (Vec<usize>, Option<usize>) = match style {
+        Style::Behavioral => {
+            let m = b.block(BlockKind::Multiplier { w_bits: stored_bits, x_bits: 8 }, 1, cycles);
+            (vec![m], None)
+        }
+        Style::Mcm => {
+            // one MCM block over every stored weight of the ANN (paper
+            // Sec. V-B notes this replaces one multiplier with a large
+            // adder network and usually *increases* complexity)
+            let consts: Vec<i64> = qann
+                .weights
+                .iter()
+                .flat_map(|l| l.iter().flatten().map(|&w| w >> sls))
+                .collect();
+            let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
+            let mcm = b.block(
+                BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![(-128, 127)] },
+                1,
+                cycles,
+            );
+            // product mux selecting among all distinct products
+            let p_mux = b.block(BlockKind::Mux { n: total_weights, bits: stored_bits + 8 }, 1, cycles);
+            (vec![mcm, p_mux], Some(gi))
+        }
+        other => panic!("smac_ann has no {} style", other.name()),
+    };
+
+    let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, cycles);
+    let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, cycles);
+    b.block(BlockKind::ActivationUnit { acc_bits }, 1, per_neuron);
+    // layer-output holding registers (max η words of 8 bits)
+    b.block(BlockKind::Register { bits: 8 }, max_outputs, per_neuron);
+
+    let mut path_in = vec![in_mux];
+    path_in.extend(&mult_chain);
+    path_in.extend([acc, reg]);
+    b.path(path_in);
+    let mut path_w = vec![w_mux];
+    path_w.extend(&mult_chain);
+    path_w.extend([acc, reg]);
+    b.path(path_w);
+
+    // per-layer plans: the single MAC walks the layers in sequence;
+    // the whole-net product graph (if any) is indexed at each layer's
+    // flattened weight offset
+    let mut offset = 0usize;
+    for k in 0..layers {
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let stored: Vec<Vec<i64>> =
+            qann.weights[k].iter().map(|row| row.iter().map(|&w| w >> sls).collect()).collect();
+        b.layer(LayerPlan {
+            n_in,
+            n_out,
+            acc_bits,
+            in_range: report::layer_input_range(qann, k),
+            compute: LayerCompute::Mac {
+                stored,
+                sls: vec![sls; n_out],
+                mcm: mcm_graph.map(|graph| McmRef { graph, offset }),
+            },
+        });
+        offset += n_in * n_out;
     }
 }
 

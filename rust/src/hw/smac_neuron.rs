@@ -43,77 +43,79 @@ impl Architecture for SmacNeuron {
     }
 
     fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
-        let st = &qann.structure;
         let mut b = DesignBuilder::new(ArchKind::SmacNeuron, style, Schedule::LayerSequential);
-
-        for k in 0..st.num_layers() {
-            let n_in = st.layer_inputs(k);
-            let n_out = st.layer_outputs(k);
-            let in_range = report::layer_input_range(qann, k);
-            let acc_bits = report::layer_acc_bits(qann, k);
-            // the layer is active only during its own ι_k + 1 cycles
-            let fires = (n_in + 1) as f64;
-
-            // shared per-layer control: input counter + broadcast input mux
-            let control = b.block(BlockKind::Counter { n: n_in + 1 }, 1, fires);
-            let in_mux = b.block(BlockKind::Mux { n: n_in, bits: 8 }, 1, fires);
-            b.path(vec![control]);
-            b.path(vec![in_mux]);
-
-            // weights are stored factored by each neuron's smallest left
-            // shift; the back-shift is wiring (paper Sec. IV-C)
-            let (stored, sls) = design::stored_layer(qann, k);
-
-            let mcm = match style {
-                Style::Behavioral => {
-                    for row in &stored {
-                        let w_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1);
-                        let w_mux = b.block(BlockKind::ConstantMux { n: n_in, bits: w_bits }, 1, fires);
-                        let mult = b.block(BlockKind::Multiplier { w_bits, x_bits: 8 }, 1, fires);
-                        let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, fires);
-                        let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, fires);
-                        b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
-                        b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
-                        b.block(BlockKind::Register { bits: 8 }, 1, fires); // out reg
-                        b.path(vec![w_mux, mult, acc, reg]);
-                    }
-                    None
-                }
-                Style::Mcm => {
-                    // single MCM block over all stored weights of the layer
-                    let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
-                    let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
-                    let mcm_blk = b.block(
-                        BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![in_range] },
-                        1,
-                        fires,
-                    );
-                    for row in &stored {
-                        // product width of this neuron's largest stored weight
-                        let p_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8;
-                        let p_mux = b.block(BlockKind::Mux { n: n_in, bits: p_bits }, 1, fires);
-                        let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, fires);
-                        let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, fires);
-                        b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
-                        b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
-                        b.block(BlockKind::Register { bits: 8 }, 1, fires); // out reg
-                        b.path(vec![mcm_blk, p_mux, acc, reg]);
-                    }
-                    Some(McmRef { graph: gi, offset: 0 })
-                }
-                other => panic!("smac_neuron has no {} style", other.name()),
-            };
-
-            b.layer(LayerPlan {
-                n_in,
-                n_out,
-                acc_bits,
-                in_range,
-                compute: LayerCompute::Mac { stored, sls, mcm },
-            });
+        for k in 0..qann.structure.num_layers() {
+            self.elaborate_layer_blocks(&mut b, qann, k, style);
         }
-
         b.finish(qann)
+    }
+
+    fn elaborate_layer_blocks(&self, b: &mut DesignBuilder, qann: &QuantizedAnn, k: usize, style: Style) {
+        let st = &qann.structure;
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let in_range = report::layer_input_range(qann, k);
+        let acc_bits = report::layer_acc_bits(qann, k);
+        // the layer is active only during its own ι_k + 1 cycles
+        let fires = (n_in + 1) as f64;
+
+        // shared per-layer control: input counter + broadcast input mux
+        let control = b.block(BlockKind::Counter { n: n_in + 1 }, 1, fires);
+        let in_mux = b.block(BlockKind::Mux { n: n_in, bits: 8 }, 1, fires);
+        b.path(vec![control]);
+        b.path(vec![in_mux]);
+
+        // weights are stored factored by each neuron's smallest left
+        // shift; the back-shift is wiring (paper Sec. IV-C)
+        let (stored, sls) = design::stored_layer(qann, k);
+
+        let mcm = match style {
+            Style::Behavioral => {
+                for row in &stored {
+                    let w_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1);
+                    let w_mux = b.block(BlockKind::ConstantMux { n: n_in, bits: w_bits }, 1, fires);
+                    let mult = b.block(BlockKind::Multiplier { w_bits, x_bits: 8 }, 1, fires);
+                    let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, fires);
+                    let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, fires);
+                    b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
+                    b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
+                    b.block(BlockKind::Register { bits: 8 }, 1, fires); // out reg
+                    b.path(vec![w_mux, mult, acc, reg]);
+                }
+                None
+            }
+            Style::Mcm => {
+                // single MCM block over all stored weights of the layer
+                let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
+                let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
+                let mcm_blk = b.block(
+                    BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![in_range] },
+                    1,
+                    fires,
+                );
+                for row in &stored {
+                    // product width of this neuron's largest stored weight
+                    let p_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8;
+                    let p_mux = b.block(BlockKind::Mux { n: n_in, bits: p_bits }, 1, fires);
+                    let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, fires);
+                    let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, fires);
+                    b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
+                    b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
+                    b.block(BlockKind::Register { bits: 8 }, 1, fires); // out reg
+                    b.path(vec![mcm_blk, p_mux, acc, reg]);
+                }
+                Some(McmRef { graph: gi, offset: 0 })
+            }
+            other => panic!("smac_neuron has no {} style", other.name()),
+        };
+
+        b.layer(LayerPlan {
+            n_in,
+            n_out,
+            acc_bits,
+            in_range,
+            compute: LayerCompute::Mac { stored, sls, mcm },
+        });
     }
 }
 

@@ -3,7 +3,7 @@
 //!   simurg table <1|2|3|4>            regenerate a paper table
 //!   simurg figure <10..18|all>        regenerate a paper figure (+CSV)
 //!   simurg flow    --structure 16-16-10 --trainer zaal [--eval pjrt]
-//!   simurg serve once   --structure 16-16-10 [--batch 64] [--split test]
+//!   simurg serve once   --structure 16-16-10 [--batch 64] [--split test] [--threads N]
 //!   simurg serve start  --clients 8 [--max-batch 64] [--artifacts DIR]
 //!   simurg serve status [--artifacts DIR]
 //!   simurg train   --structure 16-10 --trainer zaal --backend pjrt
@@ -23,7 +23,7 @@ use simurg::coordinator::flow::{run_flow, FlowConfig};
 use simurg::coordinator::report::{self, Summary};
 use simurg::coordinator::sweep::{sweep_all_with_caches, SweepConfig};
 use simurg::hw::daemon::{argmax, Daemon, DaemonConfig};
-use simurg::hw::serve::{self, BatchInputs};
+use simurg::hw::serve::{self, BatchInputs, ServeConfig};
 use simurg::hw::{verilog, ArchKind, Architecture, Style, TechLib};
 use simurg::mcm::{cse, dbr, engine, optimize_mcm, Effort, LinearTargets, Tier};
 use simurg::posttrain::AccuracyEval;
@@ -260,7 +260,8 @@ fn cmd_flow(args: &Args) -> Result<()> {
 const SERVE_USAGE: &str = "usage: simurg serve <once|start|status> [flags]
   once      one batched many-scenario sweep: every tuning scenario x
             design point over --split test|validation in batches of
-            --batch N (default 64), then exit
+            --batch N (default 64), sharded over --threads N worker
+            threads (default: the SIMURG_SERVE_THREADS dial), then exit
   start     bring up the persistent serving daemon, register the tuning
             scenarios as deployments, and drive --clients N concurrent
             single-sample clients (default 8) over --requests N test
@@ -277,7 +278,17 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     match verb.as_str() {
         "once" => cmd_serve_once(&Args::parse(
             rest,
-            &["structure", "trainer", "runs", "seed", "data-dir", "data-seed", "batch", "split"],
+            &[
+                "structure",
+                "trainer",
+                "runs",
+                "seed",
+                "data-dir",
+                "data-seed",
+                "batch",
+                "split",
+                "threads",
+            ],
         )?),
         "start" => cmd_serve_start(&Args::parse(
             rest,
@@ -318,6 +329,10 @@ fn cmd_serve_once(args: &Args) -> Result<()> {
         other => bail!("splits: test|validation (got {other})"),
     };
     let batch = args.get_usize("batch", 64)?.max(1);
+    let scfg = ServeConfig {
+        threads: args.get_usize("threads", serve::serve_threads())?.max(1),
+        ..ServeConfig::default()
+    };
     let labels: Vec<u8> = samples.iter().map(|s| s.label).collect();
     let inputs = BatchInputs::from_samples(samples);
     let batches = inputs.split(inputs.len().div_ceil(batch));
@@ -351,7 +366,7 @@ fn cmd_serve_once(args: &Args) -> Result<()> {
             for b in &batches {
                 // fetched per batch: every batch after the first is a hit
                 let design = serve::designs().design(qann, arch.kind(), style);
-                let run = serve::simulate_batch(&design, b);
+                let run = serve::simulate_batch_with(&design, b, &scfg);
                 cycles = run.cycles;
                 correct += run.count_correct(&labels[offset..offset + b.len()]);
                 offset += b.len();
@@ -389,6 +404,7 @@ fn cmd_serve_start(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 64)?.max(1),
         max_wait: Duration::from_micros(args.get_usize("max-wait-us", 2000)? as u64),
         artifact_dir: args.get("artifacts").map(PathBuf::from),
+        ..DaemonConfig::default()
     };
     let daemon = Daemon::new(dcfg)?;
     let clients = args.get_usize("clients", 8)?.max(1);

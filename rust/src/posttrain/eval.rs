@@ -5,9 +5,9 @@
 //! interchangeable backends:
 //! - [`BatchEval`]: the batched serving path — one [`Design`] per
 //!   candidate from the process-wide [`serve::DesignCache`], the whole
-//!   sample set pushed through [`serve::simulate_batch`] in SoA layout
-//!   (fanned out over threads for large sets). This is the default the
-//!   flow tunes with;
+//!   sample set pushed through [`serve::simulate_batch_with`] in SoA
+//!   layout (sharded over scoped threads by the serve-side dial for
+//!   large sets). This is the default the flow tunes with;
 //! - [`NativeEval`]: the per-sample bit-accurate rust simulator with
 //!   pre-quantized features (the golden reference the batch path is
 //!   pinned against);
@@ -21,7 +21,7 @@ use crate::ann::dataset::Sample;
 use crate::ann::quant::QuantizedAnn;
 use crate::ann::sim;
 use crate::hw::design::{ArchKind, Architecture, Style};
-use crate::hw::serve::{self, BatchInputs};
+use crate::hw::serve::{self, BatchInputs, ServeConfig};
 
 /// Scores a candidate quantized ANN, in percent on a fixed sample set.
 pub trait AccuracyEval {
@@ -65,13 +65,11 @@ impl AccuracyEval for NativeEval {
         }
         // fan the batch out over threads when the per-call work is large
         // enough to amortize spawning (§Perf: the tuners call this once
-        // per candidate, thousands of times per experiment)
+        // per candidate, thousands of times per experiment); the thread
+        // count comes from the shared serve-side dial, so one env knob
+        // (SIMURG_SERVE_THREADS) governs every fan-out in the process
         let work = n * qann.structure.total_weights();
-        let threads = if work >= 64_000 {
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
-        } else {
-            1
-        };
+        let threads = serve::fanout_threads(work);
         let correct = if threads <= 1 {
             self.correct_in(qann, 0, n)
         } else {
@@ -95,22 +93,21 @@ impl AccuracyEval for NativeEval {
     }
 }
 
-/// Threshold (in samples) above which [`BatchEval`] pre-splits the set
-/// into one sub-batch per worker thread.
-const BATCH_FANOUT_MIN: usize = 256;
-
 /// Batched serving evaluator: scores candidates through
-/// [`serve::simulate_batch`] on a design fetched from the process-wide
-/// [`serve::DesignCache`]. Bit-identical to [`NativeEval`] (every design
-/// point is bit-exact against the golden model — see
+/// [`serve::simulate_batch_with`] on a design fetched from the
+/// process-wide [`serve::DesignCache`]. Bit-identical to [`NativeEval`]
+/// (every design point is bit-exact against the golden model — see
 /// `rust/tests/batch_equivalence.rs`); the SoA batch layout amortizes the
-/// interpreter's per-step dispatch across the whole sample set.
+/// interpreter's per-step dispatch across the whole sample set, and the
+/// serve-side sharded path fans large sets out over scoped threads (no
+/// evaluator-local chunking — one split/merge contract for the whole
+/// process).
 pub struct BatchEval {
-    /// pre-split sub-batches with their labels (the thread fan-out unit)
-    chunks: Vec<(BatchInputs, Vec<u8>)>,
-    n: usize,
+    inputs: BatchInputs,
+    labels: Vec<u8>,
     arch: ArchKind,
     style: Style,
+    cfg: ServeConfig,
 }
 
 impl BatchEval {
@@ -120,6 +117,15 @@ impl BatchEval {
         BatchEval::with_design_point(samples, ArchKind::SmacNeuron, Style::Behavioral)
     }
 
+    /// Evaluator with an explicit serve configuration — the flow's tuner
+    /// racks divide the machine's threads among concurrently running
+    /// evaluators through this.
+    pub fn with_config(samples: &[Sample], cfg: ServeConfig) -> BatchEval {
+        let mut ev = BatchEval::new(samples);
+        ev.cfg = cfg;
+        ev
+    }
+
     /// Evaluator pinned to a specific registry design point (tests and
     /// style-specific serving).
     pub fn with_design_point(samples: &[Sample], arch: ArchKind, style: Style) -> BatchEval {
@@ -127,63 +133,33 @@ impl BatchEval {
             .map(|a| a.styles().contains(&style))
             .unwrap_or(false);
         assert!(supported, "{} has no {} style", arch.name(), style.name());
-        let n = samples.len();
-        let threads = if n >= BATCH_FANOUT_MIN {
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
-        } else {
-            1
-        };
-        let inputs = BatchInputs::from_samples(samples);
-        let labels: Vec<u8> = samples.iter().map(|s| s.label).collect();
-        let chunks = if threads <= 1 {
-            vec![(inputs, labels)]
-        } else {
-            let mut chunks = Vec::new();
-            let mut offset = 0usize;
-            for part in inputs.split(threads) {
-                let m = part.len();
-                chunks.push((part, labels[offset..offset + m].to_vec()));
-                offset += m;
-            }
-            chunks
-        };
-        BatchEval { chunks, n, arch, style }
-    }
-
-    fn correct_in(design: &crate::hw::Design, chunk: &(BatchInputs, Vec<u8>)) -> usize {
-        serve::simulate_batch(design, &chunk.0).count_correct(&chunk.1)
+        BatchEval {
+            inputs: BatchInputs::from_samples(samples),
+            labels: samples.iter().map(|s| s.label).collect(),
+            arch,
+            style,
+            cfg: ServeConfig::default(),
+        }
     }
 }
 
 impl AccuracyEval for BatchEval {
     fn accuracy(&self, qann: &QuantizedAnn) -> f64 {
-        if self.n == 0 {
+        let n = self.inputs.len();
+        if n == 0 {
             return 0.0;
         }
         // ephemeral fetch: tuner candidates are one-shot content, so a
         // miss must not churn the shared cache; recurring nets (the
         // untuned starting point every tuner scores first) still hit
         let design = serve::designs().design_ephemeral(qann, self.arch, self.style);
-        let correct: usize = if self.chunks.len() <= 1 {
-            Self::correct_in(&design, &self.chunks[0])
-        } else {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .chunks
-                    .iter()
-                    .map(|chunk| {
-                        let design = &design;
-                        scope.spawn(move || Self::correct_in(design, chunk))
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).sum()
-            })
-        };
-        100.0 * correct as f64 / self.n as f64
+        let correct = serve::simulate_batch_with(&design, &self.inputs, &self.cfg)
+            .count_correct(&self.labels);
+        100.0 * correct as f64 / n as f64
     }
 
     fn num_samples(&self) -> usize {
-        self.n
+        self.inputs.len()
     }
 }
 

@@ -12,6 +12,7 @@ use super::TuneResult;
 use crate::ann::quant::QuantizedAnn;
 use crate::hw::design::{ArchKind, LayerPricer, Style};
 use crate::hw::report::smallest_left_shift;
+use crate::hw::TechLib;
 use crate::num::signed_bitwidth;
 use std::time::Instant;
 
@@ -35,6 +36,14 @@ pub enum SlsScope {
 /// so the metric and the figures agree, the post-tuning price re-solves
 /// only the layers the sweeps touched, and the engine cache is already
 /// warm when the reports price the design.
+///
+/// The pricer's incremental full-cost path ([`LayerPricer::block_cost`])
+/// also raises the tuner's evaluation budget: when both candidate nudges
+/// of a weight preserve the best hardware accuracy, two extra pricing
+/// probes break the tie toward the cheaper datapath. Each probe
+/// re-elaborates only the fragments whose cost key the edit turned, so
+/// the added budget costs a per-layer fragment walk instead of a full
+/// `Design::cost` re-elaboration per probe.
 pub fn tune_smac(qann: &QuantizedAnn, ev: &dyn AccuracyEval, scope: SlsScope) -> TuneResult {
     let start = Instant::now();
     let arch = match scope {
@@ -57,12 +66,12 @@ pub fn tune_smac(qann: &QuantizedAnn, ev: &dyn AccuracyEval, scope: SlsScope) ->
             SlsScope::PerNeuron => {
                 for k in 0..best.structure.num_layers() {
                     for m in 0..best.structure.layer_outputs(k) {
-                        improved_any |= tune_group(&mut best, ev, k, m, &mut bha, &mut evals);
+                        improved_any |= tune_group(&mut best, ev, &mut pricer, k, m, &mut bha, &mut evals);
                     }
                 }
             }
             SlsScope::WholeAnn => {
-                improved_any |= tune_whole(&mut best, ev, &mut bha, &mut evals);
+                improved_any |= tune_whole(&mut best, ev, &mut pricer, &mut bha, &mut evals);
             }
         }
         if !improved_any {
@@ -86,6 +95,7 @@ pub fn tune_smac(qann: &QuantizedAnn, ev: &dyn AccuracyEval, scope: SlsScope) ->
 fn tune_group(
     qann: &mut QuantizedAnn,
     ev: &dyn AccuracyEval,
+    pricer: &mut LayerPricer,
     k: usize,
     m: usize,
     bha: &mut f64,
@@ -107,7 +117,7 @@ fn tune_group(
         if lls != smallest_left_shift(qann.weights[k][m].iter().cloned()) {
             continue; // only sls-limiting weights (step 2b)
         }
-        try_lift_weight(qann, ev, k, m, n, lls, max_bits, bha, evals);
+        try_lift_weight(qann, ev, pricer, k, m, n, lls, max_bits, bha, evals);
     }
     smallest_left_shift(qann.weights[k][m].iter().cloned()) > sls_before
 }
@@ -116,6 +126,7 @@ fn tune_group(
 fn tune_whole(
     qann: &mut QuantizedAnn,
     ev: &dyn AccuracyEval,
+    pricer: &mut LayerPricer,
     bha: &mut f64,
     evals: &mut usize,
 ) -> bool {
@@ -138,7 +149,7 @@ fn tune_whole(
                 if lls != smallest_left_shift(all(qann)) {
                     continue;
                 }
-                try_lift_weight(qann, ev, k, m, n, lls, max_bits, bha, evals);
+                try_lift_weight(qann, ev, pricer, k, m, n, lls, max_bits, bha, evals);
             }
         }
     }
@@ -147,12 +158,14 @@ fn tune_whole(
 
 /// Paper steps 2b–2d for a single weight: the two nearest multiples of
 /// 2^(lls+1) are the candidates; accept the better one outright if it
-/// preserves `bha`, otherwise search the ±4 bias window around the
-/// neuron's bias with the better candidate in place.
+/// preserves `bha` (ties on accuracy broken by the incremental fragment
+/// price), otherwise search the ±4 bias window around the neuron's bias
+/// with the better candidate in place.
 #[allow(clippy::too_many_arguments)]
 fn try_lift_weight(
     qann: &mut QuantizedAnn,
     ev: &dyn AccuracyEval,
+    pricer: &mut LayerPricer,
     k: usize,
     m: usize,
     n: usize,
@@ -188,8 +201,23 @@ fn try_lift_weight(
     };
 
     if ha_best >= *bha {
-        // step 2c: accept the better candidate
-        qann.weights[k][m][n] = pw_best;
+        // step 2c: accept the better candidate. When both nudges tie on
+        // accuracy, spend two extra pricing probes to break the tie
+        // toward the cheaper datapath — affordable only because
+        // `block_cost` re-elaborates just the fragments whose cost key
+        // this one-weight edit turned.
+        let mut pw_pick = pw_best;
+        if scored.len() == 2 && scored[0].1 == scored[1].1 {
+            let lib = TechLib::tsmc40();
+            qann.weights[k][m][n] = scored[0].0;
+            let (area_lo, _) = pricer.block_cost(qann, &lib);
+            qann.weights[k][m][n] = scored[1].0;
+            let (area_hi, _) = pricer.block_cost(qann, &lib);
+            if area_lo < area_hi {
+                pw_pick = scored[0].0;
+            }
+        }
+        qann.weights[k][m][n] = pw_pick;
         *bha = ha_best;
         return;
     }

@@ -3,7 +3,9 @@
 //! `serve::simulate_batch` is bit-identical — outputs *and* cycle counts —
 //! to running each sample through the per-input `netsim::simulate`,
 //! including the SMAC styles whose products route through the embedded
-//! MCM graphs. This is the contract that lets every consumer move to the
+//! MCM graphs — and the sharded path (`serve::simulate_batch_with`) is
+//! bit-identical to the scalar path across thread counts and batch
+//! shapes. This is the contract that lets every consumer move to the
 //! batched path without re-auditing numerics.
 
 use simurg::ann::model::{Ann, Init};
@@ -12,7 +14,7 @@ use simurg::ann::sim;
 use simurg::ann::structure::{Activation, AnnStructure};
 use simurg::hw::design::{design_points, LayerCompute, Style};
 use simurg::hw::netsim::simulate;
-use simurg::hw::serve::{simulate_batch, BatchInputs};
+use simurg::hw::serve::{simulate_batch, simulate_batch_with, BatchInputs, ServeConfig};
 use simurg::hw::Architecture;
 use simurg::num::Rng;
 
@@ -189,6 +191,45 @@ fn batch_throughput_matches_every_schedule_model() {
             "pipelined" => assert!(run.throughput_cycles < per_sample_serialized),
             // the MAC schedules serialize whole inferences
             _ => assert_eq!(run.throughput_cycles, per_sample_serialized),
+        }
+    }
+}
+
+#[test]
+fn sharded_interpreter_is_bit_identical_across_thread_counts() {
+    // the shard split/merge contract: for every design point, every
+    // thread count and every batch shape (empty, single, odd, large), the
+    // sharded path returns a BatchRun — outputs AND cycle counts —
+    // bit-identical to the scalar path
+    let mut rng = Rng::new(20260808);
+    for structure in ["16-10", "16-16-10"] {
+        let qann = random_qann(structure, 6, &mut rng);
+        for n in [0usize, 1, 33, 300] {
+            let rows = random_rows(n, 16, &mut rng);
+            let batch = BatchInputs::from_rows(&rows);
+            for (arch, style) in design_points() {
+                let design = arch.elaborate(&qann, style);
+                // shard_min 0 forces the sharded path even at tiny n
+                let scalar = simulate_batch_with(
+                    &design,
+                    &batch,
+                    &ServeConfig { threads: 1, shard_min: 0 },
+                );
+                for threads in [1usize, 2, 7] {
+                    let sharded = simulate_batch_with(
+                        &design,
+                        &batch,
+                        &ServeConfig { threads, shard_min: 0 },
+                    );
+                    assert_eq!(
+                        sharded,
+                        scalar,
+                        "{structure} n={n} threads={threads} {} {}",
+                        arch.name(),
+                        style.name()
+                    );
+                }
+            }
         }
     }
 }
