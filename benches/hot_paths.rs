@@ -51,11 +51,14 @@ fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
 /// points whose batch behavior differs: a combinational graph design, a
 /// behavioral MAC schedule, both SMAC mcm product-graph routes and the
 /// digit-serial mcm route (bit-serial cycle accounting over the same MAC
-/// program). Writes `BENCH_batch_netsim.json`; asserts the acceptance
+/// program). Writes `BENCH_batch_netsim.json` — each point carries the
+/// static worst-case energy and the activity-based workload energy priced
+/// from the batch's recorded `ActivityProfile`. Asserts the acceptance
 /// criteria (>= 3x batched throughput on the mcm serving path at batch
 /// >= 64; sharded batch execution >= 2x the scalar loop at large batches
 /// when >= 4 worker threads are available; digit-serial modeled area
-/// below combinational parallel).
+/// below combinational parallel; activity-based energy never above the
+/// worst case at any point).
 fn bench_batch_netsim(smoke: bool) {
     let data = if smoke {
         Dataset::synthetic_with_sizes(42, 300, 64)
@@ -80,9 +83,11 @@ fn bench_batch_netsim(smoke: bool) {
         (ArchKind::SmacAnn, Style::Mcm),
         (ArchKind::DigitSerial, Style::Mcm),
     ];
+    let lib = simurg::hw::TechLib::tsmc40();
     let mut entries = String::new();
     let mut headline = 0.0f64;
     for (arch, style) in points {
+        let point = format!("{}/{}", arch.name(), style.name());
         let design = serve::designs().design(&qann, arch, style);
         // bit-exactness first: the batch must match the per-input loop
         let run = serve::simulate_batch(&design, &inputs);
@@ -91,6 +96,18 @@ fn bench_batch_netsim(smoke: bool) {
             assert_eq!(run.sample_outputs(s), per.outputs, "batch/per-input drift");
             assert_eq!(run.cycles, per.cycles);
         }
+
+        // activity-based workload energy from the batch's recorded
+        // profile: positive, and never above the static worst case
+        let cost = design.cost_with_activity(&lib, &run.activity);
+        let energy_pj = cost.energy_pj;
+        let workload_pj =
+            cost.workload_energy_pj.expect("an activity profile prices workload energy");
+        assert!(
+            workload_pj > 0.0 && workload_pj <= energy_pj + 1e-9,
+            "acceptance: activity-based energy must not exceed the worst case at {point} \
+             ({workload_pj:.3} pJ !<= {energy_pj:.3} pJ)"
+        );
 
         let t = Instant::now();
         for _ in 0..reps {
@@ -108,16 +125,17 @@ fn bench_batch_netsim(smoke: bool) {
         if arch == ArchKind::SmacNeuron && style == Style::Mcm {
             headline = speedup;
         }
-        let point = format!("{}/{}", arch.name(), style.name());
         println!(
-            "{point:<22} per-input {per_input_ms:>9.2} ms  batched {batch_ms:>9.2} ms  ({speedup:.2}x, {:.2} Msamples/s)",
+            "{point:<22} per-input {per_input_ms:>9.2} ms  batched {batch_ms:>9.2} ms  \
+             ({speedup:.2}x, {:.2} Msamples/s)  energy {workload_pj:.1}/{energy_pj:.1} pJ",
             n as f64 / (batch_ms / 1e3) / 1e6
         );
         let sep = if entries.is_empty() { "" } else { ", " };
         let _ = write!(
             entries,
             "{sep}{{\"arch\": \"{}\", \"style\": \"{}\", \"per_input_ms\": {per_input_ms:.3}, \
-             \"batch_ms\": {batch_ms:.3}, \"speedup\": {speedup:.3}}}",
+             \"batch_ms\": {batch_ms:.3}, \"speedup\": {speedup:.3}, \
+             \"energy_pj\": {energy_pj:.3}, \"workload_energy_pj\": {workload_pj:.3}}}",
             arch.name(),
             style.name()
         );
@@ -178,7 +196,6 @@ fn bench_batch_netsim(smoke: bool) {
     // but the pipe's clock is the slowest stage instead of the whole
     // chain, so the modeled batch time (throughput cycles x clock period)
     // must beat the combinational design despite the stages + n fill cost
-    let lib = simurg::hw::TechLib::tsmc40();
     let comb = serve::designs().design(&qann, ArchKind::Parallel, Style::Cmvm);
     let pipe = serve::designs().design(&qann, ArchKind::Pipelined, Style::Cmvm);
     let comb_run = serve::simulate_batch(&comb, &inputs);

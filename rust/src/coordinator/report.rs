@@ -3,12 +3,14 @@
 //! aligned text plus CSV for plotting.
 
 use super::flow::FlowOutcome;
+use crate::ann::dataset::Sample;
+use crate::ann::quant::QuantizedAnn;
 use crate::ann::structure::AnnStructure;
 use crate::ann::train::Trainer;
 use crate::hw::artifact::{StoreStats, TierStats};
 use crate::hw::daemon::DaemonStatus;
-use crate::hw::serve::{self, CacheStats};
-use crate::hw::{Architecture, HwReport, Style, TechLib};
+use crate::hw::serve::{self, BatchInputs, CacheStats};
+use crate::hw::{ArchKind, Architecture, HwReport, Style, TechLib};
 use crate::mcm::EngineStats;
 use crate::posttrain::TuneResult;
 use std::fmt::Write as _;
@@ -99,19 +101,26 @@ impl Summary for DaemonStatus {
         if !self.deployments.is_empty() {
             let _ = writeln!(
                 s,
-                "  {:<18}{:<22}{:>8}{:>9}{:>11}{:>14}{:>12}",
+                "  {:<18}{:<22}{:>8}{:>9}{:>11}{:>14}{:>12}{:>13}",
                 "deployment",
                 "design point",
                 "reqs",
                 "batches",
                 "mean batch",
                 "queue µs",
-                "design hits"
+                "design hits",
+                "wl energy pJ"
             );
             for d in &self.deployments {
+                // activity-priced energy under the deployment's actual
+                // traffic; "-" until the first batch lands
+                let wl = match d.workload_energy_pj {
+                    Some(w) => format!("{w:.1}"),
+                    None => "-".into(),
+                };
                 let _ = writeln!(
                     s,
-                    "  {:<18}{:<22}{:>8}{:>9}{:>11.1}{:>14.1}{:>11.0}%",
+                    "  {:<18}{:<22}{:>8}{:>9}{:>11.1}{:>14.1}{:>11.0}%{:>13}",
                     d.name,
                     format!("{}/{}", d.arch.name(), d.style.name()),
                     d.requests,
@@ -119,6 +128,7 @@ impl Summary for DaemonStatus {
                     d.mean_batch(),
                     d.mean_queue_us(),
                     100.0 * d.hit_rate(),
+                    wl,
                 );
             }
         }
@@ -189,22 +199,57 @@ impl FigureSpec {
     }
 }
 
+/// The quantized net a figure prices for one outcome (tuning pick).
+fn spec_qann<'a>(outcome: &'a FlowOutcome, spec: &FigureSpec) -> &'a QuantizedAnn {
+    match spec.tuning {
+        Tuning::None => &outcome.quant.qann,
+        Tuning::Parallel => &outcome.tuned_parallel.qann,
+        Tuning::SmacNeuron => &outcome.tuned_smac_neuron.qann,
+        Tuning::SmacAnn => &outcome.tuned_smac_ann.qann,
+    }
+}
+
+/// Resolve a figure's design point against the architecture registry.
+fn spec_point(spec: &FigureSpec) -> (ArchKind, Style) {
+    let arch = <dyn Architecture>::by_name(spec.arch)
+        .unwrap_or_else(|| panic!("unknown architecture {:?}", spec.arch));
+    let style = Style::parse(spec.style).unwrap_or_else(|| panic!("unknown style {:?}", spec.style));
+    (arch.kind(), style)
+}
+
 /// Price one outcome under a figure's design point, data-driven from the
 /// architecture registry. The design is served from the process-wide
 /// [`serve::DesignCache`]: each figure prices one outcome once per metric
 /// and the tables re-price the same nets, so only the first lookup per
 /// distinct (net × design point) elaborates.
 pub fn hw_report_for(outcome: &FlowOutcome, spec: &FigureSpec, lib: &TechLib) -> HwReport {
-    let qann = match spec.tuning {
-        Tuning::None => &outcome.quant.qann,
-        Tuning::Parallel => &outcome.tuned_parallel.qann,
-        Tuning::SmacNeuron => &outcome.tuned_smac_neuron.qann,
-        Tuning::SmacAnn => &outcome.tuned_smac_ann.qann,
-    };
-    let arch = <dyn Architecture>::by_name(spec.arch)
-        .unwrap_or_else(|| panic!("unknown architecture {:?}", spec.arch));
-    let style = Style::parse(spec.style).unwrap_or_else(|| panic!("unknown style {:?}", spec.style));
-    serve::designs().design(qann, arch.kind(), style).cost(lib)
+    let (arch, style) = spec_point(spec);
+    serve::designs().design(spec_qann(outcome, spec), arch, style).cost(lib)
+}
+
+/// Activity-priced energy of one outcome under a figure's design point:
+/// run the sample stream through the batched simulator, then price the
+/// design with the observed [`ActivityProfile`]
+/// ([`Design::cost_with_activity`]). `None` when the stream is empty or
+/// its arity does not match the outcome's structure.
+///
+/// [`ActivityProfile`]: crate::hw::ActivityProfile
+/// [`Design::cost_with_activity`]: crate::hw::Design::cost_with_activity
+pub fn workload_energy_for(
+    outcome: &FlowOutcome,
+    spec: &FigureSpec,
+    lib: &TechLib,
+    samples: &[Sample],
+) -> Option<f64> {
+    let qann = spec_qann(outcome, spec);
+    let inputs = BatchInputs::from_samples(samples);
+    if inputs.is_empty() || inputs.features() != qann.structure.inputs {
+        return None;
+    }
+    let (arch, style) = spec_point(spec);
+    let design = serve::designs().design(qann, arch, style);
+    let run = serve::simulate_batch(&design, &inputs);
+    design.cost_with_activity(lib, &run.activity).workload_energy_pj
 }
 
 fn find<'a>(
@@ -354,21 +399,35 @@ pub fn figure(outcomes: &[FlowOutcome], fig: u32, lib: &TechLib) -> String {
     s
 }
 
-/// CSV row dump of every design point of a figure (for external plotting).
-pub fn figure_csv(outcomes: &[FlowOutcome], fig: u32, lib: &TechLib) -> String {
+/// CSV row dump of every design point of a figure (for external
+/// plotting). `workload` adds the activity-priced energy column
+/// ([`workload_energy_for`]) under that sample stream; the column stays
+/// in the header either way (empty cells when absent) so downstream
+/// parsers see one shape.
+pub fn figure_csv(
+    outcomes: &[FlowOutcome],
+    fig: u32,
+    lib: &TechLib,
+    workload: Option<&[Sample]>,
+) -> String {
     let spec = FigureSpec::for_fig(fig).expect("figures are 10..=18");
     let mut s = String::from(
-        "fig,arch,style,structure,trainer,area_um2,clock_ns,cycles,latency_ns,energy_pj,power_mw,adders\n",
+        "fig,arch,style,structure,trainer,area_um2,clock_ns,cycles,latency_ns,energy_pj,\
+         power_mw,adders,workload_energy_pj\n",
     );
     for st in structures(outcomes) {
         for t in Trainer::all() {
             if let Some(o) = find(outcomes, &st, t) {
                 let r = hw_report_for(o, &spec, lib);
+                let wl = workload
+                    .and_then(|samples| workload_energy_for(o, &spec, lib, samples))
+                    .map(|w| format!("{w:.3}"))
+                    .unwrap_or_default();
                 let _ = writeln!(
                     s,
-                    "{},{},{},{},{},{:.2},{:.4},{},{:.4},{:.3},{:.4},{}",
+                    "{},{},{},{},{},{:.2},{:.4},{},{:.4},{:.3},{:.4},{},{}",
                     fig, r.arch, r.style, st, t.name(), r.area_um2, r.clock_ns, r.cycles,
-                    r.latency_ns, r.energy_pj, r.power_mw, r.adders
+                    r.latency_ns, r.energy_pj, r.power_mw, r.adders, wl
                 );
             }
         }
@@ -422,8 +481,29 @@ mod tests {
         for f in [10, 13, 16, 17, 18] {
             let fg = figure(&outcomes, f, &lib);
             assert!(fg.contains("area"), "fig {f}: {fg}");
-            let csv = figure_csv(&outcomes, f, &lib);
+            let csv = figure_csv(&outcomes, f, &lib, None);
             assert_eq!(csv.lines().count(), 1 + 3, "one row per trainer");
+            assert!(csv.starts_with("fig,"), "{csv}");
+            assert!(csv.lines().next().unwrap().ends_with(",workload_energy_pj"), "{csv}");
+            // without a sample stream the workload cells are empty
+            assert!(csv.lines().nth(1).unwrap().ends_with(','), "{csv}");
+        }
+    }
+
+    #[test]
+    fn figure_csv_workload_column_never_exceeds_worst_case() {
+        let data = Dataset::synthetic_with_sizes(51, 800, 150);
+        let outcomes = tiny_outcomes();
+        let lib = TechLib::tsmc40();
+        let csv = figure_csv(&outcomes, 10, &lib, Some(&data.test));
+        let header: Vec<&str> = csv.lines().next().unwrap().split(',').collect();
+        let e_col = header.iter().position(|&h| h == "energy_pj").unwrap();
+        let w_col = header.iter().position(|&h| h == "workload_energy_pj").unwrap();
+        for row in csv.lines().skip(1) {
+            let cells: Vec<&str> = row.split(',').collect();
+            let e: f64 = cells[e_col].parse().unwrap();
+            let w: f64 = cells[w_col].parse().expect("workload cell filled");
+            assert!(w > 0.0 && w <= e + 1e-9, "workload {w} vs worst-case {e}: {row}");
         }
     }
 
@@ -479,6 +559,9 @@ mod tests {
                 mem_hits: 3,
                 disk_hits: 1,
                 elaborations: 0,
+                activity: crate::hw::ActivityProfile { samples: 128, layer_active: vec![640] },
+                energy_pj: Some(220.0),
+                workload_energy_pj: Some(165.5),
             }],
             tiers: TierStats::default(),
             max_batch: 64,
@@ -490,8 +573,20 @@ mod tests {
         assert!(s.contains("smac_neuron/mcm"), "{s}");
         assert!(s.contains("32.0"), "mean batch 128/4: {s}");
         assert!(s.contains("100%"), "all four fetches were cache hits: {s}");
+        // the workload-energy column prices the observed traffic
+        assert!(s.contains("wl energy pJ"), "{s}");
+        assert!(s.contains("165.5"), "{s}");
         // the tier block prints through the same trait path
         assert!(s.contains(&status.tiers.summary()), "{s}");
+
+        // before any traffic the column renders a dash, not a number
+        let mut idle = status.clone();
+        idle.deployments[0].activity = crate::hw::ActivityProfile::new(1);
+        idle.deployments[0].energy_pj = None;
+        idle.deployments[0].workload_energy_pj = None;
+        let line =
+            idle.summary().lines().find(|l| l.contains("mnist@v3")).unwrap().to_string();
+        assert!(line.trim_end().ends_with('-'), "{line}");
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! layout change — old artifacts then read as misses and re-elaborate.
 
 use super::design::{
-    ArchKind, Block, BlockKind, Design, LayerCompute, LayerPlan, McmRef, Schedule, Style,
+    ArchKind, Block, BlockKind, Design, Gate, LayerCompute, LayerPlan, McmRef, Schedule, Style,
 };
 use super::serve::{CacheStats, DesignCache};
 use crate::ann::quant::QuantizedAnn;
@@ -33,7 +33,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Artifact magic + wire-format version. Decoders reject anything else.
-const MAGIC: &[u8; 8] = b"SIMURGD1";
+/// D2 added the per-block activity gate ([`Gate`]); D1 artifacts now read
+/// as misses and re-elaborate.
+const MAGIC: &[u8; 8] = b"SIMURGD2";
 
 // ---------------------------------------------------------------------------
 // Wire encoding: explicit little-endian, length-prefixed vectors.
@@ -402,6 +404,26 @@ fn dec_block_kind(d: &mut Dec) -> Result<BlockKind> {
     })
 }
 
+fn enc_gate(e: &mut Enc, g: Gate) {
+    match g {
+        Gate::Fixed => e.u8(0),
+        Gate::Layer(k) => {
+            e.u8(1);
+            e.usize(k);
+        }
+        Gate::Net => e.u8(2),
+    }
+}
+
+fn dec_gate(d: &mut Dec) -> Result<Gate> {
+    Ok(match d.u8()? {
+        0 => Gate::Fixed,
+        1 => Gate::Layer(d.u64()? as usize),
+        2 => Gate::Net,
+        t => bail!("unknown gate tag {t}"),
+    })
+}
+
 fn enc_schedule(e: &mut Enc, s: Schedule) {
     match s {
         Schedule::Combinational => e.u8(0),
@@ -497,6 +519,7 @@ fn encode_design(design: &Design) -> Vec<u8> {
         enc_block_kind(&mut e, &b.kind);
         e.usize(b.count);
         e.f64(b.fires);
+        enc_gate(&mut e, b.gate);
     }
     e.usize(design.paths.len());
     for p in &design.paths {
@@ -525,7 +548,12 @@ fn decode_design(d: &mut Dec) -> Result<Design> {
     let n_blocks = d.len()?;
     let blocks = (0..n_blocks)
         .map(|_| {
-            Ok(Block { kind: dec_block_kind(d)?, count: d.u64()? as usize, fires: d.f64()? })
+            Ok(Block {
+                kind: dec_block_kind(d)?,
+                count: d.u64()? as usize,
+                fires: d.f64()?,
+                gate: dec_gate(d)?,
+            })
         })
         .collect::<Result<Vec<_>>>()?;
     let n_paths = d.len()?;
@@ -735,8 +763,12 @@ impl ArtifactStore {
     }
 
     /// Evict least-recently-used artifacts (oldest mtime first) until the
-    /// store is within both size bounds. Best-effort: unreadable metadata
-    /// or a lost remove race simply skips the file.
+    /// store is within both size bounds. Filesystems with coarse mtime
+    /// granularity (FAT: 2s; many mounts: 1s) stamp back-to-back saves
+    /// identically, so mtime ties are broken by path — deterministic
+    /// eviction order instead of whatever `read_dir` happened to return.
+    /// Best-effort: unreadable metadata or a lost remove race simply
+    /// skips the file.
     fn enforce_bounds(&self) {
         if self.max_entries == usize::MAX && self.max_bytes == u64::MAX {
             return;
@@ -750,7 +782,7 @@ impl ArtifactStore {
                 Some((md.modified().ok()?, md.len(), e.path()))
             })
             .collect();
-        files.sort_by(|a, b| a.0.cmp(&b.0));
+        files.sort_by(|a, b| (a.0, &a.2).cmp(&(b.0, &b.2)));
         let mut count = files.len();
         let mut bytes: u64 = files.iter().map(|&(_, len, _)| len).sum();
         for (_, len, path) in files {
@@ -988,6 +1020,47 @@ mod tests {
         assert!(store.load(&q1, ArchKind::Parallel, Style::Cmvm).is_some(), "recently used survives");
         assert!(store.load(&q2, ArchKind::Parallel, Style::Cmvm).is_none(), "LRU artifact evicted");
         assert!(store.load(&q3, ArchKind::Parallel, Style::Cmvm).is_some(), "fresh write survives");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn same_mtime_eviction_is_deterministic_by_key() {
+        // regression: on coarse-mtime filesystems back-to-back saves get
+        // identical timestamps and the old mtime-only sort left the
+        // eviction victim to read_dir order. Force the tie explicitly
+        // and pin that the lexicographically-smallest key goes first.
+        let dir = tempdir("mtime_tie");
+        let store = ArtifactStore::open_bounded(&dir, 2, u64::MAX).unwrap();
+        let qs: Vec<QuantizedAnn> = (1..=3).map(|s| qann("16-10", 6, s)).collect();
+        let design = |q: &QuantizedAnn| crate::hw::parallel::Parallel.elaborate(q, Style::Cmvm);
+        store.save(&design(&qs[0])).unwrap();
+        store.save(&design(&qs[1])).unwrap();
+        // stamp both artifacts with one shared mtime (the coarse-clock tie)
+        let tie = std::time::SystemTime::UNIX_EPOCH + std::time::Duration::from_secs(1_000_000);
+        let mut keyed: Vec<(String, &QuantizedAnn)> = qs[..2]
+            .iter()
+            .map(|q| (content_key(q, ArchKind::Parallel, Style::Cmvm), q))
+            .collect();
+        for (key, _) in &keyed {
+            std::fs::File::options()
+                .write(true)
+                .open(dir.join(format!("{key}.design")))
+                .and_then(|f| f.set_modified(tie))
+                .unwrap();
+        }
+        keyed.sort_by(|a, b| a.0.cmp(&b.0));
+        // the third save overflows the bound; both candidates tie on
+        // mtime, so the smaller key must be the one evicted
+        store.save(&design(&qs[2])).unwrap();
+        let s = store.stats();
+        assert_eq!((s.entries, s.evictions), (2, 1), "{s:?}");
+        assert!(
+            store.load(keyed[0].1, ArchKind::Parallel, Style::Cmvm).is_none(),
+            "tie broken by key: {} evicted first",
+            keyed[0].0
+        );
+        assert!(store.load(keyed[1].1, ArchKind::Parallel, Style::Cmvm).is_some());
+        assert!(store.load(&qs[2], ArchKind::Parallel, Style::Cmvm).is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,265 @@
+//! External co-simulation gate: run every registry design point's
+//! generated Verilog through Icarus Verilog and assert it bit-identical —
+//! outputs *and* cycle counts — to the architectural simulator
+//! ([`super::netsim`]).
+//!
+//! `hw::verilog` emits modules and self-checking testbenches;
+//! `hw::netsim` interprets the same [`Design`] values. Until this module,
+//! nothing ever *executed* the emitted HDL, so an emitter bug that the
+//! string-pinning tests missed (a handshake that only survives one
+//! sample, a register the reset forgets) would ship silently. The gate
+//! closes that loop: [`cases`] pairs each design point with a testbench
+//! whose golden vectors come from the shared differential corpus, and
+//! [`run_case`] compiles and runs it under `iverilog`/`vvp`, parsing the
+//! bench's own `TB PASS` verdict.
+//!
+//! Icarus Verilog is an *optional* external tool: [`iverilog_available`]
+//! probes for it once per process, and [`run_case`] returns
+//! [`CosimOutcome::Skipped`] instead of failing when the toolchain is
+//! absent — the repo's own tests stay hermetic, while the CI `cosim` job
+//! installs `iverilog` and turns the gate on for all thirteen points.
+//! Every emitted file is left in the case directory either way, so a
+//! failing run's module, bench, log and VCD can be uploaded as artifacts.
+
+use super::design::{design_points, Architecture, ArchKind, Design};
+use super::verilog;
+use crate::ann::quant::QuantizedAnn;
+use crate::num::Rng;
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+use std::process::Command;
+use std::sync::OnceLock;
+
+/// One process-wide probe for the Icarus Verilog toolchain: true when
+/// both `iverilog` (the compiler) and `vvp` (the runtime) answer on
+/// `$PATH`. The co-simulation gate is feature-detected, never required.
+pub fn iverilog_available() -> bool {
+    static PROBE: OnceLock<bool> = OnceLock::new();
+    *PROBE.get_or_init(|| {
+        let probe =
+            |tool: &str| Command::new(tool).arg("-V").output().is_ok_and(|o| o.status.success());
+        probe("iverilog") && probe("vvp")
+    })
+}
+
+/// The shared input corpus of the differential tests (signed Q1.7 rows
+/// including the extremes), restated here so the external simulator
+/// exercises the same vectors `netsim` is checked against.
+pub fn corpus(inputs: usize, n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    let mut rows: Vec<Vec<i32>> = (0..n)
+        .map(|_| (0..inputs).map(|_| rng.below(256) as i32 - 128).collect())
+        .collect();
+    rows.push(vec![0; inputs]);
+    rows.push(vec![127; inputs]);
+    rows.push(vec![-128; inputs]);
+    rows
+}
+
+/// One ready-to-run co-simulation case: a design point's module, its
+/// self-checking testbench, and the schedule facts the bench asserts.
+pub struct CosimCase {
+    /// Architecture name (registry spelling, e.g. `smac_neuron`).
+    pub arch: &'static str,
+    /// Style name (e.g. `behavioral`, `mcm`).
+    pub style: &'static str,
+    /// Verilog module name (`{arch}_{style}` — a valid identifier).
+    pub module: String,
+    /// The emitted DUT module source.
+    pub verilog: String,
+    /// The self-checking testbench (module `tb_{module}`).
+    pub testbench: String,
+    /// Closed-form cycle count the bench asserts per sample.
+    pub cycles: usize,
+    /// Whether the design has the rst/start/done handshake.
+    pub control: bool,
+}
+
+/// Whether a design point carries the sequential rst/start/done
+/// handshake (mirrors `verilog::testbench_for`).
+fn has_control(design: &Design) -> bool {
+    matches!(design.arch, ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial)
+}
+
+/// Build the co-simulation case of one elaborated design over `rows`.
+pub fn case_for(design: &Design, rows: &[Vec<i32>]) -> CosimCase {
+    let arch = design.arch.name();
+    let style = design.style.name();
+    let module = format!("{arch}_{style}");
+    let control = has_control(design);
+    let testbench = verilog::testbench_rows(&design.qann, rows, &module, design.cycles(), control);
+    CosimCase {
+        arch,
+        style,
+        verilog: verilog::verilog(design, &module),
+        testbench,
+        cycles: design.cycles(),
+        control,
+        module,
+    }
+}
+
+/// Elaborate every registry design point of `qann` and pair it with a
+/// testbench over `rows` — the full thirteen-point gate.
+pub fn cases(qann: &QuantizedAnn, rows: &[Vec<i32>]) -> Vec<CosimCase> {
+    design_points().into_iter().map(|(a, s)| case_for(&a.elaborate(qann, s), rows)).collect()
+}
+
+/// Outcome of one external co-simulation run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CosimOutcome {
+    /// The bench printed `TB PASS`: outputs and cycle counts bit-identical.
+    Pass,
+    /// Icarus Verilog is not on `$PATH`; nothing was executed.
+    Skipped,
+    /// Compile error, runtime error or `TB FAIL`; the log carries the
+    /// combined tool output (also written to `sim.log` in the case dir).
+    Fail { log: String },
+}
+
+/// Compile and run one case under `iverilog`/`vvp` in `dir` (created if
+/// absent). The module, bench, compiled `.vvp`, waveform VCD and
+/// `sim.log` all land in `dir` so failures are inspectable; the function
+/// never panics on toolchain trouble — every problem is a
+/// [`CosimOutcome::Fail`] with the evidence in the log.
+pub fn run_case(case: &CosimCase, dir: &Path) -> CosimOutcome {
+    if !iverilog_available() {
+        return CosimOutcome::Skipped;
+    }
+    if let Err(e) = fs::create_dir_all(dir) {
+        return CosimOutcome::Fail { log: format!("create_dir_all({}): {e}", dir.display()) };
+    }
+    let dut_v = dir.join(format!("{}.v", case.module));
+    let tb_v = dir.join(format!("tb_{}.v", case.module));
+    if let Err(e) = fs::write(&dut_v, &case.verilog).and_then(|_| fs::write(&tb_v, &case.testbench))
+    {
+        return CosimOutcome::Fail { log: format!("writing sources: {e}") };
+    }
+
+    let mut log = String::new();
+    let mut step = |tool: &str, args: &[&str]| -> Result<(), ()> {
+        let out = Command::new(tool).args(args).current_dir(dir).output();
+        match out {
+            Ok(o) => {
+                let _ = writeln!(
+                    log,
+                    "$ {tool} {}\n{}{}",
+                    args.join(" "),
+                    String::from_utf8_lossy(&o.stdout),
+                    String::from_utf8_lossy(&o.stderr)
+                );
+                if o.status.success() && !log.contains("TB FAIL") {
+                    Ok(())
+                } else {
+                    Err(())
+                }
+            }
+            Err(e) => {
+                let _ = writeln!(log, "$ {tool} {}: {e}", args.join(" "));
+                Err(())
+            }
+        }
+    };
+
+    // compile both sources, then execute; the bench self-reports via
+    // `TB PASS` / `TB FAIL: n` (both tools run inside `dir`, so the
+    // bench's `$dumpfile` VCD lands next to the sources)
+    let tb_name = format!("tb_{}.v", case.module);
+    let dut_name = format!("{}.v", case.module);
+    let vvp_name = format!("{}.vvp", case.module);
+    let ran = step("iverilog", &["-g2001", "-o", &vvp_name, &tb_name, &dut_name])
+        .and_then(|_| step("vvp", &[vvp_name.as_str()]));
+
+    let passed = ran.is_ok() && log.contains("TB PASS");
+    if let Ok(mut f) = fs::File::create(dir.join("sim.log")) {
+        let _ = f.write_all(log.as_bytes());
+    }
+    if passed {
+        CosimOutcome::Pass
+    } else {
+        CosimOutcome::Fail { log }
+    }
+}
+
+/// Run the full thirteen-point gate for `qann` under `root` (one
+/// subdirectory per design point), returning `(module, outcome)` pairs.
+pub fn run_all(qann: &QuantizedAnn, rows: &[Vec<i32>], root: &Path) -> Vec<(String, CosimOutcome)> {
+    cases(qann, rows)
+        .into_iter()
+        .map(|c| {
+            let outcome = run_case(&c, &root.join(&c.module));
+            (c.module, outcome)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::hw::design::Style;
+    use crate::hw::parallel::Parallel;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn corpus_includes_the_extremes() {
+        let rows = corpus(4, 3, 7);
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.len() == 4));
+        assert!(rows.iter().all(|r| r.iter().all(|&x| (-128..=127).contains(&x))));
+        assert!(rows.contains(&vec![0; 4]));
+        assert!(rows.contains(&vec![127; 4]));
+        assert!(rows.contains(&vec![-128; 4]));
+    }
+
+    #[test]
+    fn cases_cover_every_design_point_with_matched_benches() {
+        let q = qann("4-3-2", 6, 1);
+        let rows = corpus(4, 2, 11);
+        let cs = cases(&q, &rows);
+        assert_eq!(cs.len(), design_points().len(), "one case per registry point");
+        for c in &cs {
+            assert!(c.verilog.contains(&format!("module {}", c.module)), "{}", c.module);
+            assert!(c.testbench.contains(&format!("module tb_{}", c.module)), "{}", c.module);
+            // handshake designs assert their closed-form latency in-bench
+            if c.control {
+                assert!(c.testbench.contains(&format!("if (cyc !== {})", c.cycles)), "{}", c.module);
+            } else {
+                assert!(c.testbench.contains(&format!("#{};", 2 * c.cycles)), "{}", c.module);
+            }
+        }
+        let modules: Vec<&str> = cs.iter().map(|c| c.module.as_str()).collect();
+        assert!(modules.contains(&"parallel_behavioral"));
+        assert!(modules.contains(&"digit_serial_mcm"));
+    }
+
+    #[test]
+    fn run_case_skips_without_iverilog_and_passes_with_it() {
+        // hermetic either way: Skipped when the external toolchain is
+        // absent, a real compile+run (which must pass) when present —
+        // the CI `cosim` job takes the second branch for all 13 points
+        let q = qann("3-2", 6, 5);
+        let rows = corpus(3, 2, 13);
+        let d = Parallel.elaborate(&q, Style::Behavioral);
+        let case = case_for(&d, &rows);
+        let dir = std::env::temp_dir().join(format!("simurg_cosim_unit_{}", std::process::id()));
+        let outcome = run_case(&case, &dir);
+        if iverilog_available() {
+            assert_eq!(outcome, CosimOutcome::Pass, "see {}", dir.join("sim.log").display());
+        } else {
+            assert_eq!(outcome, CosimOutcome::Skipped);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -52,7 +52,8 @@
 //! ```
 
 use super::artifact::{TierHit, TieredDesignCache};
-use super::design::{ArchKind, Architecture, Style};
+use super::design::{ActivityProfile, ArchKind, Architecture, Style};
+use super::gates::TechLib;
 use super::serve::{self, BatchInputs};
 use crate::ann::quant::QuantizedAnn;
 use anyhow::Result;
@@ -113,6 +114,13 @@ struct Deployment {
     mem_hits: AtomicU64,
     disk_hits: AtomicU64,
     elaborations: AtomicU64,
+    /// per-layer switching activity merged across every coalesced batch;
+    /// a mutex (not atomics) because the profile is vector-valued
+    activity: Mutex<ActivityProfile>,
+    /// worst-case and activity-priced energy per inference (f64 bits),
+    /// refreshed by the worker after each batch
+    energy_pj_bits: AtomicU64,
+    workload_pj_bits: AtomicU64,
 }
 
 /// Point-in-time snapshot of one deployment's counters.
@@ -136,6 +144,17 @@ pub struct DeploymentStats {
     pub disk_hits: u64,
     /// design fetches that elaborated
     pub elaborations: u64,
+    /// per-layer switching activity observed under the deployment's
+    /// actual traffic, merged across every coalesced batch
+    pub activity: ActivityProfile,
+    /// worst-case energy per inference (every gated block at full
+    /// activity), TSMC 40nm; `None` before the first batch
+    pub energy_pj: Option<f64>,
+    /// the same energy priced under the observed [`ActivityProfile`]
+    /// ([`Design::cost_with_activity`]); never above `energy_pj`
+    ///
+    /// [`Design::cost_with_activity`]: super::design::Design::cost_with_activity
+    pub workload_energy_pj: Option<f64>,
 }
 
 impl DeploymentStats {
@@ -167,6 +186,15 @@ impl DeploymentStats {
             0.0
         } else {
             (self.mem_hits + self.disk_hits) as f64 / self.design_fetches() as f64
+        }
+    }
+
+    /// Workload energy over the worst-case column: the activity discount
+    /// the served traffic actually realized (1.0 = no discount).
+    pub fn energy_discount(&self) -> Option<f64> {
+        match (self.workload_energy_pj, self.energy_pj) {
+            (Some(w), Some(e)) if e > 0.0 => Some(w / e),
+            _ => None,
         }
     }
 }
@@ -265,6 +293,7 @@ impl Daemon {
             .map(|a| a.styles().contains(&style))
             .unwrap_or(false);
         assert!(supported, "{} has no {} style", arch.name(), style.name());
+        let layers = qann.structure.num_layers();
         let dep = Arc::new(Deployment {
             name: name.into(),
             qann,
@@ -278,6 +307,9 @@ impl Daemon {
             mem_hits: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
             elaborations: AtomicU64::new(0),
+            activity: Mutex::new(ActivityProfile::new(layers)),
+            energy_pj_bits: AtomicU64::new(0),
+            workload_pj_bits: AtomicU64::new(0),
         });
         let mut deps = self.inner.deployments.lock().unwrap();
         deps.push(dep);
@@ -319,18 +351,27 @@ impl Daemon {
             .lock()
             .unwrap()
             .iter()
-            .map(|d| DeploymentStats {
-                name: d.name.clone(),
-                arch: d.arch,
-                style: d.style,
-                requests: d.requests.load(Ordering::Relaxed),
-                batches: d.batches.load(Ordering::Relaxed),
-                largest_batch: d.largest_batch.load(Ordering::Relaxed),
-                queue_ns: d.queue_ns.load(Ordering::Relaxed),
-                max_queue_ns: d.max_queue_ns.load(Ordering::Relaxed),
-                mem_hits: d.mem_hits.load(Ordering::Relaxed),
-                disk_hits: d.disk_hits.load(Ordering::Relaxed),
-                elaborations: d.elaborations.load(Ordering::Relaxed),
+            .map(|d| {
+                let activity = d.activity.lock().unwrap().clone();
+                let priced = activity.samples > 0;
+                DeploymentStats {
+                    name: d.name.clone(),
+                    arch: d.arch,
+                    style: d.style,
+                    requests: d.requests.load(Ordering::Relaxed),
+                    batches: d.batches.load(Ordering::Relaxed),
+                    largest_batch: d.largest_batch.load(Ordering::Relaxed),
+                    queue_ns: d.queue_ns.load(Ordering::Relaxed),
+                    max_queue_ns: d.max_queue_ns.load(Ordering::Relaxed),
+                    mem_hits: d.mem_hits.load(Ordering::Relaxed),
+                    disk_hits: d.disk_hits.load(Ordering::Relaxed),
+                    elaborations: d.elaborations.load(Ordering::Relaxed),
+                    activity,
+                    energy_pj: priced
+                        .then(|| f64::from_bits(d.energy_pj_bits.load(Ordering::Relaxed))),
+                    workload_energy_pj: priced
+                        .then(|| f64::from_bits(d.workload_pj_bits.load(Ordering::Relaxed))),
+                }
             })
             .collect();
         DaemonStatus {
@@ -429,6 +470,17 @@ fn worker_loop(inner: &Inner) {
                 let rows: Vec<&[i32]> = chunk.iter().map(|p| p.input.as_slice()).collect();
                 let run =
                     serve::simulate_batch_with(&design, &BatchInputs::from_rows(&rows), &inner.cfg.serve);
+                // fold this batch's switching activity into the
+                // deployment's profile and re-price both energy columns
+                // while the design is in hand (one O(blocks) walk)
+                {
+                    let mut act = dep.activity.lock().unwrap();
+                    act.merge(&run.activity);
+                    let r = design.cost_with_activity(&TechLib::tsmc40(), &act);
+                    dep.energy_pj_bits.store(r.energy_pj.to_bits(), Ordering::Relaxed);
+                    let w = r.workload_energy_pj.unwrap_or(r.energy_pj);
+                    dep.workload_pj_bits.store(w.to_bits(), Ordering::Relaxed);
+                }
                 dep.requests.fetch_add(chunk.len() as u64, Ordering::Relaxed);
                 dep.batches.fetch_add(1, Ordering::Relaxed);
                 dep.largest_batch.fetch_max(chunk.len() as u64, Ordering::Relaxed);
@@ -550,6 +602,47 @@ mod tests {
         }
         assert_eq!(daemon.status().deployments[0].requests, 5);
         daemon.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn activity_accumulates_and_prices_workload_energy() {
+        let q = qann("16-10", 6, 13);
+        let daemon = isolated_daemon(DaemonConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            artifact_dir: None,
+            ..DaemonConfig::default()
+        });
+        let dep = daemon.deploy("m@1", q, ArchKind::Parallel, Style::Behavioral);
+        // before any traffic: no profile, no energy columns
+        let st = daemon.status();
+        assert_eq!(st.deployments[0].activity.samples, 0);
+        assert_eq!(st.deployments[0].energy_pj, None);
+        assert_eq!(st.deployments[0].workload_energy_pj, None);
+        assert_eq!(st.deployments[0].energy_discount(), None);
+
+        // a half-zero input stream leaves headroom for the discount
+        let pending: Vec<_> = (0..12usize)
+            .map(|i| {
+                let mut row = [0i32; 16];
+                for (j, v) in row.iter_mut().enumerate().filter(|(j, _)| j % 2 == 0) {
+                    *v = ((i + j) * 7 % 127) as i32 + 1;
+                }
+                daemon.submit(dep, &row)
+            })
+            .collect();
+        for p in pending {
+            p.wait();
+        }
+        let st = daemon.status();
+        let d = &st.deployments[0];
+        assert_eq!(d.activity.samples, 12, "{:?}", d.activity);
+        assert_eq!(d.activity.layer_active[0], 8 * 12, "half the inputs are zero: {:?}", d.activity);
+        let (e, w) = (d.energy_pj.unwrap(), d.workload_energy_pj.unwrap());
+        assert!(w > 0.0 && w < e, "half-zero traffic must discount: workload {w}, worst {e}");
+        let disc = d.energy_discount().unwrap();
+        assert!(disc > 0.0 && disc < 1.0, "{disc}");
+        daemon.shutdown();
     }
 
     #[test]

@@ -221,6 +221,28 @@ impl BlockKind {
     }
 }
 
+/// What a block's switching activity scales with under real traffic —
+/// the clock-gating window the activity-based energy model applies when
+/// an [`ActivityProfile`] is available. The worst-case `fires` weight
+/// assumes every layer input is nonzero (full occupancy ι_k); an
+/// observed profile shrinks the gated blocks' energy by the ratio of
+/// actual nonzero inputs to that worst case, and leaves `Fixed` blocks
+/// (control counters, bias adders, activation units, output registers —
+/// whose toggling does not scale with operand occupancy) at their
+/// worst-case estimate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gate {
+    /// fires regardless of operand activity (control, bias, activation,
+    /// registered outputs) — never discounted
+    Fixed,
+    /// switching scales with the nonzero inputs of layer `k` (the
+    /// product path: constant-mult networks, multipliers, accumulators)
+    Layer(usize),
+    /// switching scales with whole-net occupancy (the single SMAC_ANN
+    /// MAC, whose one accumulator serves every layer in turn)
+    Net,
+}
+
 /// One instantiated block of the datapath.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Block {
@@ -230,6 +252,100 @@ pub struct Block {
     /// activations per inference — the energy weight (e.g. a SMAC_NEURON
     /// layer block fires ι_k + 1 times, a clock-gated one 0)
     pub fires: f64,
+    /// what the block's switching scales with under observed traffic
+    pub gate: Gate,
+}
+
+/// Observed per-layer input activity of a served sample stream — what
+/// the batch interpreter (`hw::serve`) records and the activity-based
+/// energy model consumes in place of the worst-case `fires` weights.
+///
+/// `layer_active[k]` totals, over every sample, the number of *nonzero*
+/// inputs feeding layer `k` (zero operands switch neither a shift-adds
+/// network nor a MAC product path, which is exactly the window a
+/// clock-gated datapath skips). Counters are integers so sharded runs
+/// merge to the same value in any order — [`ActivityProfile::merge`] is
+/// elementwise addition and keeps `BatchRun` equality exact across
+/// thread counts.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ActivityProfile {
+    /// samples observed
+    pub samples: u64,
+    /// per-layer totals of nonzero layer inputs across those samples
+    pub layer_active: Vec<u64>,
+}
+
+impl ActivityProfile {
+    pub fn new(num_layers: usize) -> ActivityProfile {
+        ActivityProfile { samples: 0, layer_active: vec![0; num_layers] }
+    }
+
+    /// Fold another shard's observations in (elementwise addition).
+    pub fn merge(&mut self, other: &ActivityProfile) {
+        if self.layer_active.len() < other.layer_active.len() {
+            self.layer_active.resize(other.layer_active.len(), 0);
+        }
+        self.samples += other.samples;
+        for (a, &b) in self.layer_active.iter_mut().zip(&other.layer_active) {
+            *a += b;
+        }
+    }
+
+    /// Mean nonzero inputs of layer `k` per sample (the observed ι_k).
+    fn avg_nonzero(&self, k: usize) -> f64 {
+        self.layer_active.get(k).copied().unwrap_or(0) as f64 / self.samples as f64
+    }
+}
+
+/// Activity discount of one gated block: the ratio (≤ 1) of observed
+/// switching to the worst-case `fires` estimate, per gate class and
+/// schedule. An empty profile (no samples observed yet) stays at the
+/// worst case. The closed forms restate each schedule's `fires` weight
+/// with the observed mean nonzero input count in place of ι_k:
+///
+/// - combinational / pipelined product paths fire once per inference
+///   with all ι_k operands toggling → `avg / ι_k`;
+/// - the layer-sequential broadcast (and its digit-serial stretching,
+///   where the factor `B` cancels) fires ι_k + 1 times → `(avg+1)/(ι_k+1)`;
+/// - the neuron-sequential MAC fires (ι_k + 2)·η_k times over the whole
+///   net → `Σ(avg_k+2)·η_k / Σ(ι_k+2)·η_k`.
+fn gate_ratio(gate: Gate, schedule: Schedule, st: &AnnStructure, p: &ActivityProfile) -> f64 {
+    if p.samples == 0 {
+        return 1.0;
+    }
+    match gate {
+        Gate::Fixed => 1.0,
+        Gate::Layer(k) => {
+            let iota = st.layer_inputs(k) as f64;
+            let avg = p.avg_nonzero(k);
+            match schedule {
+                Schedule::Combinational | Schedule::Pipelined { .. } => {
+                    if iota > 0.0 {
+                        avg / iota
+                    } else {
+                        1.0
+                    }
+                }
+                Schedule::LayerSequential | Schedule::DigitSerial { .. } => {
+                    (avg + 1.0) / (iota + 1.0)
+                }
+                Schedule::NeuronSequential => (avg + 2.0) / (iota + 2.0),
+            }
+        }
+        Gate::Net => {
+            let (mut obs, mut worst) = (0.0f64, 0.0f64);
+            for k in 0..st.num_layers() {
+                let eta = st.layer_outputs(k) as f64;
+                obs += (p.avg_nonzero(k) + 2.0) * eta;
+                worst += (st.layer_inputs(k) as f64 + 2.0) * eta;
+            }
+            if worst > 0.0 {
+                obs / worst
+            } else {
+                1.0
+            }
+        }
+    }
 }
 
 /// Where a MAC layer's products come from when the style is
@@ -294,14 +410,34 @@ pub struct Design {
 
 impl Design {
     /// The generic cost walker: price every block in `lib`, take the
-    /// worst timing path and the schedule's cycle count.
+    /// worst timing path and the schedule's cycle count. Energy is the
+    /// worst-case estimate (every block at its full `fires` weight).
     pub fn cost(&self, lib: &TechLib) -> HwReport {
+        self.cost_with(lib, None)
+    }
+
+    /// [`Design::cost`] plus a workload-energy column: every gated
+    /// block's energy is additionally discounted by the observed
+    /// activity ratio ([`gate_ratio`]) and the sum lands in
+    /// [`HwReport::workload_energy_pj`] — never above the worst-case
+    /// `energy_pj` column. Area, clock and cycles are unchanged:
+    /// activity gates switching, not hardware.
+    pub fn cost_with_activity(&self, lib: &TechLib, profile: &ActivityProfile) -> HwReport {
+        self.cost_with(lib, Some(profile))
+    }
+
+    fn cost_with(&self, lib: &TechLib, activity: Option<&ActivityProfile>) -> HwReport {
         let units: Vec<BlockCost> = self.blocks.iter().map(|b| b.kind.unit(lib, &self.graphs)).collect();
         let mut area = 0.0f64;
         let mut energy = 0.0f64;
+        let mut workload = 0.0f64;
         for (b, u) in self.blocks.iter().zip(&units) {
             area += u.area * b.count as f64;
-            energy += u.energy * b.count as f64 * b.fires;
+            let e = u.energy * b.count as f64 * b.fires;
+            energy += e;
+            if let Some(p) = activity {
+                workload += e * gate_ratio(b.gate, self.schedule, &self.qann.structure, p);
+            }
         }
         let path = self
             .paths
@@ -310,7 +446,17 @@ impl Design {
             .fold(0.0f64, f64::max);
         let clock = path * lib.clock_margin;
         let cycles = self.schedule.cycles(&self.qann.structure);
-        HwReport::from_parts(self.arch.name(), self.style.name(), area, clock, cycles, energy, self.adder_ops)
+        let mut r = HwReport::from_parts(
+            self.arch.name(),
+            self.style.name(),
+            area,
+            clock,
+            cycles,
+            energy,
+            self.adder_ops,
+        );
+        r.workload_energy_pj = activity.map(|_| workload / 1000.0);
+        r
     }
 
     /// Cycle count of one inference under the design's schedule.
@@ -357,9 +503,19 @@ impl DesignBuilder {
     }
 
     /// Add `count` copies of a block firing `fires` times per inference;
-    /// returns its index for path construction.
+    /// returns its index for path construction. The block's switching is
+    /// [`Gate::Fixed`] — never discounted by observed activity; product
+    /// paths use [`DesignBuilder::gated_block`] instead.
     pub fn block(&mut self, kind: BlockKind, count: usize, fires: f64) -> usize {
-        self.blocks.push(Block { kind, count, fires });
+        self.gated_block(kind, count, fires, Gate::Fixed)
+    }
+
+    /// [`DesignBuilder::block`] with an explicit activity [`Gate`]: the
+    /// elaborators tag their product-path blocks (constant-mult networks,
+    /// multipliers, accumulators) with the layer whose input occupancy
+    /// drives their switching.
+    pub fn gated_block(&mut self, kind: BlockKind, count: usize, fires: f64, gate: Gate) -> usize {
+        self.blocks.push(Block { kind, count, fires, gate });
         self.blocks.len() - 1
     }
 
@@ -379,14 +535,29 @@ impl DesignBuilder {
     /// finishing a [`Design`] or walking timing paths (paths only affect
     /// the clock, which fragment deltas don't re-estimate).
     pub fn fragment_cost(&self, lib: &TechLib) -> (f64, f64) {
+        let (area, energy, _) = self.fragment_cost_gated(lib);
+        (area, energy)
+    }
+
+    /// [`DesignBuilder::fragment_cost`] split by activity gate:
+    /// `(area, energy, gated_energy)`, where `gated_energy` is the share
+    /// of the total carried by non-[`Gate::Fixed`] blocks — the part an
+    /// [`ActivityProfile`] discounts in
+    /// [`LayerPricer::workload_energy`].
+    pub fn fragment_cost_gated(&self, lib: &TechLib) -> (f64, f64, f64) {
         let mut area = 0.0f64;
         let mut energy = 0.0f64;
+        let mut gated = 0.0f64;
         for b in &self.blocks {
             let u = b.kind.unit(lib, &self.graphs);
             area += u.area * b.count as f64;
-            energy += u.energy * b.count as f64 * b.fires;
+            let e = u.energy * b.count as f64 * b.fires;
+            energy += e;
+            if b.gate != Gate::Fixed {
+                gated += e;
+            }
         }
-        (area, energy)
+        (area, energy, gated)
     }
 
     pub fn finish(self, qann: &QuantizedAnn) -> Design {
@@ -611,7 +782,21 @@ pub struct LayerPricer {
     keys: Vec<Option<u64>>,
     ops: Vec<usize>,
     cost_keys: Vec<Option<u64>>,
-    costs: Vec<(f64, f64)>,
+    costs: Vec<(f64, f64, f64)>,
+}
+
+/// A schedule of the right *class* for `arch` — [`gate_ratio`] only
+/// dispatches on the schedule variant (the pipelined stage count and the
+/// digit-serial bit count cancel out of every ratio), so the fragment
+/// pricer does not need the elaborated schedule parameters.
+fn ratio_schedule(arch: ArchKind) -> Schedule {
+    match arch {
+        ArchKind::Parallel => Schedule::Combinational,
+        ArchKind::Pipelined => Schedule::Pipelined { stages: 0 },
+        ArchKind::SmacNeuron => Schedule::LayerSequential,
+        ArchKind::SmacAnn => Schedule::NeuronSequential,
+        ArchKind::DigitSerial => Schedule::DigitSerial { bits: 1 },
+    }
 }
 
 impl LayerPricer {
@@ -662,7 +847,7 @@ impl LayerPricer {
         let arch = <dyn Architecture>::by_name(self.arch.name()).expect("registry covers every ArchKind");
         let n = qann.structure.num_layers();
         self.cost_keys.resize(n, None);
-        self.costs.resize(n, (0.0, 0.0));
+        self.costs.resize(n, (0.0, 0.0, 0.0));
         for k in 0..n {
             let key = cost_key(self.arch, qann, k);
             if self.cost_keys[k] != Some(key) {
@@ -670,11 +855,41 @@ impl LayerPricer {
                 // (it only shapes the finished Design's cycle model)
                 let mut b = DesignBuilder::new(self.arch, self.style, Schedule::Combinational);
                 arch.elaborate_layer_blocks(&mut b, qann, k, self.style);
-                self.costs[k] = b.fragment_cost(lib);
+                self.costs[k] = b.fragment_cost_gated(lib);
                 self.cost_keys[k] = Some(key);
             }
         }
-        self.costs.iter().fold((0.0, 0.0), |(a, e), &(fa, fe)| (a + fa, e + fe))
+        self.costs.iter().fold((0.0, 0.0), |(a, e), &(fa, fe, _)| (a + fa, e + fe))
+    }
+
+    /// Activity-discounted energy per inference (fJ) of `qann`'s design
+    /// under an observed [`ActivityProfile`], from the same cached
+    /// per-layer fragments as [`LayerPricer::block_cost`]: each layer's
+    /// gated energy share shrinks by its [`gate_ratio`] (the SMAC_ANN
+    /// whole-net fragment by the net ratio), fixed blocks stay at the
+    /// worst case. Agrees with the full
+    /// [`Design::cost_with_activity`] walk — pinned by
+    /// `workload_energy_agrees_with_the_full_cost_walk`.
+    pub fn workload_energy(
+        &mut self,
+        qann: &QuantizedAnn,
+        lib: &TechLib,
+        profile: &ActivityProfile,
+    ) -> f64 {
+        self.block_cost(qann, lib);
+        let sched = ratio_schedule(self.arch);
+        let st = &qann.structure;
+        self.costs
+            .iter()
+            .enumerate()
+            .map(|(k, &(_, energy, gated))| {
+                let gate = match self.arch {
+                    ArchKind::SmacAnn => Gate::Net,
+                    _ => Gate::Layer(k),
+                };
+                (energy - gated) + gated * gate_ratio(gate, sched, st, profile)
+            })
+            .sum()
     }
 }
 
@@ -884,5 +1099,89 @@ mod tests {
         let keys = serial.cost_keys.clone();
         serial.block_cost(&q2, &lib);
         assert!(serial.cost_keys.iter().zip(&keys).all(|(a, b)| a != b), "whole-net keys all turn");
+    }
+
+    /// A profile observing `samples` samples with `num / den` of every
+    /// layer's inputs nonzero.
+    fn fractional_profile(st: &AnnStructure, samples: u64, num: u64, den: u64) -> ActivityProfile {
+        ActivityProfile {
+            samples,
+            layer_active: (0..st.num_layers())
+                .map(|k| samples * st.layer_inputs(k) as u64 * num / den)
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn workload_energy_agrees_with_the_full_cost_walk() {
+        // the activity-column counterpart of the fragment-sum pin: the
+        // incremental pricer's per-fragment gate ratios must reproduce
+        // the full cost walk's per-block discounts, for every design
+        // point in the registry
+        let q = qann("16-16-10", 6, 23);
+        let lib = TechLib::tsmc40();
+        let profile = fractional_profile(&q.structure, 10, 1, 2);
+        for (arch, style) in design_points() {
+            let r = arch.elaborate(&q, style).cost_with_activity(&lib, &profile);
+            let w_pj = r.workload_energy_pj.expect("priced with a profile");
+            let w_fj = LayerPricer::new(arch.kind(), style).workload_energy(&q, &lib, &profile);
+            let rel = (w_fj - w_pj * 1000.0).abs() / (w_pj * 1000.0).max(1e-12);
+            assert!(
+                rel < 1e-9,
+                "{} {}: pricer {w_fj} fJ != cost walk {w_pj} pJ",
+                arch.name(),
+                style.name()
+            );
+        }
+    }
+
+    #[test]
+    fn activity_pricing_never_exceeds_worst_case_across_the_registry() {
+        let q = qann("16-16-10", 6, 29);
+        let lib = TechLib::tsmc40();
+        let half = fractional_profile(&q.structure, 7, 1, 2);
+        let full = fractional_profile(&q.structure, 7, 1, 1);
+        let cold = ActivityProfile::new(q.structure.num_layers());
+        for (arch, style) in design_points() {
+            let d = arch.elaborate(&q, style);
+            let r = d.cost_with_activity(&lib, &half);
+            let w = r.workload_energy_pj.expect("priced with a profile");
+            assert!(
+                w > 0.0 && w < r.energy_pj,
+                "{} {}: half-activity traffic must strictly discount ({w} vs {})",
+                arch.name(),
+                style.name(),
+                r.energy_pj
+            );
+            // saturated activity restores the worst case exactly...
+            let rf = d.cost_with_activity(&lib, &full).workload_energy_pj.unwrap();
+            assert!((rf - r.energy_pj).abs() / r.energy_pj < 1e-9, "{rf} vs {}", r.energy_pj);
+            // ...a cold profile (no samples yet) never discounts...
+            let r0 = d.cost_with_activity(&lib, &cold).workload_energy_pj.unwrap();
+            assert!((r0 - r.energy_pj).abs() / r.energy_pj < 1e-9, "{r0} vs {}", r.energy_pj);
+            // ...and the plain worst-case walk never fills the column
+            assert_eq!(d.cost(&lib).workload_energy_pj, None);
+        }
+    }
+
+    #[test]
+    fn activity_merge_is_commutative_and_associative() {
+        // shard merges may land in any order (and ragged widths, e.g. a
+        // shard that never reached the deeper layers)
+        let a = ActivityProfile { samples: 3, layer_active: vec![5, 9] };
+        let b = ActivityProfile { samples: 4, layer_active: vec![7, 1, 2] };
+        let c = ActivityProfile { samples: 1, layer_active: vec![2] };
+        let fold = |ps: &[&ActivityProfile]| {
+            let mut acc = ActivityProfile::new(0);
+            for p in ps {
+                acc.merge(p);
+            }
+            acc
+        };
+        let m = fold(&[&a, &b, &c]);
+        assert_eq!(m, fold(&[&c, &b, &a]));
+        assert_eq!(m, fold(&[&b, &a, &c]));
+        assert_eq!(m.samples, 8);
+        assert_eq!(m.layer_active, vec![14, 10, 2]);
     }
 }

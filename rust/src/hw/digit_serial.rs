@@ -48,8 +48,8 @@
 //! `hw::serve` and `hw::verilog`.
 
 use super::design::{
-    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, McmRef,
-    Schedule, Style,
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, Gate, LayerCompute, LayerPlan,
+    McmRef, Schedule, Style,
 };
 use super::report::{self, HwReport};
 use super::TechLib;
@@ -118,15 +118,35 @@ impl Architecture for DigitSerial {
         // shift, exactly as in SMAC_NEURON; the back-shift is wiring
         let (stored, sls) = design::stored_layer(qann, k);
 
+        // the serial product path (weight select, slices, accumulator
+        // shift registers) only toggles under nonzero broadcast inputs,
+        // so it shares SMAC_NEURON's layer-occupancy gate (the factor B
+        // cancels out of the activity ratio); control, activation and
+        // output registers fire regardless
         let mcm = match style {
             Style::Behavioral => {
                 for row in &stored {
                     let w_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1);
-                    let w_mux = b.block(BlockKind::ConstantMux { n: n_in, bits: w_bits }, 1, broadcasts);
+                    let w_mux = b.gated_block(
+                        BlockKind::ConstantMux { n: n_in, bits: w_bits },
+                        1,
+                        broadcasts,
+                        Gate::Layer(k),
+                    );
                     // the bias add rides the serial slice during the
                     // +1 broadcast, so no separate word-wide adder
-                    let ser = b.block(BlockKind::SerialAdder { w_bits }, 1, bit_cycles);
-                    let acc = b.block(BlockKind::ShiftRegister { bits: acc_bits }, 1, bit_cycles);
+                    let ser = b.gated_block(
+                        BlockKind::SerialAdder { w_bits },
+                        1,
+                        bit_cycles,
+                        Gate::Layer(k),
+                    );
+                    let acc = b.gated_block(
+                        BlockKind::ShiftRegister { bits: acc_bits },
+                        1,
+                        bit_cycles,
+                        Gate::Layer(k),
+                    );
                     b.block(BlockKind::ActivationUnit { acc_bits }, 1, broadcasts);
                     b.block(BlockKind::Register { bits: 8 }, 1, broadcasts); // out reg
                     b.path(vec![in_mux, w_mux, ser, acc]);
@@ -139,13 +159,33 @@ impl Architecture for DigitSerial {
                 // serial shift-adds network
                 let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
                 let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
-                let net = b.block(BlockKind::SerialShiftAdds { graphs: vec![gi] }, 1, bit_cycles);
+                let net = b.gated_block(
+                    BlockKind::SerialShiftAdds { graphs: vec![gi] },
+                    1,
+                    bit_cycles,
+                    Gate::Layer(k),
+                );
                 for _ in &stored {
                     // products arrive bit-serially, so the per-neuron
                     // product mux and accumulating slice are 1 bit wide
-                    let p_mux = b.block(BlockKind::Mux { n: n_in, bits: 1 }, 1, broadcasts);
-                    let ser = b.block(BlockKind::SerialAdder { w_bits: 1 }, 1, bit_cycles);
-                    let acc = b.block(BlockKind::ShiftRegister { bits: acc_bits }, 1, bit_cycles);
+                    let p_mux = b.gated_block(
+                        BlockKind::Mux { n: n_in, bits: 1 },
+                        1,
+                        broadcasts,
+                        Gate::Layer(k),
+                    );
+                    let ser = b.gated_block(
+                        BlockKind::SerialAdder { w_bits: 1 },
+                        1,
+                        bit_cycles,
+                        Gate::Layer(k),
+                    );
+                    let acc = b.gated_block(
+                        BlockKind::ShiftRegister { bits: acc_bits },
+                        1,
+                        bit_cycles,
+                        Gate::Layer(k),
+                    );
                     b.block(BlockKind::ActivationUnit { acc_bits }, 1, broadcasts);
                     b.block(BlockKind::Register { bits: 8 }, 1, broadcasts); // out reg
                     b.path(vec![net, p_mux, ser, acc]);

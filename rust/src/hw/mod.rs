@@ -17,9 +17,15 @@
 //! process-wide [`DesignCache`], [`artifact`] adds the content-keyed
 //! on-disk tier beneath it, and [`daemon`] is the persistent serving
 //! front that coalesces concurrent requests into SoA batches over both.
+//!
+//! [`cosim`] closes the EDA loop externally: when Icarus Verilog is on
+//! `$PATH`, every registry design point's emitted module runs through
+//! `iverilog`/`vvp` against a self-checking testbench whose vectors and
+//! cycle counts must match [`netsim`] bit-for-bit.
 
 pub mod artifact;
 pub mod blocks;
+pub mod cosim;
 pub mod daemon;
 pub mod design;
 pub mod digit_serial;
@@ -35,7 +41,7 @@ pub mod verilog;
 
 pub use artifact::{ArtifactStore, StoreStats, TierHit, TierStats, TieredDesignCache};
 pub use daemon::{Daemon, DaemonConfig, DaemonStatus, DeploymentId, DeploymentStats};
-pub use design::{ArchKind, Architecture, Design, Schedule, Style};
+pub use design::{ActivityProfile, ArchKind, Architecture, Design, Gate, Schedule, Style};
 pub use gates::TechLib;
 pub use report::HwReport;
 pub use serve::{

@@ -76,6 +76,33 @@ pub fn simulate(design: &Design, input: &[i32]) -> SimRun {
     }
 }
 
+/// Per-layer switching activity of one inference: how many of each
+/// layer's inputs are nonzero — the single-sample referee for the
+/// [`ActivityProfile`] the batched path records
+/// ([`crate::hw::serve::simulate_batch`]), pinned equal to the batch
+/// totals summed over rows in `rust/tests/batch_equivalence.rs`. Layer
+/// inputs are the golden model's activations (every design point is
+/// bit-exact against it), so the walk below prices activity for *any*
+/// architecture of the same net.
+pub fn activity_of(design: &Design, input: &[i32]) -> super::design::ActivityProfile {
+    let qann = &design.qann;
+    assert_eq!(input.len(), qann.structure.inputs);
+    let mut profile = super::design::ActivityProfile::new(design.layers.len());
+    profile.samples = 1;
+    let mut cur: Vec<i64> = input.iter().map(|&x| x as i64).collect();
+    for (k, layer) in design.layers.iter().enumerate() {
+        profile.layer_active[k] = cur.iter().filter(|&&v| v != 0).count() as u64;
+        cur = (0..layer.n_out)
+            .map(|m| {
+                let inner: i64 =
+                    cur.iter().zip(&qann.weights[k][m]).map(|(&x, &w)| w * x).sum();
+                activate(qann.activations[k], inner + qann.biases[k][m], qann.q) as i64
+            })
+            .collect();
+    }
+    profile
+}
+
 /// Clock cycles of one register-transfer step of a MAC schedule: 1 for
 /// the word-parallel designs, `bits` bit-cycles for the digit-serial
 /// datapath (the bit-counter FSM sequences every broadcast over the
@@ -327,6 +354,33 @@ mod tests {
                 assert_eq!(simulate(&d, &x).cycles, d.cycles(), "{structure} {}", a.name());
             }
         }
+    }
+
+    #[test]
+    fn activity_walk_counts_golden_layer_inputs() {
+        let q = qann("16-10-10", 6, 47);
+        let d = SmacNeuron.elaborate(&q, Style::Behavioral);
+        let x: Vec<i32> = (0..16).map(|i| if i % 3 == 0 { 0 } else { 50 + i as i32 }).collect();
+        let p = activity_of(&d, &x);
+        assert_eq!(p.samples, 1);
+        assert_eq!(p.layer_active.len(), 2);
+        // layer 0: the literal nonzero count of the primary inputs
+        assert_eq!(p.layer_active[0], x.iter().filter(|&&v| v != 0).count() as u64);
+        // layer 1: nonzeros of the golden model's hidden activations —
+        // recompute them through the forward pass prefix
+        let hidden: Vec<i32> = (0..10)
+            .map(|m| {
+                let inner: i64 =
+                    x.iter().zip(&q.weights[0][m]).map(|(&v, &w)| w * v as i64).sum();
+                activate(q.activations[0], inner + q.biases[0][m], q.q)
+            })
+            .collect();
+        assert_eq!(p.layer_active[1], hidden.iter().filter(|&&v| v != 0).count() as u64);
+        // the same net's other design points see the same sample stream
+        let sa = SmacAnn.elaborate(&q, Style::Behavioral);
+        assert_eq!(activity_of(&sa, &x), p);
+        // the all-zero input activates nothing at layer 0
+        assert_eq!(activity_of(&d, &[0; 16]).layer_active[0], 0);
     }
 
     #[test]

@@ -16,7 +16,8 @@
 //! [`Design`] by `hw::design`, `hw::netsim` and `hw::verilog`.
 
 use super::design::{
-    ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, Schedule, Style,
+    ArchKind, Architecture, BlockKind, Design, DesignBuilder, Gate, LayerCompute, LayerPlan,
+    Schedule, Style,
 };
 use super::report::{self, HwReport};
 use super::TechLib;
@@ -76,9 +77,16 @@ fn layer_blocks(
     let ranges = vec![in_range; n_in];
     let acc_bits = report::layer_acc_bits(qann, k);
 
-    // constant-multiplication network realizing the inner products
+    // constant-multiplication network realizing the inner products; its
+    // switching scales with the layer's nonzero inputs (zero operands
+    // toggle nothing), so it is gated on layer occupancy
     let gis: Vec<usize> = solve_layer_graphs(b, qann, k, style, "parallel");
-    let net = b.block(BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges }, 1, 1.0);
+    let net = b.gated_block(
+        BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges },
+        1,
+        1.0,
+        Gate::Layer(k),
+    );
 
     // bias adder + activation per neuron
     let bias = b.block(BlockKind::Adder { bits: acc_bits }, n_out, 1.0);

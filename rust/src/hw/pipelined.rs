@@ -27,8 +27,8 @@
 //! `hw::verilog`.
 
 use super::design::{
-    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, Schedule,
-    Style,
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, Gate, LayerCompute, LayerPlan,
+    Schedule, Style,
 };
 use super::parallel;
 use super::report::{self, HwReport};
@@ -85,17 +85,21 @@ impl Architecture for PipelinedParallel {
                     .iter()
                     .map(|(t, tier)| b.solved(t, *tier))
                     .collect();
-                let net = b.block(
+                let net = b.gated_block(
                     BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: vec![in_range] },
                     1,
                     1.0,
+                    Gate::Layer(k),
                 );
                 // per-neuron adder trees summing the column products:
-                // n_in - 1 adders per neuron, log2-depth on the path
-                let tree = b.block(
+                // n_in - 1 adders per neuron, log2-depth on the path;
+                // like the product graphs they only toggle under nonzero
+                // column products, so they share the layer gate
+                let tree = b.gated_block(
                     BlockKind::Adder { bits: acc_bits },
                     n_out * n_in.saturating_sub(1),
                     1.0,
+                    Gate::Layer(k),
                 );
                 path.push(net);
                 for _ in 0..tree_depth(n_in) {
@@ -107,10 +111,11 @@ impl Architecture for PipelinedParallel {
                 // graph styles shared verbatim with the combinational design
                 let gis = parallel::solve_layer_graphs(b, qann, k, style, "pipelined");
                 let ranges = vec![in_range; n_in];
-                let net = b.block(
+                let net = b.gated_block(
                     BlockKind::ShiftAdds { graphs: gis.clone(), input_ranges: ranges },
                     1,
                     1.0,
+                    Gate::Layer(k),
                 );
                 path.push(net);
                 LayerCompute::Graphs(gis)

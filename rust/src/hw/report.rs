@@ -28,6 +28,10 @@ pub struct HwReport {
     /// number of addition/subtraction operations in the constant-
     /// multiplication network (0 for behavioral styles)
     pub adders: usize,
+    /// energy per inference (pJ) discounted by observed workload
+    /// activity (`Design::cost_with_activity`); `None` when the report
+    /// was priced worst-case only. Always ≤ `energy_pj` when present.
+    pub workload_energy_pj: Option<f64>,
 }
 
 impl HwReport {
@@ -52,6 +56,7 @@ impl HwReport {
             energy_pj,
             power_mw: if latency_ns > 0.0 { energy_pj / latency_ns } else { 0.0 },
             adders,
+            workload_energy_pj: None,
         }
     }
 }

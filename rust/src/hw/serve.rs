@@ -58,7 +58,9 @@
 //!
 //! [`mcm::engine`]: crate::mcm::engine
 
-use super::design::{Architecture, ArchKind, Design, LayerCompute, LayerPlan, Schedule, Style};
+use super::design::{
+    ActivityProfile, Architecture, ArchKind, Design, LayerCompute, LayerPlan, Schedule, Style,
+};
 use super::netsim::step_cycles;
 use super::report;
 use crate::ann::dataset::Sample;
@@ -173,6 +175,11 @@ pub struct BatchRun {
     /// retires one sample per cycle (`stages + len`); see
     /// [`Schedule::throughput_cycles`]
     pub throughput_cycles: usize,
+    /// per-layer switching activity observed under this batch's actual
+    /// sample stream (integer nonzero-input totals, so shard merges are
+    /// exact): what [`Design::cost_with_activity`] prices workload
+    /// energy from
+    pub activity: ActivityProfile,
 }
 
 impl BatchRun {
@@ -239,21 +246,39 @@ impl Default for ServeConfig {
     }
 }
 
+/// Parse one `SIMURG_SERVE_THREADS` value. Split out of [`serve_threads`]
+/// so rejection is testable without touching the process environment:
+/// `0` is an explicit error (a zero-thread serve dial is always a
+/// mistake, not a request for the default), as is anything that isn't an
+/// integer — both previously fell through *silently* to the autodetected
+/// default, hiding typos like `SIMURG_SERVE_THREADS=O8`.
+fn parse_serve_threads(v: &str) -> Result<usize, String> {
+    match v.trim().parse::<usize>() {
+        Ok(0) => Err(format!("SIMURG_SERVE_THREADS={v}: 0 is not a thread count")),
+        Ok(t) => Ok(t),
+        Err(_) => Err(format!("SIMURG_SERVE_THREADS={v}: not an integer")),
+    }
+}
+
 /// The process-wide serve-side thread count: `SIMURG_SERVE_THREADS` when
 /// set to a positive integer, else the machine's available parallelism
-/// capped at 8. Read once per process — every layer that fans out
-/// (sharded serving, evaluator chunking, sweep workers) derives from this
-/// single dial so they cannot double-subscribe cores.
+/// capped at 8. A set-but-invalid value (zero, garbage) logs one warning
+/// to stderr and falls back to the autodetected default rather than
+/// being silently swallowed. Read once per process — every layer that
+/// fans out (sharded serving, evaluator chunking, sweep workers) derives
+/// from this single dial so they cannot double-subscribe cores.
 pub fn serve_threads() -> usize {
     static THREADS: OnceLock<usize> = OnceLock::new();
     *THREADS.get_or_init(|| {
-        std::env::var("SIMURG_SERVE_THREADS")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .filter(|&t| t >= 1)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map_or(1, |p| p.get()).min(8)
-            })
+        let auto = || std::thread::available_parallelism().map_or(1, |p| p.get()).min(8);
+        match std::env::var("SIMURG_SERVE_THREADS") {
+            Ok(v) => parse_serve_threads(&v).unwrap_or_else(|e| {
+                let t = auto();
+                eprintln!("warning: {e}; using {t} threads");
+                t
+            }),
+            Err(_) => auto(),
+        }
     })
 }
 
@@ -309,12 +334,16 @@ pub fn simulate_batch_with(design: &Design, inputs: &BatchInputs, cfg: &ServeCon
     );
     let mut outputs = vec![0i32; n_outputs * n];
     let mut off = 0usize;
+    // activity totals are integers, so the shard merge is exact — the
+    // merged run stays bit-identical (PartialEq) to the scalar path
+    let mut activity = ActivityProfile::new(design.layers.len());
     for r in &runs {
         for m in 0..n_outputs {
             outputs[m * n + off..m * n + off + r.len]
                 .copy_from_slice(&r.outputs[m * r.len..(m + 1) * r.len]);
         }
         off += r.len;
+        activity.merge(&r.activity);
     }
     debug_assert_eq!(off, n, "shards must partition the batch");
     BatchRun {
@@ -323,6 +352,7 @@ pub fn simulate_batch_with(design: &Design, inputs: &BatchInputs, cfg: &ServeCon
         len: n,
         cycles,
         throughput_cycles: design.schedule.throughput_cycles(&design.qann.structure, n),
+        activity,
     }
 }
 
@@ -479,7 +509,12 @@ fn batch_feedforward(design: &Design, inputs: &BatchInputs) -> BatchRun {
         cur.extend(inputs.feature(i).iter().map(|&x| x as i64));
     }
     let mut n_cur = inputs.features();
+    let mut activity = ActivityProfile::new(design.layers.len());
+    activity.samples = n as u64;
     for (k, layer) in design.layers.iter().enumerate() {
+        // record switching activity before computing: the layer's inputs
+        // are what its constant-multiplication network toggles under
+        activity.layer_active[k] = cur.iter().filter(|&&v| v != 0).count() as u64;
         // pre-bias inner products, truncated to the activation domain at
         // exactly the point the per-input interpreter truncates (`y as i64`)
         let inner: Vec<i64> = match &layer.compute {
@@ -554,6 +589,7 @@ fn batch_feedforward(design: &Design, inputs: &BatchInputs) -> BatchRun {
         len: n,
         cycles: design.cycles(),
         throughput_cycles: design.schedule.throughput_cycles(&qann.structure, n),
+        activity,
     }
 }
 
@@ -601,7 +637,12 @@ fn batch_layer_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
     for i in 0..inputs.features() {
         cur.extend(inputs.feature(i).iter().map(|&x| x as i64));
     }
+    let mut activity = ActivityProfile::new(design.layers.len());
+    activity.samples = n as u64;
     for (k, layer) in design.layers.iter().enumerate() {
+        // nonzero broadcast inputs: the layer's MAC product paths only
+        // toggle on those cycles (the Gate::Layer discount)
+        activity.layer_active[k] = cur.iter().filter(|&&v| v != 0).count() as u64;
         let coefs = mac_coefs(design, layer);
         let mut acc = vec![0i64; layer.n_out * n];
         for i in 0..layer.n_in {
@@ -637,6 +678,7 @@ fn batch_layer_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
         len: n,
         cycles,
         throughput_cycles: design.schedule.throughput_cycles(&qann.structure, n),
+        activity,
     }
 }
 
@@ -650,7 +692,12 @@ fn batch_neuron_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
     for i in 0..inputs.features() {
         regs.extend(inputs.feature(i).iter().map(|&x| x as i64));
     }
+    let mut activity = ActivityProfile::new(design.layers.len());
+    activity.samples = n as u64;
     for (k, layer) in design.layers.iter().enumerate() {
+        // nonzero held inputs: the shared MAC's product path only
+        // toggles on those operand cycles (the Gate::Net discount)
+        activity.layer_active[k] = regs.iter().filter(|&&v| v != 0).count() as u64;
         let coefs = mac_coefs(design, layer);
         let mut next = vec![0i64; layer.n_out * n];
         for m in 0..layer.n_out {
@@ -683,6 +730,7 @@ fn batch_neuron_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
         len: n,
         cycles,
         throughput_cycles: design.schedule.throughput_cycles(&qann.structure, n),
+        activity,
     }
 }
 
@@ -1076,6 +1124,62 @@ mod tests {
         assert_eq!(fanout_threads(FANOUT_MIN_WORK - 1), 1);
         assert_eq!(fanout_threads(FANOUT_MIN_WORK), serve_threads());
         assert_eq!(fanout_threads(usize::MAX), serve_threads());
+    }
+
+    #[test]
+    fn serve_threads_parser_accepts_positive_rejects_zero_and_garbage() {
+        // regression: 0 and unparseable values used to fall through
+        // silently to the autodetected default
+        assert_eq!(parse_serve_threads("1"), Ok(1));
+        assert_eq!(parse_serve_threads(" 8 "), Ok(8));
+        assert_eq!(parse_serve_threads("32"), Ok(32));
+        let zero = parse_serve_threads("0").unwrap_err();
+        assert!(zero.contains("0 is not a thread count"), "{zero}");
+        for garbage in ["", "O8", "4.0", "-2", "eight", "3 threads"] {
+            let e = parse_serve_threads(garbage).unwrap_err();
+            assert!(e.contains("not an integer"), "{garbage:?}: {e}");
+            assert!(e.contains("SIMURG_SERVE_THREADS"), "{garbage:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn batch_activity_counts_nonzero_layer_inputs() {
+        let q = qann("16-10-10", 6, 27);
+        let rows = random_rows(21, 16, 14);
+        let mut zeroed = rows.clone();
+        zeroed[3] = vec![0; 16]; // an all-zero sample contributes nothing to layer 0
+        let batch = BatchInputs::from_rows(&zeroed);
+        for (a, s) in design_points() {
+            let d = a.elaborate(&q, s);
+            let run = simulate_batch(&d, &batch);
+            let act = &run.activity;
+            assert_eq!(act.samples, 21, "{} {}", a.name(), s.name());
+            assert_eq!(act.layer_active.len(), d.layers.len());
+            // layer 0 activity is the literal count of nonzero inputs,
+            // identical across architectures (same sample stream)
+            let nz0: u64 = zeroed
+                .iter()
+                .map(|r| r.iter().filter(|&&x| x != 0).count() as u64)
+                .sum();
+            assert_eq!(act.layer_active[0], nz0, "{} {}", a.name(), s.name());
+            // no layer can be more active than its width allows
+            for (k, &active) in act.layer_active.iter().enumerate() {
+                let bound = (d.layers[k].n_in * 21) as u64;
+                assert!(active <= bound, "{} {} layer {k}: {active} > {bound}", a.name(), s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn shard_merged_activity_equals_scalar_activity() {
+        let q = qann("16-16-10", 6, 33);
+        let rows = random_rows(97, 16, 21);
+        let batch = BatchInputs::from_rows(&rows);
+        let d = designs().design(&q, ArchKind::SmacNeuron, Style::Behavioral);
+        let scalar = simulate_batch_with(&d, &batch, &ServeConfig { threads: 1, shard_min: 0 });
+        let sharded = simulate_batch_with(&d, &batch, &ServeConfig { threads: 5, shard_min: 0 });
+        assert_eq!(sharded.activity, scalar.activity, "integer merge must be exact");
+        assert_eq!(sharded, scalar);
     }
 
     #[test]

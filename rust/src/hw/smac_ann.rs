@@ -11,8 +11,8 @@
 //! `hw::netsim` and `hw::verilog`.
 
 use super::design::{
-    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, McmRef,
-    Schedule, Style,
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, Gate, LayerCompute, LayerPlan,
+    McmRef, Schedule, Style,
 };
 use super::report::{self, HwReport};
 use super::TechLib;
@@ -97,9 +97,16 @@ fn net_blocks(b: &mut DesignBuilder, qann: &QuantizedAnn, style: Style) {
     let w_mux = b.block(BlockKind::ConstantMux { n: total_weights, bits: stored_bits }, 1, cycles);
     b.block(BlockKind::ConstantMux { n: total_biases, bits: acc_bits }, 1, cycles);
 
+    // the single shared product/accumulate path serves every layer in
+    // turn, so its switching scales with whole-net occupancy (Gate::Net)
     let (mult_chain, mcm_graph): (Vec<usize>, Option<usize>) = match style {
         Style::Behavioral => {
-            let m = b.block(BlockKind::Multiplier { w_bits: stored_bits, x_bits: 8 }, 1, cycles);
+            let m = b.gated_block(
+                BlockKind::Multiplier { w_bits: stored_bits, x_bits: 8 },
+                1,
+                cycles,
+                Gate::Net,
+            );
             (vec![m], None)
         }
         Style::Mcm => {
@@ -112,20 +119,26 @@ fn net_blocks(b: &mut DesignBuilder, qann: &QuantizedAnn, style: Style) {
                 .flat_map(|l| l.iter().flatten().map(|&w| w >> sls))
                 .collect();
             let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
-            let mcm = b.block(
+            let mcm = b.gated_block(
                 BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![(-128, 127)] },
                 1,
                 cycles,
+                Gate::Net,
             );
             // product mux selecting among all distinct products
-            let p_mux = b.block(BlockKind::Mux { n: total_weights, bits: stored_bits + 8 }, 1, cycles);
+            let p_mux = b.gated_block(
+                BlockKind::Mux { n: total_weights, bits: stored_bits + 8 },
+                1,
+                cycles,
+                Gate::Net,
+            );
             (vec![mcm, p_mux], Some(gi))
         }
         other => panic!("smac_ann has no {} style", other.name()),
     };
 
-    let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, cycles);
-    let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, cycles);
+    let acc = b.gated_block(BlockKind::Adder { bits: acc_bits }, 1, cycles, Gate::Net);
+    let reg = b.gated_block(BlockKind::Register { bits: acc_bits }, 1, cycles, Gate::Net);
     b.block(BlockKind::ActivationUnit { acc_bits }, 1, per_neuron);
     // layer-output holding registers (max η words of 8 bits)
     b.block(BlockKind::Register { bits: 8 }, max_outputs, per_neuron);

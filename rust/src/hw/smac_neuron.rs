@@ -17,8 +17,8 @@
 //! `hw::netsim` and `hw::verilog`.
 
 use super::design::{
-    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, LayerCompute, LayerPlan, McmRef,
-    Schedule, Style,
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, Gate, LayerCompute, LayerPlan,
+    McmRef, Schedule, Style,
 };
 use super::report::{self, HwReport};
 use super::TechLib;
@@ -69,14 +69,34 @@ impl Architecture for SmacNeuron {
         // shift; the back-shift is wiring (paper Sec. IV-C)
         let (stored, sls) = design::stored_layer(qann, k);
 
+        // the product path (weight select, product, accumulate) only
+        // toggles under nonzero broadcast inputs, so it is gated on
+        // layer occupancy; control, bias, activation and output
+        // registers fire regardless
         let mcm = match style {
             Style::Behavioral => {
                 for row in &stored {
                     let w_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1);
-                    let w_mux = b.block(BlockKind::ConstantMux { n: n_in, bits: w_bits }, 1, fires);
-                    let mult = b.block(BlockKind::Multiplier { w_bits, x_bits: 8 }, 1, fires);
-                    let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, fires);
-                    let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, fires);
+                    let w_mux = b.gated_block(
+                        BlockKind::ConstantMux { n: n_in, bits: w_bits },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
+                    let mult = b.gated_block(
+                        BlockKind::Multiplier { w_bits, x_bits: 8 },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
+                    let acc =
+                        b.gated_block(BlockKind::Adder { bits: acc_bits }, 1, fires, Gate::Layer(k));
+                    let reg = b.gated_block(
+                        BlockKind::Register { bits: acc_bits },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
                     b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
                     b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
                     b.block(BlockKind::Register { bits: 8 }, 1, fires); // out reg
@@ -88,17 +108,29 @@ impl Architecture for SmacNeuron {
                 // single MCM block over all stored weights of the layer
                 let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
                 let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
-                let mcm_blk = b.block(
+                let mcm_blk = b.gated_block(
                     BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![in_range] },
                     1,
                     fires,
+                    Gate::Layer(k),
                 );
                 for row in &stored {
                     // product width of this neuron's largest stored weight
                     let p_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8;
-                    let p_mux = b.block(BlockKind::Mux { n: n_in, bits: p_bits }, 1, fires);
-                    let acc = b.block(BlockKind::Adder { bits: acc_bits }, 1, fires);
-                    let reg = b.block(BlockKind::Register { bits: acc_bits }, 1, fires);
+                    let p_mux = b.gated_block(
+                        BlockKind::Mux { n: n_in, bits: p_bits },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
+                    let acc =
+                        b.gated_block(BlockKind::Adder { bits: acc_bits }, 1, fires, Gate::Layer(k));
+                    let reg = b.gated_block(
+                        BlockKind::Register { bits: acc_bits },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
                     b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
                     b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
                     b.block(BlockKind::Register { bits: 8 }, 1, fires); // out reg

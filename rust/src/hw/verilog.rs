@@ -420,7 +420,16 @@ fn emit_smac_neuron(design: &Design, module: &str) -> String {
 
     // the sequential MAC schedule: layer k runs for ι_k + 1 cycles
     let _ = writeln!(v, "  always @(posedge clk) begin");
-    let _ = writeln!(v, "    if (rst) begin\n      layer <= 0; cnt <= 0; done <= 0;\n    end else if (start || layer < {}) begin", st.num_layers());
+    let _ = writeln!(v, "    if (rst) begin");
+    let _ = writeln!(v, "      layer <= 0; cnt <= 0; done <= 0;");
+    // clear every accumulator: the first MAC step reads it, and an
+    // uninitialized X would poison every output in a 4-state simulator
+    for (k, layer) in design.layers.iter().enumerate() {
+        for m in 0..layer.n_out {
+            let _ = writeln!(v, "      acc_{k}_{m} <= 0;");
+        }
+    }
+    let _ = writeln!(v, "    end else if (start || layer < {}) begin", st.num_layers());
     for (k, layer) in design.layers.iter().enumerate() {
         let (_, sls, mcm) = mac_layer(design, k);
         let _ = writeln!(v, "      if (layer == {k}) begin");
@@ -471,8 +480,8 @@ fn emit_smac_neuron(design: &Design, module: &str) -> String {
 /// rendered as word-level register transfers gated on the bit counter;
 /// multiplierless styles tap the embedded product graphs and emit no `*`.
 /// Like the SMAC emitters, the module computes one inference per
-/// rst/start handshake (no self-restart); closing the external-simulator
-/// loop on these netlists is ROADMAP §External HDL equivalence.
+/// rst/start handshake (no self-restart); `hw::cosim` closes the
+/// external-simulator loop on these netlists when `iverilog` is present.
 ///
 /// The selection fabric and commit body deliberately mirror
 /// [`emit_smac_neuron`] statement for statement (only the bit-counter
@@ -804,11 +813,34 @@ pub fn smac_ann_verilog(qann: &QuantizedAnn, module: &str) -> String {
 /// Self-checking testbench with golden vectors from the bit-accurate
 /// simulator (`ann::sim`) — the files SIMURG generates "to verify the ANN
 /// design" (paper Sec. VI). `control` selects the DUT handshake: the
-/// time-multiplexed architectures expose `rst`/`start`/`done`, the
-/// feedforward (parallel / pipelined) modules only `clk` — the testbench
-/// must connect exactly the ports the module declares or an external
-/// simulator rejects it at elaboration.
+/// time-multiplexed architectures expose `rst`/`start`/`done` and get a
+/// fresh rst/start pulse per sample (`done` is sticky, so re-arming is
+/// the only way a second inference ever runs), the feedforward
+/// (parallel / pipelined) modules only `clk` — the testbench must connect
+/// exactly the ports the module declares or an external simulator rejects
+/// it at elaboration.
+///
+/// Beyond output values the bench asserts the *cycle count*: handshake
+/// designs count non-`done` clocks against the schedule's closed form,
+/// feedforward designs sample their outputs exactly `cycles` clocks after
+/// the inputs settle — either way a latency drift in an emitter fails the
+/// bench, which is what lets [`crate::hw::cosim`] use it as a behavioral
+/// gate against `netsim`.
 pub fn testbench(qann: &QuantizedAnn, samples: &[Sample], dut: &str, cycles: usize, control: bool) -> String {
+    let rows: Vec<Vec<i32>> = samples.iter().map(|s| s.features_q7().to_vec()).collect();
+    testbench_rows(qann, &rows, dut, cycles, control)
+}
+
+/// [`testbench`] over raw Q1.7 input rows — the entry point `hw::cosim`
+/// drives with the differential corpus (whose vectors are synthesized,
+/// not dataset samples).
+pub fn testbench_rows(
+    qann: &QuantizedAnn,
+    rows: &[Vec<i32>],
+    dut: &str,
+    cycles: usize,
+    control: bool,
+) -> String {
     let st = &qann.structure;
     let n_out = st.layer_outputs(st.num_layers() - 1);
     let mut v = String::new();
@@ -839,19 +871,49 @@ pub fn testbench(qann: &QuantizedAnn, samples: &[Sample], dut: &str, cycles: usi
     let _ = writeln!(v, "  {dut} dut ({});", ports.join(", "));
     let _ = writeln!(v, "  always #1 clk = ~clk;");
     let _ = writeln!(v, "  integer errors = 0;");
-    let _ = writeln!(v, "  initial begin");
     if control {
-        let _ = writeln!(v, "    #4 rst = 0; start = 1;");
-    } else {
-        let _ = writeln!(v, "    #4;");
+        // latency counter: reset clears it, every non-done clock
+        // increments it. The edge that raises `done` still counts —
+        // `done` is a nonblocking write, so this block reads its
+        // pre-edge value — which makes `cyc` exactly the number of
+        // clocks the inference took.
+        let _ = writeln!(v, "  integer cyc = 0;");
+        let _ = writeln!(v, "  always @(posedge clk) begin");
+        let _ = writeln!(v, "    if (rst) cyc = 0;");
+        let _ = writeln!(v, "    else if (!done) cyc = cyc + 1;");
+        let _ = writeln!(v, "  end");
     }
-    for s in samples {
-        let x = s.features_q7();
-        let golden = sim::forward(qann, &x);
-        for (i, xi) in x.iter().enumerate() {
+    let _ = writeln!(v, "  initial begin");
+    let _ = writeln!(v, "    $dumpfile(\"tb_{dut}.vcd\");");
+    let _ = writeln!(v, "    $dumpvars(0, tb_{dut});");
+    for row in rows {
+        let golden = sim::forward(qann, row);
+        for (i, xi) in row.iter().enumerate() {
             let _ = writeln!(v, "    x{i} = {xi};");
         }
-        let _ = writeln!(v, "    #{};", 2 * cycles + 4);
+        if control {
+            // re-arm the handshake: hold rst over two clock edges (it
+            // clears the FSM counters, the accumulators and the sticky
+            // `done`), release, then the inference completes in exactly
+            // `cycles` edges; sampling two time units after the last
+            // edge keeps every sample aligned to the same clock phase
+            let _ = writeln!(v, "    rst = 1; start = 0;");
+            let _ = writeln!(v, "    #4 rst = 0; start = 1;");
+            let _ = writeln!(v, "    #{};", 2 * cycles + 2);
+            let _ = writeln!(
+                v,
+                "    if (done !== 1) begin errors = errors + 1; $display(\"MISMATCH done: %b != 1\", done); end"
+            );
+            let _ = writeln!(
+                v,
+                "    if (cyc !== {cycles}) begin errors = errors + 1; $display(\"MISMATCH cycles: %0d != {cycles}\", cyc); end"
+            );
+        } else {
+            // feedforward latency is positional: outputs are sampled
+            // exactly `cycles` clocks after the inputs settle, so an
+            // emitter latency drift fails the value checks below
+            let _ = writeln!(v, "    #{};", 2 * cycles);
+        }
         for (m, g) in golden.iter().enumerate() {
             let _ = writeln!(
                 v,

@@ -9,6 +9,7 @@
 //!   simurg train   --structure 16-10 --trainer zaal --backend pjrt
 //!   simurg verilog --structure 16-10 --trainer zaal --arch parallel --style cmvm --out out/
 //!   simurg archs                      list registered (architecture x style) design points
+//!   simurg cosim   --structure 16-10 --trainer zaal [--samples 6] [--out out/]
 //!   simurg mcm     --constants 11,3,5,13 [--alg dbr|cse|exact|engine]
 //!
 //! Common flags: --runs N --seed N --threads N --data-dir DIR --out DIR.
@@ -22,6 +23,7 @@ use simurg::ann::train::Trainer;
 use simurg::coordinator::flow::{run_flow, FlowConfig};
 use simurg::coordinator::report::{self, Summary};
 use simurg::coordinator::sweep::{sweep_all_with_caches, SweepConfig};
+use simurg::hw::cosim::{self, CosimOutcome};
 use simurg::hw::daemon::{argmax, Daemon, DaemonConfig};
 use simurg::hw::serve::{self, BatchInputs, ServeConfig};
 use simurg::hw::{verilog, ArchKind, Architecture, Style, TechLib};
@@ -171,9 +173,12 @@ fn cmd_figure(args: &Args) -> Result<()> {
         let text = report::figure(&outcomes, f, &lib);
         println!("{text}");
         std::fs::write(dir.join(format!("fig_{f}.txt")), &text)?;
+        // the CSV's workload-energy column prices each design point
+        // under the test-set sample stream (activity-based, never above
+        // the worst-case energy column)
         std::fs::write(
             dir.join(format!("fig_{f}.csv")),
-            report::figure_csv(&outcomes, f, &lib),
+            report::figure_csv(&outcomes, f, &lib, Some(&data.test)),
         )?;
     }
     // figure pricing itself re-solves heavily; report the process totals
@@ -581,6 +586,50 @@ fn cmd_verilog(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cosim` — the external EDA gate, on demand: train/load one
+/// experiment, emit every registry design point's Verilog plus a
+/// self-checking testbench over the shared differential corpus, and run
+/// them under Icarus Verilog. Outputs *and* cycle counts must match the
+/// architectural simulator bit-for-bit; exits nonzero on any mismatch.
+fn cmd_cosim(args: &Args) -> Result<()> {
+    let data = dataset(args);
+    let mut cfg = FlowConfig::new(parse_structure(args)?, parse_trainer(args)?);
+    cfg.runs = args.get_usize("runs", 1)?;
+    cfg.seed = args.get_usize("seed", 1)? as u64;
+    let o = run_flow(&data, &cfg, None)?;
+    let qann = &o.quant.qann;
+
+    let n = args.get_usize("samples", 6)?.max(1);
+    let rows = cosim::corpus(qann.structure.inputs, n, cfg.seed ^ 0xc051);
+    let dir = out_dir(args).join("cosim");
+    if !cosim::iverilog_available() {
+        println!("iverilog/vvp not on PATH: every point reports skipped (install Icarus to arm)");
+    }
+    let results = cosim::run_all(qann, &rows, &dir);
+    let mut failed = 0usize;
+    for (module, outcome) in &results {
+        let verdict = match outcome {
+            CosimOutcome::Pass => "PASS",
+            CosimOutcome::Skipped => "skipped",
+            CosimOutcome::Fail { .. } => {
+                failed += 1;
+                "FAIL"
+            }
+        };
+        println!("{module:<44}{verdict}");
+    }
+    println!(
+        "{} design points x {} vectors; artifacts under {}",
+        results.len(),
+        rows.len(),
+        dir.display()
+    );
+    if failed > 0 {
+        bail!("{failed} design point(s) diverged from the architectural simulator");
+    }
+    Ok(())
+}
+
 fn cmd_mcm(args: &Args) -> Result<()> {
     let consts: Vec<i64> = args
         .get("constants")
@@ -612,7 +661,7 @@ fn cmd_mcm(args: &Args) -> Result<()> {
 
 fn usage() -> &'static str {
     "SIMURG-RS — efficient hardware realizations of feedforward ANNs
-usage: simurg <table|figure|flow|serve|train|verilog|archs|mcm> [flags]
+usage: simurg <table|figure|flow|serve|train|verilog|archs|cosim|mcm> [flags]
   table <1|2|3|4>           regenerate a paper table
   figure <10..18|all>       regenerate a paper figure (+ CSV in --out)
   flow                      full flow for one --structure/--trainer
@@ -624,6 +673,9 @@ usage: simurg <table|figure|flow|serve|train|verilog|archs|mcm> [flags]
   verilog                   emit Verilog + testbench + synthesis script
                             for --arch ARCH --style STYLE (see `archs`)
   archs                     list the registered (architecture x style) points
+  cosim                     run every design point through Icarus Verilog
+                            against the architectural simulator (--samples N
+                            corpus vectors; skips when iverilog is absent)
   mcm                       optimize --constants with --alg dbr|cse|exact|engine
 flags: --structure 16-16-10 --trainer zaal|pytorch|matlab --runs N --seed N
        --threads N --data-dir DIR --data-seed N --out DIR --eval native|pjrt
@@ -671,6 +723,10 @@ fn main() -> Result<()> {
             ],
         )?),
         "archs" => cmd_archs(),
+        "cosim" => cmd_cosim(&Args::parse(
+            rest,
+            &["structure", "trainer", "runs", "seed", "data-dir", "data-seed", "samples", "out"],
+        )?),
         "mcm" => cmd_mcm(&Args::parse(rest, &["constants", "alg"])?),
         "help" | "--help" | "-h" => {
             println!("{}", usage());

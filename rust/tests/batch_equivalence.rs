@@ -12,8 +12,8 @@ use simurg::ann::model::{Ann, Init};
 use simurg::ann::quant::QuantizedAnn;
 use simurg::ann::sim;
 use simurg::ann::structure::{Activation, AnnStructure};
-use simurg::hw::design::{design_points, LayerCompute, Style};
-use simurg::hw::netsim::simulate;
+use simurg::hw::design::{design_points, ActivityProfile, LayerCompute, Style};
+use simurg::hw::netsim::{activity_of, simulate};
 use simurg::hw::serve::{simulate_batch, simulate_batch_with, BatchInputs, ServeConfig};
 use simurg::hw::Architecture;
 use simurg::num::Rng;
@@ -231,6 +231,32 @@ fn sharded_interpreter_is_bit_identical_across_thread_counts() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn batch_activity_is_the_sum_of_per_row_activity_profiles() {
+    // the workload-energy model's input contract: the batch interpreters
+    // record exactly the per-layer nonzero-input totals that merging the
+    // per-input `netsim::activity_of` profiles row by row would produce —
+    // for every design point, and unchanged by the shard split/merge
+    let mut rng = Rng::new(60221023);
+    let qann = random_qann("16-10-10", 6, &mut rng);
+    let mut rows = random_rows(40, 16, &mut rng);
+    rows.push(vec![0; 16]); // an all-zero row still counts as a sample
+    let batch = BatchInputs::from_rows(&rows);
+    for (arch, style) in design_points() {
+        let design = arch.elaborate(&qann, style);
+        let mut want = ActivityProfile::new(design.layers.len());
+        for row in &rows {
+            want.merge(&activity_of(&design, row));
+        }
+        assert_eq!(want.samples, rows.len() as u64);
+        let run = simulate_batch(&design, &batch);
+        assert_eq!(run.activity, want, "{} {}", arch.name(), style.name());
+        let sharded =
+            simulate_batch_with(&design, &batch, &ServeConfig { threads: 4, shard_min: 0 });
+        assert_eq!(sharded.activity, want, "{} {} sharded", arch.name(), style.name());
     }
 }
 

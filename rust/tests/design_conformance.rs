@@ -373,6 +373,58 @@ fn cycle_formulas_hold_for_every_design_point() {
 }
 
 #[test]
+fn digit_serial_testbench_rearms_the_handshake_every_sample() {
+    // regression: the control-architecture bench used to arm rst/start
+    // once, so only the first sample of a multi-sample bench ever ran
+    // (the sticky `done` never fell and every later check read stale
+    // outputs); every sample must re-arm the handshake and re-check the
+    // sticky done plus the bit-serial cycle count
+    use simurg::hw::verilog;
+    let q = qann("16-10", 6, 5);
+    let (arch, style) = design_points()
+        .into_iter()
+        .find(|(a, s)| a.name() == "digit_serial" && *s == Style::Behavioral)
+        .unwrap();
+    let d = arch.elaborate(&q, style);
+    let cycles = d.cycles();
+    let bits = simurg::hw::digit_serial::serial_bits(&q) as usize;
+    assert_eq!(cycles, bits * q.structure.smac_neuron_cycles(), "B x sum(iota+1)");
+    let rows: Vec<Vec<i32>> = (0..4i32).map(|s| vec![s * 17 % 128; 16]).collect();
+    let tb = verilog::testbench_rows(&q, &rows, "ann_ds", cycles, true);
+    assert_eq!(tb.matches("rst = 1; start = 0;").count(), rows.len(), "{tb}");
+    assert_eq!(tb.matches("#4 rst = 0; start = 1;").count(), rows.len());
+    assert_eq!(tb.matches("if (done !== 1)").count(), rows.len());
+    // the cycle self-check carries the full bit-serial count, not the
+    // layer-sequential one it once inherited
+    assert_eq!(tb.matches(&format!("if (cyc !== {cycles})")).count(), rows.len());
+}
+
+#[test]
+fn control_verilog_reset_clears_every_accumulator() {
+    // regression: rst used to leave the acc_* registers uninitialized —
+    // the two-state architectural model passed while any 4-state
+    // simulator X-poisoned the first inference through the MAC chain
+    use simurg::hw::verilog;
+    let q = qann("16-10-10", 6, 7);
+    for name in ["smac_neuron", "digit_serial"] {
+        let (arch, style) = design_points()
+            .into_iter()
+            .find(|(a, s)| a.name() == name && *s == Style::Behavioral)
+            .unwrap();
+        let d = arch.elaborate(&q, style);
+        let v = verilog::verilog(&d, "ann_rst");
+        for k in 0..q.structure.num_layers() {
+            for m in 0..q.structure.layer_outputs(k) {
+                assert!(
+                    v.contains(&format!("acc_{k}_{m} <= 0;")),
+                    "{name}: rst must clear acc_{k}_{m}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn style_panics_are_confined_to_unsupported_combinations() {
     // every advertised combination elaborates; the registry never hands
     // out an unsupported (arch, style) pair
