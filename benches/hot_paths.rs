@@ -57,8 +57,10 @@ fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
 /// criteria (>= 3x batched throughput on the mcm serving path at batch
 /// >= 64; sharded batch execution >= 2x the scalar loop at large batches
 /// when >= 4 worker threads are available; digit-serial modeled area
-/// below combinational parallel; activity-based energy never above the
-/// worst case at any point).
+/// below combinational parallel; systolic modeled batch throughput
+/// strictly between the one-per-cycle pipeline and the serializing
+/// SMAC_NEURON MAC; activity-based energy never above the worst case at
+/// any point).
 fn bench_batch_netsim(smoke: bool) {
     let data = if smoke {
         Dataset::synthetic_with_sizes(42, 300, 64)
@@ -82,6 +84,7 @@ fn bench_batch_netsim(smoke: bool) {
         (ArchKind::SmacNeuron, Style::Mcm),
         (ArchKind::SmacAnn, Style::Mcm),
         (ArchKind::DigitSerial, Style::Mcm),
+        (ArchKind::Systolic, Style::Mcm),
     ];
     let lib = simurg::hw::TechLib::tsmc40();
     let mut entries = String::new();
@@ -212,6 +215,31 @@ fn bench_batch_netsim(smoke: bool) {
         comb_run.throughput_cycles, pipe_run.throughput_cycles
     );
 
+    // systolic ring between its neighbors on modeled batch throughput:
+    // the ring streams at its bottleneck slot's interval, so on any
+    // multi-sample batch it must beat the serializing SMAC_NEURON MAC
+    // while the one-sample-per-cycle pipeline stays ahead of it
+    let ring = serve::designs().design(&qann, ArchKind::Systolic, Style::Mcm);
+    let mac = serve::designs().design(&qann, ArchKind::SmacNeuron, Style::Mcm);
+    let ring_cycles = serve::simulate_batch(&ring, &inputs).throughput_cycles;
+    let mac_cycles = serve::simulate_batch(&mac, &inputs).throughput_cycles;
+    println!(
+        "systolic batch throughput (batch = {n}): pipelined {} cyc < ring {ring_cycles} cyc < \
+         smac_neuron {mac_cycles} cyc",
+        pipe_run.throughput_cycles
+    );
+    assert!(
+        ring_cycles < mac_cycles,
+        "acceptance: the systolic ring must stream past the serializing MAC \
+         ({ring_cycles} !< {mac_cycles} cycles at batch {n})"
+    );
+    assert!(
+        pipe_run.throughput_cycles < ring_cycles,
+        "acceptance: the one-per-cycle pipeline must stay ahead of the ring \
+         ({} !< {ring_cycles} cycles at batch {n})",
+        pipe_run.throughput_cycles
+    );
+
     // digit-serial vs combinational parallel: the latency/area trade the
     // paper states, on the modeled figures of the standard net — the
     // serial datapath must be (much) smaller while paying for it in
@@ -238,6 +266,8 @@ fn bench_batch_netsim(smoke: bool) {
          \"pipelined_vs_combinational\": {{\"comb_batch_ns\": {comb_ns:.3}, \
          \"pipe_batch_ns\": {pipe_ns:.3}, \"speedup\": {pipe_speedup:.3}, \
          \"pipe_throughput_cycles\": {}, \"comb_throughput_cycles\": {}}},\n  \
+         \"systolic_between\": {{\"ring_throughput_cycles\": {ring_cycles}, \
+         \"smac_neuron_throughput_cycles\": {mac_cycles}}},\n  \
          \"digit_serial_vs_parallel\": {{\"ds_area_um2\": {:.3}, \"par_area_um2\": {:.3}, \
          \"ds_latency_ns\": {:.3}, \"par_latency_ns\": {:.3}, \"ds_cycles\": {}}},\n  \
          \"sharded\": {{\"batch\": {big_n}, \"threads\": {threads}, \

@@ -17,7 +17,7 @@
 //! probes for it once per process, and [`run_case`] returns
 //! [`CosimOutcome::Skipped`] instead of failing when the toolchain is
 //! absent — the repo's own tests stay hermetic, while the CI `cosim` job
-//! installs `iverilog` and turns the gate on for all thirteen points.
+//! installs `iverilog` and turns the gate on for all fifteen points.
 //! Every emitted file is left in the case directory either way, so a
 //! failing run's module, bench, log and VCD can be uploaded as artifacts.
 
@@ -80,7 +80,10 @@ pub struct CosimCase {
 /// Whether a design point carries the sequential rst/start/done
 /// handshake (mirrors `verilog::testbench_for`).
 fn has_control(design: &Design) -> bool {
-    matches!(design.arch, ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial)
+    matches!(
+        design.arch,
+        ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial | ArchKind::Systolic
+    )
 }
 
 /// Build the co-simulation case of one elaborated design over `rows`.
@@ -102,7 +105,7 @@ pub fn case_for(design: &Design, rows: &[Vec<i32>]) -> CosimCase {
 }
 
 /// Elaborate every registry design point of `qann` and pair it with a
-/// testbench over `rows` — the full thirteen-point gate.
+/// testbench over `rows` — the full fifteen-point gate.
 pub fn cases(qann: &QuantizedAnn, rows: &[Vec<i32>]) -> Vec<CosimCase> {
     design_points().into_iter().map(|(a, s)| case_for(&a.elaborate(qann, s), rows)).collect()
 }
@@ -183,7 +186,7 @@ pub fn run_case(case: &CosimCase, dir: &Path) -> CosimOutcome {
     }
 }
 
-/// Run the full thirteen-point gate for `qann` under `root` (one
+/// Run the full fifteen-point gate for `qann` under `root` (one
 /// subdirectory per design point), returning `(module, outcome)` pairs.
 pub fn run_all(qann: &QuantizedAnn, rows: &[Vec<i32>], root: &Path) -> Vec<(String, CosimOutcome)> {
     cases(qann, rows)
@@ -248,7 +251,7 @@ mod tests {
     fn run_case_skips_without_iverilog_and_passes_with_it() {
         // hermetic either way: Skipped when the external toolchain is
         // absent, a real compile+run (which must pass) when present —
-        // the CI `cosim` job takes the second branch for all 13 points
+        // the CI `cosim` job takes the second branch for all 15 points
         let q = qann("3-2", 6, 5);
         let rows = corpus(3, 2, 13);
         let d = Parallel.elaborate(&q, Style::Behavioral);

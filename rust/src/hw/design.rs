@@ -21,9 +21,10 @@
 //! call re-solves only the layers whose weights changed since the last
 //! call (tuner trajectories touch one weight per step).
 //!
-//! The five registry entries and their closed-form cycle models are
-//! tabulated in ARCHITECTURE.md; `rust/tests/arch_differential.rs`
-//! asserts the same formulas against the interpreters. End to end:
+//! The six registry entries and their cycle models — each a
+//! [`CycleProgram`] of `Fill`/`Steady`/`Drain` phases — are tabulated in
+//! ARCHITECTURE.md; `rust/tests/arch_differential.rs` asserts the same
+//! formulas against the interpreters. End to end:
 //!
 //! ```
 //! use simurg::ann::quant::QuantizedAnn;
@@ -88,11 +89,13 @@ impl Style {
     }
 }
 
-/// The three design architectures of paper Sec. III plus the two entries
-/// this reproduction adds to the latency/area trade-off curve: the
-/// layer-pipelined parallel variant (`hw::pipelined`) on the throughput
-/// end, and the digit-serial MAC (`hw::digit_serial`) on the area end
-/// (serial adders at 1 bit per cycle).
+/// The three design architectures of paper Sec. III plus the three
+/// entries this reproduction adds to the latency/area trade-off curve:
+/// the layer-pipelined parallel variant (`hw::pipelined`) on the
+/// throughput end, the digit-serial MAC (`hw::digit_serial`) on the area
+/// end (serial adders at 1 bit per cycle), and the systolic SMAC ring
+/// (`hw::systolic`) between them — SMAC_NEURON blocks overlapped across
+/// layers of *different* samples.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArchKind {
     Parallel,
@@ -100,6 +103,7 @@ pub enum ArchKind {
     SmacNeuron,
     SmacAnn,
     DigitSerial,
+    Systolic,
 }
 
 impl ArchKind {
@@ -110,6 +114,7 @@ impl ArchKind {
             ArchKind::SmacNeuron => "smac_neuron",
             ArchKind::SmacAnn => "smac_ann",
             ArchKind::DigitSerial => "digit_serial",
+            ArchKind::Systolic => "systolic",
         }
     }
 }
@@ -138,39 +143,151 @@ pub enum Schedule {
     /// scales with the quantized weight/accumulator bit widths, not just
     /// the layer/neuron counts: latency `B · Σ(ι_k + 1)`
     DigitSerial { bits: u32 },
+    /// the first 2-D schedule: a ring of `slots` SMAC_NEURON blocks, layer
+    /// `k` assigned round-robin to slot `k % slots`, neighbors passing
+    /// layer outputs along the ring. One sample's latency is still
+    /// `Σ(ι_k + 1)` (the layers execute in sequence around the ring), but
+    /// the slots overlap *different samples*: a new sample enters every
+    /// `max_s Σ_{k ≡ s} (ι_k + 1)` cycles — the bottleneck slot's work —
+    /// so batches stream like a pipeline whose stage time is the slowest
+    /// slot, not one cycle
+    Systolic { slots: usize },
+}
+
+/// One phase of a [`CycleProgram`]: the typed unit the cycle-program
+/// interpreter schedules batches with. `Fill`/`Drain` cycles are paid
+/// once per batch (ramping the overlap up/down); `Steady` cycles are paid
+/// once per *sample*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// cycles before the first sample reaches the steady-state bottleneck
+    /// (pipeline ramp-up) — paid once per batch
+    Fill(usize),
+    /// cycles per sample at steady state — the batch interval
+    Steady(usize),
+    /// cycles after the last sample leaves the bottleneck until its
+    /// outputs retire — paid once per batch
+    Drain(usize),
+}
+
+/// A schedule lowered to phases — the cycle-program interpreter every
+/// consumer (cost walk, `netsim`, `serve`'s batch stretching, the
+/// benches) reads latency and batch throughput from. Each [`Schedule`]
+/// variant *emits* its program ([`Schedule::program`]); the interpreter
+/// is two sums, so a new architecture only has to say where its cycles
+/// go, never touch the consumers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CycleProgram {
+    pub phases: Vec<Phase>,
+}
+
+impl CycleProgram {
+    /// Total `Fill` cycles (batch ramp-up).
+    pub fn fill(&self) -> usize {
+        self.phases.iter().map(|p| if let Phase::Fill(c) = p { *c } else { 0 }).sum()
+    }
+
+    /// Total `Steady` cycles (the per-sample interval at steady state).
+    pub fn steady(&self) -> usize {
+        self.phases.iter().map(|p| if let Phase::Steady(c) = p { *c } else { 0 }).sum()
+    }
+
+    /// Total `Drain` cycles (batch ramp-down).
+    pub fn drain(&self) -> usize {
+        self.phases.iter().map(|p| if let Phase::Drain(c) = p { *c } else { 0 }).sum()
+    }
+
+    /// Latency of one inference: every phase runs once.
+    pub fn latency(&self) -> usize {
+        self.phases
+            .iter()
+            .map(|p| match p {
+                Phase::Fill(c) | Phase::Steady(c) | Phase::Drain(c) => *c,
+            })
+            .sum()
+    }
+
+    /// Clock cycles to push `n` inferences through: fill once, `n` steady
+    /// intervals, drain once. An empty batch costs nothing.
+    pub fn throughput(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        self.fill() + n * self.steady() + self.drain()
+    }
+}
+
+/// Per-slot work of the systolic ring: slot `s` executes the layers
+/// `k ≡ s (mod slots)` for `ι_k + 1` cycles each.
+fn systolic_slot_work(st: &AnnStructure, slots: usize) -> Vec<usize> {
+    let slots = slots.clamp(1, st.num_layers().max(1));
+    let mut work = vec![0usize; slots];
+    for k in 0..st.num_layers() {
+        work[k % slots] += st.layer_inputs(k) + 1;
+    }
+    work
 }
 
 impl Schedule {
+    /// Lower this schedule to its [`CycleProgram`] — the single place a
+    /// schedule's cycle structure is stated. The five legacy closed forms
+    /// fall out bit-for-bit (pinned by `design_conformance.rs` and the
+    /// closed-form checks in `arch_differential.rs`):
+    ///
+    /// - `Combinational` → `[Steady(1)]` (latency 1, one sample/cycle);
+    /// - `Pipelined { stages }` → `[Fill(stages), Steady(1)]` (latency
+    ///   `stages + 1`, then one sample per cycle);
+    /// - `LayerSequential` → `[Steady(Σ(ι_k+1))]` (serialized inferences);
+    /// - `NeuronSequential` → `[Steady(Σ(ι_k+2)·η_k)]`;
+    /// - `DigitSerial { bits }` → `[Steady(B·Σ(ι_k+1))]`;
+    /// - `Systolic { slots }` → `[Fill, Steady(bottleneck), Drain]`: the
+    ///   steady interval is the bottleneck slot's work, fill is the work
+    ///   of the slots before the first bottleneck, drain the remainder —
+    ///   so latency is exactly `Σ(ι_k+1)` and a batch takes
+    ///   `fill + n·steady + drain`.
+    pub fn program(self, st: &AnnStructure) -> CycleProgram {
+        let phases = match self {
+            Schedule::Combinational => vec![Phase::Steady(1)],
+            Schedule::Pipelined { stages } => vec![Phase::Fill(stages), Phase::Steady(1)],
+            Schedule::LayerSequential => vec![Phase::Steady(st.smac_neuron_cycles())],
+            Schedule::NeuronSequential => vec![Phase::Steady(st.smac_ann_cycles())],
+            Schedule::DigitSerial { bits } => {
+                vec![Phase::Steady(bits as usize * st.smac_neuron_cycles())]
+            }
+            Schedule::Systolic { slots } => {
+                let work = systolic_slot_work(st, slots);
+                let steady = work.iter().copied().max().unwrap_or(1);
+                let bottleneck = work.iter().position(|&w| w == steady).unwrap_or(0);
+                let fill: usize = work[..bottleneck].iter().sum();
+                let drain: usize = work[bottleneck + 1..].iter().sum();
+                vec![Phase::Fill(fill), Phase::Steady(steady), Phase::Drain(drain)]
+            }
+        };
+        CycleProgram { phases }
+    }
+
     /// Latency of one inference in clock cycles — the closed forms of
     /// ARCHITECTURE.md's cycle-model table, asserted against the
-    /// interpreters by `rust/tests/arch_differential.rs`.
+    /// interpreters by `rust/tests/arch_differential.rs`. Evaluated
+    /// through the [`CycleProgram`] interpreter: every phase runs once.
     pub fn cycles(self, st: &AnnStructure) -> usize {
-        match self {
-            Schedule::Combinational => 1,
-            Schedule::Pipelined { stages } => stages + 1,
-            Schedule::LayerSequential => st.smac_neuron_cycles(),
-            Schedule::NeuronSequential => st.smac_ann_cycles(),
-            Schedule::DigitSerial { bits } => bits as usize * st.smac_neuron_cycles(),
-        }
+        self.program(st).latency()
     }
 
     /// Clock cycles to push a batch of `n` inferences through a design
-    /// under this schedule: the sequential schedules (the MAC cycle
-    /// programs and their digit-serial stretching) serialize inferences
-    /// (`n × latency`), the combinational datapath accepts a new sample
-    /// every (long) cycle, and the pipelined datapath fills once and then
-    /// retires one sample per cycle (`stages + n`).
+    /// under this schedule, via [`CycleProgram::throughput`]: fill once,
+    /// one steady interval per sample, drain once. The sequential
+    /// schedules (the MAC cycle programs and their digit-serial
+    /// stretching) put their whole latency in the steady interval and so
+    /// serialize inferences (`n × latency`); the combinational datapath
+    /// accepts a new sample every (long) cycle; the pipelined datapath
+    /// fills once and then retires one sample per cycle (`stages + n`);
+    /// the systolic ring streams at its bottleneck slot's interval.
     pub fn throughput_cycles(self, st: &AnnStructure, n: usize) -> usize {
         if n == 0 {
             return 0;
         }
-        match self {
-            Schedule::Combinational => n,
-            Schedule::Pipelined { stages } => stages + n,
-            Schedule::LayerSequential
-            | Schedule::NeuronSequential
-            | Schedule::DigitSerial { .. } => n * self.cycles(st),
-        }
+        self.program(st).throughput(n)
     }
 }
 
@@ -326,9 +443,11 @@ fn gate_ratio(gate: Gate, schedule: Schedule, st: &AnnStructure, p: &ActivityPro
                         1.0
                     }
                 }
-                Schedule::LayerSequential | Schedule::DigitSerial { .. } => {
-                    (avg + 1.0) / (iota + 1.0)
-                }
+                // the systolic ring runs each layer's SMAC_NEURON cycle
+                // program unchanged, so it shares the broadcast ratio
+                Schedule::LayerSequential
+                | Schedule::DigitSerial { .. }
+                | Schedule::Systolic { .. } => (avg + 1.0) / (iota + 1.0),
                 Schedule::NeuronSequential => (avg + 2.0) / (iota + 2.0),
             }
         }
@@ -577,8 +696,9 @@ impl DesignBuilder {
 
 /// A design architecture: elaborates a quantized net into a [`Design`].
 /// Implementations live in
-/// `hw/{parallel,pipelined,smac_neuron,smac_ann,digit_serial}.rs` and
-/// contain *only* elaboration — no gate arithmetic, no HDL, no simulation.
+/// `hw/{parallel,pipelined,smac_neuron,smac_ann,digit_serial,systolic}.rs`
+/// and contain *only* elaboration — no gate arithmetic, no HDL, no
+/// simulation.
 pub trait Architecture: Sync {
     fn kind(&self) -> ArchKind;
 
@@ -611,15 +731,17 @@ impl dyn Architecture {
     /// and the CLI iterate — the paper's three architectures in their
     /// presentation order, with the layer-pipelined parallel variant
     /// slotted in right after the combinational design it pipelines, and
-    /// the digit-serial MAC closing the list as the extreme point of the
-    /// latency/area trade.
-    pub fn all() -> [&'static dyn Architecture; 5] {
+    /// the digit-serial MAC as the extreme point of the latency/area
+    /// trade, and the systolic SMAC ring closing the list (the
+    /// time-multiplexed designs overlapped across samples).
+    pub fn all() -> [&'static dyn Architecture; 6] {
         [
             &super::parallel::Parallel,
             &super::pipelined::PipelinedParallel,
             &super::smac_neuron::SmacNeuron,
             &super::smac_ann::SmacAnn,
             &super::digit_serial::DigitSerial,
+            &super::systolic::SYSTOLIC,
         ]
     }
 
@@ -691,10 +813,12 @@ fn layer_instances(arch: ArchKind, style: Style, qann: &QuantizedAnn, k: usize) 
             vec![(LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)]
         }
         (ArchKind::Pipelined, Style::Mcm) => mcm_column_instances(qann, k),
-        // the digit-serial MAC shares SMAC_NEURON's per-layer product
-        // instance: one MCM block over the sls-factored stored weights of
-        // the broadcast input — its graph is merely *realized* serially
-        (ArchKind::SmacNeuron | ArchKind::DigitSerial, Style::Mcm) => {
+        // the digit-serial MAC and the systolic ring share SMAC_NEURON's
+        // per-layer product instance: one MCM block over the sls-factored
+        // stored weights of the broadcast input — the graph is merely
+        // *realized* serially (digit-serial) or *placed* in a ring slot
+        // (systolic)
+        (ArchKind::SmacNeuron | ArchKind::DigitSerial | ArchKind::Systolic, Style::Mcm) => {
             let (stored, _) = stored_layer(qann, k);
             let consts: Vec<i64> = stored.into_iter().flatten().collect();
             vec![(LinearTargets::mcm(&consts), Tier::McmHeuristic)]
@@ -710,7 +834,10 @@ fn layer_instances(arch: ArchKind, style: Style, qann: &QuantizedAnn, k: usize) 
         }
         // behavioral MACs have no constant-multiplication network, and the
         // SMAC_ANN whole-net instance is attached to layer 0 only
-        (ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial, Style::Behavioral)
+        (
+            ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial | ArchKind::Systolic,
+            Style::Behavioral,
+        )
         | (ArchKind::SmacAnn, Style::Mcm) => Vec::new(),
         (arch, style) => panic!("{} has no {} style", arch.name(), style.name()),
     }
@@ -785,17 +912,25 @@ pub struct LayerPricer {
     costs: Vec<(f64, f64, f64)>,
 }
 
-/// A schedule of the right *class* for `arch` — [`gate_ratio`] only
-/// dispatches on the schedule variant (the pipelined stage count and the
-/// digit-serial bit count cancel out of every ratio), so the fragment
-/// pricer does not need the elaborated schedule parameters.
-fn ratio_schedule(arch: ArchKind) -> Schedule {
+/// The schedule `arch.elaborate(qann, _)` would carry, derived without
+/// elaborating — what the fragment pricer feeds [`gate_ratio`]. This used
+/// to hand back placeholder parameters (`Pipelined { stages: 0 }`,
+/// `DigitSerial { bits: 1 }`) on the argument that the ratios only
+/// dispatch on the schedule *class*; that held for the closed forms of
+/// the moment but silently priced every future parameter-sensitive ratio
+/// wrong, so the real parameters are now derived from the net being
+/// priced — `ratio_schedule_matches_the_elaborated_schedule` pins the
+/// equality for every registry design point.
+fn ratio_schedule(arch: ArchKind, qann: &QuantizedAnn) -> Schedule {
     match arch {
         ArchKind::Parallel => Schedule::Combinational,
-        ArchKind::Pipelined => Schedule::Pipelined { stages: 0 },
+        ArchKind::Pipelined => Schedule::Pipelined { stages: qann.structure.num_layers() },
         ArchKind::SmacNeuron => Schedule::LayerSequential,
         ArchKind::SmacAnn => Schedule::NeuronSequential,
-        ArchKind::DigitSerial => Schedule::DigitSerial { bits: 1 },
+        ArchKind::DigitSerial => {
+            Schedule::DigitSerial { bits: super::digit_serial::serial_bits(qann) }
+        }
+        ArchKind::Systolic => Schedule::Systolic { slots: qann.structure.num_layers() },
     }
 }
 
@@ -877,7 +1012,7 @@ impl LayerPricer {
         profile: &ActivityProfile,
     ) -> f64 {
         self.block_cost(qann, lib);
-        let sched = ratio_schedule(self.arch);
+        let sched = ratio_schedule(self.arch, qann);
         let st = &qann.structure;
         self.costs
             .iter()
@@ -912,15 +1047,19 @@ mod tests {
     #[test]
     fn registry_covers_the_paper_design_points() {
         let names: Vec<&str> = <dyn Architecture>::all().iter().map(|a| a.name()).collect();
-        assert_eq!(names, ["parallel", "pipelined", "smac_neuron", "smac_ann", "digit_serial"]);
-        assert_eq!(design_points().len(), 13, "3 parallel + 4 pipelined + 2 + 2 + 2");
+        assert_eq!(
+            names,
+            ["parallel", "pipelined", "smac_neuron", "smac_ann", "digit_serial", "systolic"]
+        );
+        assert_eq!(design_points().len(), 15, "3 parallel + 4 pipelined + 2 + 2 + 2 + 2");
         for (a, s) in design_points() {
             assert!(a.styles().contains(&s));
         }
         assert!(<dyn Architecture>::by_name("parallel").is_some());
         assert!(<dyn Architecture>::by_name("pipelined").is_some());
         assert!(<dyn Architecture>::by_name("digit_serial").is_some());
-        assert!(<dyn Architecture>::by_name("systolic").is_none());
+        assert!(<dyn Architecture>::by_name("systolic").is_some());
+        assert!(<dyn Architecture>::by_name("loopback").is_none());
     }
 
     #[test]
@@ -946,6 +1085,74 @@ mod tests {
                 > Schedule::DigitSerial { bits: 20 }.cycles(&st),
             "wider accumulators must cost more cycles"
         );
+        // the systolic ring keeps the layer-sequential latency regardless
+        // of ring size — ring size only changes the batch interval
+        for slots in 1..=4 {
+            assert_eq!(Schedule::Systolic { slots }.cycles(&st), st.smac_neuron_cycles());
+        }
+    }
+
+    #[test]
+    fn cycle_programs_reproduce_the_legacy_closed_forms() {
+        // the interpreter refactor pin: every legacy schedule's program
+        // evaluates to exactly the pre-refactor closed forms, for latency
+        // and for batch throughput, across structures and batch sizes
+        for s in ["16-16-10", "16-10-10-4", "2-2-1", "8-1"] {
+            let st = AnnStructure::parse(s).unwrap();
+            let cases: Vec<(Schedule, usize, Box<dyn Fn(usize) -> usize>)> = vec![
+                (Schedule::Combinational, 1, Box::new(|n| n)),
+                (Schedule::Pipelined { stages: 3 }, 4, Box::new(|n| 3 + n)),
+                (
+                    Schedule::LayerSequential,
+                    st.smac_neuron_cycles(),
+                    Box::new(|n| n * st.smac_neuron_cycles()),
+                ),
+                (
+                    Schedule::NeuronSequential,
+                    st.smac_ann_cycles(),
+                    Box::new(|n| n * st.smac_ann_cycles()),
+                ),
+                (
+                    Schedule::DigitSerial { bits: 20 },
+                    20 * st.smac_neuron_cycles(),
+                    Box::new(|n| n * 20 * st.smac_neuron_cycles()),
+                ),
+            ];
+            for (sched, latency, throughput) in cases {
+                let p = sched.program(&st);
+                assert_eq!(p.latency(), latency, "{sched:?} on {s}");
+                assert_eq!(sched.cycles(&st), latency);
+                for n in [0, 1, 2, 33, 300] {
+                    let want = if n == 0 { 0 } else { throughput(n) };
+                    assert_eq!(sched.throughput_cycles(&st, n), want, "{sched:?} on {s}, n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn systolic_program_is_fill_bottleneck_drain() {
+        let st = AnnStructure::parse("16-10-10-4").unwrap(); // slot work 17, 11, 11
+        let p = Schedule::Systolic { slots: 3 }.program(&st);
+        assert_eq!((p.fill(), p.steady(), p.drain()), (0, 17, 22));
+        assert_eq!(p.latency(), st.smac_neuron_cycles());
+        // a 2-slot ring folds layer 2 back onto slot 0: work 28, 11
+        let p2 = Schedule::Systolic { slots: 2 }.program(&st);
+        assert_eq!((p2.fill(), p2.steady(), p2.drain()), (0, 28, 11));
+        // a mid-ring bottleneck pays fill before it and drain after it
+        let st2 = AnnStructure::parse("4-16-10-4").unwrap(); // slot work 5, 17, 11
+        let p3 = Schedule::Systolic { slots: 3 }.program(&st2);
+        assert_eq!((p3.fill(), p3.steady(), p3.drain()), (5, 17, 11));
+        assert_eq!(p3.latency(), st2.smac_neuron_cycles());
+        // a 1-slot ring degenerates to the SMAC_NEURON serialization
+        let p1 = Schedule::Systolic { slots: 1 }.program(&st);
+        assert_eq!((p1.fill(), p1.steady(), p1.drain()), (0, st.smac_neuron_cycles(), 0));
+        for n in [1, 2, 33] {
+            assert_eq!(
+                Schedule::Systolic { slots: 1 }.throughput_cycles(&st, n),
+                Schedule::LayerSequential.throughput_cycles(&st, n)
+            );
+        }
     }
 
     #[test]
@@ -970,12 +1177,23 @@ mod tests {
             64 * 20 * st.smac_neuron_cycles(),
             "bit-serial inferences serialize"
         );
+        // the systolic ring fills once and then streams one sample per
+        // bottleneck interval: the 16-16-10 full ring has slot work
+        // (17, 17), so fill 0, steady 17, drain 17
+        let ring = Schedule::Systolic { slots: 2 };
+        assert_eq!(ring.throughput_cycles(&st, 1), st.smac_neuron_cycles(), "= latency");
+        assert_eq!(ring.throughput_cycles(&st, 64), 64 * 17 + 17);
+        assert!(
+            ring.throughput_cycles(&st, 64) < Schedule::LayerSequential.throughput_cycles(&st, 64),
+            "overlapping samples must beat the serialized ring"
+        );
         for s in [
             Schedule::Combinational,
             Schedule::Pipelined { stages: 2 },
             Schedule::LayerSequential,
             Schedule::NeuronSequential,
             Schedule::DigitSerial { bits: 20 },
+            Schedule::Systolic { slots: 2 },
         ] {
             assert_eq!(s.throughput_cycles(&st, 0), 0, "empty batch costs nothing");
         }
@@ -1162,6 +1380,75 @@ mod tests {
             // ...and the plain worst-case walk never fills the column
             assert_eq!(d.cost(&lib).workload_energy_pj, None);
         }
+    }
+
+    #[test]
+    fn empty_profile_prices_worst_case_never_nan() {
+        // satellite pin: an ActivityProfile with samples == 0 must price
+        // every design point at exactly its worst-case energy — the
+        // avg_nonzero division by samples would otherwise turn
+        // workload_energy_pj into NaN and flow into `serve status`,
+        // figure CSVs and BENCH_batch_netsim.json
+        let q = qann("16-16-10", 6, 31);
+        let lib = TechLib::tsmc40();
+        let empty = ActivityProfile::new(q.structure.num_layers());
+        assert_eq!(empty.samples, 0);
+        for (arch, style) in design_points() {
+            let d = arch.elaborate(&q, style);
+            let r = d.cost_with_activity(&lib, &empty);
+            let w = r.workload_energy_pj.expect("priced with a profile");
+            assert!(w.is_finite(), "{} {}: NaN leaked", arch.name(), style.name());
+            assert!(
+                (w - r.energy_pj).abs() / r.energy_pj < 1e-12,
+                "{} {}: empty profile must price the worst case ({w} vs {})",
+                arch.name(),
+                style.name(),
+                r.energy_pj
+            );
+            // the incremental pricer takes the same guard
+            let w_fj = LayerPricer::new(arch.kind(), style).workload_energy(&q, &lib, &empty);
+            assert!(w_fj.is_finite());
+            assert!((w_fj - r.energy_pj * 1000.0).abs() / (r.energy_pj * 1000.0) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ratio_schedule_matches_the_elaborated_schedule() {
+        // satellite pin: the fragment pricer's schedule must be the
+        // design's actual schedule, real parameters included — not a
+        // placeholder of the right class
+        let q = qann("16-10-10", 6, 33);
+        for (arch, style) in design_points() {
+            let d = arch.elaborate(&q, style);
+            assert_eq!(
+                ratio_schedule(arch.kind(), &q),
+                d.schedule,
+                "{} {}",
+                arch.name(),
+                style.name()
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_schedule_class_misprices_workload_energy() {
+        // regression for the placeholder-schedule bug: pricing a design's
+        // gated blocks under a schedule of the wrong class changes
+        // workload_energy_pj, so the pricer cannot get the schedule wrong
+        // and still pass workload_energy_agrees_with_the_full_cost_walk
+        let q = qann("16-16-10", 6, 35);
+        let lib = TechLib::tsmc40();
+        let profile = fractional_profile(&q.structure, 10, 1, 2);
+        let d =
+            <dyn Architecture>::by_name("smac_neuron").unwrap().elaborate(&q, Style::Behavioral);
+        let right = d.cost_with_activity(&lib, &profile).workload_energy_pj.unwrap();
+        let mut wrong = d.clone();
+        wrong.schedule = Schedule::Combinational; // wrong class: avg/ι, not (avg+1)/(ι+1)
+        let mispriced = wrong.cost_with_activity(&lib, &profile).workload_energy_pj.unwrap();
+        assert!(
+            (right - mispriced).abs() / right > 1e-6,
+            "schedule class must matter to the gate ratios ({right} vs {mispriced})"
+        );
     }
 
     #[test]

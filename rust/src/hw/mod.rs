@@ -1,9 +1,10 @@
-//! Gate-level hardware models of the five registry design architectures —
+//! Gate-level hardware models of the six registry design architectures —
 //! the paper's three (parallel, SMAC_NEURON, SMAC_ANN) plus the
-//! layer-pipelined parallel variant and the digit-serial MAC this
-//! reproduction adds — the Verilog generator and the cycle-accurate
-//! architectural simulator. ARCHITECTURE.md maps the paper's sections to
-//! these modules and tabulates every schedule's closed-form cycle model.
+//! layer-pipelined parallel variant, the digit-serial MAC and the
+//! systolic SMAC ring this reproduction adds — the Verilog generator and
+//! the cycle-accurate architectural simulator. ARCHITECTURE.md maps the
+//! paper's sections to these modules and tabulates every schedule's
+//! cycle program.
 //!
 //! Stand-in for the Cadence RTL Compiler + TSMC 40nm synthesis flow of
 //! the paper's evaluation (DESIGN.md §Substitutions). Everything hangs
@@ -37,6 +38,7 @@ pub mod report;
 pub mod serve;
 pub mod smac_ann;
 pub mod smac_neuron;
+pub mod systolic;
 pub mod verilog;
 
 pub use artifact::{ArtifactStore, StoreStats, TierHit, TierStats, TieredDesignCache};

@@ -68,8 +68,11 @@ pub fn simulate(design: &Design, input: &[i32]) -> SimRun {
         // differs (fill the pipe: stages + 1 cycles to the first output)
         Schedule::Combinational | Schedule::Pipelined { .. } => simulate_feedforward(design, input),
         // the digit-serial MAC runs the layer-sequential program with
-        // every step stretched into `bits` bit-cycles (see step_cycles)
-        Schedule::LayerSequential | Schedule::DigitSerial { .. } => {
+        // every step stretched into `bits` bit-cycles (see step_cycles);
+        // the systolic ring runs it unchanged for a single sample (the
+        // ring only overlaps *different* samples, which the batch
+        // interpreters account through the cycle program)
+        Schedule::LayerSequential | Schedule::DigitSerial { .. } | Schedule::Systolic { .. } => {
             simulate_layer_sequential(design, input)
         }
         Schedule::NeuronSequential => simulate_neuron_sequential(design, input),

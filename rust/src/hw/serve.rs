@@ -369,8 +369,11 @@ fn simulate_batch_scalar(design: &Design, inputs: &BatchInputs) -> BatchRun {
         // only the cycle accounting (latency + batch fill/drain) differs
         Schedule::Combinational | Schedule::Pipelined { .. } => batch_feedforward(design, inputs),
         // the digit-serial MAC runs the layer-sequential program with
-        // every step stretched into `bits` bit-cycles
-        Schedule::LayerSequential | Schedule::DigitSerial { .. } => {
+        // every step stretched into `bits` bit-cycles; the systolic ring
+        // computes the same per-sample values (the overlap across
+        // samples is pure cycle accounting, priced by the schedule's
+        // cycle program in `throughput_cycles`)
+        Schedule::LayerSequential | Schedule::DigitSerial { .. } | Schedule::Systolic { .. } => {
             batch_layer_sequential(design, inputs)
         }
         Schedule::NeuronSequential => batch_neuron_sequential(design, inputs),

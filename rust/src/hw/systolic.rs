@@ -1,0 +1,291 @@
+//! Systolic SMAC ring: a ring of P SMAC_NEURON blocks with
+//! neighbor-to-neighbor operand passing — the multi-core GEMV
+//! distribution idiom applied to the paper's time-multiplexed designs.
+//! Layer `k` is assigned round-robin to ring slot `k % P`; each slot is a
+//! full SMAC_NEURON layer block (per-neuron MAC, common control) plus a
+//! token flop, and a slot's registered layer outputs feed the *next*
+//! slot's broadcast mux directly — the neighbor-pass registers of the
+//! ring.
+//!
+//! One sample still takes `Σ(ι_k + 1)` cycles around the ring (the
+//! layers are sequential for that sample), but the slots overlap
+//! *different samples*: as soon as slot `s` hands sample `j` to slot
+//! `s+1`, it accepts sample `j+1`. A new sample therefore enters every
+//! `max_s Σ_{k ≡ s} (ι_k + 1)` cycles — the bottleneck slot's work — so
+//! the ring streams batches strictly faster than SMAC_NEURON while
+//! costing per-layer (not per-net) hardware. The 2-D cycle structure is
+//! captured by [`Schedule::Systolic`]'s `Fill`/`Steady`/`Drain`
+//! [`super::design::CycleProgram`] rather than a scalar closed form.
+//!
+//! Styles mirror SMAC_NEURON: `Behavioral` (generic multiplier per
+//! neuron) and `Mcm` (one engine-solved product graph per layer over the
+//! sls-factored stored weights — shared with SMAC_NEURON and the
+//! digit-serial MAC through `layer_instances`).
+//!
+//! This module only *elaborates* the design; cost, simulation and HDL
+//! are derived from the resulting [`Design`] by `hw::design`,
+//! `hw::netsim` and `hw::verilog`.
+
+use super::design::{
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, Gate, LayerCompute, LayerPlan,
+    McmRef, Schedule, Style,
+};
+use super::report::{self, HwReport};
+use super::TechLib;
+use crate::ann::quant::QuantizedAnn;
+use crate::mcm::{LinearTargets, Tier};
+use crate::num::signed_bitwidth;
+
+/// The registry instance: a full ring (one slot per layer, the fastest
+/// configuration — the batch interval is the single slowest layer).
+pub static SYSTOLIC: Systolic = Systolic { ring: None };
+
+/// The systolic SMAC ring architecture. The registry carries the full
+/// ring ([`SYSTOLIC`]); [`Systolic::with_ring`] builds smaller rings
+/// (fewer slots than layers fold several layers onto one slot,
+/// lengthening the batch interval but shrinking nothing else — ring size
+/// is a *scheduling* parameter, the per-layer hardware is identical).
+pub struct Systolic {
+    /// ring slots; `None` = one slot per layer
+    ring: Option<usize>,
+}
+
+impl Systolic {
+    /// A ring of exactly `slots` SMAC_NEURON blocks (clamped to
+    /// `1..=num_layers` at schedule time).
+    pub fn with_ring(slots: usize) -> Systolic {
+        Systolic { ring: Some(slots) }
+    }
+
+    /// The ring size this instance schedules `qann` with.
+    pub fn slots(&self, qann: &QuantizedAnn) -> usize {
+        let layers = qann.structure.num_layers().max(1);
+        self.ring.unwrap_or(layers).clamp(1, layers)
+    }
+}
+
+impl Architecture for Systolic {
+    fn kind(&self) -> ArchKind {
+        ArchKind::Systolic
+    }
+
+    fn styles(&self) -> &'static [Style] {
+        &[Style::Behavioral, Style::Mcm]
+    }
+
+    fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
+        let schedule = Schedule::Systolic { slots: self.slots(qann) };
+        let mut b = DesignBuilder::new(ArchKind::Systolic, style, schedule);
+        for k in 0..qann.structure.num_layers() {
+            self.elaborate_layer_blocks(&mut b, qann, k, style);
+        }
+        b.finish(qann)
+    }
+
+    fn elaborate_layer_blocks(&self, b: &mut DesignBuilder, qann: &QuantizedAnn, k: usize, style: Style) {
+        let st = &qann.structure;
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let in_range = report::layer_input_range(qann, k);
+        let acc_bits = report::layer_acc_bits(qann, k);
+        // per sample the slot works for ι_k + 1 cycles, exactly like the
+        // SMAC_NEURON layer block it instantiates
+        let fires = (n_in + 1) as f64;
+
+        // shared per-slot control: input counter + broadcast input mux,
+        // plus the ring extras — the token flop that marks which sample
+        // phase the slot is in (the per-neuron output registers double as
+        // the neighbor-pass registers feeding the next slot's mux)
+        let control = b.block(BlockKind::Counter { n: n_in + 1 }, 1, fires);
+        let in_mux = b.block(BlockKind::Mux { n: n_in, bits: 8 }, 1, fires);
+        b.block(BlockKind::Register { bits: 1 }, 1, fires); // ring token
+        b.path(vec![control]);
+        b.path(vec![in_mux]);
+
+        // weights are stored factored by each neuron's smallest left
+        // shift; the back-shift is wiring (paper Sec. IV-C)
+        let (stored, sls) = design::stored_layer(qann, k);
+
+        // the product path only toggles under nonzero broadcast inputs —
+        // same occupancy gating as SMAC_NEURON
+        let mcm = match style {
+            Style::Behavioral => {
+                for row in &stored {
+                    let w_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1);
+                    let w_mux = b.gated_block(
+                        BlockKind::ConstantMux { n: n_in, bits: w_bits },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
+                    let mult = b.gated_block(
+                        BlockKind::Multiplier { w_bits, x_bits: 8 },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
+                    let acc =
+                        b.gated_block(BlockKind::Adder { bits: acc_bits }, 1, fires, Gate::Layer(k));
+                    let reg = b.gated_block(
+                        BlockKind::Register { bits: acc_bits },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
+                    b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
+                    b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
+                    b.block(BlockKind::Register { bits: 8 }, 1, fires); // pass reg
+                    b.path(vec![w_mux, mult, acc, reg]);
+                }
+                None
+            }
+            Style::Mcm => {
+                // single MCM block over all stored weights of the layer —
+                // the same product graph SMAC_NEURON solves (shared via
+                // the engine cache and `layer_instances`)
+                let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
+                let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
+                let mcm_blk = b.gated_block(
+                    BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![in_range] },
+                    1,
+                    fires,
+                    Gate::Layer(k),
+                );
+                for row in &stored {
+                    // product width of this neuron's largest stored weight
+                    let p_bits = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8;
+                    let p_mux = b.gated_block(
+                        BlockKind::Mux { n: n_in, bits: p_bits },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
+                    let acc =
+                        b.gated_block(BlockKind::Adder { bits: acc_bits }, 1, fires, Gate::Layer(k));
+                    let reg = b.gated_block(
+                        BlockKind::Register { bits: acc_bits },
+                        1,
+                        fires,
+                        Gate::Layer(k),
+                    );
+                    b.block(BlockKind::Adder { bits: acc_bits }, 1, fires); // bias
+                    b.block(BlockKind::ActivationUnit { acc_bits }, 1, fires);
+                    b.block(BlockKind::Register { bits: 8 }, 1, fires); // pass reg
+                    b.path(vec![mcm_blk, p_mux, acc, reg]);
+                }
+                Some(McmRef { graph: gi, offset: 0 })
+            }
+            other => panic!("systolic has no {} style", other.name()),
+        };
+
+        b.layer(LayerPlan {
+            n_in,
+            n_out,
+            acc_bits,
+            in_range,
+            compute: LayerCompute::Mac { stored, sls, mcm },
+        });
+    }
+}
+
+/// Price the systolic ring design of `qann` (elaborate + generic cost walk).
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+    SYSTOLIC.elaborate(qann, style).cost(lib)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::ann::structure::{Activation, AnnStructure};
+    use crate::hw::smac_neuron;
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn latency_matches_smac_neuron_but_batches_stream() {
+        let q = qann("16-16-10", 6, 1);
+        let st = &q.structure;
+        let d = SYSTOLIC.elaborate(&q, Style::Behavioral);
+        assert_eq!(d.schedule, Schedule::Systolic { slots: st.num_layers() });
+        // same single-sample latency as SMAC_NEURON...
+        assert_eq!(d.cycles(), st.smac_neuron_cycles());
+        // ...but a batch streams at the bottleneck slot's interval
+        let n = 64;
+        let ring = d.schedule.throughput_cycles(st, n);
+        assert!(ring < Schedule::LayerSequential.throughput_cycles(st, n));
+        assert!(ring > Schedule::Pipelined { stages: st.num_layers() }.throughput_cycles(st, n));
+    }
+
+    #[test]
+    fn ring_size_is_scheduling_only() {
+        // the per-layer hardware is identical across ring sizes; only the
+        // schedule (and so the batch interval) changes
+        let q = qann("16-10-10", 6, 2);
+        let lib = TechLib::tsmc40();
+        let full = SYSTOLIC.elaborate(&q, Style::Mcm);
+        let half = Systolic::with_ring(1).elaborate(&q, Style::Mcm);
+        assert_eq!(full.blocks, half.blocks);
+        assert_eq!(full.adder_ops, half.adder_ops);
+        assert_eq!(full.cost(&lib).area_um2, half.cost(&lib).area_um2);
+        assert_eq!(half.schedule, Schedule::Systolic { slots: 1 });
+        // the 1-slot ring serializes exactly like SMAC_NEURON
+        let st = &q.structure;
+        assert_eq!(
+            half.schedule.throughput_cycles(st, 33),
+            Schedule::LayerSequential.throughput_cycles(st, 33)
+        );
+        // oversized rings clamp to one slot per layer
+        assert_eq!(
+            Systolic::with_ring(99).elaborate(&q, Style::Mcm).schedule,
+            Schedule::Systolic { slots: st.num_layers() }
+        );
+    }
+
+    #[test]
+    fn mirrors_smac_neuron_hardware_plus_ring_extras() {
+        // the ring slot is a SMAC_NEURON layer block plus a token flop:
+        // the shared product graphs are identical, the area is within
+        // the token flops of SMAC_NEURON's
+        let q = qann("16-16-10", 6, 3);
+        let lib = TechLib::tsmc40();
+        let ring = SYSTOLIC.elaborate(&q, Style::Mcm);
+        let sn = smac_neuron::SmacNeuron.elaborate(&q, Style::Mcm);
+        assert_eq!(ring.adder_ops, sn.adder_ops, "shared per-layer product graphs");
+        assert_eq!(ring.graphs, sn.graphs);
+        let (ra, sa) = (ring.cost(&lib).area_um2, sn.cost(&lib).area_um2);
+        assert!(ra > sa, "token flops cost something");
+        assert!((ra - sa) / sa < 0.05, "but not much: {ra} vs {sa}");
+    }
+
+    #[test]
+    fn mcm_style_reduces_area() {
+        let q = qann("16-16-10", 6, 4);
+        let lib = TechLib::tsmc40();
+        let b = build(&lib, &q, Style::Behavioral);
+        let m = build(&lib, &q, Style::Mcm);
+        assert!(m.area_um2 < b.area_um2, "mcm {} !< behavioral {}", m.area_um2, b.area_um2);
+        assert!(m.adders > 0);
+    }
+
+    #[test]
+    fn mcm_layer_plan_routes_products_through_the_graph() {
+        let q = qann("16-10", 6, 6);
+        let d = SYSTOLIC.elaborate(&q, Style::Mcm);
+        let LayerCompute::Mac { stored, sls, mcm } = &d.layers[0].compute else {
+            panic!("systolic layers are MAC-computed");
+        };
+        let r = mcm.expect("mcm style must reference its product graph");
+        assert_eq!(r.offset, 0);
+        assert_eq!(d.graphs[r.graph].outputs.len(), stored.iter().map(Vec::len).sum::<usize>());
+        assert_eq!(sls.len(), q.structure.layer_outputs(0));
+    }
+}

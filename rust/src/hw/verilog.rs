@@ -36,6 +36,7 @@ pub fn verilog(design: &Design, module: &str) -> String {
         ArchKind::SmacNeuron => emit_smac_neuron(design, module),
         ArchKind::SmacAnn => emit_smac_ann(design, module),
         ArchKind::DigitSerial => emit_digit_serial(design, module),
+        ArchKind::Systolic => emit_systolic(design, module),
     }
 }
 
@@ -455,6 +456,157 @@ fn emit_smac_neuron(design: &Design, module: &str) -> String {
             let _ = writeln!(v, "          acc_{k}_{m} <= 0;");
         }
         let _ = writeln!(v, "          cnt <= 0; layer <= layer + 1;");
+        if k == st.num_layers() - 1 {
+            for m in 0..layer.n_out {
+                let b = qann.biases[k][m];
+                let y = format!("(acc_{k}_{m} + ({b}))");
+                let z = activation_expr(qann.activations[k], &y, acc_w, qann.q);
+                let _ = writeln!(v, "          y{m} <= {z};");
+            }
+            let _ = writeln!(v, "          done <= 1;");
+        }
+        let _ = writeln!(v, "        end");
+        let _ = writeln!(v, "      end");
+    }
+    let _ = writeln!(v, "    end\n  end\nendmodule");
+    v
+}
+
+/// Systolic SMAC ring Verilog (`hw::systolic`): one SMAC_NEURON slot per
+/// layer, each with its own input counter and a ring token flop; a slot's
+/// registered layer outputs (`z_{k}_*`) are the neighbor-pass registers
+/// feeding the next slot's broadcast mux. The token travels the ring —
+/// slot `k` MACs for ι_k cycles, commits on the (ι_k + 1)-th and hands
+/// the token to slot `k + 1` in the same edge, so one sample's latency
+/// is exactly `Σ(ι_k + 1)` cycles ([`Schedule::Systolic`]'s cycle-program
+/// latency; the cross-sample overlap is a scheduling property the batch
+/// interpreters price, not extra single-sample hardware). After the last
+/// slot the token wraps to slot 0, ready for the next sample.
+fn emit_systolic(design: &Design, module: &str) -> String {
+    let qann = &design.qann;
+    let st = &qann.structure;
+    let n_out = st.layer_outputs(st.num_layers() - 1);
+    let max_acc = design.layers.iter().map(|l| l.acc_bits).max().unwrap_or(8);
+
+    let mut v = String::new();
+    let _ = writeln!(v, "// generated by SIMURG-RS: systolic / {} / {st}", design.style.name());
+    let _ = write!(v, "module {module} (\n  input clk,\n  input rst,\n  input start,\n");
+    for i in 0..st.inputs {
+        let _ = writeln!(v, "  input signed [7:0] x{i},");
+    }
+    for m in 0..n_out {
+        let _ = writeln!(v, "  output reg signed [7:0] y{m},");
+    }
+    let _ = writeln!(v, "  output reg done\n);");
+    v.push_str(&clamp_functions(max_acc));
+
+    // per-slot state: ring token, input counter, MAC and pass registers
+    for (k, layer) in design.layers.iter().enumerate() {
+        let acc_w = layer.acc_bits.max(2);
+        let _ = writeln!(v, "  reg tok_{k};      // ring token of slot {k}");
+        let _ = writeln!(v, "  reg [7:0] cnt_{k};");
+        for m in 0..layer.n_out {
+            let _ = writeln!(v, "  reg signed [{}:0] acc_{k}_{m};", acc_w - 1);
+            let _ = writeln!(v, "  reg signed [7:0] z_{k}_{m};");
+        }
+    }
+
+    // broadcast input select per slot, sequenced by the slot's own counter
+    for (k, layer) in design.layers.iter().enumerate() {
+        let (stored, _, mcm) = mac_layer(design, k);
+        let _ = writeln!(v, "  reg signed [7:0] xsel_{k};");
+        let _ = writeln!(v, "  always @(*) begin\n    case (cnt_{k})");
+        for i in 0..layer.n_in {
+            let src = if k == 0 {
+                format!("x{i}")
+            } else {
+                format!("z_{}_{i}", k - 1)
+            };
+            let _ = writeln!(v, "      8'd{i}: xsel_{k} = {src};");
+        }
+        let _ = writeln!(v, "      default: xsel_{k} = 8'sd0;\n    endcase\n  end");
+        match mcm {
+            None => {
+                // per-neuron weight select (hardwired constant mux)
+                for (m, row) in stored.iter().enumerate() {
+                    let wb = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1).max(2);
+                    let _ = writeln!(v, "  reg signed [{}:0] wsel_{k}_{m};", wb - 1);
+                    let _ = writeln!(v, "  always @(*) begin\n    case (cnt_{k})");
+                    for (i, &c) in row.iter().enumerate() {
+                        let _ = writeln!(v, "      8'd{i}: wsel_{k}_{m} = {c};");
+                    }
+                    let _ = writeln!(v, "      default: wsel_{k}_{m} = 0;\n    endcase\n  end");
+                }
+            }
+            Some(r) => {
+                // the slot's embedded MCM block: every stored-weight
+                // product of the broadcast input is one tap of the
+                // design's adder graph; each neuron muxes its own product
+                let prefix = format!("g{k}");
+                let _ = writeln!(v, "  wire signed [7:0] {prefix}_x0 = xsel_{k};");
+                let taps =
+                    emit_graph(&mut v, &prefix, &design.graphs[r.graph], &[layer.in_range]);
+                for (m, row) in stored.iter().enumerate() {
+                    let p_bits =
+                        (row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8).max(2);
+                    let _ = writeln!(v, "  reg signed [{}:0] psel_{k}_{m};", p_bits - 1);
+                    let _ = writeln!(v, "  always @(*) begin\n    case (cnt_{k})");
+                    for i in 0..row.len() {
+                        let tap = &taps[r.offset + m * layer.n_in + i];
+                        let _ = writeln!(v, "      8'd{i}: psel_{k}_{m} = {tap};");
+                    }
+                    let _ = writeln!(v, "      default: psel_{k}_{m} = 0;\n    endcase\n  end");
+                }
+            }
+        }
+    }
+
+    // the ring schedule: the token grants slot k its ι_k + 1 cycles, the
+    // commit edge passes it on
+    let _ = writeln!(v, "  always @(posedge clk) begin");
+    let _ = writeln!(v, "    if (rst) begin");
+    let _ = writeln!(v, "      done <= 0;");
+    // park the token at slot 0 and clear every accumulator: the first
+    // MAC step reads it, and an uninitialized X would poison every
+    // output in a 4-state simulator
+    for (k, layer) in design.layers.iter().enumerate() {
+        let t = usize::from(k == 0);
+        let _ = writeln!(v, "      tok_{k} <= {t}; cnt_{k} <= 0;");
+        for m in 0..layer.n_out {
+            let _ = writeln!(v, "      acc_{k}_{m} <= 0;");
+        }
+    }
+    let _ = writeln!(v, "    end else begin");
+    for (k, layer) in design.layers.iter().enumerate() {
+        let (_, sls, mcm) = mac_layer(design, k);
+        // slot 0 additionally waits for the start strobe; downstream
+        // slots run whenever the token reaches them
+        let gate = if k == 0 { format!("tok_{k} && start") } else { format!("tok_{k}") };
+        let _ = writeln!(v, "      if ({gate}) begin");
+        let _ = writeln!(v, "        if (cnt_{k} < {}) begin", layer.n_in);
+        for (m, &s) in sls.iter().enumerate() {
+            let shift = if s > 0 { format!(" <<< {s}") } else { String::new() };
+            // the product: generic multiply (behavioral) or the muxed
+            // MCM-graph tap (multiplierless); the sls back-shift is wiring
+            let product = match mcm {
+                None => format!("(wsel_{k}_{m} * xsel_{k})"),
+                Some(_) => format!("psel_{k}_{m}"),
+            };
+            let _ = writeln!(v, "          acc_{k}_{m} <= acc_{k}_{m} + ({product}{shift});");
+        }
+        let _ = writeln!(v, "          cnt_{k} <= cnt_{k} + 1;");
+        let _ = writeln!(v, "        end else begin");
+        let acc_w = layer.acc_bits.max(2);
+        for m in 0..layer.n_out {
+            let b = qann.biases[k][m];
+            let y = format!("(acc_{k}_{m} + ({b}))");
+            let z = activation_expr(qann.activations[k], &y, acc_w, qann.q);
+            let _ = writeln!(v, "          z_{k}_{m} <= {z};");
+            let _ = writeln!(v, "          acc_{k}_{m} <= 0;");
+        }
+        let next = (k + 1) % st.num_layers();
+        let _ = writeln!(v, "          cnt_{k} <= 0;");
+        let _ = writeln!(v, "          tok_{k} <= 0; tok_{next} <= 1;");
         if k == st.num_layers() - 1 {
             for m in 0..layer.n_out {
                 let b = qann.biases[k][m];
@@ -932,7 +1084,7 @@ pub fn testbench_rows(
 pub fn testbench_for(design: &Design, samples: &[Sample], dut: &str) -> String {
     let control = matches!(
         design.arch,
-        ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial
+        ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial | ArchKind::Systolic
     );
     testbench(&design.qann, samples, dut, design.cycles(), control)
 }
@@ -1106,6 +1258,33 @@ mod tests {
         let vm = verilog(&dm, "ann_ds_mcm");
         assert!(vm.contains("reg [7:0] bitcnt"));
         assert!(vm.contains("g0_x0"), "layer 0 graph input binding");
+        assert!(vm.contains("psel_0_0"), "per-neuron product select");
+        assert!(!vm.contains(" * "), "multiplierless must not multiply");
+        let nodes: usize = dm.graphs.iter().map(|g| g.nodes.len()).sum();
+        let wires = vm.lines().filter(|l| l.contains("wire signed") && l.contains("<<<")).count();
+        assert!(wires >= nodes, "expected >= {nodes} graph wires, got {wires}");
+    }
+
+    #[test]
+    fn systolic_netlist_structure() {
+        use crate::hw::systolic::SYSTOLIC;
+        let q = qann("16-10-10");
+        // behavioral: per-slot token/counter FSMs, product left to synthesis
+        let db = SYSTOLIC.elaborate(&q, Style::Behavioral);
+        let vb = verilog(&db, "ann_sy");
+        assert!(vb.contains("// generated by SIMURG-RS: systolic / behavioral"));
+        assert!(vb.contains("reg tok_0"), "ring token flop per slot");
+        assert!(vb.contains("reg tok_1"));
+        assert!(vb.contains("reg [7:0] cnt_0"), "per-slot input counter");
+        assert!(vb.contains("tok_0 && start"), "slot 0 waits for the start strobe");
+        assert!(vb.contains("tok_0 <= 0; tok_1 <= 1;"), "commit passes the token on");
+        assert!(vb.contains("tok_1 <= 0; tok_0 <= 1;"), "the last slot wraps the ring");
+        assert!(vb.contains(" * "), "behavioral leaves the product to the synthesis tool");
+        assert!(vb.contains("done <= 1"));
+        // mcm: products tapped from the embedded graph, no multiplier
+        let dm = SYSTOLIC.elaborate(&q, Style::Mcm);
+        let vm = verilog(&dm, "ann_sy_mcm");
+        assert!(vm.contains("g0_x0"), "slot 0 graph input binding");
         assert!(vm.contains("psel_0_0"), "per-neuron product select");
         assert!(!vm.contains(" * "), "multiplierless must not multiply");
         let nodes: usize = dm.graphs.iter().map(|g| g.nodes.len()).sum();

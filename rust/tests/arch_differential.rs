@@ -14,10 +14,12 @@
 //!    architectures;
 //! 2. the interpreter's cycle count matches each schedule's closed-form
 //!    formula — the same table ARCHITECTURE.md documents:
-//!    1 / stages+1 / Σ(ι+1) / Σ(ι+2)·η / B·Σ(ι+1), with `B` the
+//!    1 / stages+1 / Σ(ι+1) / Σ(ι+2)·η / B·Σ(ι+1) / Σ(ι+1), with `B` the
 //!    digit-serial design's worst accumulator width (the bit-width-
 //!    dependent cycle model, exercised away from small weights by the
-//!    wide-bit-width corpus below);
+//!    wide-bit-width corpus below) and the systolic ring batching at
+//!    `fill + n·steady + drain` (restated in [`ring_fill_steady_drain`]
+//!    and checked for multiple ring sizes below);
 //! 3. `simulate_batch` agrees with the per-input route on outputs and
 //!    cycles, and its batch throughput matches
 //!    `Schedule::throughput_cycles` (for the pipelined schedule:
@@ -149,15 +151,45 @@ fn closed_form_cycles(arch: &str, qann: &QuantizedAnn) -> usize {
         // bit-width-dependent: every layer-sequential step stretched into
         // B bit-cycles
         "digit_serial" => serial_word_bits(qann) * st.smac_neuron_cycles(),
+        // the ring's single-sample latency is SMAC_NEURON's: the token
+        // still visits every layer in sequence for ι_k + 1 cycles
+        "systolic" => st.smac_neuron_cycles(),
         other => panic!("unknown architecture {other}"),
     }
 }
 
+/// Independent restatement of the systolic ring's fill/steady/drain
+/// decomposition for a ring of `slots` SMAC_NEURON blocks (layer `k` on
+/// slot `k % slots`): the steady interval is the bottleneck slot's work,
+/// fill is the slot work before the first bottleneck, drain the rest of
+/// the latency.
+fn ring_fill_steady_drain(qann: &QuantizedAnn, slots: usize) -> (usize, usize, usize) {
+    let st = &qann.structure;
+    let slots = slots.clamp(1, st.num_layers());
+    let mut work = vec![0usize; slots];
+    for k in 0..st.num_layers() {
+        work[k % slots] += st.layer_inputs(k) + 1;
+    }
+    let steady = *work.iter().max().unwrap();
+    let bottleneck = work.iter().position(|&w| w == steady).unwrap();
+    let fill: usize = work[..bottleneck].iter().sum();
+    (fill, steady, st.smac_neuron_cycles() - fill - steady)
+}
+
 /// Closed-form batch throughput cycles for an architecture.
 fn closed_form_throughput(arch: &str, qann: &QuantizedAnn, n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
     match arch {
         "parallel" => n,
         "pipelined" => qann.structure.num_layers() + n,
+        // the registry entry is the full ring (one slot per layer):
+        // fill + n·steady + drain
+        "systolic" => {
+            let (fill, steady, drain) = ring_fill_steady_drain(qann, qann.structure.num_layers());
+            fill + n * steady + drain
+        }
         _ => n * closed_form_cycles(arch, qann),
     }
 }
@@ -376,6 +408,46 @@ fn wide_bit_width_nets_exercise_the_cycle_model() {
             d.cycles() >= 32 * qann.structure.smac_neuron_cycles(),
             "wide operands must cost bit-cycles"
         );
+    }
+}
+
+#[test]
+fn systolic_ring_sizes_follow_the_fill_steady_drain_closed_form() {
+    // beyond the registry's full ring: smaller rings fold several layers
+    // onto one slot, which moves the bottleneck and the fill/drain split.
+    // Every ring size must match the restated closed form, keep the
+    // SMAC_NEURON latency, and stay bit-identical to the golden model.
+    let mut rng = Rng::new(0x5157_011C);
+    for _ in 0..8 {
+        let qann = random_qann(&mut rng);
+        let rows = corpus(&mut rng, qann.structure.inputs, 5);
+        let batch = BatchInputs::from_rows(&rows);
+        for slots in [1usize, 2, qann.structure.num_layers()] {
+            for style in [simurg::hw::Style::Behavioral, simurg::hw::Style::Mcm] {
+                let design = simurg::hw::systolic::Systolic::with_ring(slots).elaborate(&qann, style);
+                let (fill, steady, drain) = ring_fill_steady_drain(&qann, slots);
+                let program = design.schedule.program(&qann.structure);
+                assert_eq!(
+                    (program.fill(), program.steady(), program.drain()),
+                    (fill, steady, drain),
+                    "ring of {slots} slots on {}",
+                    qann.structure
+                );
+                // the token still visits every layer in sequence, so the
+                // single-sample latency never depends on the ring size
+                assert_eq!(design.cycles(), qann.structure.smac_neuron_cycles());
+                let run = simulate_batch(&design, &batch);
+                assert_eq!(
+                    run.throughput_cycles,
+                    fill + rows.len() * steady + drain,
+                    "ring of {slots} slots on {}",
+                    qann.structure
+                );
+                for (s, row) in rows.iter().enumerate() {
+                    assert_eq!(run.sample_outputs(s), sim::forward(&qann, row));
+                }
+            }
+        }
     }
 }
 

@@ -189,6 +189,10 @@ fn batch_throughput_matches_every_schedule_model() {
             // serializing inferences (for any multi-sample batch)
             "parallel" => assert_eq!(run.throughput_cycles, rows.len()),
             "pipelined" => assert!(run.throughput_cycles < per_sample_serialized),
+            // the ring overlaps samples across its slots: strictly better
+            // than serializing, but its steady interval (the bottleneck
+            // slot's work) keeps it behind the one-per-cycle pipeline
+            "systolic" => assert!(run.throughput_cycles < per_sample_serialized),
             // the MAC schedules serialize whole inferences
             _ => assert_eq!(run.throughput_cycles, per_sample_serialized),
         }

@@ -287,7 +287,7 @@ fn design_cost_reproduces_prerefactor_reports() {
     for structure in ["16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10"] {
         let q = qann(structure, 6, 5);
         for (arch, style) in design_points() {
-            if matches!(arch.name(), "pipelined" | "digit_serial") {
+            if matches!(arch.name(), "pipelined" | "digit_serial" | "systolic") {
                 // post-refactor architectures: no pre-refactor golden
                 // exists; their conformance harness is
                 // rust/tests/arch_differential.rs
@@ -308,7 +308,7 @@ fn design_cost_is_stable_under_requantization() {
     for q_bits in [4, 8] {
         let q = qann("16-16-10", q_bits, 23);
         for (arch, style) in design_points() {
-            if matches!(arch.name(), "pipelined" | "digit_serial") {
+            if matches!(arch.name(), "pipelined" | "digit_serial" | "systolic") {
                 continue; // no pre-refactor golden (see above)
             }
             let name = format!("q{q_bits} {} {}", arch.name(), style.name());
@@ -358,6 +358,9 @@ fn cycle_formulas_hold_for_every_design_point() {
                 "smac_neuron" => st.smac_neuron_cycles(),
                 "smac_ann" => st.smac_ann_cycles(),
                 "digit_serial" => serial_bits * st.smac_neuron_cycles(),
+                // the ring's single-sample latency is SMAC_NEURON's —
+                // ring size only changes the batch interval
+                "systolic" => st.smac_neuron_cycles(),
                 other => panic!("unknown architecture {other}"),
             };
             assert_eq!(d.cycles(), expected, "{structure} {} schedule", arch.name());
@@ -368,6 +371,60 @@ fn cycle_formulas_hold_for_every_design_point() {
                 arch.name(),
                 style.name()
             );
+        }
+    }
+}
+
+#[test]
+fn cycle_programs_reproduce_the_five_legacy_closed_forms() {
+    // the interpreter-refactor pin: Schedule::cycles/throughput_cycles
+    // now evaluate a Fill/Steady/Drain cycle program; for the five legacy
+    // schedules the program must reproduce the pre-refactor closed forms
+    // bit-for-bit — latency AND batch stretching — on every benchmark
+    // structure and batch size
+    use simurg::hw::design::Schedule;
+    for structure in ["16-10", "16-10-10", "16-16-10", "16-10-10-10", "16-16-10-10"] {
+        let q = qann(structure, 6, 11);
+        let st = &q.structure;
+        let bits = simurg::hw::digit_serial::serial_bits(&q);
+        let stages = st.num_layers();
+        let legacy_latency = |s: Schedule| match s {
+            Schedule::Combinational => 1,
+            Schedule::Pipelined { stages } => stages + 1,
+            Schedule::LayerSequential => st.smac_neuron_cycles(),
+            Schedule::NeuronSequential => st.smac_ann_cycles(),
+            Schedule::DigitSerial { bits } => bits as usize * st.smac_neuron_cycles(),
+            other => panic!("not a legacy schedule: {other:?}"),
+        };
+        let legacy_throughput = |s: Schedule, n: usize| {
+            if n == 0 {
+                return 0;
+            }
+            match s {
+                Schedule::Combinational => n,
+                Schedule::Pipelined { stages } => stages + n,
+                Schedule::LayerSequential | Schedule::NeuronSequential | Schedule::DigitSerial { .. } => {
+                    n * legacy_latency(s)
+                }
+                other => panic!("not a legacy schedule: {other:?}"),
+            }
+        };
+        for s in [
+            Schedule::Combinational,
+            Schedule::Pipelined { stages },
+            Schedule::LayerSequential,
+            Schedule::NeuronSequential,
+            Schedule::DigitSerial { bits },
+        ] {
+            assert_eq!(s.cycles(st), legacy_latency(s), "{structure} {s:?} latency");
+            assert_eq!(s.program(st).latency(), legacy_latency(s));
+            for n in [0, 1, 2, 7, 33, 300, 4096] {
+                assert_eq!(
+                    s.throughput_cycles(st, n),
+                    legacy_throughput(s, n),
+                    "{structure} {s:?} n={n}"
+                );
+            }
         }
     }
 }
@@ -406,7 +463,7 @@ fn control_verilog_reset_clears_every_accumulator() {
     // simulator X-poisoned the first inference through the MAC chain
     use simurg::hw::verilog;
     let q = qann("16-10-10", 6, 7);
-    for name in ["smac_neuron", "digit_serial"] {
+    for name in ["smac_neuron", "digit_serial", "systolic"] {
         let (arch, style) = design_points()
             .into_iter()
             .find(|(a, s)| a.name() == name && *s == Style::Behavioral)

@@ -164,6 +164,42 @@ fn digit_serial_multiplierless_styles_emit_no_multiplier() {
 }
 
 #[test]
+fn systolic_multiplierless_style_emits_no_multiplier() {
+    // the satellite pin for the sixth registry entry: the ring's mcm
+    // style taps each slot's embedded MCM product graph (muxed per
+    // neuron), so it must never fall back to the `*` operator — while
+    // the ring-token handshake regs that sequence the slots are present
+    // in both styles
+    for structure in ["16-10", "16-16-10", "16-10-10-10"] {
+        let q = qann(structure, 6, 29);
+        let arch = simurg::hw::design::design_points()
+            .into_iter()
+            .map(|(a, _)| a)
+            .find(|a| a.name() == "systolic")
+            .expect("systolic is a registry entry");
+        for &style in arch.styles() {
+            let v = verilog::verilog(&arch.elaborate(&q, style), "lint_sy");
+            let point = format!("{structure} systolic/{}", style.name());
+            lint(&v, &point);
+            assert!(v.contains("tok_0"), "{point}: ring token regs missing");
+            if style == Style::Behavioral {
+                continue;
+            }
+            for line in code_lines(&v) {
+                assert!(
+                    !line.contains(" * "),
+                    "{point}: systolic multiplierless style emitted a `*`: {line}"
+                );
+            }
+            assert!(
+                v.lines().any(|l| l.contains("<<<")),
+                "{point}: shift-add taps must be present"
+            );
+        }
+    }
+}
+
+#[test]
 fn cosim_emitted_benches_pass_the_lint_without_iverilog() {
     // the EDA gate's artifacts stay checkable where Icarus is absent:
     // every cosim case's DUT passes the structural lint, and its

@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Compare fresh smoke-bench records against the committed baselines.
+
+Usage: python3 scripts/bench_check.py [--fresh DIR] [--baselines DIR]
+
+For every BENCH_*.json in the fresh directory (default: cwd) with a
+committed counterpart in benchmarks/baselines/, modeled numeric fields
+must match the baseline exactly (1e-6 relative); measured wall-clock
+fields (*_ms, speedup) are printed side by side but never fail — the
+acceptance floors asserted inside the benches are the hard perf gate.
+See benchmarks/baselines/README.md for the capture protocol.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+# leaf keys whose values are wall-clock measurements: report-only
+MEASURED = ("_ms", "speedup")
+# leaf keys that are environment-, not model-, dependent: ignored
+IGNORED = ("threads", "smoke")
+
+REL_TOL = 1e-6
+
+
+def is_measured(key):
+    return any(key.endswith(suffix) for suffix in MEASURED)
+
+
+def walk(fresh, base, path, drift, timing):
+    if isinstance(fresh, dict) and isinstance(base, dict):
+        for key in sorted(set(fresh) | set(base)):
+            if key in IGNORED:
+                continue
+            sub = f"{path}.{key}" if path else key
+            if key not in fresh or key not in base:
+                drift.append(f"{sub}: present in only one record")
+                continue
+            walk(fresh[key], base[key], sub, drift, timing)
+    elif isinstance(fresh, list) and isinstance(base, list):
+        if len(fresh) != len(base):
+            drift.append(f"{path}: length {len(fresh)} vs baseline {len(base)}")
+            return
+        for i, (f, b) in enumerate(zip(fresh, base)):
+            walk(f, b, f"{path}[{i}]", drift, timing)
+    elif isinstance(fresh, (int, float)) and isinstance(base, (int, float)):
+        key = path.rsplit(".", 1)[-1]
+        if is_measured(key):
+            timing.append(f"{path}: {fresh} (baseline {base})")
+        elif abs(fresh - base) > REL_TOL * max(abs(fresh), abs(base), 1.0):
+            drift.append(f"{path}: modeled value {fresh} != baseline {base}")
+    elif fresh != base:
+        drift.append(f"{path}: {fresh!r} != baseline {base!r}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default=".", type=pathlib.Path)
+    ap.add_argument("--baselines", default="benchmarks/baselines", type=pathlib.Path)
+    args = ap.parse_args()
+
+    records = sorted(args.fresh.glob("BENCH_*.json"))
+    if not records:
+        print("bench_check: no fresh BENCH_*.json records found — nothing to compare")
+        return 0
+    failed = False
+    for record in records:
+        baseline = args.baselines / record.name
+        if not baseline.exists():
+            print(f"bench_check: {record.name}: no committed baseline — skipped "
+                  f"(see {args.baselines}/README.md to seed one)")
+            continue
+        drift, timing = [], []
+        walk(json.loads(record.read_text()), json.loads(baseline.read_text()),
+             "", drift, timing)
+        for line in timing:
+            print(f"bench_check: {record.name}: [timing] {line}")
+        for line in drift:
+            print(f"bench_check: {record.name}: MODELED DRIFT {line}")
+        if drift:
+            failed = True
+        else:
+            print(f"bench_check: {record.name}: modeled fields match the baseline")
+    if failed:
+        print("bench_check: modeled figures drifted from the committed baselines; "
+              "refresh benchmarks/baselines/ in this PR if the change is intended")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
