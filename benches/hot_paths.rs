@@ -30,7 +30,7 @@ use simurg::hw::daemon::{Daemon, DaemonConfig};
 use simurg::hw::design::{ArchKind, LayerPricer};
 use simurg::hw::netsim;
 use simurg::hw::serve::{self, BatchInputs, ServeConfig};
-use simurg::hw::{Architecture, Style};
+use simurg::hw::{Architecture, DesignCache, Envelope, LayerProgram, Style};
 use simurg::num::Rng;
 use simurg::posttrain::{AccuracyEval, BatchEval, NativeEval};
 use simurg::runtime::{Artifacts, PjrtEval};
@@ -49,9 +49,10 @@ fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
 
 /// Batched SoA serving vs the per-input interpreter, across the design
 /// points whose batch behavior differs: a combinational graph design, a
-/// behavioral MAC schedule, both SMAC mcm product-graph routes and the
+/// behavioral MAC schedule, both SMAC mcm product-graph routes, the
 /// digit-serial mcm route (bit-serial cycle accounting over the same MAC
-/// program). Writes `BENCH_batch_netsim.json` — each point carries the
+/// program) and the runtime-scheduled loopback fabric (layer-program
+/// serialization). Writes `BENCH_batch_netsim.json` — each point carries the
 /// static worst-case energy and the activity-based workload energy priced
 /// from the batch's recorded `ActivityProfile`. Asserts the acceptance
 /// criteria (>= 3x batched throughput on the mcm serving path at batch
@@ -60,7 +61,8 @@ fn qann_for(structure: &str, seed: u64) -> QuantizedAnn {
 /// below combinational parallel; systolic modeled batch throughput
 /// strictly between the one-per-cycle pipeline and the serializing
 /// SMAC_NEURON MAC; activity-based energy never above the worst case at
-/// any point).
+/// any point; one shared loopback fabric serves a four-net envelope
+/// family with fewer elaborations than four dedicated designs).
 fn bench_batch_netsim(smoke: bool) {
     let data = if smoke {
         Dataset::synthetic_with_sizes(42, 300, 64)
@@ -85,6 +87,7 @@ fn bench_batch_netsim(smoke: bool) {
         (ArchKind::SmacAnn, Style::Mcm),
         (ArchKind::DigitSerial, Style::Mcm),
         (ArchKind::Systolic, Style::Mcm),
+        (ArchKind::Loopback, Style::Mcm),
     ];
     let lib = simurg::hw::TechLib::tsmc40();
     let mut entries = String::new();
@@ -195,6 +198,69 @@ fn bench_batch_netsim(smoke: bool) {
         100.0 * cache.hit_rate()
     );
 
+    // envelope serving: one shared loopback fabric vs one dedicated
+    // design per net. A four-net heterogeneous family inside a single
+    // envelope is served through a fresh DesignCache both ways; the
+    // fabric side must finish on a single elaboration (every member
+    // resolves to the same envelope-canonical content key) while the
+    // dedicated side pays one per net
+    let family: Vec<QuantizedAnn> = [("16-10-8", 61), ("12-16-5", 62), ("10-10-10-6", 63), ("16-16-10", 64)]
+        .into_iter()
+        .map(|(s, seed)| qann_for(s, seed))
+        .collect();
+    let env = family
+        .iter()
+        .skip(1)
+        .fold(Envelope::of(&family[0]), |e, m| e.union(Envelope::of(m)));
+    let fam_rows = |m: &QuantizedAnn| -> Vec<Vec<i32>> {
+        (0..64)
+            .map(|i| (0..m.structure.inputs).map(|j| ((i * 13 + j * 5) % 256) as i32 - 128).collect())
+            .collect()
+    };
+    let fabric_cache = DesignCache::new();
+    let dedicated_cache = DesignCache::new();
+    let t = Instant::now();
+    for m in &family {
+        let fabric = fabric_cache.design_for(&env, m, Style::Mcm).expect("family member fits");
+        let program = LayerProgram::lower(m, &env).expect("family member lowers");
+        let batch = BatchInputs::from_rows(&fam_rows(m));
+        black_box(serve::simulate_batch_program(&fabric, &program, &batch));
+    }
+    let fabric_ms = t.elapsed().as_secs_f64() * 1e3;
+    let t = Instant::now();
+    for m in &family {
+        let d = dedicated_cache.design(m, ArchKind::SmacNeuron, Style::Mcm);
+        black_box(serve::simulate_batch(&d, &BatchInputs::from_rows(&fam_rows(m))));
+    }
+    let dedicated_ms = t.elapsed().as_secs_f64() * 1e3;
+    // bit-exactness of the shared path rides on tests/arch_differential.rs
+    // and tests/batch_equivalence.rs; here we pin the elaboration economy
+    let fab_stats = fabric_cache.stats();
+    let ded_stats = dedicated_cache.stats();
+    println!(
+        "envelope family ({} nets, one fabric): fabric {fabric_ms:.2} ms / {} elaborations, \
+         dedicated {dedicated_ms:.2} ms / {} elaborations",
+        family.len(),
+        fab_stats.misses,
+        ded_stats.misses
+    );
+    assert_eq!(
+        ded_stats.misses,
+        family.len() as u64,
+        "each dedicated net costs its own elaboration"
+    );
+    assert!(
+        fab_stats.misses < ded_stats.misses,
+        "acceptance: one shared loopback design must serve the {}-net family with fewer \
+         elaborations than dedicated designs ({} !< {})",
+        family.len(),
+        fab_stats.misses,
+        ded_stats.misses
+    );
+    assert_eq!(fab_stats.misses, 1, "the whole family is ONE fabric elaboration");
+    assert_eq!(fab_stats.entries, 1, "and ONE cache entry");
+    assert_eq!(fab_stats.hits, family.len() as u64 - 1, "every later member hits");
+
     // pipelined vs combinational batch serving: same per-layer datapaths,
     // but the pipe's clock is the slowest stage instead of the whole
     // chain, so the modeled batch time (throughput cycles x clock period)
@@ -273,7 +339,10 @@ fn bench_batch_netsim(smoke: bool) {
          \"sharded\": {{\"batch\": {big_n}, \"threads\": {threads}, \
          \"scalar_ms\": {scalar_ms:.3}, \"sharded_ms\": {sharded_ms:.3}, \
          \"speedup\": {shard_speedup:.3}}},\n  \
-         \"cache\": {{\"lookups\": {}, \"hits\": {}, \"hit_rate\": {:.4}}}\n}}\n",
+         \"cache\": {{\"lookups\": {}, \"hits\": {}, \"hit_rate\": {:.4}}},\n  \
+         \"envelope\": {{\"family\": {}, \"fabric_elaborations\": {}, \
+         \"dedicated_elaborations\": {}, \"fabric_ms\": {fabric_ms:.3}, \
+         \"dedicated_ms\": {dedicated_ms:.3}}}\n}}\n",
         pipe_run.throughput_cycles,
         comb_run.throughput_cycles,
         ds_cost.area_um2,
@@ -283,7 +352,10 @@ fn bench_batch_netsim(smoke: bool) {
         ds_cost.cycles,
         cache.lookups(),
         cache.hits,
-        cache.hit_rate()
+        cache.hit_rate(),
+        family.len(),
+        fab_stats.misses,
+        ded_stats.misses
     );
     std::fs::write("BENCH_batch_netsim.json", &json).expect("write BENCH_batch_netsim.json");
     println!("wrote BENCH_batch_netsim.json");

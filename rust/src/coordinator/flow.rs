@@ -201,13 +201,14 @@ impl FlowOutcome {
             // design, so the parallel tuner's result is the one that
             // minimizes its datapath too
             ArchKind::Parallel | ArchKind::Pipelined => &self.tuned_parallel,
-            // the digit-serial MAC and the systolic ring store the same
-            // per-neuron sls-factored weights (and share SMAC_NEURON's
-            // per-layer mcm product instance), so the per-neuron sls
-            // tuner is their tuner too
-            ArchKind::SmacNeuron | ArchKind::DigitSerial | ArchKind::Systolic => {
-                &self.tuned_smac_neuron
-            }
+            // the digit-serial MAC, the systolic ring and the loopback
+            // fabric store the same per-neuron sls-factored weights (and
+            // share SMAC_NEURON's per-layer mcm product instance), so
+            // the per-neuron sls tuner is their tuner too
+            ArchKind::SmacNeuron
+            | ArchKind::DigitSerial
+            | ArchKind::Systolic
+            | ArchKind::Loopback => &self.tuned_smac_neuron,
             ArchKind::SmacAnn => &self.tuned_smac_ann,
         }
     }

@@ -133,6 +133,8 @@ fn arch_tag(a: ArchKind) -> u8 {
         ArchKind::SmacNeuron => 2,
         ArchKind::SmacAnn => 3,
         ArchKind::DigitSerial => 4,
+        ArchKind::Systolic => 5,
+        ArchKind::Loopback => 6,
     }
 }
 
@@ -143,6 +145,8 @@ fn arch_of(tag: u8) -> Result<ArchKind> {
         2 => ArchKind::SmacNeuron,
         3 => ArchKind::SmacAnn,
         4 => ArchKind::DigitSerial,
+        5 => ArchKind::Systolic,
+        6 => ArchKind::Loopback,
         t => bail!("unknown architecture tag {t}"),
     })
 }
@@ -437,6 +441,11 @@ fn enc_schedule(e: &mut Enc, s: Schedule) {
             e.u8(4);
             e.u32(bits);
         }
+        Schedule::Systolic { slots } => {
+            e.u8(5);
+            e.usize(slots);
+        }
+        Schedule::Loopback => e.u8(6),
     }
 }
 
@@ -447,6 +456,8 @@ fn dec_schedule(d: &mut Dec) -> Result<Schedule> {
         2 => Schedule::LayerSequential,
         3 => Schedule::NeuronSequential,
         4 => Schedule::DigitSerial { bits: d.u32()? },
+        5 => Schedule::Systolic { slots: d.u64()? as usize },
+        6 => Schedule::Loopback,
         t => bail!("unknown schedule tag {t}"),
     })
 }

@@ -17,7 +17,7 @@
 //! probes for it once per process, and [`run_case`] returns
 //! [`CosimOutcome::Skipped`] instead of failing when the toolchain is
 //! absent — the repo's own tests stay hermetic, while the CI `cosim` job
-//! installs `iverilog` and turns the gate on for all fifteen points.
+//! installs `iverilog` and turns the gate on for all nineteen points.
 //! Every emitted file is left in the case directory either way, so a
 //! failing run's module, bench, log and VCD can be uploaded as artifacts.
 
@@ -82,7 +82,11 @@ pub struct CosimCase {
 fn has_control(design: &Design) -> bool {
     matches!(
         design.arch,
-        ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial | ArchKind::Systolic
+        ArchKind::SmacNeuron
+            | ArchKind::SmacAnn
+            | ArchKind::DigitSerial
+            | ArchKind::Systolic
+            | ArchKind::Loopback
     )
 }
 
@@ -90,7 +94,17 @@ fn has_control(design: &Design) -> bool {
 pub fn case_for(design: &Design, rows: &[Vec<i32>]) -> CosimCase {
     let arch = design.arch.name();
     let style = design.style.name();
-    let module = format!("{arch}_{style}");
+    // sub-full systolic rings share the arch name with the full ring;
+    // fold the slot count into the module so their case dirs never
+    // collide (full-ring and non-systolic names are unchanged)
+    let module = match design.schedule {
+        super::design::Schedule::Systolic { slots }
+            if slots < design.qann.structure.num_layers() =>
+        {
+            format!("{arch}_r{slots}_{style}")
+        }
+        _ => format!("{arch}_{style}"),
+    };
     let control = has_control(design);
     let testbench = verilog::testbench_rows(&design.qann, rows, &module, design.cycles(), control);
     CosimCase {
@@ -105,7 +119,7 @@ pub fn case_for(design: &Design, rows: &[Vec<i32>]) -> CosimCase {
 }
 
 /// Elaborate every registry design point of `qann` and pair it with a
-/// testbench over `rows` — the full fifteen-point gate.
+/// testbench over `rows` — the full nineteen-point gate.
 pub fn cases(qann: &QuantizedAnn, rows: &[Vec<i32>]) -> Vec<CosimCase> {
     design_points().into_iter().map(|(a, s)| case_for(&a.elaborate(qann, s), rows)).collect()
 }
@@ -186,7 +200,7 @@ pub fn run_case(case: &CosimCase, dir: &Path) -> CosimOutcome {
     }
 }
 
-/// Run the full fifteen-point gate for `qann` under `root` (one
+/// Run the full nineteen-point gate for `qann` under `root` (one
 /// subdirectory per design point), returning `(module, outcome)` pairs.
 pub fn run_all(qann: &QuantizedAnn, rows: &[Vec<i32>], root: &Path) -> Vec<(String, CosimOutcome)> {
     cases(qann, rows)
@@ -251,7 +265,7 @@ mod tests {
     fn run_case_skips_without_iverilog_and_passes_with_it() {
         // hermetic either way: Skipped when the external toolchain is
         // absent, a real compile+run (which must pass) when present —
-        // the CI `cosim` job takes the second branch for all 15 points
+        // the CI `cosim` job takes the second branch for all 19 points
         let q = qann("3-2", 6, 5);
         let rows = corpus(3, 2, 13);
         let d = Parallel.elaborate(&q, Style::Behavioral);

@@ -22,6 +22,13 @@
 //!   which cache tier answered its design fetches) surfaced through
 //!   [`Daemon::status`] the way `engine_summary`/`design_cache_summary`
 //!   are — and rendered by the same `coordinator::report::Summary` path.
+//! - **Envelope deployments.** [`Daemon::deploy_in_envelope`] registers
+//!   a member net of a loopback [`Envelope`] (`hw::loopback`): the net
+//!   is lowered to a runtime [`LayerProgram`] at deploy time (typed
+//!   [`EnvelopeError`] on non-members, no panic) and every such
+//!   deployment routes onto the envelope's ONE shared fabric design —
+//!   multi-tenant serving of heterogeneous nets from a single
+//!   cache/artifact entry.
 //! - **Tiered cache.** The daemon owns a
 //!   [`TieredDesignCache`]: the process-wide in-memory
 //!   [`DesignCache`](super::serve::DesignCache) optionally backed by a
@@ -54,6 +61,7 @@
 use super::artifact::{TierHit, TieredDesignCache};
 use super::design::{ActivityProfile, ArchKind, Architecture, Style};
 use super::gates::TechLib;
+use super::loopback::{Envelope, EnvelopeError, LayerProgram};
 use super::serve::{self, BatchInputs};
 use crate::ann::quant::QuantizedAnn;
 use anyhow::Result;
@@ -106,6 +114,15 @@ struct Deployment {
     qann: QuantizedAnn,
     arch: ArchKind,
     style: Style,
+    /// envelope deployments only: the member lowered for the shared
+    /// fabric — when present the worker runs
+    /// [`serve::simulate_batch_program_with`] instead of the baked-in
+    /// design path
+    program: Option<LayerProgram>,
+    /// envelope deployments only: the canonical net the shared fabric
+    /// is content-keyed by — every member of the envelope fetches this
+    /// SAME key, so the family costs one elaboration
+    fabric_qann: Option<QuantizedAnn>,
     requests: AtomicU64,
     batches: AtomicU64,
     largest_batch: AtomicU64,
@@ -294,11 +311,13 @@ impl Daemon {
             .unwrap_or(false);
         assert!(supported, "{} has no {} style", arch.name(), style.name());
         let layers = qann.structure.num_layers();
-        let dep = Arc::new(Deployment {
+        self.register(Deployment {
             name: name.into(),
             qann,
             arch,
             style,
+            program: None,
+            fabric_qann: None,
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             largest_batch: AtomicU64::new(0),
@@ -310,9 +329,54 @@ impl Daemon {
             activity: Mutex::new(ActivityProfile::new(layers)),
             energy_pj_bits: AtomicU64::new(0),
             workload_pj_bits: AtomicU64::new(0),
-        });
+        })
+    }
+
+    /// Register a member net of a loopback `env`elope: the net is
+    /// lowered to its runtime [`LayerProgram`] here (the typed
+    /// [`EnvelopeError`] — not a panic — when it is not a member), and
+    /// the deployment routes onto the envelope's one shared fabric
+    /// design: any number of heterogeneous member deployments fetch the
+    /// SAME content key, so the whole family costs one elaboration and
+    /// one cache/artifact entry.
+    pub fn deploy_in_envelope(
+        &self,
+        name: impl Into<String>,
+        qann: QuantizedAnn,
+        env: Envelope,
+        style: Style,
+    ) -> Result<DeploymentId, EnvelopeError> {
+        let supported = <dyn Architecture>::by_name(ArchKind::Loopback.name())
+            .map(|a| a.styles().contains(&style))
+            .unwrap_or(false);
+        assert!(supported, "loopback has no {} style", style.name());
+        let program = LayerProgram::lower(&qann, &env)?;
+        Ok(self.register(Deployment {
+            name: name.into(),
+            qann,
+            arch: ArchKind::Loopback,
+            style,
+            program: Some(program),
+            fabric_qann: Some(env.canonical_qann()),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            largest_batch: AtomicU64::new(0),
+            queue_ns: AtomicU64::new(0),
+            max_queue_ns: AtomicU64::new(0),
+            mem_hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            elaborations: AtomicU64::new(0),
+            // the fabric prices activity over the envelope's full depth
+            // (a shallower member simply never toggles the tail layers)
+            activity: Mutex::new(ActivityProfile::new(env.depth)),
+            energy_pj_bits: AtomicU64::new(0),
+            workload_pj_bits: AtomicU64::new(0),
+        }))
+    }
+
+    fn register(&self, dep: Deployment) -> DeploymentId {
         let mut deps = self.inner.deployments.lock().unwrap();
-        deps.push(dep);
+        deps.push(Arc::new(dep));
         DeploymentId(deps.len() - 1)
     }
 
@@ -461,15 +525,21 @@ fn worker_loop(inner: &Inner) {
             }
             let dep = &deps[di];
             for chunk in group.chunks(inner.cfg.max_batch) {
-                let (design, hit) = inner.cache.fetch(&dep.qann, dep.arch, dep.style);
+                // envelope deployments fetch the family's canonical
+                // fabric key; every member routes onto the same design
+                let fetch_qann = dep.fabric_qann.as_ref().unwrap_or(&dep.qann);
+                let (design, hit) = inner.cache.fetch(fetch_qann, dep.arch, dep.style);
                 match hit {
                     TierHit::Memory => dep.mem_hits.fetch_add(1, Ordering::Relaxed),
                     TierHit::Disk => dep.disk_hits.fetch_add(1, Ordering::Relaxed),
                     TierHit::Elaborated => dep.elaborations.fetch_add(1, Ordering::Relaxed),
                 };
                 let rows: Vec<&[i32]> = chunk.iter().map(|p| p.input.as_slice()).collect();
-                let run =
-                    serve::simulate_batch_with(&design, &BatchInputs::from_rows(&rows), &inner.cfg.serve);
+                let batch = BatchInputs::from_rows(&rows);
+                let run = match &dep.program {
+                    Some(p) => serve::simulate_batch_program_with(&design, p, &batch, &inner.cfg.serve),
+                    None => serve::simulate_batch_with(&design, &batch, &inner.cfg.serve),
+                };
                 // fold this batch's switching activity into the
                 // deployment's profile and re-price both energy columns
                 // while the design is in hand (one O(blocks) walk)
@@ -642,6 +712,74 @@ mod tests {
         assert!(w > 0.0 && w < e, "half-zero traffic must discount: workload {w}, worst {e}");
         let disc = d.energy_discount().unwrap();
         assert!(disc > 0.0 && disc < 1.0, "{disc}");
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn envelope_deployments_share_one_fabric_design() {
+        let daemon = isolated_daemon(DaemonConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+            artifact_dir: None,
+            ..DaemonConfig::default()
+        });
+        let env = Envelope::new(16, 3, 24);
+        let members = [qann("16-10-8", 6, 21), qann("12-16-5", 6, 22), qann("10-10-10-6", 6, 23)];
+        let ids: Vec<_> = members
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                daemon
+                    .deploy_in_envelope(format!("fam@{i}"), m.clone(), env, Style::Mcm)
+                    .unwrap()
+            })
+            .collect();
+        // a dedicated deployment rides alongside without crossing routes
+        let solo = qann("16-10", 6, 24);
+        let solo_id = daemon.deploy("solo@1", solo.clone(), ArchKind::SmacNeuron, Style::Behavioral);
+        for (m, &id) in members.iter().zip(&ids) {
+            for s in 0..3u64 {
+                let row: Vec<i32> =
+                    (0..m.structure.inputs).map(|i| ((i as u64 * 11 + s * 37) % 128) as i32).collect();
+                let out = daemon.infer(id, &row);
+                // each member's outputs off the SHARED fabric are the
+                // golden model's — the fabric never saw its weights
+                assert_eq!(out, crate::ann::sim::forward(m, &row));
+            }
+        }
+        let solo_row = vec![64i32; 16];
+        assert_eq!(daemon.infer(solo_id, &solo_row), crate::ann::sim::forward(&solo, &solo_row));
+        let st = daemon.status();
+        let fam: Vec<_> = st.deployments.iter().filter(|d| d.arch == ArchKind::Loopback).collect();
+        assert_eq!(fam.len(), 3);
+        let elabs: u64 = fam.iter().map(|d| d.elaborations).sum();
+        let hits: u64 = fam.iter().map(|d| d.mem_hits).sum();
+        assert_eq!(elabs, 1, "three heterogeneous members, ONE fabric elaboration");
+        assert!(hits >= 2, "later members hit the shared entry: {hits}");
+        for d in &fam {
+            assert_eq!(d.requests, 3);
+        }
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn envelope_deploy_rejects_non_members_with_typed_errors() {
+        let daemon = isolated_daemon(DaemonConfig::default());
+        let env = Envelope::new(8, 2, 24);
+        assert!(matches!(
+            daemon.deploy_in_envelope("wide", qann("16-10", 6, 31), env, Style::Behavioral),
+            Err(EnvelopeError::TooWide { .. })
+        ));
+        assert!(matches!(
+            daemon.deploy_in_envelope("deep", qann("8-8-8-8", 6, 32), env, Style::Behavioral),
+            Err(EnvelopeError::TooDeep { .. })
+        ));
+        // rejections register nothing and the daemon keeps serving
+        assert!(daemon.status().deployments.is_empty());
+        let q = qann("8-8", 6, 33);
+        let ok = daemon.deploy_in_envelope("fits", q.clone(), env, Style::Behavioral).unwrap();
+        let row = vec![50i32; 8];
+        assert_eq!(daemon.infer(ok, &row), crate::ann::sim::forward(&q, &row));
         daemon.shutdown();
     }
 

@@ -21,7 +21,7 @@
 //! call re-solves only the layers whose weights changed since the last
 //! call (tuner trajectories touch one weight per step).
 //!
-//! The six registry entries and their cycle models — each a
+//! The seven registry entries and their cycle models — each a
 //! [`CycleProgram`] of `Fill`/`Steady`/`Drain` phases — are tabulated in
 //! ARCHITECTURE.md; `rust/tests/arch_differential.rs` asserts the same
 //! formulas against the interpreters. End to end:
@@ -89,13 +89,16 @@ impl Style {
     }
 }
 
-/// The three design architectures of paper Sec. III plus the three
+/// The three design architectures of paper Sec. III plus the four
 /// entries this reproduction adds to the latency/area trade-off curve:
 /// the layer-pipelined parallel variant (`hw::pipelined`) on the
 /// throughput end, the digit-serial MAC (`hw::digit_serial`) on the area
-/// end (serial adders at 1 bit per cycle), and the systolic SMAC ring
+/// end (serial adders at 1 bit per cycle), the systolic SMAC ring
 /// (`hw::systolic`) between them — SMAC_NEURON blocks overlapped across
-/// layers of *different* samples.
+/// layers of *different* samples — and the runtime-scheduled loopback
+/// fabric (`hw::loopback`): one envelope-sized MAC bank whose output
+/// registers feed back as next-layer inputs, serving every net inside
+/// a (width, depth, bits) envelope from a single elaborated design.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArchKind {
     Parallel,
@@ -104,6 +107,7 @@ pub enum ArchKind {
     SmacAnn,
     DigitSerial,
     Systolic,
+    Loopback,
 }
 
 impl ArchKind {
@@ -115,6 +119,7 @@ impl ArchKind {
             ArchKind::SmacAnn => "smac_ann",
             ArchKind::DigitSerial => "digit_serial",
             ArchKind::Systolic => "systolic",
+            ArchKind::Loopback => "loopback",
         }
     }
 }
@@ -152,6 +157,17 @@ pub enum Schedule {
     /// so batches stream like a pipeline whose stage time is the slowest
     /// slot, not one cycle
     Systolic { slots: usize },
+    /// the runtime-scheduled loopback fabric: one envelope-sized bank of
+    /// SMAC-style MAC slots executes layer `k` in `ι_k + 1` cycles, then
+    /// the output registers feed back as the next layer's inputs — so
+    /// one inference costs `Σ(ι_k + 1)` cycles (the net's *actual* layer
+    /// widths, not the envelope's), and inferences serialize because the
+    /// single bank is busy for the whole program. The schedule variant is
+    /// a unit: the per-net cycle structure comes from the structure the
+    /// program runs over, exactly like `LayerSequential` — what differs
+    /// is that the same elaborated design serves every net in the
+    /// envelope (`hw::loopback::Envelope`)
+    Loopback,
 }
 
 /// One phase of a [`CycleProgram`]: the typed unit the cycle-program
@@ -244,7 +260,10 @@ impl Schedule {
     ///   steady interval is the bottleneck slot's work, fill is the work
     ///   of the slots before the first bottleneck, drain the remainder —
     ///   so latency is exactly `Σ(ι_k+1)` and a batch takes
-    ///   `fill + n·steady + drain`.
+    ///   `fill + n·steady + drain`;
+    /// - `Loopback` → `[Steady(Σ(ι_k+1))]`: the shared bank runs the
+    ///   per-net layer program (the *member* net's actual widths, not the
+    ///   envelope's), and inferences serialize on the single bank.
     pub fn program(self, st: &AnnStructure) -> CycleProgram {
         let phases = match self {
             Schedule::Combinational => vec![Phase::Steady(1)],
@@ -262,6 +281,7 @@ impl Schedule {
                 let drain: usize = work[bottleneck + 1..].iter().sum();
                 vec![Phase::Fill(fill), Phase::Steady(steady), Phase::Drain(drain)]
             }
+            Schedule::Loopback => vec![Phase::Steady(st.smac_neuron_cycles())],
         };
         CycleProgram { phases }
     }
@@ -443,11 +463,13 @@ fn gate_ratio(gate: Gate, schedule: Schedule, st: &AnnStructure, p: &ActivityPro
                         1.0
                     }
                 }
-                // the systolic ring runs each layer's SMAC_NEURON cycle
-                // program unchanged, so it shares the broadcast ratio
+                // the systolic ring and the loopback bank run each
+                // layer's SMAC_NEURON cycle program unchanged, so they
+                // share the broadcast ratio
                 Schedule::LayerSequential
                 | Schedule::DigitSerial { .. }
-                | Schedule::Systolic { .. } => (avg + 1.0) / (iota + 1.0),
+                | Schedule::Systolic { .. }
+                | Schedule::Loopback => (avg + 1.0) / (iota + 1.0),
                 Schedule::NeuronSequential => (avg + 2.0) / (iota + 2.0),
             }
         }
@@ -696,7 +718,7 @@ impl DesignBuilder {
 
 /// A design architecture: elaborates a quantized net into a [`Design`].
 /// Implementations live in
-/// `hw/{parallel,pipelined,smac_neuron,smac_ann,digit_serial,systolic}.rs`
+/// `hw/{parallel,pipelined,smac_neuron,smac_ann,digit_serial,systolic,loopback}.rs`
 /// and contain *only* elaboration — no gate arithmetic, no HDL, no
 /// simulation.
 pub trait Architecture: Sync {
@@ -732,9 +754,11 @@ impl dyn Architecture {
     /// presentation order, with the layer-pipelined parallel variant
     /// slotted in right after the combinational design it pipelines, and
     /// the digit-serial MAC as the extreme point of the latency/area
-    /// trade, and the systolic SMAC ring closing the list (the
-    /// time-multiplexed designs overlapped across samples).
-    pub fn all() -> [&'static dyn Architecture; 6] {
+    /// trade, the systolic SMAC ring (the time-multiplexed designs
+    /// overlapped across samples), and the runtime-scheduled loopback
+    /// fabric closing the list — the first entry whose elaborated design
+    /// is keyed by a net-family *envelope* rather than by one net.
+    pub fn all() -> [&'static dyn Architecture; 7] {
         [
             &super::parallel::Parallel,
             &super::pipelined::PipelinedParallel,
@@ -742,6 +766,7 @@ impl dyn Architecture {
             &super::smac_ann::SmacAnn,
             &super::digit_serial::DigitSerial,
             &super::systolic::SYSTOLIC,
+            &super::loopback::LOOPBACK,
         ]
     }
 
@@ -751,12 +776,20 @@ impl dyn Architecture {
 }
 
 /// Every (architecture × style) design point, data-driven from the
-/// registry — replaces the triplicated match arms the sweeps used to carry.
+/// registry — replaces the triplicated match arms the sweeps used to
+/// carry. Beyond the seven `all()` entries' styles, the sub-full
+/// systolic ring (`hw::systolic::SYSTOLIC_HALF`, `P = 2 < λ`) is a
+/// registry design point too: same `ArchKind`/name, same hardware, but a
+/// 2-slot schedule trading the batch interval against slot count — the
+/// ROADMAP's heterogeneous-ring item made concrete.
 pub fn design_points() -> Vec<(&'static dyn Architecture, Style)> {
-    <dyn Architecture>::all()
+    let mut points: Vec<(&'static dyn Architecture, Style)> = <dyn Architecture>::all()
         .into_iter()
         .flat_map(|a| a.styles().iter().map(move |&s| (a, s)))
-        .collect()
+        .collect();
+    let half: &'static dyn Architecture = &super::systolic::SYSTOLIC_HALF;
+    points.extend(half.styles().iter().map(|&s| (half, s)));
+    points
 }
 
 /// The sls-factored stored weights of layer `k` with per-neuron factoring
@@ -813,12 +846,19 @@ fn layer_instances(arch: ArchKind, style: Style, qann: &QuantizedAnn, k: usize) 
             vec![(LinearTargets::cmvm(&qann.weights[k]), Tier::Cse)]
         }
         (ArchKind::Pipelined, Style::Mcm) => mcm_column_instances(qann, k),
-        // the digit-serial MAC and the systolic ring share SMAC_NEURON's
-        // per-layer product instance: one MCM block over the sls-factored
-        // stored weights of the broadcast input — the graph is merely
-        // *realized* serially (digit-serial) or *placed* in a ring slot
-        // (systolic)
-        (ArchKind::SmacNeuron | ArchKind::DigitSerial | ArchKind::Systolic, Style::Mcm) => {
+        // the digit-serial MAC, the systolic ring and the loopback fabric
+        // share SMAC_NEURON's per-layer product instance: one MCM block
+        // over the sls-factored stored weights of the broadcast input —
+        // the graph is merely *realized* serially (digit-serial), *placed*
+        // in a ring slot (systolic), or *selected* by the layer program
+        // (loopback)
+        (
+            ArchKind::SmacNeuron
+            | ArchKind::DigitSerial
+            | ArchKind::Systolic
+            | ArchKind::Loopback,
+            Style::Mcm,
+        ) => {
             let (stored, _) = stored_layer(qann, k);
             let consts: Vec<i64> = stored.into_iter().flatten().collect();
             vec![(LinearTargets::mcm(&consts), Tier::McmHeuristic)]
@@ -835,7 +875,11 @@ fn layer_instances(arch: ArchKind, style: Style, qann: &QuantizedAnn, k: usize) 
         // behavioral MACs have no constant-multiplication network, and the
         // SMAC_ANN whole-net instance is attached to layer 0 only
         (
-            ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial | ArchKind::Systolic,
+            ArchKind::SmacNeuron
+            | ArchKind::SmacAnn
+            | ArchKind::DigitSerial
+            | ArchKind::Systolic
+            | ArchKind::Loopback,
             Style::Behavioral,
         )
         | (ArchKind::SmacAnn, Style::Mcm) => Vec::new(),
@@ -886,7 +930,10 @@ fn cost_key(arch: ArchKind, qann: &QuantizedAnn, k: usize) -> u64 {
         }
     };
     match arch {
-        ArchKind::SmacAnn | ArchKind::DigitSerial => {
+        // the loopback bank is sized by the envelope of the whole net
+        // (max width / depth / bit-width over every layer), so every
+        // layer's fragment depends on every layer's content
+        ArchKind::SmacAnn | ArchKind::DigitSerial | ArchKind::Loopback => {
             (0..qann.structure.num_layers()).for_each(&mut add_layer)
         }
         _ => add_layer(k),
@@ -931,6 +978,7 @@ fn ratio_schedule(arch: ArchKind, qann: &QuantizedAnn) -> Schedule {
             Schedule::DigitSerial { bits: super::digit_serial::serial_bits(qann) }
         }
         ArchKind::Systolic => Schedule::Systolic { slots: qann.structure.num_layers() },
+        ArchKind::Loopback => Schedule::Loopback,
     }
 }
 
@@ -1019,7 +1067,10 @@ impl LayerPricer {
             .enumerate()
             .map(|(k, &(_, energy, gated))| {
                 let gate = match self.arch {
-                    ArchKind::SmacAnn => Gate::Net,
+                    // one shared datapath serves every layer in turn: the
+                    // SMAC_ANN MAC and the loopback bank both gate on
+                    // whole-net occupancy
+                    ArchKind::SmacAnn | ArchKind::Loopback => Gate::Net,
                     _ => Gate::Layer(k),
                 };
                 (energy - gated) + gated * gate_ratio(gate, sched, st, profile)
@@ -1049,17 +1100,34 @@ mod tests {
         let names: Vec<&str> = <dyn Architecture>::all().iter().map(|a| a.name()).collect();
         assert_eq!(
             names,
-            ["parallel", "pipelined", "smac_neuron", "smac_ann", "digit_serial", "systolic"]
+            [
+                "parallel",
+                "pipelined",
+                "smac_neuron",
+                "smac_ann",
+                "digit_serial",
+                "systolic",
+                "loopback"
+            ]
         );
-        assert_eq!(design_points().len(), 15, "3 parallel + 4 pipelined + 2 + 2 + 2 + 2");
+        assert_eq!(
+            design_points().len(),
+            19,
+            "3 parallel + 4 pipelined + 2 + 2 + 2 + 2 + 2 loopback + 2 sub-full ring"
+        );
         for (a, s) in design_points() {
             assert!(a.styles().contains(&s));
         }
+        // the sub-full ring rides along as extra design points of the
+        // same registered architecture: same name, 2-slot schedule
+        let systolic_points =
+            design_points().iter().filter(|(a, _)| a.name() == "systolic").count();
+        assert_eq!(systolic_points, 4, "full ring + sub-full ring, 2 styles each");
         assert!(<dyn Architecture>::by_name("parallel").is_some());
         assert!(<dyn Architecture>::by_name("pipelined").is_some());
         assert!(<dyn Architecture>::by_name("digit_serial").is_some());
         assert!(<dyn Architecture>::by_name("systolic").is_some());
-        assert!(<dyn Architecture>::by_name("loopback").is_none());
+        assert!(<dyn Architecture>::by_name("loopback").is_some());
     }
 
     #[test]
@@ -1090,6 +1158,15 @@ mod tests {
         for slots in 1..=4 {
             assert_eq!(Schedule::Systolic { slots }.cycles(&st), st.smac_neuron_cycles());
         }
+        // the loopback bank iterates the member net's actual layer
+        // program, so its latency is the layer-sequential closed form
+        // and batches serialize on the single bank
+        assert_eq!(Schedule::Loopback.cycles(&st), st.smac_neuron_cycles());
+        assert_eq!(
+            Schedule::Loopback.throughput_cycles(&st, 64),
+            64 * st.smac_neuron_cycles()
+        );
+        assert_eq!(Schedule::Loopback.throughput_cycles(&st, 0), 0);
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Runtime-scheduled loopback fabric: ONE envelope-sized datapath
+//! serving every net inside a `(width, depth, bits)` [`Envelope`] — the
+//! FINN-style complement to the paper's one-design-per-net flow. The
+//! fabric is a single bank of `width` SMAC-style MAC slots whose
+//! activation output registers feed back through a loopback mux as the
+//! next layer's broadcast inputs, driven by a layer-program ROM; a
+//! member net is *not* baked into the hardware but lowered at runtime
+//! to a [`LayerProgram`] (per-layer widths, sls-factored coefficients,
+//! biases, activations) that the shared fabric replays layer by layer.
+//!
+//! This is the first registry entry whose elaboration is keyed by an
+//! envelope rather than by one net: every member lowers onto the
+//! envelope's [`Envelope::canonical_qann`], so one `DesignCache` /
+//! `ArtifactStore` entry (and one emitted Verilog module) serves the
+//! whole family. [`Schedule::Loopback`] still prices each member by its
+//! *own* layer widths — `Σ(ι_k + 1)` cycles like SMAC_NEURON, with no
+//! cross-sample overlap (the bank is busy with one sample at a time).
+//!
+//! Styles mirror SMAC_NEURON: `Behavioral` (envelope-sized generic
+//! multiplier per slot, weight ROM over all `width × depth` entries)
+//! and `Mcm` (one engine-solved product graph per member layer whose
+//! products the envelope-sized slot muxes select).
+//!
+//! This module only *elaborates* the design; cost, simulation and HDL
+//! are derived from the resulting [`Design`] by `hw::design`,
+//! `hw::netsim` and `hw::verilog` (`emit_loopback`).
+
+use std::error::Error;
+use std::fmt;
+
+use super::design::{
+    self, ArchKind, Architecture, BlockKind, Design, DesignBuilder, Gate, LayerCompute, LayerPlan,
+    McmRef, Schedule, Style,
+};
+use super::report::{self, HwReport};
+use super::TechLib;
+use crate::ann::quant::QuantizedAnn;
+use crate::ann::structure::{Activation, AnnStructure};
+use crate::mcm::{LinearTargets, Tier};
+
+/// The registry instance: no pinned envelope — each net elaborates the
+/// fabric of its *own* envelope (`Envelope::of`), which keeps every
+/// data-driven registry sweep working while [`Loopback::for_envelope`]
+/// carries the multi-net serving mode.
+pub static LOOPBACK: Loopback = Loopback { envelope: None };
+
+/// The family a loopback fabric is sized for: any net whose widest
+/// layer fits `width` MAC slots, whose depth fits the layer-program ROM
+/// and whose coefficients (weights and biases) fit `bits` signed bits
+/// is a member and runs on the one elaborated design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Envelope {
+    /// MAC slots in the bank = max neurons per layer (and max fan-in,
+    /// since layer k+1's fan-in is layer k's neuron count or the
+    /// primary input count)
+    pub width: usize,
+    /// layer-program ROM entries = max layers
+    pub depth: usize,
+    /// signed bitwidth of the widest stored coefficient
+    pub bits: u32,
+}
+
+/// Typed rejection of a net that does not fit an [`Envelope`] — the
+/// serving stack surfaces these (`serve::DesignCache::design_for`, the
+/// daemon's `deploy_in_envelope`) instead of panicking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvelopeError {
+    /// a layer (or the input vector) is wider than the MAC bank
+    TooWide { width: usize, max: usize },
+    /// more layers than the layer-program ROM holds
+    TooDeep { depth: usize, max: usize },
+    /// a weight or bias needs more signed bits than the slots store
+    BitsOver { bits: u32, max: u32 },
+}
+
+impl fmt::Display for EnvelopeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EnvelopeError::TooWide { width, max } => {
+                write!(f, "net is {width} wide but the envelope admits at most {max}")
+            }
+            EnvelopeError::TooDeep { depth, max } => {
+                write!(f, "net has {depth} layers but the envelope admits at most {max}")
+            }
+            EnvelopeError::BitsOver { bits, max } => {
+                write!(f, "net needs {bits}-bit coefficients but the envelope admits at most {max}")
+            }
+        }
+    }
+}
+
+impl Error for EnvelopeError {}
+
+impl Envelope {
+    pub fn new(width: usize, depth: usize, bits: u32) -> Envelope {
+        Envelope { width: width.max(1), depth: depth.max(1), bits: bits.max(1) }
+    }
+
+    /// The tightest envelope admitting `qann`.
+    pub fn of(qann: &QuantizedAnn) -> Envelope {
+        let st = &qann.structure;
+        let mut width = st.layer_inputs(0);
+        let mut bits = 1u32;
+        for k in 0..st.num_layers() {
+            width = width.max(st.layer_outputs(k));
+            for (row, &b) in qann.weights[k].iter().zip(&qann.biases[k]) {
+                bits = bits.max(crate::num::signed_bitwidth(b));
+                for &w in row {
+                    bits = bits.max(crate::num::signed_bitwidth(w));
+                }
+            }
+        }
+        Envelope { width, depth: st.num_layers(), bits }
+    }
+
+    /// The smallest envelope admitting every member of both.
+    pub fn union(self, other: Envelope) -> Envelope {
+        Envelope {
+            width: self.width.max(other.width),
+            depth: self.depth.max(other.depth),
+            bits: self.bits.max(other.bits),
+        }
+    }
+
+    /// Membership check — `Ok(())` iff the one elaborated fabric can
+    /// run `qann`; the error names the first axis that overflows
+    /// (width, then depth, then bits).
+    pub fn admits(&self, qann: &QuantizedAnn) -> Result<(), EnvelopeError> {
+        let need = Envelope::of(qann);
+        if need.width > self.width {
+            return Err(EnvelopeError::TooWide { width: need.width, max: self.width });
+        }
+        if need.depth > self.depth {
+            return Err(EnvelopeError::TooDeep { depth: need.depth, max: self.depth });
+        }
+        if need.bits > self.bits {
+            return Err(EnvelopeError::BitsOver { bits: need.bits, max: self.bits });
+        }
+        Ok(())
+    }
+
+    /// The envelope's representative net — `width`-wide at every one of
+    /// its `depth` layers, every weight the widest `bits`-bit value —
+    /// used as the shared cache/artifact key: every member of the
+    /// envelope lowers onto this one net's elaborated design, and
+    /// `Envelope::of(canonical) == *self` so the key round-trips.
+    pub fn canonical_qann(&self) -> QuantizedAnn {
+        let sizes = vec![self.width.to_string(); self.depth + 1].join("-");
+        let structure = AnnStructure::parse(&sizes).expect("canonical envelope structure");
+        let w = -(1i64 << (self.bits.max(1) - 1)); // exactly `bits` signed bits
+        QuantizedAnn {
+            structure,
+            weights: (0..self.depth).map(|_| vec![vec![w; self.width]; self.width]).collect(),
+            biases: (0..self.depth).map(|_| vec![0i64; self.width]).collect(),
+            q: self.bits,
+            activations: vec![Activation::HTanh; self.depth],
+        }
+    }
+}
+
+/// One replayed layer of a member net: the runtime contents of the
+/// fabric's weight ROM slice and control words for that layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerStep {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// sls-factored stored coefficients, neuron-major (`stored[m][i]`)
+    pub stored: Vec<Vec<i64>>,
+    /// per-neuron smallest left shifts; the true weight is
+    /// `stored[m][i] << sls[m]` exactly (sls is the shared trailing-zero
+    /// count, so the reconstruction is lossless)
+    pub sls: Vec<u32>,
+    pub biases: Vec<i64>,
+    pub activation: Activation,
+}
+
+impl LayerStep {
+    /// The exact integer weight the fabric multiplies for neuron `m`,
+    /// input `i` (back-shift applied).
+    pub fn coef(&self, m: usize, i: usize) -> i64 {
+        self.stored[m][i] << self.sls[m]
+    }
+}
+
+/// A member net lowered for the shared fabric: what travels beside
+/// `BatchInputs` at serve time instead of being baked into hardware.
+/// `steps` replay the net's *actual* layers (a shallower member simply
+/// uses fewer ROM entries than the envelope holds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProgram {
+    pub structure: AnnStructure,
+    pub q: u32,
+    pub steps: Vec<LayerStep>,
+}
+
+impl LayerProgram {
+    /// Lower `qann` for a fabric of envelope `env`. Fails with the same
+    /// typed error as [`Envelope::admits`] when the net is not a member.
+    pub fn lower(qann: &QuantizedAnn, env: &Envelope) -> Result<LayerProgram, EnvelopeError> {
+        env.admits(qann)?;
+        let st = &qann.structure;
+        let steps = (0..st.num_layers())
+            .map(|k| {
+                let (stored, sls) = design::stored_layer(qann, k);
+                LayerStep {
+                    n_in: st.layer_inputs(k),
+                    n_out: st.layer_outputs(k),
+                    stored,
+                    sls,
+                    biases: qann.biases[k].clone(),
+                    activation: qann.activations[k],
+                }
+            })
+            .collect();
+        Ok(LayerProgram { structure: st.clone(), q: qann.q, steps })
+    }
+
+    /// One inference on the shared fabric: `Σ(ι_k + 1)` over the
+    /// member's own layer widths ([`Schedule::Loopback`]).
+    pub fn cycles(&self) -> usize {
+        Schedule::Loopback.cycles(&self.structure)
+    }
+
+    /// `n` inferences back-to-back (the bank holds one sample at a
+    /// time, so batches stretch linearly).
+    pub fn throughput_cycles(&self, n: usize) -> usize {
+        Schedule::Loopback.throughput_cycles(&self.structure, n)
+    }
+}
+
+/// The loopback fabric architecture. The registry carries [`LOOPBACK`]
+/// (per-net envelope); [`Loopback::for_envelope`] pins the envelope a
+/// whole family shares.
+pub struct Loopback {
+    /// pinned family envelope; `None` = derive per net
+    envelope: Option<Envelope>,
+}
+
+impl Loopback {
+    /// A fabric sized for every net within `max_width` neurons/inputs
+    /// per layer, `max_depth` layers and `max_bits`-bit coefficients.
+    pub fn for_envelope(max_width: usize, max_depth: usize, max_bits: u32) -> Loopback {
+        Loopback { envelope: Some(Envelope::new(max_width, max_depth, max_bits)) }
+    }
+
+    /// The envelope this instance sizes the bank with for `qann`.
+    pub fn envelope_for(&self, qann: &QuantizedAnn) -> Envelope {
+        self.envelope.unwrap_or_else(|| Envelope::of(qann))
+    }
+}
+
+impl Architecture for Loopback {
+    fn kind(&self) -> ArchKind {
+        ArchKind::Loopback
+    }
+
+    fn styles(&self) -> &'static [Style] {
+        &[Style::Behavioral, Style::Mcm]
+    }
+
+    fn elaborate(&self, qann: &QuantizedAnn, style: Style) -> Design {
+        let env = self.envelope_for(qann);
+        if let Err(e) = env.admits(qann) {
+            panic!("loopback envelope cannot serve this net: {e}");
+        }
+        let mut b = DesignBuilder::new(ArchKind::Loopback, style, Schedule::Loopback);
+        for k in 0..qann.structure.num_layers() {
+            self.elaborate_layer_blocks(&mut b, qann, k, style);
+        }
+        b.finish(qann)
+    }
+
+    fn elaborate_layer_blocks(&self, b: &mut DesignBuilder, qann: &QuantizedAnn, k: usize, style: Style) {
+        let st = &qann.structure;
+        let n_in = st.layer_inputs(k);
+        let n_out = st.layer_outputs(k);
+        let in_range = report::layer_input_range(qann, k);
+        let acc_bits = report::layer_acc_bits(qann, k);
+        let env = self.envelope_for(qann);
+        // member layer k occupies the shared bank for its own ι_k + 1
+        // of the program's cycles
+        let fires = (n_in + 1) as f64;
+
+        if k == 0 {
+            // the envelope-sized fabric, emitted once and shared by every
+            // layer of every member net. Its blocks depend only on the
+            // envelope — never on which member is being elaborated — so
+            // its activity weight is the envelope's worst-case program
+            // length, not this member's
+            let bank_acc = report::envelope_acc_bits(env.width, env.bits);
+            let total = ((env.width + 1) * env.depth) as f64;
+            let control = b.block(BlockKind::Counter { n: env.width + 1 }, 1, total);
+            // layer-program ROM: per-layer control words (widths,
+            // activation select, ROM base) stepped by the layer counter
+            let rom = b.block(BlockKind::ConstantMux { n: env.depth, bits: 8 }, 1, total);
+            // loopback mux: primary inputs on layer 0, then the bank's
+            // own output registers fed back as the broadcast input
+            let fb_mux = b.block(BlockKind::Mux { n: env.width, bits: 8 }, 1, total);
+            b.path(vec![control]);
+            b.path(vec![rom]);
+            b.path(vec![fb_mux]);
+            for _slot in 0..env.width {
+                match style {
+                    Style::Behavioral => {
+                        // every slot stores its column of every layer's
+                        // weights (width × depth ROM entries)
+                        let w_mux = b.gated_block(
+                            BlockKind::ConstantMux { n: env.width * env.depth, bits: env.bits },
+                            1,
+                            total,
+                            Gate::Net,
+                        );
+                        let mult = b.gated_block(
+                            BlockKind::Multiplier { w_bits: env.bits, x_bits: 8 },
+                            1,
+                            total,
+                            Gate::Net,
+                        );
+                        let acc =
+                            b.gated_block(BlockKind::Adder { bits: bank_acc }, 1, total, Gate::Net);
+                        let reg = b.gated_block(
+                            BlockKind::Register { bits: bank_acc },
+                            1,
+                            total,
+                            Gate::Net,
+                        );
+                        b.block(BlockKind::Adder { bits: bank_acc }, 1, total); // bias
+                        b.block(BlockKind::ActivationUnit { acc_bits: bank_acc }, 1, total);
+                        b.block(BlockKind::Register { bits: 8 }, 1, total); // loopback out reg
+                        b.path(vec![w_mux, mult, acc, reg]);
+                    }
+                    Style::Mcm => {
+                        // products come from the per-layer graphs below;
+                        // the slot muxes its product at envelope width
+                        let p_mux = b.gated_block(
+                            BlockKind::Mux { n: env.width, bits: env.bits + 8 },
+                            1,
+                            total,
+                            Gate::Net,
+                        );
+                        let acc =
+                            b.gated_block(BlockKind::Adder { bits: bank_acc }, 1, total, Gate::Net);
+                        let reg = b.gated_block(
+                            BlockKind::Register { bits: bank_acc },
+                            1,
+                            total,
+                            Gate::Net,
+                        );
+                        b.block(BlockKind::Adder { bits: bank_acc }, 1, total); // bias
+                        b.block(BlockKind::ActivationUnit { acc_bits: bank_acc }, 1, total);
+                        b.block(BlockKind::Register { bits: 8 }, 1, total); // loopback out reg
+                        b.path(vec![p_mux, acc, reg]);
+                    }
+                    other => panic!("loopback has no {} style", other.name()),
+                }
+            }
+        }
+
+        // weights are stored factored by each neuron's smallest left
+        // shift; the back-shift is wiring (paper Sec. IV-C)
+        let (stored, sls) = design::stored_layer(qann, k);
+
+        let mcm = match style {
+            Style::Behavioral => None, // the bank's weight ROMs hold the layer
+            Style::Mcm => {
+                // one engine-solved product graph per member layer (same
+                // graph SMAC_NEURON solves, shared via the engine cache);
+                // the whole-net gate matches the bank it feeds
+                let consts: Vec<i64> = stored.iter().flatten().cloned().collect();
+                let gi = b.solved(&LinearTargets::mcm(&consts), Tier::McmHeuristic);
+                let mcm_blk = b.gated_block(
+                    BlockKind::ShiftAdds { graphs: vec![gi], input_ranges: vec![in_range] },
+                    1,
+                    fires,
+                    Gate::Net,
+                );
+                b.path(vec![mcm_blk]);
+                Some(McmRef { graph: gi, offset: 0 })
+            }
+            other => panic!("loopback has no {} style", other.name()),
+        };
+
+        b.layer(LayerPlan {
+            n_in,
+            n_out,
+            acc_bits,
+            in_range,
+            compute: LayerCompute::Mac { stored, sls, mcm },
+        });
+    }
+}
+
+/// Price the loopback fabric design of `qann` (elaborate + generic cost walk).
+pub fn build(lib: &TechLib, qann: &QuantizedAnn, style: Style) -> HwReport {
+    LOOPBACK.elaborate(qann, style).cost(lib)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::model::{Ann, Init};
+    use crate::num::Rng;
+
+    fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
+        let st = AnnStructure::parse(structure).unwrap();
+        let layers = st.num_layers();
+        let mut acts = vec![Activation::HTanh; layers];
+        acts[layers - 1] = Activation::HSig;
+        let ann = Ann::init(st, acts.clone(), Init::Xavier, &mut Rng::new(seed));
+        QuantizedAnn::quantize(&ann, q, &acts)
+    }
+
+    #[test]
+    fn envelope_of_union_and_canonical_roundtrip() {
+        let a = qann("16-10-8", 6, 1);
+        let b = qann("12-16-5", 6, 2);
+        let (ea, eb) = (Envelope::of(&a), Envelope::of(&b));
+        assert_eq!(ea.width, 16);
+        assert_eq!(ea.depth, 2);
+        assert!(ea.bits >= 1);
+        let u = ea.union(eb);
+        assert!(u.admits(&a).is_ok() && u.admits(&b).is_ok());
+        // the canonical net is the envelope's own fixed point — the
+        // property that makes it the family's shared cache key
+        assert_eq!(Envelope::of(&u.canonical_qann()), u);
+        assert_eq!(Envelope::of(&Envelope::new(3, 4, 7).canonical_qann()), Envelope::new(3, 4, 7));
+    }
+
+    #[test]
+    fn membership_edges_accept_and_one_over_rejects_typed() {
+        let q = qann("16-10-8", 6, 3);
+        let exact = Envelope::of(&q);
+        // exactly at the edge: accepted
+        assert_eq!(exact.admits(&q), Ok(()));
+        assert!(Envelope::new(exact.width + 3, exact.depth + 1, exact.bits + 2).admits(&q).is_ok());
+        // one neuron / one layer / one bit over: typed errors, no panic
+        let narrow = Envelope::new(exact.width - 1, exact.depth, exact.bits);
+        let e = narrow.admits(&q).unwrap_err();
+        assert!(matches!(e, EnvelopeError::TooWide { width, .. } if width == exact.width));
+        let shallow = Envelope::new(exact.width, exact.depth - 1, exact.bits);
+        let e = shallow.admits(&q).unwrap_err();
+        assert!(matches!(e, EnvelopeError::TooDeep { depth, .. } if depth == exact.depth));
+        let coarse = Envelope::new(exact.width, exact.depth, exact.bits - 1);
+        let e = coarse.admits(&q).unwrap_err();
+        assert!(matches!(e, EnvelopeError::BitsOver { bits, .. } if bits == exact.bits));
+        // the errors render their axis for the serving stack's messages
+        assert!(narrow.admits(&q).unwrap_err().to_string().contains("wide"));
+        assert!(shallow.admits(&q).unwrap_err().to_string().contains("layers"));
+        assert!(coarse.admits(&q).unwrap_err().to_string().contains("bit"));
+    }
+
+    #[test]
+    fn layer_program_replays_the_member_net_exactly() {
+        let q = qann("16-10-8", 6, 4);
+        let env = Envelope::of(&q).union(Envelope::new(20, 4, 12));
+        let p = LayerProgram::lower(&q, &env).unwrap();
+        assert_eq!(p.steps.len(), 2, "the member's own depth, not the envelope's");
+        for (k, step) in p.steps.iter().enumerate() {
+            assert_eq!(step.n_in, q.structure.layer_inputs(k));
+            assert_eq!(step.n_out, q.structure.layer_outputs(k));
+            assert_eq!(step.biases, q.biases[k]);
+            // sls factoring is lossless: stored << sls == original weight
+            for m in 0..step.n_out {
+                for i in 0..step.n_in {
+                    assert_eq!(step.coef(m, i), q.weights[k][m][i]);
+                }
+            }
+        }
+        assert_eq!(p.cycles(), q.structure.smac_neuron_cycles());
+        assert_eq!(p.throughput_cycles(5), 5 * p.cycles());
+        // non-members fail lowering with the same typed error
+        let wide = qann("24-10-8", 6, 5);
+        assert!(matches!(LayerProgram::lower(&wide, &env), Err(EnvelopeError::TooWide { .. })));
+    }
+
+    #[test]
+    fn fabric_schedule_and_per_member_cycles() {
+        let q = qann("16-10-8", 6, 6);
+        for style in LOOPBACK.styles() {
+            let d = LOOPBACK.elaborate(&q, *style);
+            assert_eq!(d.schedule, Schedule::Loopback);
+            assert_eq!(d.layers.len(), q.structure.num_layers());
+            // same per-sample latency as the dedicated SMAC_NEURON design
+            assert_eq!(d.cycles(), q.structure.smac_neuron_cycles());
+            let r = d.cost(&TechLib::tsmc40());
+            assert!(r.clock_ns > 0.0 && r.area_um2 > 0.0);
+        }
+    }
+
+    #[test]
+    fn behavioral_fabric_blocks_depend_only_on_the_envelope() {
+        // the tentpole property: two different member nets elaborate the
+        // IDENTICAL behavioral fabric under a pinned envelope — only the
+        // layer programs (and mcm graphs) are member-specific
+        let fam = Loopback::for_envelope(16, 3, 24);
+        let a = fam.elaborate(&qann("16-10-8", 6, 7), Style::Behavioral);
+        let b = fam.elaborate(&qann("12-16-5", 6, 8), Style::Behavioral);
+        assert_eq!(a.blocks, b.blocks, "one fabric serves the family");
+        assert_eq!(a.arch, ArchKind::Loopback);
+        // but each member keeps its own runtime layer plans
+        assert_eq!(a.layers[0].n_in, 16);
+        assert_eq!(b.layers[0].n_in, 12);
+        let lib = TechLib::tsmc40();
+        assert_eq!(a.cost(&lib).area_um2, b.cost(&lib).area_um2);
+    }
+
+    #[test]
+    fn mcm_layer_plan_routes_products_through_the_graph() {
+        let q = qann("16-10", 6, 9);
+        let d = LOOPBACK.elaborate(&q, Style::Mcm);
+        let LayerCompute::Mac { stored, sls, mcm } = &d.layers[0].compute else {
+            panic!("loopback layers are MAC-computed");
+        };
+        let r = mcm.expect("mcm style must reference its product graph");
+        assert_eq!(r.offset, 0);
+        assert_eq!(d.graphs[r.graph].outputs.len(), stored.iter().map(Vec::len).sum::<usize>());
+        assert_eq!(sls.len(), q.structure.layer_outputs(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "loopback envelope cannot serve")]
+    fn elaborating_a_non_member_panics_with_the_typed_message() {
+        // the Result-returning membership path lives in serve/daemon;
+        // the raw trait entry point stays loud on misuse
+        let fam = Loopback::for_envelope(4, 1, 24);
+        fam.elaborate(&qann("16-10-8", 6, 10), Style::Behavioral);
+    }
+}

@@ -1,7 +1,8 @@
-//! Gate-level hardware models of the six registry design architectures —
-//! the paper's three (parallel, SMAC_NEURON, SMAC_ANN) plus the
-//! layer-pipelined parallel variant, the digit-serial MAC and the
-//! systolic SMAC ring this reproduction adds — the Verilog generator and
+//! Gate-level hardware models of the seven registry design architectures
+//! — the paper's three (parallel, SMAC_NEURON, SMAC_ANN) plus the
+//! layer-pipelined parallel variant, the digit-serial MAC, the systolic
+//! SMAC ring and the envelope-keyed loopback fabric this reproduction
+//! adds — the Verilog generator and
 //! the cycle-accurate architectural simulator. ARCHITECTURE.md maps the
 //! paper's sections to these modules and tabulates every schedule's
 //! cycle program.
@@ -31,6 +32,7 @@ pub mod daemon;
 pub mod design;
 pub mod digit_serial;
 pub mod gates;
+pub mod loopback;
 pub mod netsim;
 pub mod parallel;
 pub mod pipelined;
@@ -45,6 +47,7 @@ pub use artifact::{ArtifactStore, StoreStats, TierHit, TierStats, TieredDesignCa
 pub use daemon::{Daemon, DaemonConfig, DaemonStatus, DeploymentId, DeploymentStats};
 pub use design::{ActivityProfile, ArchKind, Architecture, Design, Gate, Schedule, Style};
 pub use gates::TechLib;
+pub use loopback::{Envelope, EnvelopeError, LayerProgram, Loopback};
 pub use report::HwReport;
 pub use serve::{
     designs, fanout_threads, serve_threads, simulate_batch, simulate_batch_with, BatchInputs,

@@ -71,10 +71,13 @@ pub fn simulate(design: &Design, input: &[i32]) -> SimRun {
         // every step stretched into `bits` bit-cycles (see step_cycles);
         // the systolic ring runs it unchanged for a single sample (the
         // ring only overlaps *different* samples, which the batch
-        // interpreters account through the cycle program)
-        Schedule::LayerSequential | Schedule::DigitSerial { .. } | Schedule::Systolic { .. } => {
-            simulate_layer_sequential(design, input)
-        }
+        // interpreters account through the cycle program); the loopback
+        // fabric replays the same per-layer MAC steps on its shared bank,
+        // so one sample costs the member's own Σ(ι_k + 1)
+        Schedule::LayerSequential
+        | Schedule::DigitSerial { .. }
+        | Schedule::Systolic { .. }
+        | Schedule::Loopback => simulate_layer_sequential(design, input),
         Schedule::NeuronSequential => simulate_neuron_sequential(design, input),
     }
 }

@@ -109,6 +109,17 @@ pub fn layer_acc_bits(qann: &QuantizedAnn, k: usize) -> u32 {
         .unwrap_or(1)
 }
 
+/// Accumulator bitwidth covering every net inside a loopback envelope
+/// (`hw::loopback`): `width` signed coefficients of at most `bits` bits
+/// against full-range 8-bit activations, plus one such bias — interval
+/// propagation at the envelope's worst case, so the shared MAC bank's
+/// adders and registers hold any member net's accumulator.
+pub fn envelope_acc_bits(width: usize, bits: u32) -> u32 {
+    let w = 1i64 << (bits.max(1) - 1); // |coef| <= 2^(bits-1)
+    let hi = width as i64 * w * 128 + w;
+    range_bits(-hi, hi)
+}
+
 /// Smallest-left-shift of a weight set (paper Sec. IV-C): the number of
 /// trailing zeros shared by all nonzero weights. All-zero sets get 0.
 pub fn smallest_left_shift(weights: impl IntoIterator<Item = i64>) -> u32 {
@@ -185,6 +196,19 @@ mod tests {
         let (sls, bits) = neuron_stored_bits(&q, 0, 0);
         assert_eq!(sls, 2);
         assert_eq!(bits, signed_bitwidth(6));
+    }
+
+    #[test]
+    fn envelope_acc_bits_cover_every_member_layer() {
+        let q = qann();
+        // the test net fits a (width 2, bits 6) envelope; the envelope's
+        // worst-case accumulator must hold every member layer's
+        for k in 0..q.structure.num_layers() {
+            assert!(envelope_acc_bits(2, 6) >= layer_acc_bits(&q, k));
+        }
+        let hi = 2 * 32 * 128 + 32; // 2 slots x |w|<=2^5 x 8-bit x, plus bias
+        assert_eq!(envelope_acc_bits(2, 6), range_bits(-hi, hi));
+        assert!(envelope_acc_bits(4, 6) >= envelope_acc_bits(2, 6));
     }
 
     #[test]

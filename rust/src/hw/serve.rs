@@ -24,6 +24,12 @@
 //!   and merges the per-shard [`BatchRun`]s bit-identically — the
 //!   schedules are data-independent, so every shard reports the same
 //!   cycle counts and the merge is a pure sample-range concatenation;
+//! - [`simulate_batch_program`] serves a member net on a shared loopback
+//!   fabric ([`crate::hw::loopback`]): the net is not baked into the
+//!   design but lowered to a [`LayerProgram`] carried beside the
+//!   [`BatchInputs`], and the fabric itself is fetched *envelope-keyed*
+//!   ([`DesignCache::design_for`]) so one elaboration serves every net
+//!   in the family;
 //! - [`DesignCache`] is a process-wide, sharded, content-addressed cache
 //!   in front of [`Architecture::elaborate`], keyed like [`mcm::engine`]:
 //!   the full quantized content (structure, weights, biases, q,
@@ -61,6 +67,7 @@
 use super::design::{
     ActivityProfile, Architecture, ArchKind, Design, LayerCompute, LayerPlan, Schedule, Style,
 };
+use super::loopback::{Envelope, EnvelopeError, LayerProgram};
 use super::netsim::step_cycles;
 use super::report;
 use crate::ann::dataset::Sample;
@@ -372,10 +379,13 @@ fn simulate_batch_scalar(design: &Design, inputs: &BatchInputs) -> BatchRun {
         // every step stretched into `bits` bit-cycles; the systolic ring
         // computes the same per-sample values (the overlap across
         // samples is pure cycle accounting, priced by the schedule's
-        // cycle program in `throughput_cycles`)
-        Schedule::LayerSequential | Schedule::DigitSerial { .. } | Schedule::Systolic { .. } => {
-            batch_layer_sequential(design, inputs)
-        }
+        // cycle program in `throughput_cycles`); a loopback fabric
+        // fetched per-net replays its own layers the same way (family
+        // serving goes through `simulate_batch_program` instead)
+        Schedule::LayerSequential
+        | Schedule::DigitSerial { .. }
+        | Schedule::Systolic { .. }
+        | Schedule::Loopback => batch_layer_sequential(design, inputs),
         Schedule::NeuronSequential => batch_neuron_sequential(design, inputs),
     }
 }
@@ -737,6 +747,139 @@ fn batch_neuron_sequential(design: &Design, inputs: &BatchInputs) -> BatchRun {
     }
 }
 
+/// Serve a member net on a shared loopback fabric: run `program` (the
+/// net lowered by [`LayerProgram::lower`]) for every sample of `inputs`.
+/// Bit-identical to the member's *dedicated* SMAC_NEURON/loopback design
+/// — the program carries the exact sls-factored coefficients, biases and
+/// activations, and the fabric replays the same MAC steps — with cycle
+/// counts from the member's own [`Schedule::Loopback`] program, not the
+/// envelope's. Shards large batches per the default [`ServeConfig`].
+pub fn simulate_batch_program(
+    fabric: &Design,
+    program: &LayerProgram,
+    inputs: &BatchInputs,
+) -> BatchRun {
+    simulate_batch_program_with(fabric, program, inputs, &ServeConfig::default())
+}
+
+/// [`simulate_batch_program`] with an explicit [`ServeConfig`]: the same
+/// contiguous split / scalar shard / bit-exact merge as
+/// [`simulate_batch_with`], over the program interpreter.
+pub fn simulate_batch_program_with(
+    fabric: &Design,
+    program: &LayerProgram,
+    inputs: &BatchInputs,
+    cfg: &ServeConfig,
+) -> BatchRun {
+    assert_eq!(fabric.arch, ArchKind::Loopback, "layer programs run on the loopback fabric");
+    let env = Envelope::of(&fabric.qann);
+    assert!(
+        program.steps.len() <= env.depth
+            && program.steps.iter().all(|s| s.n_in.max(s.n_out) <= env.width),
+        "layer program exceeds the fabric envelope"
+    );
+    let n = inputs.len();
+    let shards = if n >= cfg.shard_min.max(2) { cfg.threads.min(n).max(1) } else { 1 };
+    if shards <= 1 {
+        return batch_program_scalar(program, inputs);
+    }
+    let parts = inputs.split(shards);
+    let runs: Vec<BatchRun> = std::thread::scope(|scope| {
+        let handles: Vec<_> = parts
+            .iter()
+            .map(|part| scope.spawn(move || batch_program_scalar(program, part)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("program shard panicked")).collect()
+    });
+    let first = &runs[0];
+    let n_outputs = first.n_outputs;
+    let cycles = first.cycles;
+    debug_assert!(
+        runs.iter().all(|r| r.cycles == cycles && r.n_outputs == n_outputs),
+        "data-independent programs must agree across shards"
+    );
+    let mut outputs = vec![0i32; n_outputs * n];
+    let mut off = 0usize;
+    let mut activity = ActivityProfile::new(program.steps.len());
+    for r in &runs {
+        for m in 0..n_outputs {
+            outputs[m * n + off..m * n + off + r.len]
+                .copy_from_slice(&r.outputs[m * r.len..(m + 1) * r.len]);
+        }
+        off += r.len;
+        activity.merge(&r.activity);
+    }
+    debug_assert_eq!(off, n, "shards must partition the batch");
+    BatchRun {
+        outputs,
+        n_outputs,
+        len: n,
+        cycles,
+        throughput_cycles: Schedule::Loopback.throughput_cycles(&program.structure, n),
+        activity,
+    }
+}
+
+/// The single-threaded program interpreter: [`batch_layer_sequential`]
+/// driven by [`LayerProgram`] steps instead of the design's baked-in
+/// layer plans — the coefficients stream out of the program's ROM image
+/// (`stored << sls`, exact by sls factoring), so the fabric design never
+/// has to match the member net.
+fn batch_program_scalar(program: &LayerProgram, inputs: &BatchInputs) -> BatchRun {
+    assert!(
+        inputs.is_empty() || inputs.features() == program.structure.inputs,
+        "batch feature arity mismatch"
+    );
+    let n = inputs.len();
+    let mut cycles = 0usize;
+    let mut cur: Vec<i64> = Vec::with_capacity(inputs.features() * n);
+    for i in 0..inputs.features() {
+        cur.extend(inputs.feature(i).iter().map(|&x| x as i64));
+    }
+    let mut activity = ActivityProfile::new(program.steps.len());
+    activity.samples = n as u64;
+    for (k, step) in program.steps.iter().enumerate() {
+        // nonzero broadcast inputs: the bank's product paths only toggle
+        // on those cycles (the Gate::Net discount)
+        activity.layer_active[k] = cur.iter().filter(|&&v| v != 0).count() as u64;
+        let mut acc = vec![0i64; step.n_out * n];
+        for i in 0..step.n_in {
+            let xs = &cur[i * n..(i + 1) * n];
+            for m in 0..step.n_out {
+                let c = step.coef(m, i);
+                if c != 0 {
+                    let dst = &mut acc[m * n..(m + 1) * n];
+                    for (d, &x) in dst.iter_mut().zip(xs) {
+                        *d += c * x;
+                    }
+                }
+            }
+            // the broadcast costs its cycle whether or not a weight is zero
+            cycles += 1;
+        }
+        cur.clear();
+        for m in 0..step.n_out {
+            let b = step.biases[m];
+            cur.extend(
+                acc[m * n..(m + 1) * n]
+                    .iter()
+                    .map(|&a| activate(step.activation, a + b, program.q) as i64),
+            );
+        }
+        cycles += 1;
+    }
+    let n_outputs = program.steps.last().map_or(inputs.features(), |s| s.n_out);
+    let outputs: Vec<i32> = cur.iter().map(|&v| v as i32).collect();
+    BatchRun {
+        outputs,
+        n_outputs,
+        len: n,
+        cycles,
+        throughput_cycles: Schedule::Loopback.throughput_cycles(&program.structure, n),
+        activity,
+    }
+}
+
 /// Hardware accuracy over `samples` through the batched serving path:
 /// design fetched from the process-wide [`DesignCache`], whole set
 /// evaluated in one [`simulate_batch`] call. Bit-identical to
@@ -954,6 +1097,29 @@ impl DesignCache {
         shard.order.push_back(key.clone());
         shard.map.insert(key, solved.clone());
         solved
+    }
+
+    /// The shared loopback fabric of an envelope, keyed by the
+    /// envelope's [`Envelope::canonical_qann`] — every member of a
+    /// family resolves to the SAME content key, so the whole family
+    /// costs one elaboration (one miss) and one cache/artifact entry.
+    pub fn design_envelope(&self, env: &Envelope, style: Style) -> Arc<Design> {
+        self.design(&env.canonical_qann(), ArchKind::Loopback, style)
+    }
+
+    /// Envelope-checked fabric fetch for serving a member net: the typed
+    /// [`EnvelopeError`] when `qann` is not a member (no panic, no cache
+    /// traffic), the family's one shared design otherwise. Pair with
+    /// [`LayerProgram::lower`] and [`simulate_batch_program`] to run the
+    /// member on it.
+    pub fn design_for(
+        &self,
+        env: &Envelope,
+        qann: &QuantizedAnn,
+        style: Style,
+    ) -> Result<Arc<Design>, EnvelopeError> {
+        env.admits(qann)?;
+        Ok(self.design_envelope(env, style))
     }
 
     /// Like [`DesignCache::design`], but a miss does **not** populate the
@@ -1312,6 +1478,68 @@ mod tests {
         let d2 = Arc::new(arch.elaborate(&q, Style::Cmvm));
         cache.insert(&q, ArchKind::Parallel, Style::Cmvm, d2);
         assert!(Arc::ptr_eq(&cache.get(&q, ArchKind::Parallel, Style::Cmvm).unwrap(), &d));
+    }
+
+    #[test]
+    fn envelope_fabric_is_elaborated_once_for_the_whole_family() {
+        let cache = DesignCache::new();
+        let env = Envelope::new(16, 3, 24);
+        let members =
+            [qann("16-10-8", 6, 81), qann("12-16-5", 6, 82), qann("10-10-10-6", 6, 83), qann("16-4", 6, 84)];
+        let fabrics: Vec<_> = members
+            .iter()
+            .map(|m| cache.design_for(&env, m, Style::Mcm).unwrap())
+            .collect();
+        let s = cache.stats();
+        assert_eq!(s.misses, 1, "one elaboration serves the family: {s:?}");
+        assert_eq!(s.entries, 1, "one cache entry for four nets: {s:?}");
+        assert_eq!(s.hits, members.len() as u64 - 1, "{s:?}");
+        for f in &fabrics[1..] {
+            assert!(Arc::ptr_eq(&fabrics[0], f), "the family shares one Arc");
+        }
+        assert_eq!(fabrics[0].arch, ArchKind::Loopback);
+        // a non-member is a typed rejection, not a panic — and costs the
+        // cache nothing
+        let wide = qann("24-10", 6, 85);
+        assert!(matches!(
+            cache.design_for(&env, &wide, Style::Mcm),
+            Err(EnvelopeError::TooWide { .. })
+        ));
+        let deep = qann("16-10-10-10-6", 6, 86);
+        assert!(matches!(
+            cache.design_for(&env, &deep, Style::Mcm),
+            Err(EnvelopeError::TooDeep { .. })
+        ));
+        assert_eq!(cache.stats().misses, 1, "rejections never elaborate");
+    }
+
+    #[test]
+    fn program_on_the_shared_fabric_matches_the_dedicated_design() {
+        let cache = DesignCache::new();
+        let env = Envelope::new(16, 3, 24);
+        for (i, st) in ["16-10-8", "12-16-5", "10-10-10-6"].iter().enumerate() {
+            let m = qann(st, 6, 90 + i as u64);
+            let fabric = cache.design_for(&env, &m, Style::Behavioral).unwrap();
+            let program = LayerProgram::lower(&m, &env).unwrap();
+            let rows = random_rows(33, m.structure.inputs, 7 + i as u64);
+            let batch = BatchInputs::from_rows(&rows);
+            let run = simulate_batch_program(&fabric, &program, &batch);
+            // bit-identical (outputs AND activity) to the member's own
+            // dedicated design, though the fabric never saw its weights
+            let dedicated = cache.design(&m, ArchKind::SmacNeuron, Style::Mcm);
+            let want = simulate_batch(&dedicated, &batch);
+            assert_eq!(run.outputs, want.outputs, "{st}");
+            assert_eq!(run.activity, want.activity, "{st}");
+            // cycle accounting follows the member's own layer widths
+            assert_eq!(run.cycles, m.structure.smac_neuron_cycles(), "{st}");
+            assert_eq!(run.throughput_cycles, rows.len() * run.cycles, "{st}");
+            // sharded program runs merge bit-identically
+            for threads in [2, 5] {
+                let cfg = ServeConfig { threads, shard_min: 0 };
+                let sharded = simulate_batch_program_with(&fabric, &program, &batch, &cfg);
+                assert_eq!(sharded, run, "{st} x{threads} threads");
+            }
+        }
     }
 
     #[test]

@@ -40,6 +40,12 @@ use crate::num::signed_bitwidth;
 /// configuration — the batch interval is the single slowest layer).
 pub static SYSTOLIC: Systolic = Systolic { ring: None };
 
+/// A registry-exposed sub-full ring (2 slots): deep nets fold several
+/// layers onto each slot, trading batch interval for nothing else —
+/// [`design::design_points`] sweeps it beside the full ring so the
+/// differential and equivalence harnesses cover `P < λ` scheduling.
+pub static SYSTOLIC_HALF: Systolic = Systolic { ring: Some(2) };
+
 /// The systolic SMAC ring architecture. The registry carries the full
 /// ring ([`SYSTOLIC`]); [`Systolic::with_ring`] builds smaller rings
 /// (fewer slots than layers fold several layers onto one slot,
@@ -264,6 +270,28 @@ mod tests {
         let (ra, sa) = (ring.cost(&lib).area_um2, sn.cost(&lib).area_um2);
         assert!(ra > sa, "token flops cost something");
         assert!((ra - sa) / sa < 0.05, "but not much: {ra} vs {sa}");
+    }
+
+    #[test]
+    fn registry_half_ring_folds_layers_onto_fewer_slots() {
+        let q = qann("16-10-10-10", 6, 5); // 3 layers on 2 slots
+        let half = SYSTOLIC_HALF.elaborate(&q, Style::Behavioral);
+        let full = SYSTOLIC.elaborate(&q, Style::Behavioral);
+        assert_eq!(half.schedule, Schedule::Systolic { slots: 2 });
+        // same hardware and latency as the full ring...
+        assert_eq!(half.blocks, full.blocks);
+        assert_eq!(half.cycles(), full.cycles());
+        // ...but the folded slot lengthens the batch interval
+        let st = &q.structure;
+        assert!(
+            half.schedule.throughput_cycles(st, 64) > full.schedule.throughput_cycles(st, 64)
+        );
+        // on 2-layer nets the half ring IS the full ring
+        let q2 = qann("16-10-10", 6, 6);
+        assert_eq!(
+            SYSTOLIC_HALF.elaborate(&q2, Style::Mcm).schedule,
+            SYSTOLIC.elaborate(&q2, Style::Mcm).schedule
+        );
     }
 
     #[test]

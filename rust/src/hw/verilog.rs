@@ -37,6 +37,7 @@ pub fn verilog(design: &Design, module: &str) -> String {
         ArchKind::SmacAnn => emit_smac_ann(design, module),
         ArchKind::DigitSerial => emit_digit_serial(design, module),
         ArchKind::Systolic => emit_systolic(design, module),
+        ArchKind::Loopback => emit_loopback(design, module),
     }
 }
 
@@ -780,6 +781,193 @@ fn emit_digit_serial(design: &Design, module: &str) -> String {
     v
 }
 
+/// Loopback-fabric Verilog (`hw::loopback`): the single-member rendering
+/// of [`loopback_family`] — the same time-multiplexed bank, serving the
+/// one net the design was lowered for. Registered under the standard
+/// [`verilog`] dispatch so every registry harness (lint, cosim,
+/// testbench) covers the loopback architecture without special cases.
+fn emit_loopback(design: &Design, module: &str) -> String {
+    loopback_family(&[design], module)
+}
+
+/// Loopback-fabric Verilog over a *family* of member designs elaborated
+/// in one envelope (`hw::loopback`): ONE module — one bank of MAC slots
+/// (`acc_*`), one bank of loopback feedback registers (`z_*`) that carry
+/// each committed layer back to the next layer's broadcast mux, one
+/// layer/input counter pair — time-shared by every member net. Each
+/// member contributes only its selection fabric (its layer-program ROM:
+/// input, weight or MCM-product muxes); with two or more members an
+/// 8-bit `net` select input routes the handshake to the chosen member's
+/// ROM. Member `d` completes one inference per rst/start re-arm in
+/// exactly its own `Σ(ι_k + 1)` cycles ([`Schedule::Loopback`]), so
+/// heterogeneous nets run back-to-back on the same emitted hardware —
+/// the HDL realization of the one-elaboration-per-envelope serving
+/// contract. Multiplierless members tap their embedded product graphs
+/// and the module contains no `*`.
+pub fn loopback_family(designs: &[&Design], module: &str) -> String {
+    assert!(!designs.is_empty(), "a loopback family has at least one member");
+    let style = designs[0].style;
+    for d in designs {
+        assert_eq!(d.arch, ArchKind::Loopback, "loopback_family emits loopback designs");
+        assert_eq!(d.style, style, "one fabric serves one style");
+    }
+    let multi = designs.len() > 1;
+    let max_in = designs.iter().map(|d| d.qann.structure.inputs).max().unwrap();
+    let max_out = designs
+        .iter()
+        .map(|d| {
+            let st = &d.qann.structure;
+            st.layer_outputs(st.num_layers() - 1)
+        })
+        .max()
+        .unwrap();
+    // one MAC slot + one feedback register per lane of the widest layer
+    let bank = designs.iter().flat_map(|d| d.layers.iter().map(|l| l.n_out)).max().unwrap();
+    let max_acc =
+        designs.iter().flat_map(|d| d.layers.iter().map(|l| l.acc_bits)).max().unwrap_or(8).max(2);
+    let members: Vec<String> = designs.iter().map(|d| d.qann.structure.to_string()).collect();
+
+    let mut v = String::new();
+    let _ = writeln!(
+        v,
+        "// generated by SIMURG-RS: loopback / {} / {}",
+        style.name(),
+        members.join(" | ")
+    );
+    let _ = write!(v, "module {module} (\n  input clk,\n  input rst,\n  input start,\n");
+    if multi {
+        let _ = writeln!(v, "  input [7:0] net,  // member select of the family");
+    }
+    for i in 0..max_in {
+        let _ = writeln!(v, "  input signed [7:0] x{i},");
+    }
+    for m in 0..max_out {
+        let _ = writeln!(v, "  output reg signed [7:0] y{m},");
+    }
+    let _ = writeln!(v, "  output reg done\n);");
+    v.push_str(&clamp_functions(max_acc));
+
+    let _ = writeln!(v, "  reg [7:0] layer;  // active layer counter");
+    let _ = writeln!(v, "  reg [7:0] cnt;    // input counter of the active layer");
+    // the loopback bank: every member layer time-shares the SAME slots;
+    // a commit clears exactly the accumulators it used, so the bank is
+    // all-zero whenever a lane is not mid-accumulation
+    for m in 0..bank {
+        let _ = writeln!(v, "  reg signed [{}:0] acc_{m};", max_acc - 1);
+        let _ = writeln!(v, "  reg signed [7:0] z_{m};  // loopback feedback register");
+    }
+
+    // per-member selection fabric (the member's layer-program ROM):
+    // broadcast input mux off the primary inputs (layer 0) or the
+    // feedback bank (deeper layers), and the weight or MCM-product muxes
+    for (di, &d) in designs.iter().enumerate() {
+        for (k, layer) in d.layers.iter().enumerate() {
+            let (stored, _, mcm) = mac_layer(d, k);
+            let _ = writeln!(v, "  reg signed [7:0] xsel_{di}_{k};");
+            let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
+            for i in 0..layer.n_in {
+                let src = if k == 0 { format!("x{i}") } else { format!("z_{i}") };
+                let _ = writeln!(v, "      8'd{i}: xsel_{di}_{k} = {src};");
+            }
+            let _ = writeln!(v, "      default: xsel_{di}_{k} = 8'sd0;\n    endcase\n  end");
+            match mcm {
+                None => {
+                    // per-slot weight select (hardwired constant mux)
+                    for (m, row) in stored.iter().enumerate() {
+                        let wb = row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1).max(2);
+                        let _ = writeln!(v, "  reg signed [{}:0] wsel_{di}_{k}_{m};", wb - 1);
+                        let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
+                        for (i, &c) in row.iter().enumerate() {
+                            let _ = writeln!(v, "      8'd{i}: wsel_{di}_{k}_{m} = {c};");
+                        }
+                        let _ = writeln!(v, "      default: wsel_{di}_{k}_{m} = 0;\n    endcase\n  end");
+                    }
+                }
+                Some(r) => {
+                    // the member layer's embedded MCM block: every
+                    // stored-weight product of the broadcast input is one
+                    // tap of its adder graph; each slot muxes its product
+                    let prefix = format!("g{di}_{k}");
+                    let _ = writeln!(v, "  wire signed [7:0] {prefix}_x0 = xsel_{di}_{k};");
+                    let taps = emit_graph(&mut v, &prefix, &d.graphs[r.graph], &[layer.in_range]);
+                    for (m, row) in stored.iter().enumerate() {
+                        let p_bits =
+                            (row.iter().map(|&c| signed_bitwidth(c)).max().unwrap_or(1) + 8).max(2);
+                        let _ = writeln!(v, "  reg signed [{}:0] psel_{di}_{k}_{m};", p_bits - 1);
+                        let _ = writeln!(v, "  always @(*) begin\n    case (cnt)");
+                        for i in 0..row.len() {
+                            let tap = &taps[r.offset + m * layer.n_in + i];
+                            let _ = writeln!(v, "      8'd{i}: psel_{di}_{k}_{m} = {tap};");
+                        }
+                        let _ = writeln!(v, "      default: psel_{di}_{k}_{m} = 0;\n    endcase\n  end");
+                    }
+                }
+            }
+        }
+    }
+
+    // the loopback schedule: the selected member's layer k holds the
+    // bank for ι_k + 1 cycles, the commit folds its outputs back into
+    // the feedback registers for layer k + 1
+    let _ = writeln!(v, "  always @(posedge clk) begin");
+    let _ = writeln!(v, "    if (rst) begin");
+    let _ = writeln!(v, "      layer <= 0; cnt <= 0; done <= 0;");
+    for m in 0..bank {
+        let _ = writeln!(v, "      acc_{m} <= 0;");
+    }
+    let _ = writeln!(v, "    end else begin");
+    let pad = if multi { "  " } else { "" };
+    for (di, &d) in designs.iter().enumerate() {
+        let l_count = d.qann.structure.num_layers();
+        if multi {
+            let _ = writeln!(v, "      if (net == 8'd{di}) begin");
+        }
+        let _ = writeln!(v, "      {pad}if (start || layer < {l_count}) begin");
+        for (k, layer) in d.layers.iter().enumerate() {
+            let (_, sls, mcm) = mac_layer(d, k);
+            let _ = writeln!(v, "        {pad}if (layer == {k}) begin");
+            let _ = writeln!(v, "          {pad}if (cnt < {}) begin", layer.n_in);
+            for (m, &s) in sls.iter().enumerate() {
+                let shift = if s > 0 { format!(" <<< {s}") } else { String::new() };
+                // the product: generic multiply (behavioral) or the muxed
+                // MCM-graph tap (multiplierless); the sls back-shift is wiring
+                let product = match mcm {
+                    None => format!("(wsel_{di}_{k}_{m} * xsel_{di}_{k})"),
+                    Some(_) => format!("psel_{di}_{k}_{m}"),
+                };
+                let _ = writeln!(v, "            {pad}acc_{m} <= acc_{m} + ({product}{shift});");
+            }
+            let _ = writeln!(v, "            {pad}cnt <= cnt + 1;");
+            let _ = writeln!(v, "          {pad}end else begin");
+            for m in 0..layer.n_out {
+                let b = d.qann.biases[k][m];
+                let y = format!("(acc_{m} + ({b}))");
+                let z = activation_expr(d.qann.activations[k], &y, max_acc, d.qann.q);
+                let _ = writeln!(v, "            {pad}z_{m} <= {z};");
+                let _ = writeln!(v, "            {pad}acc_{m} <= 0;");
+            }
+            let _ = writeln!(v, "            {pad}cnt <= 0; layer <= layer + 1;");
+            if k == l_count - 1 {
+                for m in 0..layer.n_out {
+                    let b = d.qann.biases[k][m];
+                    let y = format!("(acc_{m} + ({b}))");
+                    let z = activation_expr(d.qann.activations[k], &y, max_acc, d.qann.q);
+                    let _ = writeln!(v, "            {pad}y{m} <= {z};");
+                }
+                let _ = writeln!(v, "            {pad}done <= 1;");
+            }
+            let _ = writeln!(v, "          {pad}end");
+            let _ = writeln!(v, "        {pad}end");
+        }
+        let _ = writeln!(v, "      {pad}end");
+        if multi {
+            let _ = writeln!(v, "      end");
+        }
+    }
+    let _ = writeln!(v, "    end\n  end\nendmodule");
+    v
+}
+
 /// SMAC_ANN-architecture Verilog (paper Fig. 7): the whole ANN through a
 /// single MAC; three nested counters (layer / neuron / input) drive the
 /// weight, bias and input selection; layer outputs are held in a register
@@ -1084,9 +1272,113 @@ pub fn testbench_rows(
 pub fn testbench_for(design: &Design, samples: &[Sample], dut: &str) -> String {
     let control = matches!(
         design.arch,
-        ArchKind::SmacNeuron | ArchKind::SmacAnn | ArchKind::DigitSerial | ArchKind::Systolic
+        ArchKind::SmacNeuron
+            | ArchKind::SmacAnn
+            | ArchKind::DigitSerial
+            | ArchKind::Systolic
+            | ArchKind::Loopback
     );
     testbench(&design.qann, samples, dut, design.cycles(), control)
+}
+
+/// Self-checking testbench for a [`loopback_family`] module: every input
+/// row runs through every member back-to-back on the SAME DUT — the
+/// bench drives the `net` select (when the family has one), re-arms the
+/// rst/start handshake per inference, and asserts each member's outputs
+/// against its own golden model (`ann::sim`) and its own closed-form
+/// `Σ(ι_k + 1)` cycle count. A member with fewer inputs than the widest
+/// sees its slice of the row (the surplus ports idle at 0); a member
+/// with fewer outputs is checked only on the lanes it drives. Passing a
+/// single-member family emits a `net`-less bench matching the
+/// single-member module.
+pub fn testbench_loopback_family(designs: &[&Design], rows: &[Vec<i32>], dut: &str) -> String {
+    assert!(!designs.is_empty(), "a loopback family has at least one member");
+    let multi = designs.len() > 1;
+    let max_in = designs.iter().map(|d| d.qann.structure.inputs).max().unwrap();
+    let max_out = designs
+        .iter()
+        .map(|d| {
+            let st = &d.qann.structure;
+            st.layer_outputs(st.num_layers() - 1)
+        })
+        .max()
+        .unwrap();
+    let members: Vec<String> = designs.iter().map(|d| d.qann.structure.to_string()).collect();
+    let mut v = String::new();
+    let _ = writeln!(v, "// self-checking family testbench for {dut} ({})", members.join(" | "));
+    let _ = writeln!(v, "`timescale 1ns/1ps\nmodule tb_{dut};");
+    let _ = writeln!(v, "  reg clk = 0; reg rst = 1; reg start = 0;");
+    if multi {
+        let _ = writeln!(v, "  reg [7:0] net = 0;");
+    }
+    for i in 0..max_in {
+        let _ = writeln!(v, "  reg signed [7:0] x{i};");
+    }
+    for m in 0..max_out {
+        let _ = writeln!(v, "  wire signed [7:0] y{m};");
+    }
+    let _ = writeln!(v, "  wire done;");
+    let head = if multi {
+        ".clk(clk), .rst(rst), .start(start), .net(net)"
+    } else {
+        ".clk(clk), .rst(rst), .start(start)"
+    };
+    let mut ports: Vec<String> = std::iter::once(head.to_string())
+        .chain((0..max_in).map(|i| format!(".x{i}(x{i})")))
+        .chain((0..max_out).map(|m| format!(".y{m}(y{m})")))
+        .collect();
+    ports.push(".done(done)".to_string());
+    let _ = writeln!(v, "  {dut} dut ({});", ports.join(", "));
+    let _ = writeln!(v, "  always #1 clk = ~clk;");
+    let _ = writeln!(v, "  integer errors = 0;");
+    let _ = writeln!(v, "  integer cyc = 0;");
+    let _ = writeln!(v, "  always @(posedge clk) begin");
+    let _ = writeln!(v, "    if (rst) cyc = 0;");
+    let _ = writeln!(v, "    else if (!done) cyc = cyc + 1;");
+    let _ = writeln!(v, "  end");
+    let _ = writeln!(v, "  initial begin");
+    let _ = writeln!(v, "    $dumpfile(\"tb_{dut}.vcd\");");
+    let _ = writeln!(v, "    $dumpvars(0, tb_{dut});");
+    for row in rows {
+        // the family interleaves: every member runs this row before any
+        // member sees the next one, so the bench proves net-to-net
+        // switching on live state, not a per-member batch
+        for (di, &d) in designs.iter().enumerate() {
+            let st = &d.qann.structure;
+            let n_in = st.inputs;
+            let n_out = st.layer_outputs(st.num_layers() - 1);
+            let cycles = d.cycles();
+            assert!(row.len() >= n_in, "row narrower than member {di}'s inputs");
+            let golden = sim::forward(&d.qann, &row[..n_in]);
+            if multi {
+                let _ = writeln!(v, "    net = {di};");
+            }
+            for i in 0..max_in {
+                let xi = if i < n_in { row[i] } else { 0 };
+                let _ = writeln!(v, "    x{i} = {xi};");
+            }
+            let _ = writeln!(v, "    rst = 1; start = 0;");
+            let _ = writeln!(v, "    #4 rst = 0; start = 1;");
+            let _ = writeln!(v, "    #{};", 2 * cycles + 2);
+            let _ = writeln!(
+                v,
+                "    if (done !== 1) begin errors = errors + 1; $display(\"MISMATCH done: %b != 1\", done); end"
+            );
+            let _ = writeln!(
+                v,
+                "    if (cyc !== {cycles}) begin errors = errors + 1; $display(\"MISMATCH cycles: %0d != {cycles}\", cyc); end"
+            );
+            for (m, g) in golden.iter().take(n_out).enumerate() {
+                let _ = writeln!(
+                    v,
+                    "    if (y{m} !== {g}) begin errors = errors + 1; $display(\"MISMATCH y{m}: %d != {g}\", y{m}); end"
+                );
+            }
+        }
+    }
+    let _ = writeln!(v, "    if (errors == 0) $display(\"TB PASS\"); else $display(\"TB FAIL: %d\", errors);");
+    let _ = writeln!(v, "    $finish;\n  end\nendmodule");
+    v
 }
 
 /// Cadence-style synthesis script (the paper's Sec. VII flow: RTL
@@ -1290,6 +1582,69 @@ mod tests {
         let nodes: usize = dm.graphs.iter().map(|g| g.nodes.len()).sum();
         let wires = vm.lines().filter(|l| l.contains("wire signed") && l.contains("<<<")).count();
         assert!(wires >= nodes, "expected >= {nodes} graph wires, got {wires}");
+    }
+
+    #[test]
+    fn loopback_netlist_structure() {
+        use crate::hw::loopback::LOOPBACK;
+        let q = qann("16-10-10");
+        // behavioral: one shared bank + per-layer ROMs, product left to
+        // the synthesis tool
+        let db = LOOPBACK.elaborate(&q, Style::Behavioral);
+        let vb = verilog(&db, "ann_lb");
+        assert!(vb.contains("// generated by SIMURG-RS: loopback / behavioral"));
+        assert!(vb.contains("reg [7:0] layer"));
+        assert!(vb.contains("z_9;  // loopback feedback register"), "feedback bank lane 9");
+        assert!(!vb.contains("acc_0_0"), "the bank is shared, not per-layer");
+        assert!(!vb.contains("input [7:0] net"), "a single member needs no select");
+        assert!(vb.contains(" * "), "behavioral leaves the product to the synthesis tool");
+        assert!(vb.contains("done <= 1"));
+        assert_eq!(vb.matches("always @(posedge clk)").count(), 1, "one shared schedule block");
+        // mcm: products tapped from the embedded graphs, no multiplier
+        let dm = LOOPBACK.elaborate(&q, Style::Mcm);
+        let vm = verilog(&dm, "ann_lb_mcm");
+        assert!(vm.contains("g0_0_x0"), "member 0 layer 0 graph input binding");
+        assert!(vm.contains("psel_0_0_0"), "per-slot product select");
+        assert!(!vm.contains(" * "), "multiplierless must not multiply");
+        let nodes: usize = dm.graphs.iter().map(|g| g.nodes.len()).sum();
+        let wires = vm.lines().filter(|l| l.contains("wire signed") && l.contains("<<<")).count();
+        assert!(wires >= nodes, "expected >= {nodes} graph wires, got {wires}");
+    }
+
+    #[test]
+    fn loopback_family_module_serves_heterogeneous_members() {
+        use crate::hw::loopback::Loopback;
+        let a = qann("16-10-8");
+        let b = qann("12-16-5");
+        let fab = Loopback::for_envelope(16, 2, 24);
+        for style in [Style::Behavioral, Style::Mcm] {
+            let da = fab.elaborate(&a, style);
+            let db = fab.elaborate(&b, style);
+            let v = loopback_family(&[&da, &db], "lb_fam");
+            assert!(v.contains("module lb_fam"), "{}", style.name());
+            assert!(v.contains("input [7:0] net"), "family select input");
+            assert!(v.contains("if (net == 8'd1)"), "member 1 routed by the select");
+            // both members' ROMs share ONE bank sized to the envelope
+            assert!(v.contains("xsel_0_0") && v.contains("xsel_1_0"));
+            assert!(v.contains("reg signed [7:0] z_15"), "bank covers the widest layer");
+            assert!(!v.contains("z_16;"), "and no wider");
+            assert!(v.contains("y7") && !v.contains("y8"), "outputs sized to the widest head");
+            assert_eq!(v.matches("always @(posedge clk)").count(), 1, "one shared schedule block");
+            if style == Style::Mcm {
+                assert!(!v.contains(" * "), "multiplierless family must not multiply");
+                assert!(v.contains("g0_0_x0") && v.contains("g1_0_x0"), "both members' graphs");
+            }
+            // the family bench re-arms per member and asserts each
+            // member's own closed-form latency on the same DUT
+            let rows = vec![vec![5; 16], vec![-128; 16]];
+            let tb = testbench_loopback_family(&[&da, &db], &rows, "lb_fam");
+            assert!(tb.contains("module tb_lb_fam"));
+            assert!(tb.contains("net = 0;") && tb.contains("net = 1;"));
+            assert!(tb.contains(&format!("if (cyc !== {})", da.cycles())));
+            assert!(tb.contains(&format!("if (cyc !== {})", db.cycles())));
+            let golden = sim::forward(&a, &rows[0]);
+            assert!(tb.contains(&format!("!== {}", golden[0])));
+        }
     }
 
     #[test]

@@ -14,12 +14,14 @@
 //!    architectures;
 //! 2. the interpreter's cycle count matches each schedule's closed-form
 //!    formula — the same table ARCHITECTURE.md documents:
-//!    1 / stages+1 / Σ(ι+1) / Σ(ι+2)·η / B·Σ(ι+1) / Σ(ι+1), with `B` the
-//!    digit-serial design's worst accumulator width (the bit-width-
-//!    dependent cycle model, exercised away from small weights by the
-//!    wide-bit-width corpus below) and the systolic ring batching at
-//!    `fill + n·steady + drain` (restated in [`ring_fill_steady_drain`]
-//!    and checked for multiple ring sizes below);
+//!    1 / stages+1 / Σ(ι+1) / Σ(ι+2)·η / B·Σ(ι+1) / Σ(ι+1) / Σ(ι+1),
+//!    with `B` the digit-serial design's worst accumulator width (the
+//!    bit-width-dependent cycle model, exercised away from small weights
+//!    by the wide-bit-width corpus below), the systolic ring batching at
+//!    `fill + n·steady + drain` for its own slot count (restated in
+//!    [`ring_fill_steady_drain`] and checked for multiple ring sizes
+//!    below — the registry's sub-full ring included), and the loopback
+//!    fabric serializing its member's layer program;
 //! 3. `simulate_batch` agrees with the per-input route on outputs and
 //!    cycles, and its batch throughput matches
 //!    `Schedule::throughput_cycles` (for the pipelined schedule:
@@ -154,6 +156,9 @@ fn closed_form_cycles(arch: &str, qann: &QuantizedAnn) -> usize {
         // the ring's single-sample latency is SMAC_NEURON's: the token
         // still visits every layer in sequence for ι_k + 1 cycles
         "systolic" => st.smac_neuron_cycles(),
+        // the loopback fabric replays the member's layer program on one
+        // bank: layer k holds it for ι_k + 1 cycles, same closed form
+        "loopback" => st.smac_neuron_cycles(),
         other => panic!("unknown architecture {other}"),
     }
 }
@@ -176,18 +181,20 @@ fn ring_fill_steady_drain(qann: &QuantizedAnn, slots: usize) -> (usize, usize, u
     (fill, steady, st.smac_neuron_cycles() - fill - steady)
 }
 
-/// Closed-form batch throughput cycles for an architecture.
-fn closed_form_throughput(arch: &str, qann: &QuantizedAnn, n: usize) -> usize {
+/// Closed-form batch throughput cycles for an architecture; `slots` is
+/// the design's systolic ring size (read from its schedule, so the
+/// sub-full registry rings are held to their own fold, not the full
+/// ring's).
+fn closed_form_throughput(arch: &str, qann: &QuantizedAnn, n: usize, slots: usize) -> usize {
     if n == 0 {
         return 0;
     }
     match arch {
         "parallel" => n,
         "pipelined" => qann.structure.num_layers() + n,
-        // the registry entry is the full ring (one slot per layer):
-        // fill + n·steady + drain
+        // the ring batches at fill + n·steady + drain for its slot count
         "systolic" => {
-            let (fill, steady, drain) = ring_fill_steady_drain(qann, qann.structure.num_layers());
+            let (fill, steady, drain) = ring_fill_steady_drain(qann, slots);
             fill + n * steady + drain
         }
         _ => n * closed_form_cycles(arch, qann),
@@ -208,12 +215,16 @@ fn check(qann: &QuantizedAnn, rows: &[Vec<i32>]) -> Result<(), String> {
                 closed_form_cycles(arch.name(), qann)
             ));
         }
+        let slots = match design.schedule {
+            simurg::hw::Schedule::Systolic { slots } => slots,
+            _ => qann.structure.num_layers(),
+        };
         let run = simulate_batch(&design, &batch);
-        if run.throughput_cycles != closed_form_throughput(arch.name(), qann, rows.len()) {
+        if run.throughput_cycles != closed_form_throughput(arch.name(), qann, rows.len(), slots) {
             return Err(format!(
                 "{point}: batch throughput {} != closed form {}",
                 run.throughput_cycles,
-                closed_form_throughput(arch.name(), qann, rows.len())
+                closed_form_throughput(arch.name(), qann, rows.len(), slots)
             ));
         }
         for (s, row) in rows.iter().enumerate() {
@@ -448,6 +459,63 @@ fn systolic_ring_sizes_follow_the_fill_steady_drain_closed_form() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn loopback_families_match_dedicated_designs_and_the_golden_model() {
+    // the envelope-differential harness of the loopback fabric: seeded
+    // random families of heterogeneous nets inside ONE envelope, every
+    // member's outputs on the shared fabric bit-identical — per input
+    // and batched — to its own dedicated SMAC_NEURON design and to the
+    // golden model, with the member's closed-form cycle count coming
+    // from its own layer program, and the whole family costing one
+    // fabric elaboration per style (cache-stats proof)
+    use simurg::hw::loopback::{Envelope, LayerProgram, LOOPBACK};
+    use simurg::hw::serve::{simulate_batch_program, DesignCache};
+    use simurg::hw::smac_neuron::SmacNeuron;
+    use simurg::hw::Style;
+    let mut rng = Rng::new(0x100B_BACC);
+    for round in 0..8 {
+        let members: Vec<QuantizedAnn> =
+            (0..3 + rng.below(2)).map(|_| random_qann(&mut rng)).collect();
+        let env = members
+            .iter()
+            .skip(1)
+            .fold(Envelope::of(&members[0]), |e, m| e.union(Envelope::of(m)));
+        let cache = DesignCache::new();
+        for style in [Style::Behavioral, Style::Mcm] {
+            for (mi, m) in members.iter().enumerate() {
+                let ctx = format!("round {round} member {mi} ({}) {}", m.structure, style.name());
+                let fabric = cache.design_for(&env, m, style).expect("member admits");
+                let program = LayerProgram::lower(m, &env).expect("member lowers");
+                // the member's cycles come from ITS layer widths, not the
+                // envelope's — the fabric is shared, the schedule is not
+                assert_eq!(program.cycles(), m.structure.smac_neuron_cycles(), "{ctx}");
+                let rows = corpus(&mut rng, m.structure.inputs, 5);
+                let batch = BatchInputs::from_rows(&rows);
+                let run = simulate_batch_program(&fabric, &program, &batch);
+                let dedicated = SmacNeuron.elaborate(m, style);
+                let ded = simulate_batch(&dedicated, &batch);
+                let member_design = LOOPBACK.elaborate(m, style);
+                for (s, row) in rows.iter().enumerate() {
+                    let golden = sim::forward(m, row);
+                    assert_eq!(run.sample_outputs(s), golden, "{ctx} sample {s} (fabric)");
+                    assert_eq!(ded.sample_outputs(s), golden, "{ctx} sample {s} (dedicated)");
+                    // the per-input interpreter route through the member's
+                    // registry loopback design agrees too
+                    let per = simulate(&member_design, row);
+                    assert_eq!(per.outputs, golden, "{ctx} sample {s} (per-input)");
+                    assert_eq!(per.cycles, program.cycles(), "{ctx} sample {s} cycles");
+                }
+                assert_eq!(run.cycles, ded.cycles, "{ctx}: same layer-sequential count");
+                assert_eq!(run.throughput_cycles, rows.len() * program.cycles(), "{ctx}");
+            }
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 2, "round {round}: one fabric elaboration per style");
+        assert_eq!(stats.entries, 2, "round {round}");
+        assert!(stats.hits >= 2 * (members.len() as u64 - 1), "round {round}");
     }
 }
 

@@ -265,6 +265,69 @@ fn batch_activity_is_the_sum_of_per_row_activity_profiles() {
 }
 
 #[test]
+fn envelope_family_is_bit_identical_across_styles_and_thread_counts() {
+    // the PR-10 acceptance bar: a seeded family of three heterogeneous
+    // nets in ONE envelope, each member's outputs on the shared loopback
+    // fabric bit-identical to its own dedicated SMAC_NEURON design — for
+    // every loopback style and every thread count of the sharded path —
+    // while the DesignCache stats prove the whole family cost one fabric
+    // elaboration per style
+    use simurg::hw::loopback::{Envelope, LayerProgram};
+    use simurg::hw::serve::{simulate_batch_program_with, DesignCache};
+    use simurg::hw::smac_neuron::SmacNeuron;
+    let mut rng = Rng::new(0xE57_FA88);
+    let members = [
+        random_qann("16-10-8", 6, &mut rng),
+        random_qann("12-16-5", 6, &mut rng),
+        random_qann("10-10-10-6", 6, &mut rng),
+    ];
+    let env = members
+        .iter()
+        .skip(1)
+        .fold(Envelope::of(&members[0]), |e, m| e.union(Envelope::of(m)));
+    let cache = DesignCache::new();
+    for style in [Style::Behavioral, Style::Mcm] {
+        for (mi, m) in members.iter().enumerate() {
+            let ctx = format!("member {mi} ({}) {}", m.structure, style.name());
+            let fabric = cache.design_for(&env, m, style).expect("member admits");
+            let program = LayerProgram::lower(m, &env).expect("member lowers");
+            let rows = random_rows(33, m.structure.inputs, &mut rng);
+            let batch = BatchInputs::from_rows(&rows);
+            let dedicated = SmacNeuron.elaborate(m, style);
+            let ded = simulate_batch(&dedicated, &batch);
+            for threads in [1usize, 2, 7] {
+                let run = simulate_batch_program_with(
+                    &fabric,
+                    &program,
+                    &batch,
+                    &ServeConfig { threads, shard_min: 0 },
+                );
+                for s in 0..rows.len() {
+                    assert_eq!(
+                        run.sample_outputs(s),
+                        ded.sample_outputs(s),
+                        "{ctx} threads={threads} sample {s}"
+                    );
+                }
+                assert_eq!(run.cycles, ded.cycles, "{ctx} threads={threads}");
+                assert_eq!(run.activity, ded.activity, "{ctx} threads={threads}");
+            }
+        }
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.misses, 2, "one fabric elaboration per style");
+    assert_eq!(stats.entries, 2, "one cache entry per style");
+    assert!(stats.hits >= 4, "later members hit the shared entry");
+    // a non-member is a typed rejection — not a panic — through the
+    // process-wide serving facade too
+    let narrow = Envelope::new(2, 1, 4);
+    assert!(matches!(
+        simurg::hw::designs().design_for(&narrow, &members[0], Style::Behavioral),
+        Err(simurg::hw::EnvelopeError::TooWide { .. })
+    ));
+}
+
+#[test]
 fn batch_of_one_and_argmax_agree_with_predict() {
     let mut rng = Rng::new(9);
     let qann = random_qann("16-10", 6, &mut rng);

@@ -27,20 +27,20 @@ fn qann(structure: &str, q: u32, seed: u64) -> QuantizedAnn {
 
 #[test]
 fn every_design_point_survives_external_simulation() {
-    // small net, full corpus (random rows + extremes): 13 modules ×
+    // small net, full corpus (random rows + extremes): 19 modules ×
     // (compile + run) stays well under a minute under Icarus
     let q = qann("6-5-3", 6, 41);
     let rows = cosim::corpus(6, 6, 23);
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("target/cosim");
     let results = cosim::run_all(&q, &rows, &root);
-    assert_eq!(results.len(), 13, "the registry's thirteen design points");
+    assert_eq!(results.len(), 19, "the registry's nineteen design points");
 
     if !cosim::iverilog_available() {
         assert!(
             results.iter().all(|(_, o)| *o == CosimOutcome::Skipped),
             "without iverilog the gate must skip, not fail"
         );
-        eprintln!("cosim: iverilog not found, gate skipped for all 13 points");
+        eprintln!("cosim: iverilog not found, gate skipped for all 19 points");
         return;
     }
     let failures: Vec<String> = results
@@ -56,4 +56,48 @@ fn every_design_point_survives_external_simulation() {
         root.display(),
         failures.join("\n")
     );
+}
+
+#[test]
+fn loopback_family_module_survives_external_simulation_back_to_back() {
+    // the envelope claim, executed: TWO different nets run back-to-back
+    // on the SAME emitted loopback module, the family bench switching
+    // the `net` select and re-arming rst/start per inference, and every
+    // inference must match its own golden model and its own closed-form
+    // cycle count. Hermetic: Skipped without iverilog on $PATH.
+    use simurg::hw::cosim::CosimCase;
+    use simurg::hw::loopback::Loopback;
+    use simurg::hw::{verilog, Style};
+    let a = qann("6-5-3", 6, 51);
+    let b = qann("4-6-2", 6, 52);
+    let fab = Loopback::for_envelope(6, 2, 24);
+    let rows = cosim::corpus(6, 4, 33);
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("target/cosim");
+    for style in [Style::Behavioral, Style::Mcm] {
+        let da = fab.elaborate(&a, style);
+        let db = fab.elaborate(&b, style);
+        assert_ne!(da.cycles(), db.cycles(), "heterogeneous members, distinct latencies");
+        let module = format!("loopback_family_{}", style.name());
+        let case = CosimCase {
+            arch: "loopback",
+            style: style.name(),
+            verilog: verilog::loopback_family(&[&da, &db], &module),
+            testbench: verilog::testbench_loopback_family(&[&da, &db], &rows, &module),
+            cycles: da.cycles(),
+            control: true,
+            module: module.clone(),
+        };
+        let outcome = cosim::run_case(&case, &root.join(&module));
+        if cosim::iverilog_available() {
+            assert_eq!(
+                outcome,
+                CosimOutcome::Pass,
+                "family/{} cosim failed; artifacts under {}",
+                style.name(),
+                root.join(&module).display()
+            );
+        } else {
+            assert_eq!(outcome, CosimOutcome::Skipped);
+        }
+    }
 }

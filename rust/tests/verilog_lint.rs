@@ -200,6 +200,79 @@ fn systolic_multiplierless_style_emits_no_multiplier() {
 }
 
 #[test]
+fn loopback_multiplierless_style_emits_no_multiplier() {
+    // the satellite pin for the seventh registry entry: the loopback
+    // fabric's mcm style taps each member layer's embedded MCM product
+    // graph (muxed per slot), so it must never fall back to the `*`
+    // operator — while the shared loopback feedback bank that carries
+    // each committed layer to the next is present in both styles
+    for structure in ["16-10", "16-16-10", "16-10-10-10"] {
+        let q = qann(structure, 6, 37);
+        let arch = design_points()
+            .into_iter()
+            .map(|(a, _)| a)
+            .find(|a| a.name() == "loopback")
+            .expect("loopback is a registry entry");
+        for &style in arch.styles() {
+            let v = verilog::verilog(&arch.elaborate(&q, style), "lint_lb");
+            let point = format!("{structure} loopback/{}", style.name());
+            lint(&v, &point);
+            assert!(v.contains("loopback feedback register"), "{point}: feedback bank missing");
+            if style == Style::Behavioral {
+                continue;
+            }
+            for line in code_lines(&v) {
+                assert!(
+                    !line.contains(" * "),
+                    "{point}: loopback multiplierless style emitted a `*`: {line}"
+                );
+            }
+            assert!(
+                v.lines().any(|l| l.contains("<<<")),
+                "{point}: shift-add taps must be present"
+            );
+        }
+    }
+}
+
+#[test]
+fn loopback_family_module_and_bench_pass_the_lint() {
+    // the multi-member family module — one datapath, a `net` select,
+    // every member's ROM — holds to the same structural rules as every
+    // single-net emitter, and its mcm rendering contains no multiplier
+    use simurg::hw::loopback::Loopback;
+    let a = qann("16-10-8", 6, 61);
+    let b = qann("12-16-5", 6, 62);
+    let fab = Loopback::for_envelope(16, 2, 24);
+    for style in [Style::Behavioral, Style::Mcm] {
+        let da = fab.elaborate(&a, style);
+        let db = fab.elaborate(&b, style);
+        let v = verilog::loopback_family(&[&da, &db], "lint_lb_fam");
+        let point = format!("loopback family {}", style.name());
+        lint(&v, &point);
+        assert!(v.contains("input [7:0] net"), "{point}: family select missing");
+        if style == Style::Mcm {
+            for line in code_lines(&v) {
+                assert!(
+                    !line.contains(" * "),
+                    "{point}: family mcm rendering emitted a `*`: {line}"
+                );
+            }
+        }
+        // the family bench keeps balanced brackets and a verdict, and
+        // only connects ports the family module declares
+        let rows: Vec<Vec<i32>> = vec![vec![1; 16], vec![-128; 16]];
+        let tb = verilog::testbench_loopback_family(&[&da, &db], &rows, "lint_lb_fam");
+        assert_eq!(count_token(&tb, "module"), 1, "{point}");
+        assert_eq!(count_token(&tb, "endmodule"), 1, "{point}");
+        assert_eq!(count_token(&tb, "begin"), count_token(&tb, "end"), "{point}");
+        assert!(tb.contains("TB PASS") && tb.contains("TB FAIL"), "{point}");
+        assert!(tb.contains("$finish"), "{point}");
+        assert!(tb.contains(".net(net)"), "{point}: bench must drive the select");
+    }
+}
+
+#[test]
 fn cosim_emitted_benches_pass_the_lint_without_iverilog() {
     // the EDA gate's artifacts stay checkable where Icarus is absent:
     // every cosim case's DUT passes the structural lint, and its
